@@ -1,0 +1,55 @@
+//! Experiment 3: compare the fine-grained scheduler against the Kubeflow
+//! MPI operator and native Volcano on the Experiment-2 workload.
+//! Reproduces Table III and Figs. 8–9.
+//!
+//! Run: cargo run --release --example framework_comparison [-- <seed>]
+
+use kube_fgs::experiments::{self, DEFAULT_SEED};
+use kube_fgs::simulator::JobRecord;
+
+fn main() {
+    let seed = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(DEFAULT_SEED);
+    println!("Experiment 3 — frameworks (seed {seed})\n");
+
+    let results = experiments::exp3_all_scenarios(seed);
+
+    println!("Table III — makespan comparison:");
+    print!("{}", experiments::table3(&results));
+
+    println!();
+    print!(
+        "{}",
+        experiments::per_job_table(&results, JobRecord::running, "Fig. 8 — job running time (s):")
+    );
+    println!();
+    print!(
+        "{}",
+        experiments::per_job_table(&results, JobRecord::response, "Fig. 9 — job response time (s):")
+    );
+
+    // The paper's §V-E observations, checked programmatically:
+    let get = |name: &str| results.iter().find(|(s, _)| s.name() == name).unwrap();
+    let (_, kubeflow) = get("Kubeflow");
+    let (_, volcano) = get("Volcano");
+    let (_, cm) = get("CM");
+    let (_, cm_g_tg) = get("CM_G_TG");
+    println!("\nchecks:");
+    println!(
+        "  Kubeflow ~= CM makespan:        {:>8.0} vs {:>8.0}  ({:+.1}%)",
+        kubeflow.makespan,
+        cm.makespan,
+        (kubeflow.makespan / cm.makespan - 1.0) * 100.0
+    );
+    println!(
+        "  Volcano slowdown vs CM:         {:>8.1}x   (paper: ~48.7x)",
+        volcano.makespan / cm.makespan
+    );
+    println!(
+        "  CM_G_TG best makespan:          {:>8.0} s  (improves CM by {:.0}%)",
+        cm_g_tg.makespan,
+        (1.0 - cm_g_tg.makespan / cm.makespan) * 100.0
+    );
+}

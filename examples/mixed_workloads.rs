@@ -1,0 +1,37 @@
+//! Experiment 2 end-to-end: 20 mixed MPI jobs (5 benchmarks × 4) submitted
+//! in a random sequence over [0, 1200] s, run under all six Table-II
+//! scenarios. Reproduces Figs. 6–7.
+//!
+//! Run: cargo run --release --example mixed_workloads [-- <seed>]
+
+use kube_fgs::experiments::{self, DEFAULT_SEED};
+use kube_fgs::report;
+use kube_fgs::workload::exp2_trace;
+
+fn main() {
+    let seed = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(DEFAULT_SEED);
+    println!("Experiment 2 — 20 mixed jobs, seed {seed}\n");
+
+    let trace = exp2_trace(seed);
+    println!("trace:");
+    for j in &trace {
+        println!("  t={:>6.1}s  {}", j.submit_time, j.name);
+    }
+
+    let results = experiments::exp2_all_scenarios(seed);
+    println!("\nFig. 6 — per-benchmark avg running time + overall response:");
+    print!("{}", experiments::fig6_table(&results));
+    println!("\nFig. 7 — makespan:");
+    print!("{}", experiments::fig7_table(&results));
+
+    // The scheduling-process panels of Fig. 7 for the two extremes.
+    for name in ["CM", "CM_G_TG"] {
+        let scenario = kube_fgs::scenario::Scenario::parse(name).unwrap();
+        let out = experiments::run_scenario(scenario, &trace, seed, None);
+        println!("\nFig. 7 — scheduling process, {name}:");
+        print!("{}", report::gantt(&out, 90));
+    }
+}

@@ -1,0 +1,44 @@
+//! Fig. 3 — Benchmarks MPI profiling analysis, plus live kernel roofline
+//! numbers from the PJRT payloads when artifacts are present.
+//!
+//! Run: cargo run --release --example profile_benchmarks
+
+use kube_fgs::experiments;
+use kube_fgs::report;
+use kube_fgs::runtime::{default_artifacts_dir, Runtime};
+use kube_fgs::workload::ALL_BENCHMARKS;
+
+fn main() {
+    println!("Fig. 3 — Benchmarks MPI profiling analysis\n");
+    print!("{}", experiments::fig3_table());
+
+    // Live payload measurements (skipped gracefully without artifacts).
+    match Runtime::load(&default_artifacts_dir()) {
+        Ok(rt) => {
+            println!("\nAOT payload characteristics (PJRT {}):", rt.client_platform);
+            let mut rows = Vec::new();
+            for &b in &ALL_BENCHMARKS {
+                let p = rt.payload(b).unwrap();
+                let secs = rt.measure(b, 1, 5).unwrap();
+                rows.push(vec![
+                    b.name().to_string(),
+                    format!("{:.3}", secs * 1e3),
+                    format!("{:.2}", p.spec.flops_per_step as f64 / secs / 1e9),
+                    format!("{:.2}", p.spec.bytes_per_step as f64 / secs / 1e9),
+                    format!(
+                        "{:.2}",
+                        p.spec.flops_per_step as f64 / p.spec.bytes_per_step as f64
+                    ),
+                ]);
+            }
+            print!(
+                "{}",
+                report::table(
+                    &["benchmark", "ms/step", "GFLOP/s", "GB/s", "flops/byte"],
+                    &rows
+                )
+            );
+        }
+        Err(e) => println!("\n(skipping live payload profile: {e})"),
+    }
+}

@@ -1,0 +1,73 @@
+//! Quickstart: build the paper's five-node cluster, submit one MiniFE job
+//! under the fine-grained CM_G_TG scenario, and walk through what each
+//! layer decided (planner granularity -> MPI-aware controller pods ->
+//! task-group placement -> kubelet cpusets -> simulated runtime).
+//!
+//! Run: cargo run --release --example quickstart
+
+use kube_fgs::metrics::ExperimentMetrics;
+use kube_fgs::report;
+use kube_fgs::scenario::Scenario;
+use kube_fgs::workload::{Benchmark, JobSpec};
+
+fn main() {
+    let scenario = Scenario::CmGTg;
+    println!("scenario: {scenario} (cpu/memory affinity + 'granularity' planner + task-group scheduling)\n");
+
+    // One MiniFE job, 16 MPI tasks, submitted at t=0.
+    let job = JobSpec::paper_job(1, Benchmark::MiniFe, 0.0);
+    println!(
+        "job: {} — {} tasks, {} total, profile {}",
+        job.name,
+        job.ntasks,
+        job.resources,
+        job.benchmark.profile().as_str()
+    );
+
+    // What the planner agent (Algorithm 1) decides:
+    let planned = kube_fgs::planner::plan(
+        &job,
+        scenario.policy(),
+        kube_fgs::planner::SystemInfo { available_nodes: 4 },
+    );
+    println!(
+        "planner (Algorithm 1): N_n={} nodes, N_w={} workers, N_g={} groups",
+        planned.granularity.n_nodes, planned.granularity.n_workers, planned.granularity.n_groups
+    );
+
+    // Run the full stack.
+    let sim = scenario.simulation(7);
+    let out = sim.run(&[job]);
+
+    // What the MPI-aware controller (Algorithm 2) + task-group plugin
+    // (Algorithms 3-4) + kubelet produced:
+    println!("\npods (controller Algorithm 2 + scheduler Algorithms 3-4 + kubelet):");
+    for pod in out.api.pods.values() {
+        let node = pod.node.map(|n| out.api.spec.nodes[n.0].name.clone()).unwrap_or_default();
+        let cpuset = pod
+            .cpuset
+            .as_ref()
+            .map(|c| format!("cpuset {c}"))
+            .unwrap_or_else(|| "shared pool".into());
+        println!(
+            "  {:<22} node {:<7} tasks {}  group {:?}  {}{}",
+            pod.name,
+            node,
+            pod.ntasks,
+            pod.group,
+            cpuset,
+            if pod.spans_numa { "  [spans NUMA]" } else { "" }
+        );
+    }
+
+    println!("\nhostfile:");
+    for line in &out.api.jobs.values().next().unwrap().hostfile {
+        println!("  {line}");
+    }
+
+    let m = ExperimentMetrics::from(&out);
+    println!();
+    print!("{}", report::scenario_summary(scenario.name(), &m));
+    println!("\ntimeline:");
+    print!("{}", report::gantt(&out, 80));
+}

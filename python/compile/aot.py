@@ -1,0 +1,84 @@
+"""AOT lowering: JAX step functions -> HLO text artifacts for the rust runtime.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the XLA
+the published ``xla`` 0.1.6 rust crate links) rejects (``proto.id() <=
+INT_MAX``).  The text parser reassigns ids, so text round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Usage (from python/):
+    python -m compile.aot --out-dir ../artifacts [--only dgemm,stream]
+
+Outputs one ``<name>.hlo.txt`` per benchmark plus ``manifest.json``
+describing entry-point shapes/dtypes/profiles for the rust loader.
+This is the ONLY Python that must run before the rust binary is
+self-contained; ``make artifacts`` skips it when inputs are unchanged.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import SPECS
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax Lowered to XLA HLO text via stablehlo."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_spec(name: str) -> str:
+    """Lower one benchmark step function to HLO text."""
+    spec = SPECS[name]
+    lowered = jax.jit(spec.fn).lower(*spec.args)
+    return to_hlo_text(lowered)
+
+
+def arg_manifest(spec) -> list[dict]:
+    return [
+        {"shape": list(a.shape), "dtype": a.dtype.name} for a in spec.args
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default="", help="comma-separated benchmark subset")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    names = [n for n in args.only.split(",") if n] or list(SPECS)
+
+    manifest = {}
+    for name in names:
+        spec = SPECS[name]
+        text = lower_spec(name)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        manifest[name] = {
+            "hlo": path.name,
+            "args": arg_manifest(spec),
+            "profile": spec.profile,
+            "flops_per_step": spec.flops,
+            "bytes_per_step": spec.bytes,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        }
+        print(f"lowered {name}: {len(text)} chars -> {path}")
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2) + "\n")
+    print(f"wrote manifest for {len(manifest)} benchmarks")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""L1 Pallas payload kernels for the five paper benchmarks.
+
+One module per HPC benchmark the paper schedules (HPCC EP-DGEMM, EP-STREAM,
+G-FFT, G-RandomRing, and MiniFE); ``ref`` holds the pure-jnp oracles.
+All kernels run under ``interpret=True`` — see DESIGN.md §Hardware-Adaptation.
+"""
+
+from . import dgemm, fft, ref, ring, stencil, stream  # noqa: F401

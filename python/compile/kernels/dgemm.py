@@ -1,0 +1,92 @@
+"""EP-DGEMM payload kernel (L1, Pallas).
+
+The HPCC EP-DGEMM benchmark measures per-process dense matmul throughput —
+the paper classifies it as *CPU intensive*.  On TPU the analogous hot loop is
+an MXU-targeted blocked matmul: tiles sized so that one (BM, BK) A-tile, one
+(BK, BN) B-tile and one (BM, BN) fp32 output/accumulator tile fit comfortably
+in VMEM, with the K reduction carried across the innermost grid dimension and
+accumulated in place in the revisited output block (fp32, MXU-style).
+
+The kernel is lowered with ``interpret=True`` (CPU PJRT cannot execute
+Mosaic custom-calls); the BlockSpec structure is nevertheless authored for
+the real-TPU HBM->VMEM schedule (see DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile shapes: 128x128 output tiles feed the 128x128 MXU; BK=128
+# keeps the A/B/out working set at 3 * 128*128*4 B = 192 KiB << 16 MiB VMEM,
+# leaving headroom for double buffering.
+BM = 128
+BN = 128
+BK = 128
+
+
+def _dgemm_kernel(a_ref, b_ref, o_ref, *, n_k: int):
+    """One (i, j, k) grid step: ``o[i, j] += A[i, k] @ B[k, j]``.
+
+    The output tile is revisited along the K grid dimension (its index map
+    ignores ``k``), so it doubles as the fp32 accumulator: initialised on the
+    first K step, accumulated on every step.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...].astype(jnp.float32),
+        b_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def dgemm(
+    a: jax.Array, b: jax.Array, *, bm: int = BM, bn: int = BN, bk: int = BK
+) -> jax.Array:
+    """Blocked ``a @ b`` with fp32 accumulation.
+
+    Shapes must tile exactly: ``a: (M, K)``, ``b: (K, N)`` with
+    ``M % bm == K % bk == N % bn == 0``.  Returns fp32.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"inner dims mismatch: {k} vs {k2}")
+    if m % bm or n % bn or k % bk:
+        raise ValueError(
+            f"shape ({m},{k})x({k},{n}) does not tile by ({bm},{bn},{bk})"
+        )
+    n_k = k // bk
+    return pl.pallas_call(
+        functools.partial(_dgemm_kernel, n_k=n_k),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def vmem_bytes(bm: int = BM, bn: int = BN, bk: int = BK, itemsize: int = 4) -> int:
+    """Per-step VMEM working set (A-tile + B-tile + fp32 out tile).
+
+    Used by the perf pass (DESIGN.md §Perf) to estimate real-TPU residency;
+    with double buffering the steady-state footprint is 2x the input tiles
+    plus one accumulator tile.
+    """
+    a_tile = bm * bk * itemsize
+    b_tile = bk * bn * itemsize
+    o_tile = bm * bn * 4
+    return 2 * (a_tile + b_tile) + o_tile

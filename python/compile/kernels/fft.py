@@ -1,0 +1,74 @@
+"""G-FFT payload kernel (L1, Pallas).
+
+HPCC G-FFT measures a distributed 1-D FFT whose transpose phase is a global
+all-to-all — the paper classifies it as *network intensive*.  The network
+side lives in the simulator; the local flop hot spot is the radix-2
+butterfly, implemented here as a Pallas kernel over planar complex data
+(separate real/imag arrays — Pallas interpret mode has no complex refs).
+
+One call computes one decimation-in-time stage for the *whole* signal:
+given the stage's (half, M)-shaped even/odd operands and per-row twiddles,
+it produces the (half, M) top and bottom halves.  The L2 model
+(``model.fft_step``) composes ``log2(n)`` stages Stockham-style, doing the
+(cheap, layout-only) interleave with jnp reshapes between calls, and is
+verified against ``jnp.fft.fft``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _butterfly_kernel(
+    ar_ref, ai_ref, br_ref, bi_ref, wr_ref, wi_ref, tr_ref, ti_ref, ur_ref, ui_ref
+):
+    """Radix-2 butterfly: ``t = a + w*b``, ``u = a - w*b`` (planar complex)."""
+    ar, ai = ar_ref[...], ai_ref[...]
+    br, bi = br_ref[...], bi_ref[...]
+    wr, wi = wr_ref[...], wi_ref[...]
+    # w * b, complex multiply in planar form.
+    wbr = wr * br - wi * bi
+    wbi = wr * bi + wi * br
+    tr_ref[...] = ar + wbr
+    ti_ref[...] = ai + wbi
+    ur_ref[...] = ar - wbr
+    ui_ref[...] = ai - wbi
+
+
+@jax.jit
+def butterfly(
+    a_re: jax.Array,
+    a_im: jax.Array,
+    b_re: jax.Array,
+    b_im: jax.Array,
+    w_re: jax.Array,
+    w_im: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One radix-2 stage over (half, M) operands; twiddles broadcast per row.
+
+    Returns ``(t_re, t_im, u_re, u_im)`` with ``t = a + w b``, ``u = a - w b``.
+    """
+    if a_re.shape != b_re.shape:
+        raise ValueError(f"operand shape mismatch: {a_re.shape} vs {b_re.shape}")
+    half, m = a_re.shape
+    if w_re.shape != (half, 1):
+        raise ValueError(f"twiddle shape {w_re.shape} != ({half}, 1)")
+    shape = jax.ShapeDtypeStruct((half, m), a_re.dtype)
+    full = pl.BlockSpec((half, m), lambda: (0, 0))
+    tw = pl.BlockSpec((half, 1), lambda: (0, 0))
+    return pl.pallas_call(
+        _butterfly_kernel,
+        in_specs=[full, full, full, full, tw, tw],
+        out_specs=(full, full, full, full),
+        out_shape=(shape, shape, shape, shape),
+        interpret=True,
+    )(a_re, a_im, b_re, b_im, w_re, w_im)
+
+
+def flops(n: int) -> int:
+    """Complex FFT flop count: 5 n log2 n (standard radix-2 accounting)."""
+    import math
+
+    return int(5 * n * math.log2(n))

@@ -1,0 +1,66 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Every kernel in this package has its reference semantics defined here in
+straight-line jnp; ``python/tests`` sweeps shapes/dtypes with hypothesis and
+asserts allclose between kernel and oracle.  These functions are also what
+the L2 model's unit tests compare full step functions against.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dgemm(a: jax.Array, b: jax.Array) -> jax.Array:
+    """fp32-accumulated matmul."""
+    return jnp.dot(
+        a.astype(jnp.float32), b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def triad(b: jax.Array, c: jax.Array, scalar) -> jax.Array:
+    """STREAM triad ``b + scalar * c``."""
+    return b + jnp.asarray(scalar, b.dtype) * c
+
+
+def stencil_matvec(x: jax.Array) -> jax.Array:
+    """7-point Laplacian-style mat-vec with zero boundaries."""
+    xp = jnp.pad(x, 1)
+    c = xp[1:-1, 1:-1, 1:-1]
+    return (
+        6.0 * c
+        - xp[:-2, 1:-1, 1:-1]
+        - xp[2:, 1:-1, 1:-1]
+        - xp[1:-1, :-2, 1:-1]
+        - xp[1:-1, 2:, 1:-1]
+        - xp[1:-1, 1:-1, :-2]
+        - xp[1:-1, 1:-1, 2:]
+    )
+
+
+def ring_exchange(buf: jax.Array, perm: jax.Array) -> jax.Array:
+    """out[i] = 0.5 * (buf[i] + buf[perm[i]])."""
+    return 0.5 * (buf + buf[perm, :])
+
+
+def butterfly(a_re, a_im, b_re, b_im, w_re, w_im):
+    """Radix-2 butterfly in planar complex form."""
+    a = a_re + 1j * a_im
+    b = b_re + 1j * b_im
+    w = w_re + 1j * w_im
+    t = a + w * b
+    u = a - w * b
+    return (
+        jnp.real(t).astype(a_re.dtype),
+        jnp.imag(t).astype(a_re.dtype),
+        jnp.real(u).astype(a_re.dtype),
+        jnp.imag(u).astype(a_re.dtype),
+    )
+
+
+def fft(x_re: jax.Array, x_im: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Full FFT oracle via jnp.fft over a planar-complex 1-D signal."""
+    y = jnp.fft.fft(x_re + 1j * x_im)
+    return jnp.real(y).astype(x_re.dtype), jnp.imag(y).astype(x_re.dtype)

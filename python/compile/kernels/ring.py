@@ -1,0 +1,54 @@
+"""G-RandomRing payload kernel (L1, Pallas).
+
+HPCC G-RandomRing Bandwidth measures the per-process bandwidth of a ring
+communication pattern over a *random* rank permutation — the paper
+classifies it as *network intensive*.  On a single accelerator the network
+is the simulator's concern (rust/src/perfmodel); the payload we AOT-compile
+is the ring's local compute: each logical rank combines its buffer with the
+buffer received from its ring predecessor.
+
+Layout: ``buf`` is (P, N) — one row per logical MPI rank.  ``perm`` is the
+ring permutation (rank i receives from ``perm[i]``).  Each grid step
+produces one rank's row; the (unblocked) input is row-gathered with a
+dynamic slice, which on real TPU is the remote-DMA receive.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ring_kernel(perm_ref, buf_ref, out_ref):
+    """One ring step for rank ``i``: ``out[i] = 0.5 * (buf[i] + buf[perm[i]])``."""
+    i = pl.program_id(0)
+    src = perm_ref[i]
+    mine = buf_ref[pl.dslice(i, 1), :]
+    theirs = buf_ref[pl.dslice(src, 1), :]
+    out_ref[...] = 0.5 * (mine + theirs)
+
+
+@jax.jit
+def ring_exchange(buf: jax.Array, perm: jax.Array) -> jax.Array:
+    """One random-ring exchange+combine over rank-major ``buf`` (P, N)."""
+    p, n = buf.shape
+    if perm.shape != (p,):
+        raise ValueError(f"perm shape {perm.shape} != ({p},)")
+    return pl.pallas_call(
+        _ring_kernel,
+        grid=(p,),
+        in_specs=[
+            pl.BlockSpec((p,), lambda i: (0,)),
+            pl.BlockSpec((p, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, n), buf.dtype),
+        interpret=True,
+    )(perm, buf)
+
+
+def bytes_on_wire(shape: tuple[int, int], itemsize: int = 4) -> int:
+    """Each rank sends and receives one row per exchange."""
+    p, n = shape
+    return 2 * p * n * itemsize

@@ -1,0 +1,72 @@
+"""EP-STREAM payload kernel (L1, Pallas).
+
+The HPCC EP-STREAM benchmark measures sustainable per-process memory
+bandwidth with the triad loop ``a[i] = b[i] + scalar * c[i]`` — the paper
+classifies it as *memory-bandwidth intensive*.  On TPU the analogue is a
+VPU-bound streaming kernel: wide lane-aligned blocks moved HBM->VMEM,
+touched exactly once, written back.  There is no reuse, so the BlockSpec
+schedule *is* the optimisation: (8, 1024) blocks match the (8, 128) VPU
+lane layout and keep DMA transfers long.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# (rows, lanes) per block: 8 sublanes x 1024 lanes x 4 B = 32 KiB per
+# operand per step — long enough DMAs to saturate HBM, tiny VMEM footprint.
+BROWS = 8
+BLANES = 1024
+
+
+def _triad_kernel(b_ref, c_ref, s_ref, a_ref):
+    """One block of the STREAM triad: ``a = b + s * c``.
+
+    ``s_ref`` is a (1, 1) block broadcast to every grid step (scalar operand
+    kept in SMEM on real TPU).
+    """
+    a_ref[...] = b_ref[...] + s_ref[0, 0] * c_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("brows", "blanes"))
+def triad(
+    b: jax.Array,
+    c: jax.Array,
+    scalar: jax.Array,
+    *,
+    brows: int = BROWS,
+    blanes: int = BLANES,
+) -> jax.Array:
+    """STREAM triad ``b + scalar * c`` over 2-D arrays.
+
+    ``b`` and ``c`` must share a shape ``(R, L)`` with ``R % brows == 0``
+    and ``L % blanes == 0``; ``scalar`` is a (1, 1) array.
+    """
+    if b.shape != c.shape:
+        raise ValueError(f"shape mismatch: {b.shape} vs {c.shape}")
+    r, l = b.shape
+    if r % brows or l % blanes:
+        raise ValueError(f"shape ({r},{l}) does not tile by ({brows},{blanes})")
+    scalar = jnp.asarray(scalar, b.dtype).reshape(1, 1)
+    return pl.pallas_call(
+        _triad_kernel,
+        grid=(r // brows, l // blanes),
+        in_specs=[
+            pl.BlockSpec((brows, blanes), lambda i, j: (i, j)),
+            pl.BlockSpec((brows, blanes), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((brows, blanes), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, l), b.dtype),
+        interpret=True,
+    )(b, c, scalar)
+
+
+def bytes_moved(shape: tuple[int, int], itemsize: int = 4) -> int:
+    """Triad traffic: read b, read c, write a (3 streams)."""
+    n = shape[0] * shape[1]
+    return 3 * n * itemsize

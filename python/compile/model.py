@@ -1,0 +1,227 @@
+"""L2: per-benchmark JAX step functions calling the L1 Pallas kernels.
+
+Each of the paper's five MPI benchmarks gets one *step* function — the unit
+of compute one simulated job iteration performs.  These are the functions
+``aot.py`` lowers to HLO text; the rust runtime (rust/src/runtime) loads the
+artifacts and executes steps on the request path (Python never runs there).
+
+Shapes are fixed at lowering time (one compiled executable per benchmark);
+the canonical shapes live in ``SPECS`` and are also emitted into
+``artifacts/manifest.json`` for the rust side.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dgemm as dgemm_k
+from .kernels import fft as fft_k
+from .kernels import ring as ring_k
+from .kernels import stencil as stencil_k
+from .kernels import stream as stream_k
+
+# ---------------------------------------------------------------------------
+# EP-DGEMM: CPU-intensive dense matmul throughput.
+# ---------------------------------------------------------------------------
+
+DGEMM_N = 256
+
+
+def dgemm_step(a: jax.Array, b: jax.Array) -> jax.Array:
+    """One EP-DGEMM iteration: C = A @ B via the blocked Pallas kernel."""
+    return dgemm_k.dgemm(a, b)
+
+
+# ---------------------------------------------------------------------------
+# EP-STREAM: memory-bandwidth-bound triad.
+# ---------------------------------------------------------------------------
+
+STREAM_SHAPE = (64, 4096)  # 256 K fp32 elements per operand, 3 MiB triad traffic
+
+
+def stream_step(b: jax.Array, c: jax.Array, scalar: jax.Array) -> jax.Array:
+    """One EP-STREAM iteration: a = b + s*c via the Pallas triad kernel."""
+    return stream_k.triad(b, c, scalar)
+
+
+# ---------------------------------------------------------------------------
+# MiniFE: CG iteration on the 7-point stencil operator (CPU+memory).
+# ---------------------------------------------------------------------------
+
+MINIFE_GRID = (32, 32, 32)
+
+
+def minife_step(
+    x: jax.Array, r: jax.Array, p: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One conjugate-gradient iteration for ``A x = b``.
+
+    ``A`` is the Pallas 7-point stencil operator.  Returns the updated
+    ``(x, r, p)`` state plus the new residual norm (a scalar the runtime can
+    log as the convergence signal).
+    """
+    ap = stencil_k.stencil_matvec(p)
+    rs_old = jnp.vdot(r, r)
+    denom = jnp.vdot(p, ap)
+    alpha = rs_old / jnp.where(denom == 0, 1.0, denom)
+    x = x + alpha * p
+    r = r - alpha * ap
+    rs_new = jnp.vdot(r, r)
+    beta = rs_new / jnp.where(rs_old == 0, 1.0, rs_old)
+    p = r + beta * p
+    return x, r, p, jnp.sqrt(rs_new)
+
+
+# ---------------------------------------------------------------------------
+# G-RandomRing: network-intensive ring exchange.
+# ---------------------------------------------------------------------------
+
+RING_SHAPE = (16, 4096)  # 16 logical ranks, 16 KiB message per rank
+
+
+def ring_step(buf: jax.Array, perm: jax.Array) -> jax.Array:
+    """One random-ring exchange+combine over all ranks."""
+    return ring_k.ring_exchange(buf, perm)
+
+
+# ---------------------------------------------------------------------------
+# G-FFT: network-intensive distributed FFT (local butterflies via Pallas).
+# ---------------------------------------------------------------------------
+
+FFT_N = 1024
+
+
+def fft_step(x_re: jax.Array, x_im: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Full radix-2 DIT FFT of a length-n signal, n a power of two.
+
+    Stockham-style composition: each of the ``log2 n`` stages calls the
+    Pallas butterfly kernel on (half, M) operands and interleaves the two
+    output halves along the trailing axis — layout work only, so all flops
+    run in the kernel.  Matches ``jnp.fft.fft`` (see tests).
+    """
+    (n,) = x_re.shape
+    stages = int(math.log2(n))
+    if 1 << stages != n:
+        raise ValueError(f"n={n} is not a power of two")
+    # Stage s: operands viewed as (half, m) with half = n/2^(s+1) ... we use
+    # the recursive DIT split: even/odd decimation done via reshape.
+    re = x_re.reshape(1, n)
+    im = x_im.reshape(1, n)
+    for _ in range(stages):
+        rows, cols = re.shape
+        half = cols // 2
+        # Decimate: evens -> a, odds -> b (per row).
+        a_re, b_re = re[:, 0::2], re[:, 1::2]
+        a_im, b_im = im[:, 0::2], im[:, 1::2]
+        # Recurse by doubling the row count (each row an independent sub-FFT).
+        re = jnp.concatenate([a_re, b_re], axis=0)
+        im = jnp.concatenate([a_im, b_im], axis=0)
+    # Now re/im are (n, 1): single points, already their own FFTs.  Rebuild
+    # upward: at each level, combine pairs of sub-FFTs with the butterfly.
+    size = 1
+    while size < n:
+        rows = re.shape[0]
+        half_rows = rows // 2
+        a_re, b_re = re[:half_rows, :], re[half_rows:, :]
+        a_im, b_im = im[:half_rows, :], im[half_rows:, :]
+        # Twiddles for combining sub-FFTs of length ``size``: w^k, k < size,
+        # broadcast across the rows of each sub-FFT pair.  Operands are
+        # (half_rows, size); the butterfly kernel wants per-row twiddles, so
+        # we transpose k into the trailing axis: reshape to planar (h*size).
+        k = jnp.arange(size, dtype=x_re.dtype)
+        ang = -2.0 * jnp.pi * k / (2 * size)
+        w_re = jnp.cos(ang)[None, :] * jnp.ones((half_rows, 1), x_re.dtype)
+        w_im = jnp.sin(ang)[None, :] * jnp.ones((half_rows, 1), x_re.dtype)
+        # Butterfly kernel expects (H, 1) twiddles; flatten (row, k) pairs so
+        # each flattened row has a scalar twiddle.
+        hh = half_rows * size
+        t_re, t_im, u_re, u_im = fft_k.butterfly(
+            a_re.reshape(hh, 1),
+            a_im.reshape(hh, 1),
+            b_re.reshape(hh, 1),
+            b_im.reshape(hh, 1),
+            w_re.reshape(hh, 1),
+            w_im.reshape(hh, 1),
+        )
+        re = jnp.concatenate(
+            [t_re.reshape(half_rows, size), u_re.reshape(half_rows, size)], axis=1
+        )
+        im = jnp.concatenate(
+            [t_im.reshape(half_rows, size), u_im.reshape(half_rows, size)], axis=1
+        )
+        size *= 2
+    return re.reshape(n), im.reshape(n)
+
+
+# ---------------------------------------------------------------------------
+# AOT spec table — consumed by aot.py and mirrored into artifacts/manifest.json
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class StepSpec:
+    """Lowering spec for one benchmark step function."""
+
+    name: str
+    fn: Callable
+    args: tuple  # jax.ShapeDtypeStruct example args
+    profile: str  # paper classification: cpu | memory | network | cpu+memory
+    flops: int  # useful flops per step (for perf accounting)
+    bytes: int  # HBM traffic per step
+
+
+f32 = jnp.float32
+i32 = jnp.int32
+
+
+def _sds(shape, dtype=f32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+SPECS: dict[str, StepSpec] = {
+    "dgemm": StepSpec(
+        "dgemm",
+        dgemm_step,
+        (_sds((DGEMM_N, DGEMM_N)), _sds((DGEMM_N, DGEMM_N))),
+        "cpu",
+        2 * DGEMM_N**3,
+        3 * DGEMM_N * DGEMM_N * 4,
+    ),
+    "stream": StepSpec(
+        "stream",
+        stream_step,
+        (_sds(STREAM_SHAPE), _sds(STREAM_SHAPE), _sds((1, 1))),
+        "memory",
+        2 * STREAM_SHAPE[0] * STREAM_SHAPE[1],
+        stream_k.bytes_moved(STREAM_SHAPE),
+    ),
+    "minife": StepSpec(
+        "minife",
+        minife_step,
+        (_sds(MINIFE_GRID), _sds(MINIFE_GRID), _sds(MINIFE_GRID)),
+        "cpu+memory",
+        stencil_k.flops(MINIFE_GRID) + 10 * MINIFE_GRID[0] * MINIFE_GRID[1] * MINIFE_GRID[2],
+        8 * MINIFE_GRID[0] * MINIFE_GRID[1] * MINIFE_GRID[2] * 4,
+    ),
+    "ring": StepSpec(
+        "ring",
+        ring_step,
+        (_sds(RING_SHAPE), _sds((RING_SHAPE[0],), i32)),
+        "network",
+        2 * RING_SHAPE[0] * RING_SHAPE[1],
+        ring_k.bytes_on_wire(RING_SHAPE),
+    ),
+    "fft": StepSpec(
+        "fft",
+        fft_step,
+        (_sds((FFT_N,)), _sds((FFT_N,))),
+        "network",
+        fft_k.flops(FFT_N),
+        4 * FFT_N * 4,
+    ),
+}

@@ -1,0 +1,151 @@
+"""Real-TPU performance estimation for the L1 kernels (DESIGN.md §8).
+
+Pallas runs here under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls), so wall-clock numbers are not a TPU proxy. This module
+instead estimates each kernel's real-TPU standing analytically from its
+BlockSpec structure: VMEM residency, MXU/VPU utilization, arithmetic
+intensity, and the roofline-implied bound (compute- vs HBM-bound) for a
+TPU v4-like core (275 TFLOP/s fp32-equivalent MXU path at bf16 inputs,
+1.2 TB/s HBM, 16 MiB VMEM, 128x128 MXU, 8x128 VPU).
+
+Used by the perf pass (EXPERIMENTS.md §Perf) and tested in
+python/tests/test_roofline.py.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+# TPU v4-like core parameters.
+PEAK_FLOPS = 137.5e12  # fp32-accumulate MXU path, one core
+HBM_BW = 1.2e12  # bytes/s
+VMEM_BYTES = 16 * 2**20
+MXU_DIM = 128
+VPU_LANES = (8, 128)
+
+
+@dataclass(frozen=True)
+class KernelEstimate:
+    name: str
+    vmem_bytes: int
+    vmem_frac: float
+    flops_per_step: int
+    hbm_bytes_per_step: int
+    arithmetic_intensity: float
+    mxu_utilization: float  # fraction of MXU issue slots doing useful work
+    bound: str  # "compute" | "memory"
+    est_step_seconds: float
+
+
+def _roofline(flops: int, hbm_bytes: int, mxu_util: float) -> tuple[str, float]:
+    t_compute = flops / (PEAK_FLOPS * max(mxu_util, 1e-9))
+    t_memory = hbm_bytes / HBM_BW
+    if t_compute >= t_memory:
+        return "compute", t_compute
+    return "memory", t_memory
+
+
+def dgemm_estimate(m: int, n: int, k: int, bm: int = 128, bn: int = 128, bk: int = 128) -> KernelEstimate:
+    """Blocked matmul: double-buffered A/B tiles + resident fp32 out tile."""
+    vmem = 2 * (bm * bk + bk * bn) * 4 + bm * bn * 4
+    flops = 2 * m * n * k
+    # Each A tile read n/bn times, each B tile read m/bm times, C written once.
+    hbm = (m * k * (n // bn) + k * n * (m // bm) + m * n) * 4
+    # MXU utilization: fraction of the 128x128 systolic array covered by the
+    # tile (full tiles -> 1.0), degraded by pipeline drain at small K.
+    cover = min(bm, MXU_DIM) * min(bn, MXU_DIM) / (MXU_DIM * MXU_DIM)
+    drain = bk / (bk + MXU_DIM)
+    util = cover * drain
+    bound, secs = _roofline(flops, hbm, util)
+    return KernelEstimate(
+        "dgemm", vmem, vmem / VMEM_BYTES, flops, hbm, flops / hbm, util, bound, secs
+    )
+
+
+def stream_estimate(rows: int, lanes: int, brows: int = 8, blanes: int = 1024) -> KernelEstimate:
+    """Triad: pure streaming, no reuse — memory-bound by construction."""
+    vmem = 3 * brows * blanes * 4 * 2  # double-buffered b, c, a blocks
+    n = rows * lanes
+    flops = 2 * n
+    hbm = 3 * n * 4
+    # VPU op every cycle while data is resident: utilization is the block's
+    # lane alignment.
+    util = min(blanes, VPU_LANES[1]) / VPU_LANES[1] * min(brows, VPU_LANES[0]) / VPU_LANES[0]
+    bound, secs = _roofline(flops, hbm, util)
+    return KernelEstimate(
+        "stream", vmem, vmem / VMEM_BYTES, flops, hbm, flops / hbm, util, bound, secs
+    )
+
+
+def stencil_estimate(nz: int, ny: int, nx: int, bz: int = 4) -> KernelEstimate:
+    """7-point stencil: slab + halo resident; each point read ~once with
+    halo overlap along z."""
+    slab = (bz + 2) * (ny + 2) * (nx + 2) * 4
+    vmem = 2 * slab + bz * ny * nx * 4
+    n = nz * ny * nx
+    flops = 13 * n
+    # z-halo rows re-read once per neighbouring slab.
+    hbm = (n + 2 * (nz // bz) * ny * nx + n) * 4
+    util = 0.35  # elementwise VPU work, no MXU
+    bound, secs = _roofline(flops, hbm, util)
+    return KernelEstimate(
+        "minife", vmem, vmem / VMEM_BYTES, flops, hbm, flops / hbm, util, bound, secs
+    )
+
+
+def fft_estimate(n: int) -> KernelEstimate:
+    """Radix-2 butterflies: 10 flops/point/stage, log2 n stages."""
+    import math
+
+    stages = int(math.log2(n))
+    flops = 10 * n * stages
+    # Ping-pong through VMEM when the signal fits (it does at our sizes).
+    vmem = 4 * n * 4 * 2
+    hbm = 4 * n * 4  # one read + one write of planar re/im
+    util = 0.25
+    bound, secs = _roofline(flops, hbm, util)
+    return KernelEstimate(
+        "fft", vmem, vmem / VMEM_BYTES, flops, hbm, flops / hbm, util, bound, secs
+    )
+
+
+def ring_estimate(p: int, n: int) -> KernelEstimate:
+    """Ring exchange: bandwidth-bound combine (ICI-bound on a real pod)."""
+    vmem = 2 * n * 4 * 2
+    flops = 2 * p * n
+    hbm = 3 * p * n * 4
+    util = 0.25
+    bound, secs = _roofline(flops, hbm, util)
+    return KernelEstimate(
+        "ring", vmem, vmem / VMEM_BYTES, flops, hbm, flops / hbm, util, bound, secs
+    )
+
+
+def all_estimates() -> list[KernelEstimate]:
+    from .model import DGEMM_N, FFT_N, MINIFE_GRID, RING_SHAPE, STREAM_SHAPE
+
+    return [
+        dgemm_estimate(DGEMM_N, DGEMM_N, DGEMM_N),
+        stream_estimate(*STREAM_SHAPE),
+        stencil_estimate(*MINIFE_GRID),
+        fft_estimate(FFT_N),
+        ring_estimate(*RING_SHAPE),
+    ]
+
+
+def report() -> str:
+    lines = [
+        f"{'kernel':<8} {'VMEM':>9} {'%VMEM':>6} {'AI':>7} {'MXU/VPU':>8} "
+        f"{'bound':>8} {'est step':>10}"
+    ]
+    for e in all_estimates():
+        lines.append(
+            f"{e.name:<8} {e.vmem_bytes / 1024:>7.0f}Ki {e.vmem_frac * 100:>5.1f}% "
+            f"{e.arithmetic_intensity:>7.2f} {e.mxu_utilization:>8.2f} "
+            f"{e.bound:>8} {e.est_step_seconds * 1e6:>8.1f}us"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(report())

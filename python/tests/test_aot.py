@@ -1,0 +1,50 @@
+"""AOT pipeline tests: lowering determinism, manifest integrity, HLO sanity."""
+
+import hashlib
+import json
+import pathlib
+
+import pytest
+
+from compile import aot
+from compile.model import SPECS
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+
+@pytest.mark.parametrize("name", list(SPECS))
+def test_lowering_produces_hlo_text(name):
+    text = aot.lower_spec(name)
+    assert text.startswith("HloModule"), text[:80]
+    assert "ENTRY" in text
+    # The rust-side loader requires the text parser path; serialized protos
+    # from jax>=0.5 would not survive xla_extension 0.5.1 (64-bit ids).
+    assert "\x00" not in text
+
+
+@pytest.mark.parametrize("name", list(SPECS))
+def test_lowering_is_deterministic(name):
+    assert aot.lower_spec(name) == aot.lower_spec(name)
+
+
+def test_arg_manifest_shapes():
+    for spec in SPECS.values():
+        man = aot.arg_manifest(spec)
+        assert len(man) == len(spec.args)
+        for entry, arg in zip(man, spec.args):
+            assert tuple(entry["shape"]) == arg.shape
+            assert entry["dtype"] == arg.dtype.name
+
+
+@pytest.mark.skipif(
+    not (ARTIFACTS / "manifest.json").exists(),
+    reason="run `make artifacts` first",
+)
+def test_artifacts_match_manifest():
+    manifest = json.loads((ARTIFACTS / "manifest.json").read_text())
+    assert set(manifest) == set(SPECS)
+    for name, entry in manifest.items():
+        text = (ARTIFACTS / entry["hlo"]).read_text()
+        assert hashlib.sha256(text.encode()).hexdigest() == entry["sha256"]
+        assert entry["profile"] == SPECS[name].profile
+        assert entry["flops_per_step"] == SPECS[name].flops

@@ -1,0 +1,75 @@
+"""Kernel vs ref allclose — the CORE correctness signal.
+
+Fixed-shape smoke checks for every L1 kernel; the hypothesis sweeps live in
+the per-kernel test modules (test_dgemm.py, test_stream.py, ...).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import dgemm, fft, ref, ring, stencil, stream
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+def test_dgemm_matches_ref():
+    a = _rand(0, (256, 128))
+    b = _rand(1, (128, 384))
+    out = dgemm.dgemm(a, b)
+    np.testing.assert_allclose(out, ref.dgemm(a, b), rtol=1e-5, atol=1e-4)
+
+
+def test_triad_matches_ref():
+    b = _rand(2, (16, 2048))
+    c = _rand(3, (16, 2048))
+    out = stream.triad(b, c, 3.0, brows=8, blanes=1024)
+    np.testing.assert_allclose(out, ref.triad(b, c, 3.0), rtol=1e-5, atol=1e-6)
+
+
+def test_stencil_matches_ref():
+    x = _rand(4, (16, 12, 20))
+    out = stencil.stencil_matvec(x, bz=4)
+    np.testing.assert_allclose(out, ref.stencil_matvec(x), rtol=1e-5, atol=1e-5)
+
+
+def test_ring_matches_ref():
+    buf = _rand(5, (16, 512))
+    perm = jnp.roll(jnp.arange(16, dtype=jnp.int32), 1)
+    out = ring.ring_exchange(buf, perm)
+    np.testing.assert_allclose(out, ref.ring_exchange(buf, perm), rtol=1e-6)
+
+
+def test_butterfly_matches_ref():
+    args = [_rand(10 + i, (64, 4)) for i in range(4)]
+    w = [_rand(20 + i, (64, 1)) for i in range(2)]
+    outs = fft.butterfly(*args, *w)
+    expect = ref.butterfly(*args, *w)
+    for o, e in zip(outs, expect):
+        np.testing.assert_allclose(o, e, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bad_shape", [(100, 128), (128, 100)])
+def test_dgemm_rejects_untileable(bad_shape):
+    a = jnp.zeros(bad_shape)
+    b = jnp.zeros((bad_shape[1], 128))
+    with pytest.raises(ValueError):
+        dgemm.dgemm(a, b)
+
+
+def test_dgemm_rejects_mismatched_inner():
+    with pytest.raises(ValueError):
+        dgemm.dgemm(jnp.zeros((128, 128)), jnp.zeros((256, 128)))
+
+
+def test_triad_rejects_mismatch():
+    with pytest.raises(ValueError):
+        stream.triad(jnp.zeros((8, 1024)), jnp.zeros((8, 2048)), 1.0)
+
+
+def test_stencil_rejects_untileable():
+    with pytest.raises(ValueError):
+        stencil.stencil_matvec(jnp.zeros((7, 8, 8)), bz=4)

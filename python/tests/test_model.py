@@ -1,0 +1,104 @@
+"""L2 model step functions: shapes, semantics, and the FFT composition."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+def test_dgemm_step_shape_and_value():
+    a = _rand(0, (model.DGEMM_N, model.DGEMM_N))
+    b = _rand(1, (model.DGEMM_N, model.DGEMM_N))
+    out = model.dgemm_step(a, b)
+    assert out.shape == (model.DGEMM_N, model.DGEMM_N)
+    np.testing.assert_allclose(out, ref.dgemm(a, b), rtol=1e-4, atol=1e-3)
+
+
+def test_stream_step():
+    b = _rand(2, model.STREAM_SHAPE)
+    c = _rand(3, model.STREAM_SHAPE)
+    s = jnp.full((1, 1), 1.5)
+    out = model.stream_step(b, c, s)
+    np.testing.assert_allclose(out, ref.triad(b, c, 1.5), rtol=1e-5, atol=1e-6)
+
+
+def test_minife_step_is_cg_iteration():
+    """One model CG step must equal a hand-rolled CG step on the oracle A."""
+    x = jnp.zeros(model.MINIFE_GRID)
+    b = _rand(4, model.MINIFE_GRID)
+    r = b
+    p = r
+    x1, r1, p1, rn = model.minife_step(x, r, p)
+
+    ap = ref.stencil_matvec(p)
+    alpha = jnp.vdot(r, r) / jnp.vdot(p, ap)
+    x_e = x + alpha * p
+    r_e = r - alpha * ap
+    beta = jnp.vdot(r_e, r_e) / jnp.vdot(r, r)
+    p_e = r_e + beta * p
+
+    np.testing.assert_allclose(x1, x_e, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(r1, r_e, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(p1, p_e, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(rn, jnp.sqrt(jnp.vdot(r_e, r_e)), rtol=1e-4)
+
+
+def test_minife_cg_converges():
+    """CG on the SPD stencil operator must reduce the residual monotonically
+    (within fp32 noise) over a handful of iterations."""
+    b = _rand(5, (16, 16, 16))
+    x = jnp.zeros_like(b)
+    r = b
+    p = r
+    norms = [float(jnp.linalg.norm(r))]
+    for _ in range(10):
+        x, r, p, rn = model.minife_step(x, r, p)
+        norms.append(float(rn))
+    assert norms[-1] < 0.05 * norms[0], norms
+
+
+def test_ring_step():
+    buf = _rand(6, model.RING_SHAPE)
+    perm = jax.random.permutation(
+        jax.random.PRNGKey(7), model.RING_SHAPE[0]
+    ).astype(jnp.int32)
+    out = model.ring_step(buf, perm)
+    np.testing.assert_allclose(out, ref.ring_exchange(buf, perm), rtol=1e-6)
+
+
+@pytest.mark.parametrize("n", [8, 64, 256, 1024])
+def test_fft_step_matches_jnp_fft(n):
+    re = _rand(8, (n,))
+    im = _rand(9, (n,))
+    out_re, out_im = model.fft_step(re, im)
+    exp_re, exp_im = ref.fft(re, im)
+    np.testing.assert_allclose(out_re, exp_re, rtol=1e-3, atol=1e-3 * math.sqrt(n))
+    np.testing.assert_allclose(out_im, exp_im, rtol=1e-3, atol=1e-3 * math.sqrt(n))
+
+
+def test_fft_step_rejects_non_pow2():
+    with pytest.raises(ValueError):
+        model.fft_step(jnp.zeros(12), jnp.zeros(12))
+
+
+def test_specs_cover_all_benchmarks():
+    assert set(model.SPECS) == {"dgemm", "stream", "minife", "ring", "fft"}
+    for name, spec in model.SPECS.items():
+        assert spec.name == name
+        assert spec.flops > 0 and spec.bytes > 0
+        assert spec.profile in {"cpu", "memory", "network", "cpu+memory"}
+
+
+def test_specs_lowerable():
+    """Every spec must trace/lower without executing (AOT precondition)."""
+    for spec in model.SPECS.values():
+        jax.jit(spec.fn).lower(*spec.args)

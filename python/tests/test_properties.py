@@ -1,0 +1,117 @@
+"""Hypothesis sweeps: kernel == oracle across randomized shapes/dtypes/data.
+
+Interpret-mode Pallas is slow, so shapes are kept modest; the point is the
+*space* of shapes (tiling edge cases, non-square, minimum sizes), not bulk.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import dgemm, fft, ref, ring, stencil, stream
+
+COMMON = dict(
+    deadline=None,
+    max_examples=20,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+
+
+def _arr(seed, shape, dtype, scale=1.0):
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32) * scale
+    return x.astype(dtype)
+
+
+@settings(**COMMON)
+@given(
+    mi=st.integers(1, 4),
+    ni=st.integers(1, 4),
+    ki=st.integers(1, 4),
+    bsz=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_dgemm_property(mi, ni, ki, bsz, seed, dtype):
+    m, n, k = mi * bsz, ni * bsz, ki * bsz
+    a = _arr(seed, (m, k), dtype)
+    b = _arr(seed + 1, (k, n), dtype)
+    out = dgemm.dgemm(a, b, bm=bsz, bn=bsz, bk=bsz)
+    expect = ref.dgemm(a, b)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(out, expect, rtol=tol, atol=tol * k)
+
+
+@settings(**COMMON)
+@given(
+    ri=st.integers(1, 4),
+    li=st.integers(1, 4),
+    scalar=st.floats(-10, 10, allow_nan=False, width=32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_triad_property(ri, li, scalar, seed):
+    shape = (ri * 8, li * 256)
+    b = _arr(seed, shape, jnp.float32)
+    c = _arr(seed + 1, shape, jnp.float32)
+    out = stream.triad(b, c, scalar, brows=8, blanes=256)
+    np.testing.assert_allclose(out, ref.triad(b, c, scalar), rtol=1e-5, atol=1e-5)
+
+
+@settings(**COMMON)
+@given(
+    zi=st.integers(1, 4),
+    ny=st.integers(2, 12),
+    nx=st.integers(2, 12),
+    bz=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_stencil_property(zi, ny, nx, bz, seed):
+    nz = zi * bz
+    x = _arr(seed, (nz, ny, nx), jnp.float32)
+    out = stencil.stencil_matvec(x, bz=bz)
+    np.testing.assert_allclose(out, ref.stencil_matvec(x), rtol=1e-5, atol=1e-5)
+
+
+@settings(**COMMON)
+@given(
+    p=st.sampled_from([2, 4, 8, 16, 32]),
+    n=st.sampled_from([64, 256, 1024]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ring_property(p, n, seed):
+    buf = _arr(seed, (p, n), jnp.float32)
+    perm = jax.random.permutation(jax.random.PRNGKey(seed + 1), p).astype(jnp.int32)
+    out = ring.ring_exchange(buf, perm)
+    np.testing.assert_allclose(out, ref.ring_exchange(buf, perm), rtol=1e-6)
+
+
+@settings(**COMMON)
+@given(
+    half=st.sampled_from([1, 4, 16, 64]),
+    m=st.sampled_from([1, 4, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_butterfly_property(half, m, seed):
+    ops = [_arr(seed + i, (half, m), jnp.float32) for i in range(4)]
+    tw = [_arr(seed + 10 + i, (half, 1), jnp.float32) for i in range(2)]
+    outs = fft.butterfly(*ops, *tw)
+    expect = ref.butterfly(*ops, *tw)
+    for o, e in zip(outs, expect):
+        np.testing.assert_allclose(o, e, rtol=1e-5, atol=1e-5)
+
+
+@settings(**COMMON)
+@given(
+    p=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ring_preserves_mean(p, seed):
+    """Exchange+combine is an averaging step: the global mean is conserved
+    when perm is a permutation (doubly-stochastic combine)."""
+    buf = _arr(seed, (p, 32), jnp.float32)
+    perm = jax.random.permutation(jax.random.PRNGKey(seed + 1), p).astype(jnp.int32)
+    out = ring.ring_exchange(buf, perm)
+    np.testing.assert_allclose(
+        jnp.mean(out), jnp.mean(buf), rtol=1e-4, atol=1e-5
+    )

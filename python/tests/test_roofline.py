@@ -1,0 +1,64 @@
+"""Roofline estimator tests: invariants the perf pass relies on."""
+
+import pytest
+
+from compile import roofline
+
+
+def test_all_kernels_fit_vmem():
+    for e in roofline.all_estimates():
+        assert e.vmem_frac < 0.5, f"{e.name}: {e.vmem_frac:.2f} of VMEM"
+        assert e.vmem_bytes > 0
+
+
+def test_dgemm_becomes_compute_bound_with_bigger_tiles():
+    # At the artifact size with 128-tiles the A/B re-reads leave DGEMM
+    # HBM-bound; the perf-pass remedy is bigger output tiles (fewer
+    # re-reads) and a deeper K block (less drain): 512-tiles at 2048^3 tip
+    # it over the ridge while staying well inside VMEM.
+    small = roofline.dgemm_estimate(256, 256, 256)
+    assert small.bound == "memory"
+    big = roofline.dgemm_estimate(2048, 2048, 2048, bm=512, bn=512, bk=512)
+    assert big.bound == "compute"
+    assert big.vmem_frac < 0.5
+    ests = {e.name: e for e in roofline.all_estimates()}
+    assert ests["stream"].bound == "memory"
+    assert ests["dgemm"].arithmetic_intensity > 10 * ests["stream"].arithmetic_intensity
+
+
+def test_mxu_utilization_monotone_in_tile_size():
+    full = roofline.dgemm_estimate(1024, 1024, 1024, bm=128, bn=128, bk=128)
+    half = roofline.dgemm_estimate(1024, 1024, 1024, bm=64, bn=64, bk=128)
+    assert full.mxu_utilization > half.mxu_utilization
+
+
+def test_bigger_k_block_improves_drain():
+    small = roofline.dgemm_estimate(1024, 1024, 1024, bk=128)
+    large = roofline.dgemm_estimate(1024, 1024, 1024, bk=512)
+    assert large.mxu_utilization > small.mxu_utilization
+    # But VMEM grows.
+    assert large.vmem_bytes > small.vmem_bytes
+
+
+def test_estimated_times_positive_and_finite():
+    for e in roofline.all_estimates():
+        assert e.est_step_seconds > 0
+        assert e.est_step_seconds < 1.0, f"{e.name} absurdly slow: {e}"
+
+
+def test_stream_lane_alignment_matters():
+    aligned = roofline.stream_estimate(64, 4096, brows=8, blanes=1024)
+    misaligned = roofline.stream_estimate(64, 4096, brows=4, blanes=64)
+    assert aligned.mxu_utilization >= misaligned.mxu_utilization
+
+
+def test_report_renders_every_kernel():
+    r = roofline.report()
+    for name in ["dgemm", "stream", "minife", "fft", "ring"]:
+        assert name in r
+
+
+@pytest.mark.parametrize("n", [256, 1024, 4096])
+def test_fft_estimate_scales(n):
+    e = roofline.fft_estimate(n)
+    assert e.flops_per_step == 10 * n * (n.bit_length() - 1)

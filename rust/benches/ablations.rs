@@ -1,0 +1,90 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!  A. task-group plugin on/off at fixed granularity (isolates Alg. 3-4);
+//!  B. granularity policy sweep at fixed scheduler;
+//!  C. cluster-size scaling (4 -> 16 worker nodes, future-work §VI);
+//!  D. arrival-intensity sweep (queueing sensitivity).
+//!
+//! Run: cargo bench --bench ablations
+
+use kube_fgs::experiments::{run_metrics, DEFAULT_SEED};
+use kube_fgs::metrics::ExperimentMetrics;
+use kube_fgs::report;
+use kube_fgs::scenario::Scenario;
+use kube_fgs::simulator::Simulation;
+use kube_fgs::util::BenchTimer;
+use kube_fgs::workload::{exp2_trace, uniform_trace};
+
+fn main() {
+    let seed = DEFAULT_SEED;
+    let trace = exp2_trace(seed);
+
+    println!("=== Ablation A/B — planner policy x task-group plugin ===\n");
+    let mut rows = Vec::new();
+    for s in kube_fgs::scenario::TABLE2_SCENARIOS {
+        let m = run_metrics(s, &trace, seed);
+        rows.push(vec![
+            s.name().to_string(),
+            format!("{:?}", s.policy()),
+            s.scheduler(0).taskgroup.to_string(),
+            format!("{:.0}", m.overall_response),
+            format!("{:.0}", m.makespan),
+        ]);
+    }
+    print!(
+        "{}",
+        report::table(
+            &["scenario", "planner", "taskgroup", "response (s)", "makespan (s)"],
+            &rows
+        )
+    );
+
+    println!("\n=== Ablation C — cluster-size scaling (CM_G_TG) ===\n");
+    let mut rows = Vec::new();
+    for workers in [4usize, 8, 16] {
+        let scenario = Scenario::CmGTg;
+        let sim = scenario.simulation_on(
+            kube_fgs::cluster::ClusterSpec::with_workers(workers),
+            seed,
+        );
+        let out = sim.run(&trace);
+        let m = ExperimentMetrics::from(&out);
+        rows.push(vec![
+            workers.to_string(),
+            format!("{:.0}", m.overall_response),
+            format!("{:.0}", m.makespan),
+            format!("{:.1}", m.avg_wait),
+        ]);
+    }
+    print!(
+        "{}",
+        report::table(&["workers", "response (s)", "makespan (s)", "avg wait (s)"], &rows)
+    );
+
+    println!("\n=== Ablation D — arrival intensity (CM vs CM_G_TG) ===\n");
+    let mut rows = Vec::new();
+    for interval in [30u64, 60, 120] {
+        let t = uniform_trace(20, interval as f64, seed);
+        let cm = run_metrics(Scenario::Cm, &t, seed);
+        let fg = run_metrics(Scenario::CmGTg, &t, seed);
+        rows.push(vec![
+            format!("{interval}s"),
+            format!("{:.0}", cm.overall_response),
+            format!("{:.0}", fg.overall_response),
+            format!("{:+.0}%", (1.0 - fg.overall_response / cm.overall_response) * 100.0),
+        ]);
+    }
+    print!(
+        "{}",
+        report::table(
+            &["mean interval", "CM response", "CM_G_TG response", "improvement"],
+            &rows
+        )
+    );
+
+    println!();
+    let mut simulate = || {
+        let sim: Simulation = Scenario::CmGTg.simulation(seed);
+        sim.run(&trace);
+    };
+    BenchTimer::new("ablation/simulation-cost").with_iters(1, 5).run(&mut simulate);
+}

@@ -1,0 +1,29 @@
+//! Bench: regenerate Fig. 3 (benchmark MPI profiling analysis) and time
+//! the live PJRT payload measurements behind it.
+//!
+//! Run: cargo bench --bench fig3_profiles
+
+use kube_fgs::experiments;
+use kube_fgs::runtime::{default_artifacts_dir, Runtime};
+use kube_fgs::util::BenchTimer;
+use kube_fgs::workload::ALL_BENCHMARKS;
+
+fn main() {
+    println!("=== Fig. 3 — Benchmarks MPI profiling analysis ===\n");
+    print!("{}", experiments::fig3_table());
+
+    match Runtime::load(&default_artifacts_dir()) {
+        Ok(rt) => {
+            println!("\nper-payload PJRT step time:");
+            for &b in &ALL_BENCHMARKS {
+                let payload = rt.payload(b).unwrap();
+                BenchTimer::new(&format!("payload/{}", b.artifact()))
+                    .with_iters(2, 8)
+                    .run(|| {
+                        payload.step().unwrap();
+                    });
+            }
+        }
+        Err(e) => println!("\n(payload timing skipped: {e})"),
+    }
+}

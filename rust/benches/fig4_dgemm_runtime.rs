@@ -1,0 +1,19 @@
+//! Bench: regenerate Fig. 4 (average running time of 10 EP-DGEMM jobs
+//! across the six Table-II scenarios) and time the full simulation.
+//!
+//! Run: cargo bench --bench fig4_dgemm_runtime
+
+use kube_fgs::experiments::{self, DEFAULT_SEED};
+use kube_fgs::util::BenchTimer;
+
+fn main() {
+    println!("=== Fig. 4 — avg running time, 10 EP-DGEMM jobs ===\n");
+    let results = experiments::exp1_all_scenarios(DEFAULT_SEED);
+    print!("{}", experiments::fig4_table(&results));
+
+    println!();
+    BenchTimer::new("exp1/all-six-scenarios").with_iters(1, 5).run(|| {
+        let r = experiments::exp1_all_scenarios(DEFAULT_SEED);
+        assert_eq!(r.len(), 6);
+    });
+}

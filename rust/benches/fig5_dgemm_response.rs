@@ -1,0 +1,32 @@
+//! Bench: regenerate Fig. 5 (overall response time of 10 EP-DGEMM jobs)
+//! and check the paper's headline deltas hold in shape.
+//!
+//! Run: cargo bench --bench fig5_dgemm_response
+
+use kube_fgs::experiments::{self, DEFAULT_SEED};
+use kube_fgs::util::BenchTimer;
+
+fn main() {
+    println!("=== Fig. 5 — overall response time, 10 EP-DGEMM jobs ===\n");
+    let results = experiments::exp1_all_scenarios(DEFAULT_SEED);
+    print!("{}", experiments::fig5_table(&results));
+
+    let get = |name: &str| {
+        results.iter().find(|(s, _)| s.name() == name).map(|(_, m)| m.overall_response).unwrap()
+    };
+    println!("\nshape checks (paper: CM_S* +5%/+26%, CM_G* +15%/+34% vs CM/NONE):");
+    for s in ["CM_S", "CM_G", "CM_S_TG", "CM_G_TG"] {
+        println!(
+            "  {:<8} vs CM {:+.0}%   vs NONE {:+.0}%",
+            s,
+            (1.0 - get(s) / get("CM")) * 100.0,
+            (1.0 - get(s) / get("NONE")) * 100.0
+        );
+    }
+    assert!(get("CM_G") < get("CM") && get("CM") < get("NONE"));
+
+    println!();
+    BenchTimer::new("exp1/response-pipeline").with_iters(1, 5).run(|| {
+        experiments::exp1_all_scenarios(DEFAULT_SEED);
+    });
+}

@@ -1,0 +1,28 @@
+//! Bench: regenerate Fig. 6 (per-benchmark avg running time + overall
+//! response, 20 mixed jobs, six scenarios).
+//!
+//! Run: cargo bench --bench fig6_mixed_workloads
+
+use kube_fgs::experiments::{self, DEFAULT_SEED};
+use kube_fgs::util::BenchTimer;
+use kube_fgs::workload::Benchmark;
+
+fn main() {
+    println!("=== Fig. 6 — 20 mixed jobs, six scenarios ===\n");
+    let results = experiments::exp2_all_scenarios(DEFAULT_SEED);
+    print!("{}", experiments::fig6_table(&results));
+
+    let get = |name: &str| results.iter().find(|(s, _)| s.name() == name).unwrap();
+    let (_, cm_s) = get("CM_S");
+    let (_, cm_s_tg) = get("CM_S_TG");
+    println!(
+        "\nTG effect on EP-STREAM (paper: -33% CM_S_TG vs CM_S): {:+.0}%",
+        (cm_s_tg.avg_running[&Benchmark::EpStream] / cm_s.avg_running[&Benchmark::EpStream] - 1.0)
+            * 100.0
+    );
+
+    println!();
+    BenchTimer::new("exp2/all-six-scenarios").with_iters(1, 3).run(|| {
+        experiments::exp2_all_scenarios(DEFAULT_SEED);
+    });
+}

@@ -1,0 +1,28 @@
+//! Bench: regenerate Fig. 7 (makespan of the 20-job mixed workload, plus
+//! the per-scenario scheduling-process Gantt).
+//!
+//! Run: cargo bench --bench fig7_makespan
+
+use kube_fgs::experiments::{self, DEFAULT_SEED};
+use kube_fgs::report;
+use kube_fgs::util::BenchTimer;
+use kube_fgs::workload::exp2_trace;
+
+fn main() {
+    println!("=== Fig. 7 — makespan, 20 mixed jobs ===\n");
+    let results = experiments::exp2_all_scenarios(DEFAULT_SEED);
+    print!("{}", experiments::fig7_table(&results));
+
+    println!("\nscheduling process (CM vs CM_G_TG):");
+    for name in ["CM", "CM_G_TG"] {
+        let s = kube_fgs::scenario::Scenario::parse(name).unwrap();
+        let out = experiments::run_scenario(s, &exp2_trace(DEFAULT_SEED), DEFAULT_SEED, None);
+        println!("\n-- {name} --");
+        print!("{}", report::gantt(&out, 90));
+    }
+
+    println!();
+    BenchTimer::new("exp2/makespan-pipeline").with_iters(1, 3).run(|| {
+        experiments::exp2_all_scenarios(DEFAULT_SEED);
+    });
+}

@@ -1,0 +1,37 @@
+//! Bench: regenerate Fig. 8 (per-job running time across frameworks).
+//!
+//! Run: cargo bench --bench fig8_framework_runtime
+
+use kube_fgs::experiments::{self, DEFAULT_SEED};
+use kube_fgs::simulator::JobRecord;
+use kube_fgs::util::BenchTimer;
+
+fn main() {
+    println!("=== Fig. 8 — per-job running time across frameworks ===\n");
+    let results = experiments::exp3_all_scenarios(DEFAULT_SEED);
+    print!(
+        "{}",
+        experiments::per_job_table(&results, JobRecord::running, "")
+    );
+
+    // Paper: network-intensive jobs degrade catastrophically under native
+    // Volcano; CM_G_TG improves or equals every job vs CM.
+    let volcano = &results.iter().find(|(s, _)| s.name() == "Volcano").unwrap().1;
+    let worst = volcano
+        .per_job
+        .iter()
+        .map(|r| (r.benchmark, r.running()))
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+    println!(
+        "\nworst Volcano job: {} at {:.0} s (network-intensive scatter)",
+        worst.0.name(),
+        worst.1
+    );
+    assert!(worst.0.profile().is_network());
+
+    println!();
+    BenchTimer::new("exp3/fig8-pipeline").with_iters(1, 3).run(|| {
+        experiments::exp3_all_scenarios(DEFAULT_SEED);
+    });
+}

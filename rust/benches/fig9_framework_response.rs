@@ -1,0 +1,34 @@
+//! Bench: regenerate Fig. 9 (per-job response time across frameworks).
+//!
+//! Run: cargo bench --bench fig9_framework_response
+
+use kube_fgs::experiments::{self, DEFAULT_SEED};
+use kube_fgs::simulator::JobRecord;
+use kube_fgs::util::BenchTimer;
+
+fn main() {
+    println!("=== Fig. 9 — per-job response time across frameworks ===\n");
+    let results = experiments::exp3_all_scenarios(DEFAULT_SEED);
+    print!(
+        "{}",
+        experiments::per_job_table(&results, JobRecord::response, "")
+    );
+
+    // Paper: CM_G_TG improves (or at least equals) the response of jobs
+    // overall; Volcano is the worst case.
+    let sum = |name: &str| {
+        results
+            .iter()
+            .find(|(s, _)| s.name() == name)
+            .map(|(_, m)| m.overall_response)
+            .unwrap()
+    };
+    println!("\noverall response: Volcano {:.0} s, CM {:.0} s, CM_G_TG {:.0} s", sum("Volcano"), sum("CM"), sum("CM_G_TG"));
+    assert!(sum("Volcano") > sum("CM"));
+    assert!(sum("CM_G_TG") < sum("CM"));
+
+    println!();
+    BenchTimer::new("exp3/fig9-pipeline").with_iters(1, 3).run(|| {
+        experiments::exp3_all_scenarios(DEFAULT_SEED);
+    });
+}

@@ -1,0 +1,88 @@
+//! Microbenchmarks of the L3 hot paths: one scheduling session (filter +
+//! score + gang trial), task-group construction, Algorithm-4 scoring, rate
+//! recomputation, and a full simulation step loop.
+//!
+//! These are the targets the §Perf optimization pass iterates against
+//! (EXPERIMENTS.md §Perf records before/after).
+//!
+//! Run: cargo bench --bench scheduler_micro
+
+use kube_fgs::apiserver::ApiServer;
+use kube_fgs::cluster::ClusterSpec;
+use kube_fgs::controller::{JobController, VolcanoMpiController};
+use kube_fgs::kubelet::KubeletConfig;
+use kube_fgs::perfmodel::{job_slowdown, job_slowdown_with, Calibration, ClusterLoads};
+use kube_fgs::planner::{plan, GranularityPolicy, SystemInfo};
+use kube_fgs::scheduler::{Scheduler, SchedulerConfig};
+use kube_fgs::util::BenchTimer;
+use kube_fgs::workload::{exp2_trace, JobSpec, Benchmark};
+
+/// API server with `n` pending granularity jobs (16 pods each).
+fn pending_cluster(n: u64, workers: usize) -> ApiServer {
+    let mut api = ApiServer::new(
+        ClusterSpec::with_workers(workers),
+        KubeletConfig::cpu_mem_affinity(),
+    );
+    let info = SystemInfo { available_nodes: workers as u32 };
+    for i in 1..=n {
+        let spec = JobSpec::paper_job(i, Benchmark::EpDgemm, 0.0);
+        let planned = plan(&spec, GranularityPolicy::Granularity, info);
+        let (pods, hostfile) = VolcanoMpiController.build(&planned, &mut api);
+        api.create_job(planned, pods, hostfile, 0.0);
+    }
+    api
+}
+
+fn main() {
+    println!("=== L3 scheduler microbenchmarks ===\n");
+
+    // One full scheduling session over 8 pending fine-grained jobs
+    // (8 jobs x 17 pods, task-group plugin on).
+    BenchTimer::new("session/8-jobs-taskgroup-4-nodes").with_iters(3, 20).run(|| {
+        let mut api = pending_cluster(8, 4);
+        let mut sched = Scheduler::new(SchedulerConfig::fine_grained(1));
+        let started = sched.cycle(&mut api, 0.0);
+        assert!(!started.is_empty());
+    });
+
+    // Same at 16 nodes / 32 jobs — the scalability ablation point.
+    BenchTimer::new("session/32-jobs-taskgroup-16-nodes").with_iters(1, 10).run(|| {
+        let mut api = pending_cluster(32, 16);
+        let mut sched = Scheduler::new(SchedulerConfig::fine_grained(1));
+        sched.cycle(&mut api, 0.0);
+    });
+
+    // Rate recomputation: job_slowdown over a loaded cluster.
+    {
+        let mut api = pending_cluster(8, 4);
+        let mut sched = Scheduler::new(SchedulerConfig::fine_grained(1));
+        sched.cycle(&mut api, 0.0);
+        let running = api.running_jobs();
+        let calib = Calibration::default();
+        // Naive per-job recomputation (the pre-optimization hot path).
+        BenchTimer::new("perfmodel/rate-recompute-naive").with_iters(3, 50).run(|| {
+            for &j in &running {
+                job_slowdown(&api, j, &calib, 1.0);
+            }
+        });
+        // Snapshot-amortized recomputation (what the simulator runs).
+        BenchTimer::new("perfmodel/rate-recompute-snapshot").with_iters(3, 50).run(|| {
+            let loads = ClusterLoads::snapshot(&api);
+            for &j in &running {
+                job_slowdown_with(&api, j, &calib, 1.0, &loads);
+            }
+        });
+    }
+
+    // Full experiment-2 simulation, one scenario.
+    BenchTimer::new("simulate/exp2-CM_G_TG").with_iters(1, 10).run(|| {
+        let sim = kube_fgs::scenario::Scenario::CmGTg.simulation(2);
+        let out = sim.run(&exp2_trace(2));
+        assert_eq!(out.records.len(), 20);
+    });
+
+    // Full experiment-2, all six scenarios (the figure-regeneration cost).
+    BenchTimer::new("simulate/exp2-all-scenarios").with_iters(1, 5).run(|| {
+        kube_fgs::experiments::exp2_all_scenarios(2);
+    });
+}

@@ -1,0 +1,33 @@
+//! Bench: regenerate Table III (makespan under Kubeflow / native Volcano /
+//! CM / CM_S_TG / CM_G_TG) in the paper's exact format.
+//!
+//! Run: cargo bench --bench table3_frameworks
+
+use kube_fgs::experiments::{self, DEFAULT_SEED};
+use kube_fgs::util::BenchTimer;
+
+fn main() {
+    println!("=== Table III — makespan comparison ===\n");
+    let results = experiments::exp3_all_scenarios(DEFAULT_SEED);
+    print!("{}", experiments::table3(&results));
+
+    let get = |name: &str| {
+        results.iter().find(|(s, _)| s.name() == name).map(|(_, m)| m.makespan).unwrap()
+    };
+    println!("\nshape checks:");
+    println!(
+        "  Volcano / CM slowdown: {:.1}x (paper: 123055/2529 = 48.7x)",
+        get("Volcano") / get("CM")
+    );
+    println!(
+        "  Kubeflow ~= CM: {:+.1}% (paper: 2520 vs 2529 = -0.4%)",
+        (get("Kubeflow") / get("CM") - 1.0) * 100.0
+    );
+    assert!(get("Volcano") > 10.0 * get("CM"), "Volcano must blow up");
+    assert!(get("CM_G_TG") < get("CM"));
+
+    println!();
+    BenchTimer::new("exp3/frameworks-pipeline").with_iters(1, 3).run(|| {
+        experiments::exp3_all_scenarios(DEFAULT_SEED);
+    });
+}

@@ -1,0 +1,331 @@
+//! API-server substrate: the typed object store + event log that stands in
+//! for Kubernetes' API server/etcd (DESIGN.md §1).
+//!
+//! Controllers create job/pod objects here, the scheduler binds pods, and
+//! kubelets admit them; every mutation appends to the event log, which the
+//! report module replays to draw the Fig.-7 Gantt chart.
+
+pub mod watch;
+
+pub use watch::{WatchBus, WatchFilter, WatchId};
+
+use std::collections::BTreeMap;
+
+use crate::cluster::{
+    ClusterSpec, HostfileEntry, JobId, NodeId, Pod, PodId, PodPhase, Resources,
+};
+use crate::kubelet::{Kubelet, KubeletConfig};
+use crate::workload::PlannedJob;
+
+/// Lifecycle of a job (podgroup) object.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobPhase {
+    /// Created, waiting for the gang to be scheduled.
+    Pending,
+    /// All pods bound and admitted; MPI processes running.
+    Running,
+    Succeeded,
+}
+
+/// The job object stored in the API server (Volcano Job + PodGroup merged).
+#[derive(Debug, Clone)]
+pub struct JobObject {
+    pub planned: PlannedJob,
+    pub pods: Vec<PodId>,
+    pub hostfile: Vec<HostfileEntry>,
+    pub phase: JobPhase,
+    pub submit_time: f64,
+    pub start_time: Option<f64>,
+    pub finish_time: Option<f64>,
+}
+
+/// Audit/event log entry (consumed by report::gantt and the metrics).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    JobSubmitted { t: f64, job: JobId },
+    PodBound { t: f64, pod: PodId, node: NodeId },
+    JobStarted { t: f64, job: JobId },
+    JobFinished { t: f64, job: JobId },
+}
+
+impl Event {
+    pub fn time(&self) -> f64 {
+        match self {
+            Event::JobSubmitted { t, .. }
+            | Event::PodBound { t, .. }
+            | Event::JobStarted { t, .. }
+            | Event::JobFinished { t, .. } => *t,
+        }
+    }
+}
+
+/// The cluster control-plane state: object store + per-node kubelets +
+/// request accounting.
+pub struct ApiServer {
+    pub spec: ClusterSpec,
+    pub kubelets: Vec<Kubelet>,
+    pub pods: BTreeMap<PodId, Pod>,
+    pub jobs: BTreeMap<JobId, JobObject>,
+    /// Scheduler-view requested-resource accounting per node.
+    pub allocated: Vec<Resources>,
+    pub events: Vec<Event>,
+    /// Kubernetes-style list/watch surface over the event log.
+    pub watch: WatchBus,
+    next_pod_id: u64,
+}
+
+impl ApiServer {
+    pub fn new(spec: ClusterSpec, kubelet_config: KubeletConfig) -> ApiServer {
+        let kubelets = spec
+            .nodes
+            .iter()
+            .map(|n| Kubelet::new(n.clone(), kubelet_config))
+            .collect();
+        let allocated = vec![Resources::ZERO; spec.nodes.len()];
+        ApiServer {
+            spec,
+            kubelets,
+            pods: BTreeMap::new(),
+            jobs: BTreeMap::new(),
+            allocated,
+            events: Vec::new(),
+            watch: WatchBus::new(),
+            next_pod_id: 0,
+        }
+    }
+
+    pub fn fresh_pod_id(&mut self) -> PodId {
+        self.next_pod_id += 1;
+        PodId(self.next_pod_id)
+    }
+
+    /// Register a job object with its (already generated) pods + hostfile.
+    pub fn create_job(
+        &mut self,
+        planned: PlannedJob,
+        pods: Vec<Pod>,
+        hostfile: Vec<HostfileEntry>,
+        now: f64,
+    ) {
+        let job_id = planned.spec.id;
+        let pod_ids: Vec<PodId> = pods.iter().map(|p| p.id).collect();
+        for pod in pods {
+            debug_assert_eq!(pod.job, job_id);
+            self.pods.insert(pod.id, pod);
+        }
+        self.jobs.insert(
+            job_id,
+            JobObject {
+                planned,
+                pods: pod_ids,
+                hostfile,
+                phase: JobPhase::Pending,
+                submit_time: now,
+                start_time: None,
+                finish_time: None,
+            },
+        );
+        self.events.push(Event::JobSubmitted { t: now, job: job_id });
+        self.watch.publish(Event::JobSubmitted { t: now, job: job_id });
+    }
+
+    /// Free (unrequested) resources on a node, from the scheduler's
+    /// request-accounting view.
+    pub fn free_on(&self, node: NodeId) -> Resources {
+        self.spec.node(node).allocatable().saturating_sub(&self.allocated[node.0])
+    }
+
+    /// Bind a pod to a node and run kubelet admission. Panics on
+    /// double-bind; returns false if the kubelet cannot grant the cpuset
+    /// (callers must re-schedule — with correct predicates this should not
+    /// happen, and the integration tests assert it does not).
+    pub fn bind_pod(&mut self, pod_id: PodId, node: NodeId, now: f64) -> bool {
+        let pod = self.pods.get_mut(&pod_id).expect("bind of unknown pod");
+        assert_eq!(pod.phase, PodPhase::Pending, "double bind of {pod_id:?}");
+        if !self.kubelets[node.0].admit(pod) {
+            return false;
+        }
+        pod.node = Some(node);
+        pod.phase = PodPhase::Bound;
+        self.allocated[node.0] += pod.requests;
+        self.events.push(Event::PodBound { t: now, pod: pod_id, node });
+        self.watch.publish(Event::PodBound { t: now, pod: pod_id, node });
+        true
+    }
+
+    /// Mark a fully-bound job as running (gang start).
+    pub fn start_job(&mut self, job_id: JobId, now: f64) {
+        let job = self.jobs.get_mut(&job_id).expect("start of unknown job");
+        debug_assert_eq!(job.phase, JobPhase::Pending);
+        for pid in &job.pods {
+            let pod = self.pods.get_mut(pid).unwrap();
+            debug_assert_eq!(pod.phase, PodPhase::Bound);
+            pod.phase = PodPhase::Running;
+        }
+        job.phase = JobPhase::Running;
+        job.start_time = Some(now);
+        self.events.push(Event::JobStarted { t: now, job: job_id });
+        self.watch.publish(Event::JobStarted { t: now, job: job_id });
+    }
+
+    /// Complete a job: release every pod's resources and cpusets.
+    pub fn finish_job(&mut self, job_id: JobId, now: f64) {
+        let job = self.jobs.get_mut(&job_id).expect("finish of unknown job");
+        debug_assert_eq!(job.phase, JobPhase::Running);
+        job.phase = JobPhase::Succeeded;
+        job.finish_time = Some(now);
+        let pods = job.pods.clone();
+        for pid in pods {
+            let pod = self.pods.get_mut(&pid).unwrap();
+            let node = pod.node.expect("running pod without node");
+            self.allocated[node.0] -= pod.requests;
+            self.kubelets[node.0].terminate(&pod.clone());
+            pod.phase = PodPhase::Succeeded;
+        }
+        self.events.push(Event::JobFinished { t: now, job: job_id });
+        self.watch.publish(Event::JobFinished { t: now, job: job_id });
+    }
+
+    /// Pending jobs in FIFO (creation) order — the scheduler queue.
+    pub fn pending_jobs(&self) -> Vec<JobId> {
+        let mut v: Vec<(f64, JobId)> = self
+            .jobs
+            .iter()
+            .filter(|(_, j)| j.phase == JobPhase::Pending)
+            .map(|(&id, j)| (j.submit_time, id))
+            .collect();
+        v.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        v.into_iter().map(|(_, id)| id).collect()
+    }
+
+    pub fn running_jobs(&self) -> Vec<JobId> {
+        self.jobs
+            .iter()
+            .filter(|(_, j)| j.phase == JobPhase::Running)
+            .map(|(&id, _)| id)
+            .collect()
+    }
+
+    /// Worker pods of a job.
+    pub fn worker_pods_of(&self, job_id: JobId) -> Vec<&Pod> {
+        self.jobs[&job_id]
+            .pods
+            .iter()
+            .map(|pid| &self.pods[pid])
+            .filter(|p| p.is_worker())
+            .collect()
+    }
+
+    /// All running worker pods resident on a node (the co-location view the
+    /// performance model consumes).
+    pub fn running_workers_on(&self, node: NodeId) -> Vec<&Pod> {
+        self.pods
+            .values()
+            .filter(|p| {
+                p.is_worker() && p.phase == PodPhase::Running && p.node == Some(node)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{gib, PodRole};
+    use crate::workload::{Benchmark, Granularity, JobSpec};
+
+    fn planned(id: u64) -> PlannedJob {
+        PlannedJob {
+            spec: JobSpec::paper_job(id, Benchmark::EpDgemm, 0.0),
+            granularity: Granularity { n_nodes: 1, n_workers: 1, n_groups: 1 },
+        }
+    }
+
+    fn api() -> ApiServer {
+        ApiServer::new(ClusterSpec::paper(), KubeletConfig::cpu_mem_affinity())
+    }
+
+    fn make_worker(api: &mut ApiServer, job: JobId, idx: u32, cores: u64) -> Pod {
+        let id = api.fresh_pod_id();
+        let mut p = Pod::new(id, job, format!("j{}-w{idx}", job.0), PodRole::Worker { index: idx });
+        p.requests = Resources::new(cores * 1000, cores * gib(2));
+        p.limits = p.requests;
+        p.ntasks = cores as u32;
+        p
+    }
+
+    #[test]
+    fn job_lifecycle_conserves_resources() {
+        let mut api = api();
+        let pj = planned(1);
+        let job_id = pj.spec.id;
+        let w = make_worker(&mut api, job_id, 0, 16);
+        let wid = w.id;
+        api.create_job(pj, vec![w], vec![], 0.0);
+        assert_eq!(api.pending_jobs(), vec![job_id]);
+
+        let node = NodeId(1);
+        let before = api.free_on(node);
+        assert!(api.bind_pod(wid, node, 1.0));
+        assert_eq!(api.free_on(node).cpu_milli, before.cpu_milli - 16_000);
+
+        api.start_job(job_id, 1.0);
+        assert_eq!(api.running_jobs(), vec![job_id]);
+        assert_eq!(api.running_workers_on(node).len(), 1);
+
+        api.finish_job(job_id, 100.0);
+        assert_eq!(api.free_on(node), before);
+        assert!(api.running_jobs().is_empty());
+        assert_eq!(api.jobs[&job_id].finish_time, Some(100.0));
+    }
+
+    #[test]
+    fn pending_queue_is_fifo_by_submit_time() {
+        let mut api = api();
+        for (id, t) in [(1u64, 5.0), (2, 1.0), (3, 3.0)] {
+            let mut pj = planned(id);
+            pj.spec.submit_time = t;
+            api.create_job(pj, vec![], vec![], t);
+        }
+        assert_eq!(api.pending_jobs(), vec![JobId(2), JobId(3), JobId(1)]);
+    }
+
+    #[test]
+    fn bind_fails_if_kubelet_cannot_admit() {
+        let mut api = api();
+        let pj = planned(1);
+        let job_id = pj.spec.id;
+        let a = make_worker(&mut api, job_id, 0, 32);
+        let b = make_worker(&mut api, job_id, 1, 32);
+        let (aid, bid) = (a.id, b.id);
+        api.create_job(pj, vec![a, b], vec![], 0.0);
+        assert!(api.bind_pod(aid, NodeId(1), 0.0));
+        // Node 1 has no exclusive CPUs left.
+        assert!(!api.bind_pod(bid, NodeId(1), 0.0));
+    }
+
+    #[test]
+    fn event_log_records_lifecycle_in_order() {
+        let mut api = api();
+        let pj = planned(1);
+        let job_id = pj.spec.id;
+        let w = make_worker(&mut api, job_id, 0, 4);
+        let wid = w.id;
+        api.create_job(pj, vec![w], vec![], 0.0);
+        api.bind_pod(wid, NodeId(2), 0.5);
+        api.start_job(job_id, 0.5);
+        api.finish_job(job_id, 9.0);
+        let kinds: Vec<&'static str> = api
+            .events
+            .iter()
+            .map(|e| match e {
+                Event::JobSubmitted { .. } => "submit",
+                Event::PodBound { .. } => "bind",
+                Event::JobStarted { .. } => "start",
+                Event::JobFinished { .. } => "finish",
+            })
+            .collect();
+        assert_eq!(kinds, vec!["submit", "bind", "start", "finish"]);
+        assert!(api.events.windows(2).all(|w| w[0].time() <= w[1].time()));
+    }
+}

@@ -1,0 +1,157 @@
+//! Watch bus — the Kubernetes-style list/watch surface of the API server.
+//!
+//! Kubernetes controllers react to object events through watches; our job
+//! controllers and scheduler are driven synchronously by the simulator,
+//! but the watch bus exposes the same reactive surface for tooling (the
+//! metrics exporter subscribes to it, and external consumers can replay
+//! the full event history the way `kubectl get events --watch` would).
+
+use std::collections::BTreeMap;
+
+use super::Event;
+
+/// Filter selecting which events a subscription receives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WatchFilter {
+    All,
+    Jobs,
+    Pods,
+}
+
+impl WatchFilter {
+    pub fn matches(&self, event: &Event) -> bool {
+        match self {
+            WatchFilter::All => true,
+            WatchFilter::Jobs => matches!(
+                event,
+                Event::JobSubmitted { .. } | Event::JobStarted { .. } | Event::JobFinished { .. }
+            ),
+            WatchFilter::Pods => matches!(event, Event::PodBound { .. }),
+        }
+    }
+}
+
+/// Handle identifying one subscription.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct WatchId(u64);
+
+/// A bookmark-based watch bus: subscribers poll for events after their
+/// last-seen resource version (deterministic, no threads — matching the
+/// simulator's synchronous world).
+#[derive(Debug, Default)]
+pub struct WatchBus {
+    log: Vec<Event>,
+    subscriptions: BTreeMap<WatchId, (WatchFilter, usize)>,
+    next_id: u64,
+}
+
+impl WatchBus {
+    pub fn new() -> WatchBus {
+        WatchBus::default()
+    }
+
+    /// Append an event (the API server calls this on every mutation).
+    pub fn publish(&mut self, event: Event) {
+        self.log.push(event);
+    }
+
+    /// Open a watch from the current resource version (future events only)
+    /// or from the beginning (`from_start`) to replay history.
+    pub fn subscribe(&mut self, filter: WatchFilter, from_start: bool) -> WatchId {
+        self.next_id += 1;
+        let id = WatchId(self.next_id);
+        let pos = if from_start { 0 } else { self.log.len() };
+        self.subscriptions.insert(id, (filter, pos));
+        id
+    }
+
+    /// Drain the pending events for a subscription, advancing its bookmark.
+    pub fn poll(&mut self, id: WatchId) -> Vec<Event> {
+        let Some((filter, pos)) = self.subscriptions.get_mut(&id) else {
+            return Vec::new();
+        };
+        let events: Vec<Event> = self.log[*pos..]
+            .iter()
+            .filter(|e| filter.matches(e))
+            .cloned()
+            .collect();
+        *pos = self.log.len();
+        events
+    }
+
+    pub fn unsubscribe(&mut self, id: WatchId) {
+        self.subscriptions.remove(&id);
+    }
+
+    /// Current resource version (log length).
+    pub fn resource_version(&self) -> usize {
+        self.log.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{JobId, NodeId, PodId};
+
+    fn submit(t: f64) -> Event {
+        Event::JobSubmitted { t, job: JobId(1) }
+    }
+
+    fn bound(t: f64) -> Event {
+        Event::PodBound { t, pod: PodId(1), node: NodeId(1) }
+    }
+
+    #[test]
+    fn subscriber_sees_only_future_events_by_default() {
+        let mut bus = WatchBus::new();
+        bus.publish(submit(0.0));
+        let id = bus.subscribe(WatchFilter::All, false);
+        assert!(bus.poll(id).is_empty());
+        bus.publish(bound(1.0));
+        assert_eq!(bus.poll(id).len(), 1);
+        assert!(bus.poll(id).is_empty(), "bookmark advanced");
+    }
+
+    #[test]
+    fn from_start_replays_history() {
+        let mut bus = WatchBus::new();
+        bus.publish(submit(0.0));
+        bus.publish(bound(1.0));
+        let id = bus.subscribe(WatchFilter::All, true);
+        assert_eq!(bus.poll(id).len(), 2);
+    }
+
+    #[test]
+    fn filters_select_event_kinds() {
+        let mut bus = WatchBus::new();
+        let jobs = bus.subscribe(WatchFilter::Jobs, true);
+        let pods = bus.subscribe(WatchFilter::Pods, true);
+        bus.publish(submit(0.0));
+        bus.publish(bound(1.0));
+        bus.publish(Event::JobStarted { t: 1.0, job: JobId(1) });
+        assert_eq!(bus.poll(jobs).len(), 2);
+        assert_eq!(bus.poll(pods).len(), 1);
+    }
+
+    #[test]
+    fn unsubscribe_stops_delivery() {
+        let mut bus = WatchBus::new();
+        let id = bus.subscribe(WatchFilter::All, false);
+        bus.unsubscribe(id);
+        bus.publish(submit(0.0));
+        assert!(bus.poll(id).is_empty());
+    }
+
+    #[test]
+    fn independent_bookmarks_per_subscriber() {
+        let mut bus = WatchBus::new();
+        let a = bus.subscribe(WatchFilter::All, false);
+        bus.publish(submit(0.0));
+        let b = bus.subscribe(WatchFilter::All, false);
+        bus.publish(bound(1.0));
+        assert_eq!(bus.poll(a).len(), 2);
+        assert_eq!(bus.poll(b).len(), 1);
+        assert_eq!(bus.resource_version(), 2);
+    }
+}

@@ -1,0 +1,15 @@
+//! Cluster substrate: nodes, NUMA topology, resources, pods.
+//!
+//! Models the paper's five-node testbed (§V-A) at the granularity the
+//! scheduling algorithms observe: allocatable CPUs per socket, memory,
+//! per-socket memory bandwidth, NIC bandwidth, and pod placements.
+
+pub mod node;
+pub mod pod;
+pub mod resources;
+pub mod spec;
+
+pub use node::{NodeId, NodeRole, NodeSpec};
+pub use pod::{HostfileEntry, JobId, Pod, PodId, PodPhase, PodRole};
+pub use resources::{gib, CpuSet, Resources};
+pub use spec::ClusterSpec;

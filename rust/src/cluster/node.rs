@@ -1,0 +1,146 @@
+//! Node and NUMA topology model — the testbed substrate.
+//!
+//! The paper's hosts are 2 × Intel Xeon E5-2697v4 (18 cores/socket,
+//! hyperthreading disabled), 256 GB RAM, 1-GbE. Four cores per node are
+//! reserved for system + Kubernetes components, leaving 32 allocatable
+//! (16 per socket). [`NodeSpec::paper_worker`] encodes exactly that.
+
+use super::resources::{gib, CpuSet, Resources};
+
+/// Index into the cluster's node table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct NodeId(pub usize);
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeRole {
+    /// Hosts the control plane and the MPI launchers (paper §V-B).
+    ControlPlane,
+    /// Runs MPI worker pods.
+    Worker,
+}
+
+/// Static description of one host.
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    pub name: String,
+    pub role: NodeRole,
+    pub sockets: u32,
+    pub cores_per_socket: u32,
+    /// Cores reserved for system + kube components (spread evenly over
+    /// sockets, lowest-numbered cores first — mirrors kubelet's
+    /// `--reserved-cpus` behaviour).
+    pub reserved_cores: u32,
+    pub mem_bytes: u64,
+    /// Peak per-socket memory bandwidth, bytes/s (E5-2697v4: ~76.8 GB/s
+    /// DDR4-2400 × 4 channels).
+    pub membw_per_socket: f64,
+    /// NIC bandwidth, bytes/s (1 GbE = 125 MB/s).
+    pub nic_bw: f64,
+}
+
+impl NodeSpec {
+    /// The paper's worker-node configuration.
+    pub fn paper_worker(name: &str) -> NodeSpec {
+        NodeSpec {
+            name: name.to_string(),
+            role: NodeRole::Worker,
+            sockets: 2,
+            cores_per_socket: 18,
+            reserved_cores: 4,
+            mem_bytes: gib(256),
+            membw_per_socket: 76.8e9,
+            nic_bw: 125.0e6,
+        }
+    }
+
+    /// The paper's control-plane node (same hardware, different role).
+    pub fn paper_control_plane(name: &str) -> NodeSpec {
+        NodeSpec { role: NodeRole::ControlPlane, ..NodeSpec::paper_worker(name) }
+    }
+
+    pub fn total_cores(&self) -> u32 {
+        self.sockets * self.cores_per_socket
+    }
+
+    /// Allocatable cores after the system reservation.
+    pub fn allocatable_cores(&self) -> u32 {
+        self.total_cores() - self.reserved_cores
+    }
+
+    /// Allocatable resources (the scheduler's capacity view).
+    pub fn allocatable(&self) -> Resources {
+        Resources::new(
+            self.allocatable_cores() as u64 * 1000,
+            // Reserve 8 GiB for system/kube, like the CPU reservation.
+            self.mem_bytes - gib(8),
+        )
+    }
+
+    /// Socket that owns a given physical CPU id.
+    pub fn socket_of(&self, cpu: u32) -> u32 {
+        cpu / self.cores_per_socket
+    }
+
+    /// Allocatable CPU ids of one socket (reservation takes the
+    /// lowest-numbered cores of each socket, evenly split).
+    pub fn allocatable_cpus_of_socket(&self, socket: u32) -> CpuSet {
+        assert!(socket < self.sockets);
+        let reserved_per_socket = self.reserved_cores / self.sockets;
+        let lo = socket * self.cores_per_socket + reserved_per_socket;
+        let hi = (socket + 1) * self.cores_per_socket;
+        CpuSet::from_range(lo, hi)
+    }
+
+    /// All allocatable CPU ids.
+    pub fn allocatable_cpus(&self) -> CpuSet {
+        let mut s = CpuSet::empty();
+        for sk in 0..self.sockets {
+            s = s.union(&self.allocatable_cpus_of_socket(sk));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_worker_topology() {
+        let n = NodeSpec::paper_worker("w0");
+        assert_eq!(n.total_cores(), 36);
+        assert_eq!(n.allocatable_cores(), 32);
+        assert_eq!(n.allocatable().cpu_milli, 32_000);
+        // 16 allocatable per socket.
+        assert_eq!(n.allocatable_cpus_of_socket(0).len(), 16);
+        assert_eq!(n.allocatable_cpus_of_socket(1).len(), 16);
+    }
+
+    #[test]
+    fn reservation_takes_low_cores_per_socket() {
+        let n = NodeSpec::paper_worker("w0");
+        let s0 = n.allocatable_cpus_of_socket(0);
+        let s1 = n.allocatable_cpus_of_socket(1);
+        // Cores 0,1 (socket 0) and 18,19 (socket 1) are reserved.
+        assert!(!s0.contains(0) && !s0.contains(1) && s0.contains(2));
+        assert!(!s1.contains(18) && !s1.contains(19) && s1.contains(20));
+    }
+
+    #[test]
+    fn socket_of_boundaries() {
+        let n = NodeSpec::paper_worker("w0");
+        assert_eq!(n.socket_of(0), 0);
+        assert_eq!(n.socket_of(17), 0);
+        assert_eq!(n.socket_of(18), 1);
+        assert_eq!(n.socket_of(35), 1);
+    }
+
+    #[test]
+    fn allocatable_cpus_disjoint_across_sockets() {
+        let n = NodeSpec::paper_worker("w0");
+        let s0 = n.allocatable_cpus_of_socket(0);
+        let s1 = n.allocatable_cpus_of_socket(1);
+        assert!(s0.is_disjoint(&s1));
+        assert_eq!(n.allocatable_cpus().len(), 32);
+    }
+}

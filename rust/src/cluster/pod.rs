@@ -1,0 +1,123 @@
+//! Pods — the deployable unit the paper's algorithms schedule.
+//!
+//! One MPI job becomes one launcher pod plus `N_w` worker pods (Algorithm 2
+//! decides each worker's task count and resources); the scheduler binds
+//! workers to nodes, and the kubelet assigns cpusets per its policy.
+
+use super::node::NodeId;
+use super::resources::{CpuSet, Resources};
+
+/// Cluster-unique pod id.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PodId(pub u64);
+
+/// Cluster-unique job id.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct JobId(pub u64);
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PodRole {
+    /// The `mpirun` host; placed on the control-plane node (paper §V-B).
+    Launcher,
+    /// Worker `index` of the job (0-based).
+    Worker { index: u32 },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PodPhase {
+    Pending,
+    /// Node selected by the scheduler, kubelet admission done.
+    Bound,
+    Running,
+    Succeeded,
+}
+
+/// A pod wrapping one container (the paper's deployments are
+/// one-container-per-pod).
+#[derive(Debug, Clone)]
+pub struct Pod {
+    pub id: PodId,
+    pub job: JobId,
+    pub name: String,
+    pub role: PodRole,
+    /// MPI processes running inside this container ("slots" in the
+    /// generated hostfile). 0 for the launcher.
+    pub ntasks: u32,
+    pub requests: Resources,
+    pub limits: Resources,
+    /// Task-group id assigned by the task-group plugin (Algorithm 3).
+    pub group: Option<usize>,
+    pub phase: PodPhase,
+    /// Binding decided by the scheduler.
+    pub node: Option<NodeId>,
+    /// Exclusive cpuset granted by the static CPU manager (None = shared
+    /// pool under `cpu-manager-policy=none`).
+    pub cpuset: Option<CpuSet>,
+    /// Whether the granted cpuset spans more than one NUMA domain.
+    pub spans_numa: bool,
+}
+
+impl Pod {
+    pub fn new(id: PodId, job: JobId, name: String, role: PodRole) -> Pod {
+        Pod {
+            id,
+            job,
+            name,
+            role,
+            ntasks: 0,
+            requests: Resources::ZERO,
+            limits: Resources::ZERO,
+            group: None,
+            phase: PodPhase::Pending,
+            node: None,
+            cpuset: None,
+            spans_numa: false,
+        }
+    }
+
+    pub fn is_worker(&self) -> bool {
+        matches!(self.role, PodRole::Worker { .. })
+    }
+
+    pub fn worker_index(&self) -> Option<u32> {
+        match self.role {
+            PodRole::Worker { index } => Some(index),
+            PodRole::Launcher => None,
+        }
+    }
+}
+
+/// One line of the generated MPI hostfile: `<hostname> slots=<n>`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HostfileEntry {
+    pub hostname: String,
+    pub slots: u32,
+}
+
+impl std::fmt::Display for HostfileEntry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} slots={}", self.hostname, self.slots)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pod_roles() {
+        let l = Pod::new(PodId(0), JobId(1), "j1-launcher".into(), PodRole::Launcher);
+        let w = Pod::new(PodId(1), JobId(1), "j1-worker-2".into(), PodRole::Worker { index: 2 });
+        assert!(!l.is_worker());
+        assert!(w.is_worker());
+        assert_eq!(w.worker_index(), Some(2));
+        assert_eq!(l.worker_index(), None);
+        assert_eq!(l.phase, PodPhase::Pending);
+    }
+
+    #[test]
+    fn hostfile_entry_format() {
+        let e = HostfileEntry { hostname: "job1-worker-0".into(), slots: 4 };
+        assert_eq!(e.to_string(), "job1-worker-0 slots=4");
+    }
+}

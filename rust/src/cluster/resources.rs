@@ -1,0 +1,254 @@
+//! Resource quantities (CPU in millicores, memory in bytes) and cpusets —
+//! the Kubernetes resource model subset the paper's algorithms operate on.
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub, SubAssign};
+
+/// A request/limit pair component: CPU millicores + memory bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Resources {
+    /// CPU in millicores (1000 = one core), matching the K8s quantity model.
+    pub cpu_milli: u64,
+    /// Memory in bytes.
+    pub mem_bytes: u64,
+}
+
+impl Resources {
+    pub const ZERO: Resources = Resources { cpu_milli: 0, mem_bytes: 0 };
+
+    pub fn new(cpu_milli: u64, mem_bytes: u64) -> Resources {
+        Resources { cpu_milli, mem_bytes }
+    }
+
+    /// Full cores, rounding down (the static CPU-manager only grants
+    /// exclusive cpusets to integer-CPU containers).
+    pub fn whole_cores(&self) -> u32 {
+        (self.cpu_milli / 1000) as u32
+    }
+
+    /// True iff the CPU quantity is an integer number of cores.
+    pub fn is_integer_cpu(&self) -> bool {
+        self.cpu_milli % 1000 == 0
+    }
+
+    pub fn fits_within(&self, other: &Resources) -> bool {
+        self.cpu_milli <= other.cpu_milli && self.mem_bytes <= other.mem_bytes
+    }
+
+    /// Scale by a rational factor (used by Algorithm 2's per-worker
+    /// R(cpu/Nt * nTasks, mem/Nt * nTasks) division).
+    pub fn scaled(&self, num: u64, den: u64) -> Resources {
+        assert!(den > 0);
+        Resources {
+            cpu_milli: self.cpu_milli * num / den,
+            mem_bytes: self.mem_bytes * num / den,
+        }
+    }
+
+    pub fn saturating_sub(&self, other: &Resources) -> Resources {
+        Resources {
+            cpu_milli: self.cpu_milli.saturating_sub(other.cpu_milli),
+            mem_bytes: self.mem_bytes.saturating_sub(other.mem_bytes),
+        }
+    }
+
+    /// Scalar used for sorting groups by "resource requests" (Algorithm 3's
+    /// sortGroupByResourceRequests): CPU-dominant, memory as tiebreak.
+    pub fn sort_key(&self) -> (u64, u64) {
+        (self.cpu_milli, self.mem_bytes)
+    }
+}
+
+impl Add for Resources {
+    type Output = Resources;
+    fn add(self, o: Resources) -> Resources {
+        Resources {
+            cpu_milli: self.cpu_milli + o.cpu_milli,
+            mem_bytes: self.mem_bytes + o.mem_bytes,
+        }
+    }
+}
+
+impl AddAssign for Resources {
+    fn add_assign(&mut self, o: Resources) {
+        self.cpu_milli += o.cpu_milli;
+        self.mem_bytes += o.mem_bytes;
+    }
+}
+
+impl Sub for Resources {
+    type Output = Resources;
+    fn sub(self, o: Resources) -> Resources {
+        Resources {
+            cpu_milli: self.cpu_milli - o.cpu_milli,
+            mem_bytes: self.mem_bytes - o.mem_bytes,
+        }
+    }
+}
+
+impl SubAssign for Resources {
+    fn sub_assign(&mut self, o: Resources) {
+        self.cpu_milli -= o.cpu_milli;
+        self.mem_bytes -= o.mem_bytes;
+    }
+}
+
+impl fmt::Display for Resources {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}m/{:.1}GiB",
+            self.cpu_milli,
+            self.mem_bytes as f64 / (1u64 << 30) as f64
+        )
+    }
+}
+
+/// Convenience: gibibytes to bytes.
+pub const fn gib(n: u64) -> u64 {
+    n << 30
+}
+
+/// A set of physical CPU ids (node-local numbering).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct CpuSet(pub BTreeSet<u32>);
+
+impl CpuSet {
+    pub fn empty() -> CpuSet {
+        CpuSet(BTreeSet::new())
+    }
+
+    pub fn from_range(lo: u32, hi: u32) -> CpuSet {
+        CpuSet((lo..hi).collect())
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    pub fn contains(&self, cpu: u32) -> bool {
+        self.0.contains(&cpu)
+    }
+
+    pub fn insert(&mut self, cpu: u32) -> bool {
+        self.0.insert(cpu)
+    }
+
+    pub fn union(&self, other: &CpuSet) -> CpuSet {
+        CpuSet(self.0.union(&other.0).copied().collect())
+    }
+
+    pub fn intersect(&self, other: &CpuSet) -> CpuSet {
+        CpuSet(self.0.intersection(&other.0).copied().collect())
+    }
+
+    pub fn difference(&self, other: &CpuSet) -> CpuSet {
+        CpuSet(self.0.difference(&other.0).copied().collect())
+    }
+
+    pub fn is_disjoint(&self, other: &CpuSet) -> bool {
+        self.0.is_disjoint(&other.0)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = u32> + '_ {
+        self.0.iter().copied()
+    }
+
+    /// Take up to `n` lowest-numbered CPUs out of this set.
+    pub fn take(&mut self, n: usize) -> CpuSet {
+        let taken: BTreeSet<u32> = self.0.iter().copied().take(n).collect();
+        for c in &taken {
+            self.0.remove(c);
+        }
+        CpuSet(taken)
+    }
+}
+
+impl fmt::Display for CpuSet {
+    /// Linux cpuset-style ranges, e.g. "0-3,8,10-11".
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let cpus: Vec<u32> = self.0.iter().copied().collect();
+        let mut parts: Vec<String> = Vec::new();
+        let mut i = 0;
+        while i < cpus.len() {
+            let start = cpus[i];
+            let mut end = start;
+            while i + 1 < cpus.len() && cpus[i + 1] == end + 1 {
+                i += 1;
+                end = cpus[i];
+            }
+            parts.push(if start == end {
+                format!("{start}")
+            } else {
+                format!("{start}-{end}")
+            });
+            i += 1;
+        }
+        write!(f, "{}", parts.join(","))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resources_arithmetic() {
+        let a = Resources::new(4000, gib(8));
+        let b = Resources::new(1000, gib(2));
+        assert_eq!(a + b, Resources::new(5000, gib(10)));
+        assert_eq!(a - b, Resources::new(3000, gib(6)));
+        assert!(b.fits_within(&a));
+        assert!(!a.fits_within(&b));
+    }
+
+    #[test]
+    fn scaled_matches_algorithm2_division() {
+        // Job: 16 cpus / 32 GiB total, Nt=16 tasks; worker with 4 tasks gets
+        // R/Nt * 4 = 4 cpus / 8 GiB.
+        let job = Resources::new(16_000, gib(32));
+        let worker = job.scaled(4, 16);
+        assert_eq!(worker, Resources::new(4000, gib(8)));
+    }
+
+    #[test]
+    fn whole_cores_and_integer_check() {
+        assert_eq!(Resources::new(2500, 0).whole_cores(), 2);
+        assert!(!Resources::new(2500, 0).is_integer_cpu());
+        assert!(Resources::new(2000, 0).is_integer_cpu());
+    }
+
+    #[test]
+    fn cpuset_take_and_disjoint() {
+        let mut pool = CpuSet::from_range(0, 8);
+        let a = pool.take(3);
+        assert_eq!(a.len(), 3);
+        assert_eq!(pool.len(), 5);
+        assert!(a.is_disjoint(&pool));
+        assert!(a.contains(0) && a.contains(2) && !a.contains(3));
+    }
+
+    #[test]
+    fn cpuset_display_ranges() {
+        let mut s = CpuSet::empty();
+        for c in [0, 1, 2, 3, 8, 10, 11] {
+            s.insert(c);
+        }
+        assert_eq!(s.to_string(), "0-3,8,10-11");
+        assert_eq!(CpuSet::empty().to_string(), "");
+    }
+
+    #[test]
+    fn cpuset_set_ops() {
+        let a = CpuSet::from_range(0, 4);
+        let b = CpuSet::from_range(2, 6);
+        assert_eq!(a.intersect(&b).len(), 2);
+        assert_eq!(a.union(&b).len(), 6);
+        assert_eq!(a.difference(&b).len(), 2);
+    }
+}

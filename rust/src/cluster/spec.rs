@@ -1,0 +1,83 @@
+//! Cluster specifications — the testbed builder.
+
+use super::node::{NodeId, NodeRole, NodeSpec};
+
+/// Static description of a cluster (the simulator's "hardware").
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub nodes: Vec<NodeSpec>,
+}
+
+impl ClusterSpec {
+    /// The paper's five-node testbed: one control-plane node (which also
+    /// runs the MPI launchers) plus four worker nodes.
+    pub fn paper() -> ClusterSpec {
+        let mut nodes = vec![NodeSpec::paper_control_plane("master")];
+        for i in 0..4 {
+            nodes.push(NodeSpec::paper_worker(&format!("node{}", i + 1)));
+        }
+        ClusterSpec { nodes }
+    }
+
+    /// A scaled variant with `n` worker nodes (future-work §VI larger-scale
+    /// scenarios and the scalability ablation bench).
+    pub fn with_workers(n: usize) -> ClusterSpec {
+        let mut nodes = vec![NodeSpec::paper_control_plane("master")];
+        for i in 0..n {
+            nodes.push(NodeSpec::paper_worker(&format!("node{}", i + 1)));
+        }
+        ClusterSpec { nodes }
+    }
+
+    pub fn node(&self, id: NodeId) -> &NodeSpec {
+        &self.nodes[id.0]
+    }
+
+    pub fn node_ids(&self) -> impl Iterator<Item = NodeId> + '_ {
+        (0..self.nodes.len()).map(NodeId)
+    }
+
+    pub fn worker_ids(&self) -> Vec<NodeId> {
+        self.node_ids()
+            .filter(|&id| self.node(id).role == NodeRole::Worker)
+            .collect()
+    }
+
+    pub fn control_plane_id(&self) -> NodeId {
+        self.node_ids()
+            .find(|&id| self.node(id).role == NodeRole::ControlPlane)
+            .expect("cluster has no control-plane node")
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.worker_ids().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_cluster_shape() {
+        let c = ClusterSpec::paper();
+        assert_eq!(c.nodes.len(), 5);
+        assert_eq!(c.worker_count(), 4);
+        assert_eq!(c.control_plane_id(), NodeId(0));
+        assert_eq!(c.node(NodeId(1)).name, "node1");
+        // Total schedulable CPU for MPI workloads: 4 × 32 cores.
+        let total: u64 = c
+            .worker_ids()
+            .iter()
+            .map(|&id| c.node(id).allocatable().cpu_milli)
+            .sum();
+        assert_eq!(total, 128_000);
+    }
+
+    #[test]
+    fn scaled_cluster() {
+        let c = ClusterSpec::with_workers(8);
+        assert_eq!(c.worker_count(), 8);
+        assert_eq!(c.nodes.len(), 9);
+    }
+}

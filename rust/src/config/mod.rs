@@ -1,0 +1,168 @@
+//! Experiment configuration files — a declarative JSON surface over the
+//! scenario/trace/calibration knobs, so operators can describe a run the
+//! way they would write a Kubernetes manifest (parsed with the crate's own
+//! JSON substrate; the vendored registry has no serde).
+//!
+//! ```json
+//! {
+//!   "scenario": "CM_G_TG",
+//!   "seed": 2,
+//!   "cluster": { "worker_nodes": 4 },
+//!   "trace": { "kind": "exp2" },
+//!   "output": { "gantt": true, "csv": false }
+//! }
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::cluster::ClusterSpec;
+use crate::scenario::Scenario;
+use crate::util::Json;
+use crate::workload::{exp1_trace, exp2_trace, uniform_trace, JobSpec};
+
+/// Parsed experiment configuration.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub scenario: Scenario,
+    pub seed: u64,
+    pub worker_nodes: usize,
+    pub trace: TraceConfig,
+    pub gantt: bool,
+    pub csv: bool,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceConfig {
+    Exp1,
+    Exp2,
+    Uniform { jobs: usize, mean_interval: f64 },
+}
+
+impl ExperimentConfig {
+    pub fn parse(text: &str) -> Result<ExperimentConfig> {
+        let json = Json::parse(text).map_err(|e| anyhow!("config: {e}"))?;
+        if json.as_obj().is_none() {
+            bail!("config must be a JSON object");
+        }
+
+        let scenario_name = json
+            .get("scenario")
+            .as_str()
+            .ok_or_else(|| anyhow!("config: missing \"scenario\""))?;
+        let scenario = Scenario::parse(scenario_name)
+            .ok_or_else(|| anyhow!("config: unknown scenario {scenario_name:?}"))?;
+
+        let seed = json.get("seed").as_u64().unwrap_or(crate::experiments::DEFAULT_SEED);
+        let worker_nodes = json
+            .get("cluster")
+            .get("worker_nodes")
+            .as_u64()
+            .unwrap_or(4) as usize;
+        if worker_nodes == 0 {
+            bail!("config: cluster.worker_nodes must be >= 1");
+        }
+
+        let trace = match json.get("trace").get("kind").as_str().unwrap_or("exp2") {
+            "exp1" => TraceConfig::Exp1,
+            "exp2" => TraceConfig::Exp2,
+            "uniform" => TraceConfig::Uniform {
+                jobs: json.get("trace").get("jobs").as_u64().unwrap_or(20) as usize,
+                mean_interval: json
+                    .get("trace")
+                    .get("mean_interval")
+                    .as_f64()
+                    .unwrap_or(60.0),
+            },
+            other => bail!("config: unknown trace.kind {other:?}"),
+        };
+
+        Ok(ExperimentConfig {
+            scenario,
+            seed,
+            worker_nodes,
+            trace,
+            gantt: matches!(json.get("output").get("gantt"), crate::util::Json::Bool(true)),
+            csv: matches!(json.get("output").get("csv"), crate::util::Json::Bool(true)),
+        })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn cluster(&self) -> ClusterSpec {
+        ClusterSpec::with_workers(self.worker_nodes)
+    }
+
+    pub fn build_trace(&self) -> Vec<JobSpec> {
+        match self.trace {
+            TraceConfig::Exp1 => exp1_trace(),
+            TraceConfig::Exp2 => exp2_trace(self.seed),
+            TraceConfig::Uniform { jobs, mean_interval } => {
+                uniform_trace(jobs, mean_interval, self.seed)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let c = ExperimentConfig::parse(
+            r#"{
+              "scenario": "CM_G_TG",
+              "seed": 9,
+              "cluster": { "worker_nodes": 8 },
+              "trace": { "kind": "uniform", "jobs": 10, "mean_interval": 30 },
+              "output": { "gantt": true }
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(c.scenario, Scenario::CmGTg);
+        assert_eq!(c.seed, 9);
+        assert_eq!(c.worker_nodes, 8);
+        assert_eq!(c.trace, TraceConfig::Uniform { jobs: 10, mean_interval: 30.0 });
+        assert!(c.gantt && !c.csv);
+        assert_eq!(c.cluster().worker_count(), 8);
+        assert_eq!(c.build_trace().len(), 10);
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let c = ExperimentConfig::parse(r#"{"scenario": "CM"}"#).unwrap();
+        assert_eq!(c.seed, crate::experiments::DEFAULT_SEED);
+        assert_eq!(c.worker_nodes, 4);
+        assert_eq!(c.trace, TraceConfig::Exp2);
+        assert_eq!(c.build_trace().len(), 20);
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        assert!(ExperimentConfig::parse("[]").is_err());
+        assert!(ExperimentConfig::parse(r#"{"scenario": "NOPE"}"#).is_err());
+        assert!(ExperimentConfig::parse(r#"{"seed": 1}"#).is_err(), "scenario required");
+        assert!(
+            ExperimentConfig::parse(r#"{"scenario":"CM","trace":{"kind":"weird"}}"#).is_err()
+        );
+        assert!(ExperimentConfig::parse(
+            r#"{"scenario":"CM","cluster":{"worker_nodes":0}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn config_runs_end_to_end() {
+        let c = ExperimentConfig::parse(
+            r#"{"scenario":"CM_S_TG","trace":{"kind":"uniform","jobs":4,"mean_interval":10}}"#,
+        )
+        .unwrap();
+        let sim = c.scenario.simulation_on(c.cluster(), c.seed);
+        let out = sim.run(&c.build_trace());
+        assert_eq!(out.records.len(), 4);
+    }
+}

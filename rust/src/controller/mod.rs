@@ -1,0 +1,176 @@
+//! Job controllers: how a (planned) MPI job becomes pods + hostfile.
+//!
+//! Three controllers, matching the paper's evaluated frameworks:
+//! - [`VolcanoMpiController`] — the paper's enhanced Volcano job controller
+//!   with the MPI-aware plugin (Algorithm 2);
+//! - [`KubeflowController`] — Kubeflow MPI-operator behaviour: one launcher
+//!   plus one worker holding *all* MPI processes;
+//! - [`NativeVolcanoController`] — stock Volcano MPI example behaviour:
+//!   one task per container for every workload.
+
+pub mod mpi_aware;
+
+use crate::cluster::{HostfileEntry, JobId, Pod, PodRole};
+use crate::workload::{Granularity, PlannedJob};
+
+/// Pod-identity allocator, implemented by the API server wrapper so
+/// controllers can mint pods with cluster-unique ids.
+pub trait PodFactory {
+    fn make_pod(&mut self, job: JobId, name: &str, role: PodRole) -> Pod;
+}
+
+impl PodFactory for crate::apiserver::ApiServer {
+    fn make_pod(&mut self, job: JobId, name: &str, role: PodRole) -> Pod {
+        let id = self.fresh_pod_id();
+        Pod::new(id, job, name.to_string(), role)
+    }
+}
+
+/// A job controller materializes a planned job into pods + hostfile.
+pub trait JobController {
+    fn name(&self) -> &'static str;
+    /// May override the planner's granularity (the baseline frameworks do).
+    fn effective_granularity(&self, job: &PlannedJob) -> Granularity;
+    fn build(&self, job: &PlannedJob, factory: &mut dyn PodFactory)
+        -> (Vec<Pod>, Vec<HostfileEntry>);
+}
+
+/// The paper's controller: respects the planner's granularity and applies
+/// Algorithm 2.
+pub struct VolcanoMpiController;
+
+impl JobController for VolcanoMpiController {
+    fn name(&self) -> &'static str {
+        "volcano+mpi-aware"
+    }
+
+    fn effective_granularity(&self, job: &PlannedJob) -> Granularity {
+        job.granularity
+    }
+
+    fn build(
+        &self,
+        job: &PlannedJob,
+        factory: &mut dyn PodFactory,
+    ) -> (Vec<Pod>, Vec<HostfileEntry>) {
+        mpi_aware::build_pods(job, factory)
+    }
+}
+
+/// Kubeflow MPI operator (paper §II-B, §V-E): an MPI `Launcher` and a
+/// single `Worker` container in which all MPI worker processes run; no
+/// scheduler enhancement (the driver pairs this with the default-scheduler
+/// profile and no gang).
+pub struct KubeflowController;
+
+impl JobController for KubeflowController {
+    fn name(&self) -> &'static str {
+        "kubeflow-mpi-operator"
+    }
+
+    fn effective_granularity(&self, _job: &PlannedJob) -> Granularity {
+        Granularity { n_nodes: 1, n_workers: 1, n_groups: 1 }
+    }
+
+    fn build(
+        &self,
+        job: &PlannedJob,
+        factory: &mut dyn PodFactory,
+    ) -> (Vec<Pod>, Vec<HostfileEntry>) {
+        let forced = PlannedJob {
+            spec: job.spec.clone(),
+            granularity: self.effective_granularity(job),
+        };
+        mpi_aware::build_pods(&forced, factory)
+    }
+}
+
+/// Native Volcano MPI example (paper §V-E): the job is partitioned as one
+/// process per container for *every* workload — including the
+/// network-intensive ones, which is exactly what Table III punishes.
+pub struct NativeVolcanoController;
+
+impl JobController for NativeVolcanoController {
+    fn name(&self) -> &'static str {
+        "volcano-native"
+    }
+
+    fn effective_granularity(&self, job: &PlannedJob) -> Granularity {
+        let n_t = job.spec.ntasks;
+        Granularity { n_nodes: n_t, n_workers: n_t, n_groups: 1 }
+    }
+
+    fn build(
+        &self,
+        job: &PlannedJob,
+        factory: &mut dyn PodFactory,
+    ) -> (Vec<Pod>, Vec<HostfileEntry>) {
+        let forced = PlannedJob {
+            spec: job.spec.clone(),
+            granularity: self.effective_granularity(job),
+        };
+        mpi_aware::build_pods(&forced, factory)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::PodId;
+    use crate::workload::{Benchmark, JobSpec};
+
+    struct TestFactory(u64);
+    impl PodFactory for TestFactory {
+        fn make_pod(&mut self, job: JobId, name: &str, role: PodRole) -> Pod {
+            self.0 += 1;
+            Pod::new(PodId(self.0), job, name.to_string(), role)
+        }
+    }
+
+    fn planned() -> PlannedJob {
+        PlannedJob {
+            spec: JobSpec::paper_job(1, Benchmark::GFft, 0.0),
+            granularity: Granularity { n_nodes: 1, n_workers: 1, n_groups: 1 },
+        }
+    }
+
+    #[test]
+    fn kubeflow_always_one_worker() {
+        let mut job = planned();
+        job.granularity = Granularity { n_nodes: 4, n_workers: 16, n_groups: 4 };
+        let (pods, hostfile) = KubeflowController.build(&job, &mut TestFactory(0));
+        assert_eq!(pods.iter().filter(|p| p.is_worker()).count(), 1);
+        assert_eq!(hostfile.len(), 1);
+        assert_eq!(hostfile[0].slots, 16);
+    }
+
+    #[test]
+    fn native_volcano_one_task_per_container_even_for_network_jobs() {
+        let job = planned(); // G-FFT — network-intensive
+        let (pods, hostfile) = NativeVolcanoController.build(&job, &mut TestFactory(0));
+        let workers: Vec<_> = pods.iter().filter(|p| p.is_worker()).collect();
+        assert_eq!(workers.len(), 16);
+        assert!(workers.iter().all(|w| w.ntasks == 1));
+        assert!(hostfile.iter().all(|h| h.slots == 1));
+    }
+
+    #[test]
+    fn paper_controller_respects_planner() {
+        let mut job = planned();
+        job.spec = JobSpec::paper_job(1, Benchmark::EpDgemm, 0.0);
+        job.granularity = Granularity { n_nodes: 4, n_workers: 4, n_groups: 4 };
+        let (pods, _) = VolcanoMpiController.build(&job, &mut TestFactory(0));
+        assert_eq!(pods.iter().filter(|p| p.is_worker()).count(), 4);
+    }
+
+    #[test]
+    fn apiserver_factory_mints_unique_ids() {
+        use crate::cluster::ClusterSpec;
+        use crate::kubelet::KubeletConfig;
+        let mut api =
+            crate::apiserver::ApiServer::new(ClusterSpec::paper(), KubeletConfig::default_policy());
+        let a = api.make_pod(JobId(1), "a", PodRole::Launcher);
+        let b = api.make_pod(JobId(1), "b", PodRole::Launcher);
+        assert_ne!(a.id, b.id);
+    }
+}

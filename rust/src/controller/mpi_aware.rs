@@ -1,0 +1,142 @@
+//! Dynamic MPI-aware Job Controller plugin (paper Algorithm 2).
+//!
+//! Enhances the Volcano job controller: given a planned job (granularity
+//! already selected by the planner agent), it (1) allocates the `N_t` MPI
+//! tasks into the `N_w` workers RoundRobin, (2) sets each worker's resource
+//! requests/limits to `R(cpu/N_t · nTasks, memory/N_t · nTasks)`, and (3)
+//! generates the hostfile entry (`hostname slots=nTasks`) for every worker.
+
+use crate::cluster::{HostfileEntry, Pod, PodRole};
+use crate::workload::PlannedJob;
+
+use super::PodFactory;
+
+/// Step 2: allocate `N_t` tasks into `N_w` workers in RoundRobin fashion.
+/// Returns the task count of each worker (differs by at most one).
+pub fn allocate_tasks(n_tasks: u32, n_workers: u32) -> Vec<u32> {
+    assert!(n_workers > 0, "job with zero workers");
+    let mut counts = vec![0u32; n_workers as usize];
+    for t in 0..n_tasks {
+        counts[(t % n_workers) as usize] += 1;
+    }
+    counts
+}
+
+/// Algorithm 2: build the launcher + worker pods and the hostfile for a
+/// planned job.
+pub fn build_pods(
+    job: &PlannedJob,
+    factory: &mut dyn PodFactory,
+) -> (Vec<Pod>, Vec<HostfileEntry>) {
+    // Step 1: get job specification.
+    let spec = &job.spec;
+    let n_t = spec.ntasks;
+    let n_w = job.granularity.n_workers;
+    let per_task = spec.resources; // divided by N_t via Resources::scaled
+
+    // Step 2: allocate tasks into workers in RoundRobin.
+    let n_tasks_in_worker = allocate_tasks(n_t, n_w);
+
+    // Step 3: set up pod resources and the hostfile according to the number
+    // of tasks allocated.
+    let mut pods = Vec::with_capacity(n_w as usize + 1);
+    let mut hostfile = Vec::with_capacity(n_w as usize);
+    for (i, &ntasks) in n_tasks_in_worker.iter().enumerate() {
+        let name = format!("{}-worker-{}", spec.name, i);
+        let mut pod = factory.make_pod(spec.id, &name, PodRole::Worker { index: i as u32 });
+        pod.ntasks = ntasks;
+        pod.requests = per_task.scaled(ntasks as u64, n_t as u64);
+        pod.limits = pod.requests;
+        hostfile.push(HostfileEntry { hostname: name, slots: ntasks });
+        pods.push(pod);
+    }
+
+    // Pods = Pods_w + Pod_l: the launcher (mpirun host) is a small
+    // burstable pod pinned to the control plane by the scheduler.
+    let launcher_name = format!("{}-launcher", spec.name);
+    let mut launcher = factory.make_pod(spec.id, &launcher_name, PodRole::Launcher);
+    launcher.requests = crate::cluster::Resources::new(100, crate::cluster::gib(1));
+    launcher.limits = launcher.requests;
+    pods.push(launcher);
+
+    (pods, hostfile)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{gib, JobId, PodId, Resources};
+    use crate::workload::{Benchmark, Granularity, JobSpec};
+
+    struct TestFactory(u64);
+    impl PodFactory for TestFactory {
+        fn make_pod(&mut self, job: JobId, name: &str, role: PodRole) -> Pod {
+            self.0 += 1;
+            Pod::new(PodId(self.0), job, name.to_string(), role)
+        }
+    }
+
+    fn planned(n_workers: u32) -> PlannedJob {
+        PlannedJob {
+            spec: JobSpec::paper_job(1, Benchmark::EpDgemm, 0.0),
+            granularity: Granularity { n_nodes: 4, n_workers, n_groups: 4 },
+        }
+    }
+
+    #[test]
+    fn round_robin_conserves_tasks_and_balances() {
+        for (nt, nw) in [(16u32, 1u32), (16, 4), (16, 16), (16, 5), (7, 3), (1, 1)] {
+            let counts = allocate_tasks(nt, nw);
+            assert_eq!(counts.iter().sum::<u32>(), nt, "{nt}/{nw}");
+            let max = counts.iter().max().unwrap();
+            let min = counts.iter().min().unwrap();
+            assert!(max - min <= 1, "{nt}/{nw}: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn worker_resources_scale_with_task_count() {
+        let (pods, _) = build_pods(&planned(4), &mut TestFactory(0));
+        let workers: Vec<_> = pods.iter().filter(|p| p.is_worker()).collect();
+        assert_eq!(workers.len(), 4);
+        for w in &workers {
+            assert_eq!(w.ntasks, 4);
+            // R(cpu/N_t · nTasks) = 16 cores / 16 · 4 = 4 cores.
+            assert_eq!(w.requests, Resources::new(4000, 4 * gib(2)));
+        }
+    }
+
+    #[test]
+    fn uneven_split_gives_remainder_to_first_workers() {
+        let mut job = planned(5);
+        job.spec.ntasks = 16;
+        let (pods, hostfile) = build_pods(&job, &mut TestFactory(0));
+        let ntasks: Vec<u32> = pods.iter().filter(|p| p.is_worker()).map(|p| p.ntasks).collect();
+        assert_eq!(ntasks, vec![4, 3, 3, 3, 3]);
+        assert_eq!(hostfile[0].slots, 4);
+        // Resources follow the task share.
+        let w0 = pods.iter().find(|p| p.worker_index() == Some(0)).unwrap();
+        assert_eq!(w0.requests.cpu_milli, 4000);
+    }
+
+    #[test]
+    fn hostfile_matches_workers() {
+        let (pods, hostfile) = build_pods(&planned(4), &mut TestFactory(0));
+        assert_eq!(hostfile.len(), 4);
+        for (entry, pod) in hostfile.iter().zip(pods.iter().filter(|p| p.is_worker())) {
+            assert_eq!(entry.hostname, pod.name);
+            assert_eq!(entry.slots, pod.ntasks);
+        }
+        assert_eq!(hostfile.iter().map(|h| h.slots).sum::<u32>(), 16);
+    }
+
+    #[test]
+    fn launcher_is_last_and_small() {
+        let (pods, _) = build_pods(&planned(4), &mut TestFactory(0));
+        let launcher = pods.last().unwrap();
+        assert_eq!(launcher.role, PodRole::Launcher);
+        assert_eq!(launcher.ntasks, 0);
+        assert!(launcher.requests.cpu_milli < 1000);
+        assert_eq!(pods.len(), 5);
+    }
+}

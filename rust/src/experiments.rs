@@ -1,0 +1,262 @@
+//! Experiment drivers — one function per paper artefact (Figs. 3–9,
+//! Table III), shared by the CLI, the examples, and the bench targets so
+//! every surface reproduces identical numbers for a given seed.
+
+use std::collections::BTreeMap;
+
+use crate::metrics::ExperimentMetrics;
+use crate::report;
+use crate::scenario::{Scenario, EXP3_SCENARIOS, TABLE2_SCENARIOS};
+use crate::simulator::SimOutput;
+use crate::workload::{exp1_trace, exp2_trace, Benchmark, JobSpec, ALL_BENCHMARKS};
+
+/// Default experiment seed (any seed reproduces the paper's *shape*; this
+/// one is used for every number recorded in EXPERIMENTS.md).
+pub const DEFAULT_SEED: u64 = 2;
+
+/// Run one scenario over a trace, with optional per-benchmark base-work
+/// overrides (the e2e driver passes PJRT-measured times).
+pub fn run_scenario(
+    scenario: Scenario,
+    trace: &[JobSpec],
+    seed: u64,
+    base_work: Option<&BTreeMap<Benchmark, f64>>,
+) -> SimOutput {
+    let mut sim = scenario.simulation(seed);
+    if let Some(bw) = base_work {
+        sim.base_work = bw.clone();
+    }
+    sim.run(trace)
+}
+
+/// One scenario's aggregated metrics for a trace.
+pub fn run_metrics(scenario: Scenario, trace: &[JobSpec], seed: u64) -> ExperimentMetrics {
+    ExperimentMetrics::from(&run_scenario(scenario, trace, seed, None))
+}
+
+// ---------------------------------------------------------------------
+// Fig. 3 — Benchmarks MPI profiling analysis.
+// ---------------------------------------------------------------------
+
+/// The Fig.-3 table: per-benchmark compute/MPI split and dominant
+/// operation (the classification input to Algorithm 1).
+pub fn fig3_rows() -> Vec<Vec<String>> {
+    ALL_BENCHMARKS
+        .iter()
+        .map(|b| {
+            let p = b.mpi_profile();
+            vec![
+                b.name().to_string(),
+                format!("{:.0}%", (1.0 - p.comm_fraction) * 100.0),
+                format!("{:.0}%", p.comm_fraction * 100.0),
+                p.dominant_op.to_string(),
+                format!("{:.0}%", p.collective_share * 100.0),
+                b.profile().as_str().to_string(),
+            ]
+        })
+        .collect()
+}
+
+pub fn fig3_table() -> String {
+    report::table(
+        &["benchmark", "compute", "MPI", "dominant op", "collective", "profile"],
+        &fig3_rows(),
+    )
+}
+
+// ---------------------------------------------------------------------
+// Experiment 1 (Figs. 4–5) — 10 EP-DGEMM jobs, 60 s interval.
+// ---------------------------------------------------------------------
+
+pub fn exp1_all_scenarios(seed: u64) -> Vec<(Scenario, ExperimentMetrics)> {
+    TABLE2_SCENARIOS
+        .iter()
+        .map(|&s| (s, run_metrics(s, &exp1_trace(), seed)))
+        .collect()
+}
+
+/// Fig. 4: average job running time of the 10 EP-DGEMM jobs per scenario.
+pub fn fig4_table(results: &[(Scenario, ExperimentMetrics)]) -> String {
+    let rows = results
+        .iter()
+        .map(|(s, m)| {
+            vec![
+                s.name().to_string(),
+                format!("{:.1}", m.avg_running[&Benchmark::EpDgemm]),
+            ]
+        })
+        .collect::<Vec<_>>();
+    report::table(&["scenario", "avg running time (s)"], &rows)
+}
+
+/// Fig. 5: overall response time per scenario (+ deltas vs NONE and CM).
+pub fn fig5_table(results: &[(Scenario, ExperimentMetrics)]) -> String {
+    let baseline = |name: &str| {
+        results
+            .iter()
+            .find(|(s, _)| s.name() == name)
+            .map(|(_, m)| m.overall_response)
+            .unwrap_or(f64::NAN)
+    };
+    let none = baseline("NONE");
+    let cm = baseline("CM");
+    let rows = results
+        .iter()
+        .map(|(s, m)| {
+            vec![
+                s.name().to_string(),
+                format!("{:.0}", m.overall_response),
+                format!("{:+.0}%", (1.0 - m.overall_response / none) * 100.0),
+                format!("{:+.0}%", (1.0 - m.overall_response / cm) * 100.0),
+            ]
+        })
+        .collect::<Vec<_>>();
+    report::table(&["scenario", "overall response (s)", "vs NONE", "vs CM"], &rows)
+}
+
+// ---------------------------------------------------------------------
+// Experiment 2 (Figs. 6–7) — 20 mixed jobs in [0, 1200] s.
+// ---------------------------------------------------------------------
+
+pub fn exp2_all_scenarios(seed: u64) -> Vec<(Scenario, ExperimentMetrics)> {
+    TABLE2_SCENARIOS
+        .iter()
+        .map(|&s| (s, run_metrics(s, &exp2_trace(seed), seed)))
+        .collect()
+}
+
+/// Fig. 6: per-benchmark average running time per scenario, plus the
+/// overall response row.
+pub fn fig6_table(results: &[(Scenario, ExperimentMetrics)]) -> String {
+    let mut headers: Vec<String> = vec!["metric".into()];
+    headers.extend(results.iter().map(|(s, _)| s.name().to_string()));
+    let headers_ref: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut rows = Vec::new();
+    for b in ALL_BENCHMARKS {
+        let mut row = vec![format!("{} avg run (s)", b.name())];
+        for (_, m) in results {
+            row.push(format!("{:.0}", m.avg_running.get(&b).copied().unwrap_or(0.0)));
+        }
+        rows.push(row);
+    }
+    let mut t_row = vec!["overall response (s)".to_string()];
+    for (_, m) in results {
+        t_row.push(format!("{:.0}", m.overall_response));
+    }
+    rows.push(t_row);
+    report::table(&headers_ref, &rows)
+}
+
+/// Fig. 7: makespan per scenario (+ deltas vs NONE and CM).
+pub fn fig7_table(results: &[(Scenario, ExperimentMetrics)]) -> String {
+    let baseline = |name: &str| {
+        results
+            .iter()
+            .find(|(s, _)| s.name() == name)
+            .map(|(_, m)| m.makespan)
+            .unwrap_or(f64::NAN)
+    };
+    let none = baseline("NONE");
+    let cm = baseline("CM");
+    let rows = results
+        .iter()
+        .map(|(s, m)| {
+            vec![
+                s.name().to_string(),
+                format!("{:.0}", m.makespan),
+                format!("{:+.0}%", (1.0 - m.makespan / none) * 100.0),
+                format!("{:+.0}%", (1.0 - m.makespan / cm) * 100.0),
+            ]
+        })
+        .collect::<Vec<_>>();
+    report::table(&["scenario", "makespan (s)", "vs NONE", "vs CM"], &rows)
+}
+
+// ---------------------------------------------------------------------
+// Experiment 3 (Table III, Figs. 8–9) — framework comparison.
+// ---------------------------------------------------------------------
+
+pub fn exp3_all_scenarios(seed: u64) -> Vec<(Scenario, ExperimentMetrics)> {
+    EXP3_SCENARIOS
+        .iter()
+        .map(|&s| (s, run_metrics(s, &exp2_trace(seed), seed)))
+        .collect()
+}
+
+/// Table III: makespan comparison in the paper's exact format.
+pub fn table3(results: &[(Scenario, ExperimentMetrics)]) -> String {
+    let rows = results
+        .iter()
+        .map(|(s, m)| vec![s.name().to_string(), report::fmt_makespan(m.makespan)])
+        .collect::<Vec<_>>();
+    report::table(&["Scenarios", "Makespan"], &rows)
+}
+
+/// Figs. 8/9: per-job running or response time across frameworks.
+pub fn per_job_table(
+    results: &[(Scenario, ExperimentMetrics)],
+    metric: fn(&crate::simulator::JobRecord) -> f64,
+    label: &str,
+) -> String {
+    let mut headers: Vec<String> = vec!["job".into()];
+    headers.extend(results.iter().map(|(s, _)| s.name().to_string()));
+    let headers_ref: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let njobs = results[0].1.per_job.len();
+    let mut rows = Vec::new();
+    for i in 0..njobs {
+        let mut row = vec![format!(
+            "{}-{}",
+            results[0].1.per_job[i].benchmark.name(),
+            results[0].1.per_job[i].id.0
+        )];
+        for (_, m) in results {
+            row.push(format!("{:.0}", metric(&m.per_job[i])));
+        }
+        rows.push(row);
+    }
+    format!("{label}\n{}", report::table(&headers_ref, &rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_covers_all_benchmarks() {
+        let rows = fig3_rows();
+        assert_eq!(rows.len(), 5);
+        let t = fig3_table();
+        assert!(t.contains("EP-DGEMM") && t.contains("MPI_Alltoall(large)"));
+    }
+
+    #[test]
+    fn exp1_produces_six_scenarios() {
+        let results = exp1_all_scenarios(DEFAULT_SEED);
+        assert_eq!(results.len(), 6);
+        for (s, m) in &results {
+            assert_eq!(m.per_job.len(), 10, "{s}");
+            assert!(m.overall_response > 0.0);
+        }
+        // Smoke the renderers.
+        assert!(fig4_table(&results).contains("NONE"));
+        assert!(fig5_table(&results).contains("vs CM"));
+    }
+
+    #[test]
+    fn exp1_fine_grained_beats_baselines() {
+        let results = exp1_all_scenarios(DEFAULT_SEED);
+        let get = |name: &str| {
+            results
+                .iter()
+                .find(|(s, _)| s.name() == name)
+                .map(|(_, m)| m.overall_response)
+                .unwrap()
+        };
+        // The paper's headline ordering for Exp 1 (Fig. 5): CM_G* < CM_S*
+        // < CM < NONE.
+        assert!(get("CM") < get("NONE"));
+        assert!(get("CM_G") < get("CM"));
+        assert!(get("CM_G_TG") < get("CM"));
+        assert!(get("CM_S") < get("CM"));
+    }
+}

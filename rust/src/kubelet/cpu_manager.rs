@@ -1,0 +1,243 @@
+//! Kubelet CPU manager — `--cpu-manager-policy={none,static}`.
+//!
+//! Reimplements the upstream allocation behaviour the paper relies on
+//! (§III, §IV-C): under `static`, a guaranteed pod requesting an integer
+//! number of CPUs receives an *exclusive* cpuset carved out of the node's
+//! shared pool; under `none`, all pods float over the shared pool (the
+//! container may migrate across all allocatable CPUs — the perf model
+//! charges this).
+
+use crate::cluster::{CpuSet, NodeSpec};
+
+use super::topology_manager::TopologyPolicy;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CpuManagerPolicy {
+    None,
+    Static,
+}
+
+/// Result of admitting a container on a node.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CpuAssignment {
+    /// `cpu-manager-policy=none`: container floats on the shared pool.
+    SharedPool,
+    /// `static`: exclusive cpuset; `spans_numa` records whether the
+    /// topology manager had to cross a NUMA boundary.
+    Exclusive { cpuset: CpuSet, spans_numa: bool },
+}
+
+impl CpuAssignment {
+    pub fn spans_numa(&self) -> bool {
+        match self {
+            CpuAssignment::SharedPool => true, // shared pool spans the node
+            CpuAssignment::Exclusive { spans_numa, .. } => *spans_numa,
+        }
+    }
+
+    pub fn cpuset(&self) -> Option<&CpuSet> {
+        match self {
+            CpuAssignment::SharedPool => None,
+            CpuAssignment::Exclusive { cpuset, .. } => Some(cpuset),
+        }
+    }
+}
+
+/// Per-node CPU-manager state: the free CPUs of each socket.
+#[derive(Debug, Clone)]
+pub struct CpuManagerState {
+    pub policy: CpuManagerPolicy,
+    pub topology: TopologyPolicy,
+    /// Free allocatable CPUs, per socket.
+    free: Vec<CpuSet>,
+}
+
+impl CpuManagerState {
+    pub fn new(spec: &NodeSpec, policy: CpuManagerPolicy, topology: TopologyPolicy) -> Self {
+        let free = (0..spec.sockets)
+            .map(|s| spec.allocatable_cpus_of_socket(s))
+            .collect();
+        CpuManagerState { policy, topology, free }
+    }
+
+    pub fn free_total(&self) -> usize {
+        self.free.iter().map(CpuSet::len).sum()
+    }
+
+    pub fn free_of_socket(&self, socket: usize) -> usize {
+        self.free[socket].len()
+    }
+
+    /// Admit a container requesting `cores` exclusive CPUs.
+    ///
+    /// Under the `none` policy every container lands on the shared pool.
+    /// Under `static` + `best-effort` topology, the allocation prefers a
+    /// single NUMA domain (bin-packing: the *fullest* socket that still
+    /// fits, to preserve large holes for later pods — upstream
+    /// `takeByTopology` behaviour); if no socket fits, it spills across
+    /// domains, taking from the socket with the most free CPUs first.
+    /// Under `static` + topology `none`, CPUs are taken lowest-id-first
+    /// with no NUMA awareness.
+    pub fn allocate(&mut self, cores: u32) -> Option<CpuAssignment> {
+        if self.policy == CpuManagerPolicy::None {
+            return Some(CpuAssignment::SharedPool);
+        }
+        let want = cores as usize;
+        if want == 0 {
+            return Some(CpuAssignment::SharedPool); // non-guaranteed QoS
+        }
+        if self.free_total() < want {
+            return None;
+        }
+        match self.topology {
+            TopologyPolicy::BestEffort => {
+                // Single-domain fit: fullest (least-free) socket that fits.
+                let candidate = (0..self.free.len())
+                    .filter(|&s| self.free[s].len() >= want)
+                    .min_by_key(|&s| self.free[s].len());
+                if let Some(s) = candidate {
+                    let cpuset = self.free[s].take(want);
+                    return Some(CpuAssignment::Exclusive { cpuset, spans_numa: false });
+                }
+                // Spill: biggest sockets first (fewest crossings).
+                let mut remaining = want;
+                let mut cpuset = CpuSet::empty();
+                let mut order: Vec<usize> = (0..self.free.len()).collect();
+                order.sort_by_key(|&s| std::cmp::Reverse(self.free[s].len()));
+                for s in order {
+                    if remaining == 0 {
+                        break;
+                    }
+                    let take = remaining.min(self.free[s].len());
+                    cpuset = cpuset.union(&self.free[s].take(take));
+                    remaining -= take;
+                }
+                debug_assert_eq!(remaining, 0);
+                Some(CpuAssignment::Exclusive { cpuset, spans_numa: true })
+            }
+            TopologyPolicy::None => {
+                // Lowest-id-first across the whole node.
+                let mut remaining = want;
+                let mut cpuset = CpuSet::empty();
+                let mut sockets_touched = Vec::new();
+                for s in 0..self.free.len() {
+                    if remaining == 0 {
+                        break;
+                    }
+                    let take = remaining.min(self.free[s].len());
+                    if take > 0 {
+                        cpuset = cpuset.union(&self.free[s].take(take));
+                        sockets_touched.push(s);
+                        remaining -= take;
+                    }
+                }
+                debug_assert_eq!(remaining, 0);
+                Some(CpuAssignment::Exclusive {
+                    cpuset,
+                    spans_numa: sockets_touched.len() > 1,
+                })
+            }
+        }
+    }
+
+    /// Return an exclusive cpuset to the free pools.
+    pub fn release(&mut self, spec: &NodeSpec, cpuset: &CpuSet) {
+        for cpu in cpuset.iter() {
+            let s = spec.socket_of(cpu) as usize;
+            let inserted = self.free[s].insert(cpu);
+            debug_assert!(inserted, "double release of cpu {cpu}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::NodeSpec;
+
+    fn state(policy: CpuManagerPolicy, topo: TopologyPolicy) -> (NodeSpec, CpuManagerState) {
+        let spec = NodeSpec::paper_worker("w0");
+        let st = CpuManagerState::new(&spec, policy, topo);
+        (spec, st)
+    }
+
+    #[test]
+    fn none_policy_always_shared() {
+        let (_, mut st) = state(CpuManagerPolicy::None, TopologyPolicy::None);
+        assert_eq!(st.allocate(16), Some(CpuAssignment::SharedPool));
+        assert_eq!(st.free_total(), 32, "shared pool is not carved up");
+    }
+
+    #[test]
+    fn static_best_effort_prefers_single_socket() {
+        let (_, mut st) = state(CpuManagerPolicy::Static, TopologyPolicy::BestEffort);
+        let a = st.allocate(16).unwrap();
+        assert!(!a.spans_numa(), "16 cores fit in one socket");
+        assert_eq!(a.cpuset().unwrap().len(), 16);
+        // Second 16-core pod gets the other socket, still single-NUMA.
+        let b = st.allocate(16).unwrap();
+        assert!(!b.spans_numa());
+        assert!(a.cpuset().unwrap().is_disjoint(b.cpuset().unwrap()));
+        assert_eq!(st.free_total(), 0);
+    }
+
+    #[test]
+    fn static_best_effort_binpacks_small_pods() {
+        let (_, mut st) = state(CpuManagerPolicy::Static, TopologyPolicy::BestEffort);
+        let a = st.allocate(4).unwrap(); // socket 0 (both equal, min index wins)
+        let s0_after = st.free_of_socket(0);
+        let s1_after = st.free_of_socket(1);
+        assert_eq!(s0_after + s1_after, 28);
+        // Next 12-core pod should pack into the *fuller* socket (the one
+        // with 12 free) if it fits, preserving the 16-free socket.
+        let b = st.allocate(12).unwrap();
+        assert!(!b.spans_numa());
+        assert!(a.cpuset().unwrap().is_disjoint(b.cpuset().unwrap()));
+        assert_eq!(st.free_of_socket(0).min(st.free_of_socket(1)), 0);
+        assert_eq!(st.free_of_socket(0).max(st.free_of_socket(1)), 16);
+    }
+
+    #[test]
+    fn static_best_effort_spills_when_no_socket_fits() {
+        let (_, mut st) = state(CpuManagerPolicy::Static, TopologyPolicy::BestEffort);
+        st.allocate(8).unwrap(); // socket now 8 free / 16 free
+        let big = st.allocate(20).unwrap(); // no single socket has 20
+        assert!(big.spans_numa());
+        assert_eq!(big.cpuset().unwrap().len(), 20);
+        assert_eq!(st.free_total(), 4);
+    }
+
+    #[test]
+    fn static_topology_none_ignores_sockets() {
+        let (_, mut st) = state(CpuManagerPolicy::Static, TopologyPolicy::None);
+        st.allocate(10).unwrap(); // takes socket-0 cpus 2..12
+        let a = st.allocate(10).unwrap(); // 6 from socket 0 + 4 from socket 1
+        assert!(a.spans_numa());
+    }
+
+    #[test]
+    fn allocate_fails_when_exhausted() {
+        let (_, mut st) = state(CpuManagerPolicy::Static, TopologyPolicy::BestEffort);
+        assert!(st.allocate(32).is_some());
+        assert!(st.allocate(1).is_none());
+    }
+
+    #[test]
+    fn release_restores_capacity() {
+        let (spec, mut st) = state(CpuManagerPolicy::Static, TopologyPolicy::BestEffort);
+        let a = st.allocate(16).unwrap();
+        let cpuset = a.cpuset().unwrap().clone();
+        assert_eq!(st.free_total(), 16);
+        st.release(&spec, &cpuset);
+        assert_eq!(st.free_total(), 32);
+        // And the freed cores are reusable as a single-NUMA block again.
+        let b = st.allocate(16).unwrap();
+        assert!(!b.spans_numa());
+    }
+
+    #[test]
+    fn zero_core_request_is_shared() {
+        let (_, mut st) = state(CpuManagerPolicy::Static, TopologyPolicy::BestEffort);
+        assert_eq!(st.allocate(0), Some(CpuAssignment::SharedPool));
+    }
+}

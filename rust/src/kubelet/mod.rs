@@ -1,0 +1,149 @@
+//! Kubelet substrate: per-node pod admission under the paper's two node
+//! settings (default vs CPU/memory affinity).
+
+pub mod cpu_manager;
+pub mod topology_manager;
+
+pub use cpu_manager::{CpuAssignment, CpuManagerPolicy, CpuManagerState};
+pub use topology_manager::{numa_hint, NumaHint, TopologyPolicy};
+
+use crate::cluster::{NodeSpec, Pod};
+
+/// Node-level Kubelet configuration (paper Table II "Kubelet" column).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KubeletConfig {
+    pub cpu_policy: CpuManagerPolicy,
+    pub topology_policy: TopologyPolicy,
+}
+
+impl KubeletConfig {
+    /// `default`: shared resources under limits.
+    pub fn default_policy() -> Self {
+        KubeletConfig {
+            cpu_policy: CpuManagerPolicy::None,
+            topology_policy: TopologyPolicy::None,
+        }
+    }
+
+    /// `cpu/memory affinity`: `--cpu-manager-policy=static`
+    /// `--topology-manager-policy=best-effort`.
+    pub fn cpu_mem_affinity() -> Self {
+        KubeletConfig {
+            cpu_policy: CpuManagerPolicy::Static,
+            topology_policy: TopologyPolicy::BestEffort,
+        }
+    }
+}
+
+/// One node's Kubelet: admits pods bound to this node and maintains the
+/// exclusive-CPU bookkeeping.
+#[derive(Debug, Clone)]
+pub struct Kubelet {
+    pub spec: NodeSpec,
+    pub cpus: CpuManagerState,
+}
+
+impl Kubelet {
+    pub fn new(spec: NodeSpec, config: KubeletConfig) -> Kubelet {
+        let cpus = CpuManagerState::new(&spec, config.cpu_policy, config.topology_policy);
+        Kubelet { spec, cpus }
+    }
+
+    /// Start a pod on this node: grant its cpuset per policy and record the
+    /// NUMA-spanning flag the performance model reads. Returns false if the
+    /// exclusive allocation is impossible (scheduler/kubelet race — callers
+    /// treat it as an admission failure).
+    pub fn admit(&mut self, pod: &mut Pod) -> bool {
+        // Only integer-CPU ("guaranteed" QoS) containers get exclusive
+        // cpusets; everything else floats on the shared pool.
+        let cores = if pod.requests.is_integer_cpu() {
+            pod.requests.whole_cores()
+        } else {
+            0
+        };
+        match self.cpus.allocate(cores) {
+            Some(assignment) => {
+                pod.spans_numa = assignment.spans_numa();
+                pod.cpuset = assignment.cpuset().cloned();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Terminate a pod: release its exclusive CPUs back to the pool. The
+    /// pod keeps its (now historical) cpuset for post-mortem reporting;
+    /// the API server's phase machine guarantees single termination.
+    pub fn terminate(&mut self, pod: &Pod) {
+        if let Some(cpuset) = &pod.cpuset {
+            self.cpus.release(&self.spec, cpuset);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{gib, JobId, Pod, PodId, PodRole, Resources};
+
+    fn worker_pod(id: u64, cores: u64) -> Pod {
+        let mut p = Pod::new(
+            PodId(id),
+            JobId(1),
+            format!("w{id}"),
+            PodRole::Worker { index: id as u32 },
+        );
+        p.requests = Resources::new(cores * 1000, gib(2) * cores);
+        p.limits = p.requests;
+        p
+    }
+
+    #[test]
+    fn affinity_kubelet_grants_exclusive_cpuset() {
+        let mut k = Kubelet::new(NodeSpec::paper_worker("w"), KubeletConfig::cpu_mem_affinity());
+        let mut p = worker_pod(1, 16);
+        assert!(k.admit(&mut p));
+        assert_eq!(p.cpuset.as_ref().unwrap().len(), 16);
+        assert!(!p.spans_numa);
+    }
+
+    #[test]
+    fn default_kubelet_shares_pool() {
+        let mut k = Kubelet::new(NodeSpec::paper_worker("w"), KubeletConfig::default_policy());
+        let mut p = worker_pod(1, 16);
+        assert!(k.admit(&mut p));
+        assert!(p.cpuset.is_none());
+        assert!(p.spans_numa, "shared pool spans the node");
+    }
+
+    #[test]
+    fn admission_fails_when_full_then_recovers() {
+        let mut k = Kubelet::new(NodeSpec::paper_worker("w"), KubeletConfig::cpu_mem_affinity());
+        let mut a = worker_pod(1, 32);
+        let mut b = worker_pod(2, 1);
+        assert!(k.admit(&mut a));
+        assert!(!k.admit(&mut b));
+        k.terminate(&a);
+        assert!(a.cpuset.is_some(), "historical cpuset kept for reporting");
+        assert!(k.admit(&mut b));
+    }
+
+    #[test]
+    fn two_16core_pods_get_disjoint_sockets() {
+        let mut k = Kubelet::new(NodeSpec::paper_worker("w"), KubeletConfig::cpu_mem_affinity());
+        let mut a = worker_pod(1, 16);
+        let mut b = worker_pod(2, 16);
+        assert!(k.admit(&mut a) && k.admit(&mut b));
+        assert!(!a.spans_numa && !b.spans_numa);
+        assert!(a.cpuset.as_ref().unwrap().is_disjoint(b.cpuset.as_ref().unwrap()));
+    }
+
+    #[test]
+    fn fractional_cpu_pod_is_shared_even_under_static() {
+        let mut k = Kubelet::new(NodeSpec::paper_worker("w"), KubeletConfig::cpu_mem_affinity());
+        let mut p = worker_pod(1, 16);
+        p.requests.cpu_milli = 500; // launcher-style burstable pod
+        assert!(k.admit(&mut p));
+        assert!(p.cpuset.is_none());
+    }
+}

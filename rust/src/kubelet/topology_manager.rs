@@ -1,0 +1,60 @@
+//! Kubelet topology manager — `--topology-manager-policy={none,best-effort}`.
+//!
+//! The paper's two Kubelet settings (§III): default (`none`, shared
+//! resources) vs CPU/memory affinity (`static` CPU manager + `best-effort`
+//! topology manager, i.e. exclusive CPUs preferring a single NUMA node).
+//! The admission logic itself lives in [`super::cpu_manager`]; this module
+//! holds the policy type and the NUMA-hint helper used by tests and the
+//! perf model.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TopologyPolicy {
+    /// No NUMA alignment between CPU allocations.
+    None,
+    /// Prefer a single NUMA node; admit anyway if impossible (the
+    /// `best-effort` upstream policy — never rejects).
+    BestEffort,
+}
+
+/// A NUMA affinity hint: which single domain could satisfy `cores`, if any.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NumaHint {
+    /// A single domain fits the request.
+    Preferred { socket: u32 },
+    /// The request must span domains.
+    CrossNuma,
+}
+
+/// Compute the hint the topology manager would merge for a CPU request,
+/// given per-socket free counts.
+pub fn numa_hint(free_per_socket: &[usize], cores: u32) -> NumaHint {
+    let want = cores as usize;
+    free_per_socket
+        .iter()
+        .enumerate()
+        .filter(|(_, &f)| f >= want)
+        .min_by_key(|(_, &f)| f)
+        .map(|(s, _)| NumaHint::Preferred { socket: s as u32 })
+        .unwrap_or(NumaHint::CrossNuma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hint_prefers_tightest_fit() {
+        assert_eq!(numa_hint(&[16, 8], 8), NumaHint::Preferred { socket: 1 });
+        assert_eq!(numa_hint(&[16, 8], 12), NumaHint::Preferred { socket: 0 });
+    }
+
+    #[test]
+    fn hint_cross_numa_when_fragmented() {
+        assert_eq!(numa_hint(&[10, 10], 16), NumaHint::CrossNuma);
+    }
+
+    #[test]
+    fn hint_exact_fit() {
+        assert_eq!(numa_hint(&[16, 16], 16), NumaHint::Preferred { socket: 0 });
+    }
+}

@@ -1,0 +1,28 @@
+//! kube-fgs — Fine-Grained Scheduling for Containerized HPC Workloads in
+//! Kubernetes Clusters (Liu & Guitart, 2022): full-system reproduction.
+//!
+//! Three-layer architecture (DESIGN.md):
+//! - L3 (this crate): the paper's two-layer scheduling contribution plus
+//!   every substrate it depends on (cluster/kubelet/API-server models, a
+//!   Volcano-style scheduling framework, the MPI performance model, and a
+//!   discrete-event simulator), and the PJRT runtime that executes the
+//!   AOT-compiled benchmark payloads.
+//! - L2/L1 (python/compile): JAX step functions + Pallas kernels, lowered
+//!   once to `artifacts/*.hlo.txt`; Python never runs on the request path.
+
+pub mod apiserver;
+pub mod metrics;
+pub mod report;
+pub mod runtime;
+pub mod scenario;
+pub mod cluster;
+pub mod config;
+pub mod kubelet;
+pub mod util;
+pub mod controller;
+pub mod experiments;
+pub mod perfmodel;
+pub mod planner;
+pub mod scheduler;
+pub mod simulator;
+pub mod workload;

@@ -1,0 +1,324 @@
+//! kube-fgs CLI — the L3 coordinator entrypoint.
+//!
+//! Subcommands map 1:1 to the paper's evaluation artefacts:
+//!   profiles                     Fig. 3 benchmark profiling table
+//!   exp1 [--seed N]              Figs. 4–5 (10 EP-DGEMM jobs, 6 scenarios)
+//!   exp2 [--seed N] [--gantt]    Figs. 6–7 (20 mixed jobs, 6 scenarios)
+//!   exp3 [--seed N]              Table III + Figs. 8–9 (frameworks)
+//!   run --scenario S [--jobs N]  one scenario on a uniform trace
+//!   e2e [--steps N]              end-to-end: PJRT payload execution feeds
+//!                                the simulator's base rates
+//!
+//! (The vendored offline registry has no clap; argument parsing is a small
+//! hand-rolled layer — see DESIGN.md §Dependencies.)
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use kube_fgs::experiments::{self, DEFAULT_SEED};
+use kube_fgs::metrics::ExperimentMetrics;
+use kube_fgs::report;
+use kube_fgs::runtime::{default_artifacts_dir, Runtime};
+use kube_fgs::scenario::Scenario;
+use kube_fgs::simulator::JobRecord;
+use kube_fgs::workload::{exp2_trace, uniform_trace, Benchmark, ALL_BENCHMARKS};
+
+/// Minimal flag parser: `--key value` and `--flag` forms.
+struct Args {
+    positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let next_is_value = argv
+                    .get(i + 1)
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false);
+                if next_is_value {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn seed(&self) -> u64 {
+        self.flags
+            .get("seed")
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(DEFAULT_SEED)
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.flags.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+const USAGE: &str = "kube-fgs — fine-grained scheduling for containerized HPC workloads
+
+USAGE: kube-fgs <command> [flags]
+
+COMMANDS:
+  profiles              Fig. 3: benchmark MPI profiling analysis
+  exp1 [--seed N]       Figs. 4-5: schedule 10 EP-DGEMM jobs, 6 scenarios
+  exp2 [--seed N] [--gantt] [--csv]
+                        Figs. 6-7: 20 mixed jobs, 6 scenarios
+  exp3 [--seed N]       Table III + Figs. 8-9: framework comparison
+  run --scenario NAME [--jobs N] [--interval S] [--seed N]
+                        one scenario on a uniform random trace
+  e2e [--steps N] [--seed N]
+                        end-to-end: execute AOT payloads via PJRT and feed
+                        measured step times into the simulator
+  figures --out DIR [--seed N]
+                        render every paper figure as SVG into DIR
+  config PATH           run an experiment described by a JSON config file
+";
+
+fn main() {
+    // Exit quietly when stdout is closed early (e.g. `kube-fgs exp2 | head`).
+    let default_hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(move |info| {
+        let msg = info.payload().downcast_ref::<String>().map(String::as_str).unwrap_or("");
+        if msg.contains("Broken pipe") {
+            std::process::exit(0);
+        }
+        default_hook(info);
+    }));
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..]);
+    if let Err(e) = dispatch(&cmd, &args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "profiles" => cmd_profiles(),
+        "exp1" => cmd_exp1(args),
+        "exp2" => cmd_exp2(args),
+        "exp3" => cmd_exp3(args),
+        "run" => cmd_run(args),
+        "e2e" => cmd_e2e(args),
+        "figures" => cmd_figures(args),
+        "config" => cmd_config(args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn cmd_profiles() -> Result<()> {
+    println!("Fig. 3 — Benchmarks MPI profiling analysis\n");
+    print!("{}", experiments::fig3_table());
+    Ok(())
+}
+
+fn cmd_exp1(args: &Args) -> Result<()> {
+    let seed = args.seed();
+    println!("Experiment 1 — 10 EP-DGEMM jobs, 60 s interval (seed {seed})\n");
+    let results = experiments::exp1_all_scenarios(seed);
+    println!("Fig. 4 — average job running time:");
+    print!("{}", experiments::fig4_table(&results));
+    println!("\nFig. 5 — overall response time:");
+    print!("{}", experiments::fig5_table(&results));
+    Ok(())
+}
+
+fn cmd_exp2(args: &Args) -> Result<()> {
+    let seed = args.seed();
+    println!("Experiment 2 — 20 mixed jobs in [0, 1200] s (seed {seed})\n");
+    let results = experiments::exp2_all_scenarios(seed);
+    println!("Fig. 6 — per-benchmark avg running time + overall response:");
+    print!("{}", experiments::fig6_table(&results));
+    println!("\nFig. 7 — makespan:");
+    print!("{}", experiments::fig7_table(&results));
+    if args.has("gantt") {
+        for (s, _) in &results {
+            let out = experiments::run_scenario(*s, &exp2_trace(seed), seed, None);
+            println!("\nFig. 7 — scheduling process, scenario {s}:");
+            print!("{}", report::gantt(&out, 100));
+        }
+    }
+    if args.has("csv") {
+        let headers = ["scenario", "job", "benchmark", "submit", "start", "finish"];
+        let mut rows = Vec::new();
+        for (s, m) in &results {
+            for r in &m.per_job {
+                rows.push(vec![
+                    s.name().to_string(),
+                    r.id.0.to_string(),
+                    r.benchmark.name().to_string(),
+                    format!("{:.1}", r.submit_time),
+                    format!("{:.1}", r.start_time),
+                    format!("{:.1}", r.finish_time),
+                ]);
+            }
+        }
+        print!("\n{}", report::csv(&headers, &rows));
+    }
+    Ok(())
+}
+
+fn cmd_exp3(args: &Args) -> Result<()> {
+    let seed = args.seed();
+    println!("Experiment 3 — framework comparison (seed {seed})\n");
+    let results = experiments::exp3_all_scenarios(seed);
+    println!("Table III — makespan comparison:");
+    print!("{}", experiments::table3(&results));
+    println!();
+    print!(
+        "{}",
+        experiments::per_job_table(&results, JobRecord::running, "Fig. 8 — job running time (s):")
+    );
+    println!();
+    print!(
+        "{}",
+        experiments::per_job_table(
+            &results,
+            JobRecord::response,
+            "Fig. 9 — job response time (s):"
+        )
+    );
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let name = args
+        .flags
+        .get("scenario")
+        .or_else(|| args.positional.first())
+        .ok_or_else(|| anyhow!("--scenario required (e.g. CM_G_TG)"))?;
+    let scenario =
+        Scenario::parse(name).ok_or_else(|| anyhow!("unknown scenario {name:?}"))?;
+    let seed = args.seed();
+    let jobs = args.get_usize("jobs", 20);
+    let interval = args.get_usize("interval", 60) as f64;
+    let trace = uniform_trace(jobs, interval, seed);
+    let out = experiments::run_scenario(scenario, &trace, seed, None);
+    let m = ExperimentMetrics::from(&out);
+    print!("{}", report::scenario_summary(scenario.name(), &m));
+    println!("\nScheduling process:");
+    print!("{}", report::gantt(&out, 100));
+    println!("\nPod placements:");
+    print!("{}", report::node_timeline(&out));
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let out = args
+        .flags
+        .get("out")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("figures"));
+    kube_fgs::report::figures::write_all(&out, args.seed())
+}
+
+fn cmd_config(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .or_else(|| args.flags.get("file"))
+        .ok_or_else(|| anyhow!("usage: kube-fgs config <path.json>"))?;
+    let cfg = kube_fgs::config::ExperimentConfig::load(std::path::Path::new(path))?;
+    println!(
+        "config: scenario {} seed {} workers {} trace {:?}\n",
+        cfg.scenario, cfg.seed, cfg.worker_nodes, cfg.trace
+    );
+    let sim = cfg.scenario.simulation_on(cfg.cluster(), cfg.seed);
+    let out = sim.run(&cfg.build_trace());
+    let m = ExperimentMetrics::from(&out);
+    print!("{}", report::scenario_summary(cfg.scenario.name(), &m));
+    if cfg.gantt {
+        println!("\nScheduling process:");
+        print!("{}", report::gantt(&out, 100));
+    }
+    if cfg.csv {
+        let headers = ["job", "benchmark", "submit", "start", "finish"];
+        let rows: Vec<Vec<String>> = m
+            .per_job
+            .iter()
+            .map(|r| {
+                vec![
+                    r.id.0.to_string(),
+                    r.benchmark.name().to_string(),
+                    format!("{:.1}", r.submit_time),
+                    format!("{:.1}", r.start_time),
+                    format!("{:.1}", r.finish_time),
+                ]
+            })
+            .collect();
+        print!("\n{}", report::csv(&headers, &rows));
+    }
+    Ok(())
+}
+
+fn cmd_e2e(args: &Args) -> Result<()> {
+    let seed = args.seed();
+    let steps = args.get_usize("steps", 5);
+    println!("End-to-end driver: PJRT payload execution -> simulator base rates\n");
+    let rt = Runtime::load(&default_artifacts_dir())?;
+    println!("PJRT platform: {}", rt.client_platform);
+
+    // Measure each payload and scale it to the paper's base running times
+    // (the artifacts are scaled-down problems; the *ratios* between the
+    // measured kernels drive the simulated workload mix).
+    let mut measured = BTreeMap::new();
+    for &b in &ALL_BENCHMARKS {
+        let secs = rt.measure(b, 1, steps)?;
+        println!("  {:<14} {:>10.3} ms/step", b.name(), secs * 1e3);
+        measured.insert(b, secs);
+    }
+    // Normalize so EP-DGEMM keeps its calibrated base time.
+    let scale = Benchmark::EpDgemm.base_running_secs() / measured[&Benchmark::EpDgemm];
+    let base_work: BTreeMap<Benchmark, f64> =
+        measured.iter().map(|(&b, &s)| (b, s * scale)).collect();
+    println!("\nscaled base work (s): ");
+    for (b, w) in &base_work {
+        println!("  {:<14} {:>8.1}", b.name(), w);
+    }
+
+    println!("\nExperiment 2 under measured kernel times:");
+    let trace = exp2_trace(seed);
+    let mut rows = Vec::new();
+    for s in kube_fgs::scenario::TABLE2_SCENARIOS {
+        let out = experiments::run_scenario(s, &trace, seed, Some(&base_work));
+        let m = ExperimentMetrics::from(&out);
+        rows.push(vec![
+            s.name().to_string(),
+            format!("{:.0}", m.overall_response),
+            format!("{:.0}", m.makespan),
+        ]);
+    }
+    print!(
+        "{}",
+        report::table(&["scenario", "overall response (s)", "makespan (s)"], &rows)
+    );
+    Ok(())
+}

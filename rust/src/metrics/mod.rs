@@ -1,0 +1,161 @@
+//! Metrics registry + the paper's evaluation metrics (§V-B).
+//!
+//! [`ExperimentMetrics`] aggregates a [`SimOutput`] into the four paper
+//! metrics (job running time, job response time, overall response time,
+//! makespan). [`Registry`] is a small Prometheus-style counter/gauge
+//! surface — the "system information" endpoint the planner agent senses.
+
+use std::collections::BTreeMap;
+
+use crate::simulator::{JobRecord, SimOutput};
+use crate::workload::{Benchmark, ALL_BENCHMARKS};
+
+/// Aggregated metrics of one experiment run.
+#[derive(Debug, Clone)]
+pub struct ExperimentMetrics {
+    pub per_job: Vec<JobRecord>,
+    pub overall_response: f64,
+    pub makespan: f64,
+    pub avg_running: BTreeMap<Benchmark, f64>,
+    pub avg_wait: f64,
+}
+
+impl ExperimentMetrics {
+    pub fn from(out: &SimOutput) -> ExperimentMetrics {
+        let mut per_job = out.records.clone();
+        per_job.sort_by_key(|r| r.id);
+        let avg_running = ALL_BENCHMARKS
+            .iter()
+            .filter(|b| per_job.iter().any(|r| r.benchmark == **b))
+            .map(|&b| (b, out.avg_running(b)))
+            .collect();
+        let avg_wait = if per_job.is_empty() {
+            0.0
+        } else {
+            per_job.iter().map(JobRecord::wait).sum::<f64>() / per_job.len() as f64
+        };
+        ExperimentMetrics {
+            overall_response: out.overall_response(),
+            makespan: out.makespan(),
+            avg_running,
+            avg_wait,
+            per_job,
+        }
+    }
+
+    /// Relative improvement of `self` over `baseline` for a metric
+    /// extractor (positive = this run is better/smaller).
+    pub fn improvement_over(
+        &self,
+        baseline: &ExperimentMetrics,
+        metric: fn(&ExperimentMetrics) -> f64,
+    ) -> f64 {
+        let b = metric(baseline);
+        let s = metric(self);
+        if b == 0.0 {
+            0.0
+        } else {
+            (b - s) / b
+        }
+    }
+}
+
+pub fn overall_response(m: &ExperimentMetrics) -> f64 {
+    m.overall_response
+}
+
+pub fn makespan(m: &ExperimentMetrics) -> f64 {
+    m.makespan
+}
+
+/// Minimal Prometheus-style metrics registry (gauge/counter with labels),
+/// standing in for the Prometheus deployment the planner agent queries.
+#[derive(Debug, Default, Clone)]
+pub struct Registry {
+    values: BTreeMap<String, f64>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn set_gauge(&mut self, name: &str, value: f64) {
+        self.values.insert(name.to_string(), value);
+    }
+
+    pub fn inc_counter(&mut self, name: &str, by: f64) {
+        *self.values.entry(name.to_string()).or_insert(0.0) += by;
+    }
+
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.values.get(name).copied()
+    }
+
+    /// Prometheus text exposition format (subset).
+    pub fn expose(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.values {
+            out.push_str(&format!("{k} {v}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::JobId;
+
+    fn record(id: u64, bench: Benchmark, submit: f64, start: f64, finish: f64) -> JobRecord {
+        JobRecord { id: JobId(id), benchmark: bench, submit_time: submit, start_time: start, finish_time: finish }
+    }
+
+    fn fake_output() -> SimOutput {
+        use crate::apiserver::ApiServer;
+        use crate::cluster::ClusterSpec;
+        use crate::kubelet::KubeletConfig;
+        SimOutput {
+            records: vec![
+                record(1, Benchmark::EpDgemm, 0.0, 0.0, 100.0),
+                record(2, Benchmark::EpDgemm, 10.0, 20.0, 150.0),
+                record(3, Benchmark::GFft, 20.0, 20.0, 120.0),
+            ],
+            api: ApiServer::new(ClusterSpec::paper(), KubeletConfig::default_policy()),
+        }
+    }
+
+    #[test]
+    fn metrics_match_paper_definitions() {
+        let m = ExperimentMetrics::from(&fake_output());
+        // T = sum of responses: 100 + 140 + 100.
+        assert!((m.overall_response - 340.0).abs() < 1e-9);
+        // Makespan: last finish (150) - first submit (0).
+        assert!((m.makespan - 150.0).abs() < 1e-9);
+        // avg running of DGEMM: (100 + 130) / 2.
+        assert!((m.avg_running[&Benchmark::EpDgemm] - 115.0).abs() < 1e-9);
+        // avg wait: (0 + 10 + 0)/3.
+        assert!((m.avg_wait - 10.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn improvement_is_relative() {
+        let base = ExperimentMetrics::from(&fake_output());
+        let mut better = base.clone();
+        better.overall_response = base.overall_response * 0.65;
+        let imp = better.improvement_over(&base, overall_response);
+        assert!((imp - 0.35).abs() < 1e-9);
+    }
+
+    #[test]
+    fn registry_gauges_and_counters() {
+        let mut r = Registry::new();
+        r.set_gauge("kube_node_available", 4.0);
+        r.inc_counter("jobs_submitted_total", 1.0);
+        r.inc_counter("jobs_submitted_total", 1.0);
+        assert_eq!(r.get("kube_node_available"), Some(4.0));
+        assert_eq!(r.get("jobs_submitted_total"), Some(2.0));
+        assert!(r.expose().contains("jobs_submitted_total 2"));
+        assert_eq!(r.get("missing"), None);
+    }
+}

@@ -1,0 +1,148 @@
+//! Calibration constants for the MPI performance model, each anchored to a
+//! mechanism the paper measures (§V-C/§V-D observations) — see DESIGN.md §7.
+//!
+//! The paper reports *relative* results; these constants are set so the
+//! shape of Figs. 4–9 and Table III holds (who wins, by roughly what
+//! factor). Every constant documents its paper anchor. EXPERIMENTS.md
+//! records the calibrated-vs-paper deltas.
+
+use crate::workload::Profile;
+
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    // --- scheduling / pinning (paper: "less process migrations and
+    // context-switches", "exploit processor affinity better") ---
+    /// Shared-pool (cpu-manager=none) baseline penalty: process migrations
+    /// + context switches even on an idle node.
+    pub none_migration_base: f64,
+    /// Additional shared-pool penalty proportional to node CPU utilization
+    /// (more co-runners => more migrations/preemptions).
+    pub none_migration_load: f64,
+    /// Log-normal sigma of run-to-run variance under the shared pool
+    /// (paper: "randomness of these processes movement can incur a
+    /// variable performance between different executions").
+    pub none_variance_sigma: f64,
+    /// Intra-cgroup scheduling penalty coefficient: a container running
+    /// `n` processes on an n-core exclusive cpuset pays
+    /// `coef * ln(n)` (the kernel still load-balances within the cgroup;
+    /// the effect grows sub-linearly with the process count). Single-
+    /// process containers pay nothing — "essentially a single-level
+    /// scheduling ... similar to when processes are pinned explicitly".
+    pub cgroup_sched_log_coef: f64,
+
+    // --- NUMA (paper: "more local memory accesses, less remote memory
+    // accesses" under CM) ---
+    /// Remote-access penalty when a container spans NUMA domains (or floats
+    /// over the whole node), by profile.
+    pub numa_penalty_cpu: f64,
+    pub numa_penalty_memory: f64,
+    pub numa_penalty_cpumem: f64,
+    pub numa_penalty_network: f64,
+
+    // --- per-socket memory-bandwidth contention (paper: "CM ... introduces
+    // more memory contention for memory-intensive applications";
+    // TG "reduce[s] a 33% the running time of STREAM") ---
+    /// Fraction of peak socket bandwidth that is actually sustainable by
+    /// concurrent triad-like streams (co-running streams interfere well
+    /// before the spec peak; STREAM on 2697v4 sustains ~75% of peak).
+    /// Contention starts when demand exceeds `threshold * capacity`.
+    pub membw_threshold: f64,
+    /// Sensitivity of each profile to bandwidth oversubscription: slowdown
+    /// = 1 + sens * (demand/(threshold*capacity) - 1) past the threshold.
+    pub mem_sens_cpu: f64,
+    pub mem_sens_memory: f64,
+    pub mem_sens_cpumem: f64,
+    pub mem_sens_network: f64,
+
+    // --- communication (paper: network-intensive workloads "face very
+    // important performance degradation" when scattered; 1-GbE testbed) ---
+    /// Penalty for crossing container boundaries within one node (shared
+    /// memory becomes per-pod loopback/CMA).
+    pub cross_container_shm: f64,
+    /// Slowdown multiplier of the communication phase for traffic crossing
+    /// nodes over 1 GbE, relative to intra-node shared memory, per
+    /// benchmark class: proportional to bytes on the wire.
+    pub eth_penalty_per_byte: f64,
+    /// Floor multiplier for any cross-node communication (latency term of
+    /// the Hockney model; collectives pay it even with small payloads).
+    pub eth_latency_floor: f64,
+}
+
+impl Default for Calibration {
+    fn default() -> Self {
+        Calibration {
+            none_migration_base: 0.16,
+            none_migration_load: 0.22,
+            none_variance_sigma: 0.07,
+            cgroup_sched_log_coef: 0.054,
+
+            numa_penalty_cpu: 0.06,
+            numa_penalty_memory: 0.28,
+            numa_penalty_cpumem: 0.16,
+            numa_penalty_network: 0.03,
+
+            membw_threshold: 0.75,
+            mem_sens_cpu: 0.12,
+            mem_sens_memory: 1.0,
+            mem_sens_cpumem: 0.55,
+            mem_sens_network: 0.05,
+
+            cross_container_shm: 0.05,
+            // Calibrated so a 16-task G-RandomRing scattered one-task-per-
+            // container across 4 nodes degrades by hundreds of x (the
+            // mechanism behind Table III's Volcano makespan blow-up,
+            // 123055 s vs 2520 s): per-rank ring traffic 3e8 B/s over a
+            // shared 1-GbE NIC vs intra-node shared memory.
+            eth_penalty_per_byte: 1.2e-7,
+            eth_latency_floor: 1.5,
+        }
+    }
+}
+
+impl Calibration {
+    pub fn numa_penalty(&self, profile: Profile) -> f64 {
+        match profile {
+            Profile::Cpu => self.numa_penalty_cpu,
+            Profile::Memory => self.numa_penalty_memory,
+            Profile::CpuMemory => self.numa_penalty_cpumem,
+            Profile::Network => self.numa_penalty_network,
+        }
+    }
+
+    pub fn mem_sensitivity(&self, profile: Profile) -> f64 {
+        match profile {
+            Profile::Cpu => self.mem_sens_cpu,
+            Profile::Memory => self.mem_sens_memory,
+            Profile::CpuMemory => self.mem_sens_cpumem,
+            Profile::Network => self.mem_sens_network,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = Calibration::default();
+        assert!(c.none_migration_base > 0.0 && c.none_migration_base < 1.0);
+        assert!(c.numa_penalty(Profile::Memory) > c.numa_penalty(Profile::Cpu));
+        assert!(c.mem_sensitivity(Profile::Memory) > c.mem_sensitivity(Profile::Network));
+    }
+
+    #[test]
+    fn scattered_ring_penalty_matches_table3_scale() {
+        // 16-task RandomRing spread 1-task-per-container over 4 nodes:
+        // cross fraction 0.75, comm multiplier ~ floor + bytes*penalty.
+        let c = Calibration::default();
+        // Solo job: NIC oversubscription ~4.7x on its own traffic.
+        let m = c.eth_latency_floor + 3.0e8 * c.eth_penalty_per_byte * 4.7;
+        let cf = 0.65; // RandomRing comm fraction
+        let total = (1.0 - cf) + cf * (1.0 + 0.05 + 0.75 * (m - 1.0));
+        assert!(
+            (50.0..200.0).contains(&total),
+            "scattered ring slowdown {total} should be ~100x"
+        );
+    }
+}

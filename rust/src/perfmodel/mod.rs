@@ -1,0 +1,462 @@
+//! MPI workload performance model — maps a placement (plus co-location) to
+//! a per-job slowdown, the rate the discrete-event simulator integrates.
+//!
+//! Mechanisms modelled (each anchored to a paper observation, DESIGN.md §1):
+//! 1. Shared-pool scheduling: migrations/context switches under
+//!    `cpu-manager-policy=none`, growing with node utilization, plus
+//!    run-to-run variance (paper §V-C/§V-D on the NONE scenario).
+//! 2. Intra-cgroup scheduling: multi-process containers pay a small
+//!    per-process penalty even with exclusive cpusets; single-process
+//!    containers behave like explicit pinning (paper §V-C on CM_G*).
+//! 3. NUMA: remote-access penalty when a container spans sockets or floats
+//!    over the node.
+//! 4. Per-socket memory-bandwidth contention between co-resident
+//!    containers (the STREAM story and the TG -33% result).
+//! 5. Communication: per-benchmark comm fraction (Fig. 3) split between
+//!    intra-container shared memory, cross-container/intra-node, and
+//!    cross-node 1-GbE traffic (Hockney-style floor + per-byte cost).
+//! 6. Gang lockstep: the job's compute rate is gated by its slowest worker
+//!    (imbalance — what the task-group plugin fixes).
+
+pub mod calib;
+pub mod network;
+
+pub use calib::Calibration;
+pub use network::{nic_demands, nic_oversubscription, traffic_split, TrafficSplit};
+
+use std::collections::BTreeMap;
+
+use crate::apiserver::ApiServer;
+use crate::cluster::{JobId, NodeId, Pod};
+use crate::workload::Benchmark;
+
+/// Slowdown decomposition for one job under the current cluster state.
+#[derive(Debug, Clone)]
+pub struct JobSlowdown {
+    /// Per-worker compute slowdowns (sched × numa × membw).
+    pub per_worker: Vec<f64>,
+    /// max(per_worker) — the gang-lockstep compute factor.
+    pub compute: f64,
+    /// Communication-phase multiplier (1.0 = all shared-memory).
+    pub comm: f64,
+    /// Blended total: (1-cf)·compute + cf·comm·compute_overlap.
+    pub total: f64,
+}
+
+/// Cluster-wide load snapshot, computed ONCE per rate recomputation and
+/// shared across every running job's slowdown evaluation (the naive
+/// per-job recomputation was the L3 hot path — see EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone)]
+pub struct ClusterLoads {
+    /// node -> socket -> memory-bandwidth demand (bytes/s).
+    pub socket_demands: BTreeMap<NodeId, Vec<f64>>,
+    /// node -> NIC demand (bytes/s) from cross-node traffic.
+    pub nic_demands: BTreeMap<NodeId, f64>,
+    /// node -> running MPI tasks (drives the shared-pool migration term).
+    pub tasks_on_node: BTreeMap<NodeId, u32>,
+}
+
+impl ClusterLoads {
+    pub fn snapshot(api: &ApiServer) -> ClusterLoads {
+        let mut tasks_on_node: BTreeMap<NodeId, u32> = BTreeMap::new();
+        for (&job_id, job) in &api.jobs {
+            if job.phase != crate::apiserver::JobPhase::Running {
+                continue;
+            }
+            for pod in api.worker_pods_of(job_id) {
+                if let Some(node) = pod.node {
+                    *tasks_on_node.entry(node).or_insert(0) += pod.ntasks;
+                }
+            }
+        }
+        ClusterLoads {
+            socket_demands: socket_demands(api),
+            nic_demands: network::nic_demands(api),
+            tasks_on_node,
+        }
+    }
+}
+
+/// Per-socket memory-bandwidth demand on every node, derived from the
+/// current running placements. Index: node -> socket -> bytes/s.
+fn socket_demands(api: &ApiServer) -> BTreeMap<NodeId, Vec<f64>> {
+    let mut demands: BTreeMap<NodeId, Vec<f64>> = BTreeMap::new();
+    for (&job_id, job) in &api.jobs {
+        if job.phase != crate::apiserver::JobPhase::Running {
+            continue;
+        }
+        let bench = job.planned.spec.benchmark;
+        let per_task = bench.membw_demand_per_task();
+        for pod in api.worker_pods_of(job_id) {
+            let node = match pod.node {
+                Some(n) => n,
+                None => continue,
+            };
+            let spec = api.spec.node(node);
+            let entry = demands
+                .entry(node)
+                .or_insert_with(|| vec![0.0; spec.sockets as usize]);
+            distribute_demand(entry, pod, spec, per_task * pod.ntasks as f64);
+        }
+    }
+    demands
+}
+
+/// Spread one container's bandwidth demand over the sockets its processes
+/// can run on: proportional to its cpuset split for exclusive containers,
+/// evenly over all sockets for shared-pool containers.
+fn distribute_demand(
+    socket_demand: &mut [f64],
+    pod: &Pod,
+    spec: &crate::cluster::NodeSpec,
+    total_demand: f64,
+) {
+    match &pod.cpuset {
+        Some(cpuset) if !cpuset.is_empty() => {
+            let mut per_socket = vec![0usize; socket_demand.len()];
+            for cpu in cpuset.iter() {
+                per_socket[spec.socket_of(cpu) as usize] += 1;
+            }
+            let total_cpus = cpuset.len() as f64;
+            for (s, &count) in per_socket.iter().enumerate() {
+                socket_demand[s] += total_demand * count as f64 / total_cpus;
+            }
+        }
+        _ => {
+            let n = socket_demand.len() as f64;
+            for d in socket_demand.iter_mut() {
+                *d += total_demand / n;
+            }
+        }
+    }
+}
+
+/// Node CPU utilization from the *running tasks* perspective (drives the
+/// shared-pool migration penalty).
+fn node_task_utilization(api: &ApiServer, loads: &ClusterLoads, node: NodeId) -> f64 {
+    let tasks = loads.tasks_on_node.get(&node).copied().unwrap_or(0);
+    let cores = api.spec.node(node).allocatable_cores();
+    (tasks as f64 / cores as f64).min(2.0)
+}
+
+/// Compute slowdown of one worker pod (mechanisms 1–4).
+fn worker_slowdown(
+    api: &ApiServer,
+    pod: &Pod,
+    bench: Benchmark,
+    calib: &Calibration,
+    loads: &ClusterLoads,
+    noise: f64,
+) -> f64 {
+    let profile = bench.profile();
+    let node = pod.node.expect("running worker without node");
+    let spec = api.spec.node(node);
+
+    // 1+2: scheduling.
+    let f_sched = match &pod.cpuset {
+        None => {
+            let util = node_task_utilization(api, loads, node);
+            (1.0 + calib.none_migration_base + calib.none_migration_load * util) * noise
+        }
+        Some(_) => 1.0 + calib.cgroup_sched_log_coef * (pod.ntasks.max(1) as f64).ln(),
+    };
+
+    // 3: NUMA. Shared-pool containers float over the whole node; exclusive
+    // containers pay only if their cpuset spans sockets.
+    let f_numa = if pod.spans_numa {
+        1.0 + calib.numa_penalty(profile)
+    } else {
+        1.0
+    };
+
+    // 4: per-socket memory-bandwidth contention. A worker is gated by the
+    // most oversubscribed socket it draws bandwidth from.
+    let f_mem = {
+        let node_demand = loads.socket_demands.get(&node);
+        // Sustainable concurrent-stream bandwidth, not the spec peak.
+        let capacity = spec.membw_per_socket * calib.membw_threshold;
+        let mut worst: f64 = 1.0;
+        if let Some(d) = node_demand {
+            let sockets: Vec<usize> = match &pod.cpuset {
+                Some(cpuset) => {
+                    let mut v: Vec<usize> =
+                        cpuset.iter().map(|c| spec.socket_of(c) as usize).collect();
+                    v.sort_unstable();
+                    v.dedup();
+                    v
+                }
+                None => (0..d.len()).collect(),
+            };
+            for s in sockets {
+                let oversub = d[s] / capacity;
+                if oversub > 1.0 {
+                    worst = worst.max(1.0 + calib.mem_sensitivity(profile) * (oversub - 1.0));
+                }
+            }
+        }
+        worst
+    };
+
+    f_sched * f_numa * f_mem
+}
+
+/// Communication-phase multiplier (mechanism 5) from the worker placement:
+/// fraction of pairwise traffic that is intra-container (shared memory,
+/// 1.0), cross-container within a node (+shm penalty), or cross-node
+/// (Hockney floor + per-byte 1-GbE cost, scaled by NIC oversubscription
+/// when co-scheduled jobs share the wire — see perfmodel::network).
+fn comm_multiplier(
+    api: &ApiServer,
+    workers: &[&Pod],
+    bench: Benchmark,
+    calib: &Calibration,
+    loads: &ClusterLoads,
+) -> f64 {
+    let split = network::traffic_split(workers);
+    if split.cross_node <= 0.0 && split.cross_container_intra <= 0.0 {
+        return 1.0;
+    }
+
+    let nic_factor = network::nic_oversubscription(
+        api,
+        &loads.nic_demands,
+        workers.iter().filter_map(|p| p.node),
+    );
+    let eth_multiplier = calib.eth_latency_floor
+        + bench.comm_bytes_per_task() * calib.eth_penalty_per_byte * nic_factor;
+
+    split.same_container * 1.0
+        + split.cross_container_intra * (1.0 + calib.cross_container_shm)
+        + split.cross_node * eth_multiplier
+}
+
+/// Full slowdown decomposition of a running job (mechanisms 1–6).
+///
+/// `noise` is the job's shared-pool variance factor (drawn once per job by
+/// the simulator; 1.0 under exclusive cpusets).
+pub fn job_slowdown(
+    api: &ApiServer,
+    job_id: JobId,
+    calib: &Calibration,
+    noise: f64,
+) -> JobSlowdown {
+    job_slowdown_with(api, job_id, calib, noise, &ClusterLoads::snapshot(api))
+}
+
+/// [`job_slowdown`] against a pre-computed load snapshot — the simulator
+/// calls this once per running job per state change, amortizing the
+/// cluster-wide scans across the whole recomputation.
+pub fn job_slowdown_with(
+    api: &ApiServer,
+    job_id: JobId,
+    calib: &Calibration,
+    noise: f64,
+    loads: &ClusterLoads,
+) -> JobSlowdown {
+    let job = &api.jobs[&job_id];
+    let bench = job.planned.spec.benchmark;
+    let workers = api.worker_pods_of(job_id);
+
+    let per_worker: Vec<f64> = workers
+        .iter()
+        .map(|pod| worker_slowdown(api, pod, bench, calib, loads, noise))
+        .collect();
+    // 6: gang lockstep — slowest worker gates the compute phase.
+    let compute = per_worker.iter().copied().fold(1.0_f64, f64::max);
+    let comm = comm_multiplier(api, &workers, bench, calib, loads);
+
+    let cf = bench.mpi_profile().comm_fraction;
+    let total = (1.0 - cf) * compute + cf * comm;
+    JobSlowdown { per_worker, compute, comm, total }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apiserver::ApiServer;
+    use crate::cluster::{gib, ClusterSpec, NodeId, Pod, PodRole, Resources};
+    use crate::kubelet::KubeletConfig;
+    use crate::workload::{Benchmark, Granularity, JobSpec, PlannedJob};
+
+    /// Build an ApiServer with one running job whose workers are laid out
+    /// as (node, ntasks) tuples.
+    fn setup(
+        kubelet: KubeletConfig,
+        bench: Benchmark,
+        layout: &[(usize, u32)],
+    ) -> (ApiServer, JobId) {
+        let mut api = ApiServer::new(ClusterSpec::paper(), kubelet);
+        let spec = JobSpec::paper_job(1, bench, 0.0);
+        let job_id = spec.id;
+        let planned = PlannedJob {
+            spec,
+            granularity: Granularity {
+                n_nodes: layout.len() as u32,
+                n_workers: layout.len() as u32,
+                n_groups: 1,
+            },
+        };
+        let mut pods = Vec::new();
+        for (i, &(_, ntasks)) in layout.iter().enumerate() {
+            let id = api.fresh_pod_id();
+            let mut p = Pod::new(id, job_id, format!("w{i}"), PodRole::Worker { index: i as u32 });
+            p.ntasks = ntasks;
+            p.requests = Resources::new(ntasks as u64 * 1000, ntasks as u64 * gib(2));
+            p.limits = p.requests;
+            pods.push(p);
+        }
+        let ids: Vec<_> = pods.iter().map(|p| p.id).collect();
+        api.create_job(planned, pods, vec![], 0.0);
+        for (pid, &(node, _)) in ids.iter().zip(layout.iter()) {
+            assert!(api.bind_pod(*pid, NodeId(node), 0.0));
+        }
+        api.start_job(job_id, 0.0);
+        (api, job_id)
+    }
+
+    #[test]
+    fn pinned_single_process_containers_have_unit_compute_slowdown() {
+        // CM_G-style: 16 × 1-task workers, 4 per node.
+        let layout: Vec<(usize, u32)> = (0..16).map(|i| (1 + i % 4, 1)).collect();
+        let (api, job) = setup(KubeletConfig::cpu_mem_affinity(), Benchmark::EpDgemm, &layout);
+        let s = job_slowdown(&api, job, &Calibration::default(), 1.0);
+        assert!((s.compute - 1.0).abs() < 1e-9, "compute={}", s.compute);
+    }
+
+    #[test]
+    fn shared_pool_is_slower_than_affinity() {
+        let layout = [(1usize, 16u32)];
+        let (api_none, j1) = setup(KubeletConfig::default_policy(), Benchmark::EpDgemm, &layout);
+        let (api_cm, j2) = setup(KubeletConfig::cpu_mem_affinity(), Benchmark::EpDgemm, &layout);
+        let c = Calibration::default();
+        let none = job_slowdown(&api_none, j1, &c, 1.0);
+        let cm = job_slowdown(&api_cm, j2, &c, 1.0);
+        assert!(none.total > cm.total, "NONE {} !> CM {}", none.total, cm.total);
+        assert!(cm.total > 1.0, "multi-process cgroup still pays a little");
+    }
+
+    #[test]
+    fn stream_oversubscribes_one_socket_under_cm() {
+        // 16 STREAM tasks pinned to one socket: demand 96 GB/s > 76.8 GB/s.
+        let (api, job) = setup(KubeletConfig::cpu_mem_affinity(), Benchmark::EpStream, &[(1, 16)]);
+        let c = Calibration::default();
+        let s = job_slowdown(&api, job, &c, 1.0);
+        assert!(s.compute > 1.2, "membw contention expected, got {}", s.compute);
+    }
+
+    #[test]
+    fn stream_split_across_nodes_avoids_contention() {
+        let layout: Vec<(usize, u32)> = (0..4).map(|i| (1 + i, 4)).collect();
+        let (api, job) = setup(KubeletConfig::cpu_mem_affinity(), Benchmark::EpStream, &layout);
+        let c = Calibration::default();
+        let s = job_slowdown(&api, job, &c, 1.0);
+        // 4 tasks/socket = 24 GB/s < capacity: no membw contention — only
+        // the 4-process cgroup penalty (1 + 0.054*ln 4 ~ 1.075) remains.
+        assert!(s.compute < 1.10, "compute={}", s.compute);
+        assert!(s.total < 1.2, "total={}", s.total);
+    }
+
+    #[test]
+    fn network_job_scattered_is_catastrophic() {
+        // Native-Volcano-style: 16 × 1-task containers over 4 nodes.
+        let layout: Vec<(usize, u32)> = (0..16).map(|i| (1 + i % 4, 1)).collect();
+        let (api, job) = setup(KubeletConfig::cpu_mem_affinity(), Benchmark::GRandomRing, &layout);
+        let s = job_slowdown(&api, job, &Calibration::default(), 1.0);
+        assert!(s.total > 20.0, "scattered ring should be tens of x, got {}", s.total);
+
+        // Same benchmark in a single container: no penalty.
+        let (api1, job1) = setup(KubeletConfig::cpu_mem_affinity(), Benchmark::GRandomRing, &[(1, 16)]);
+        let s1 = job_slowdown(&api1, job1, &Calibration::default(), 1.0);
+        assert!(s1.total < 1.2, "single-container ring {}", s1.total);
+    }
+
+    #[test]
+    fn cpu_job_tolerates_scatter() {
+        let layout: Vec<(usize, u32)> = (0..16).map(|i| (1 + i % 4, 1)).collect();
+        let (api, job) = setup(KubeletConfig::cpu_mem_affinity(), Benchmark::EpDgemm, &layout);
+        let s = job_slowdown(&api, job, &Calibration::default(), 1.0);
+        assert!(s.total < 1.6, "DGEMM scatter should be mild, got {}", s.total);
+    }
+
+    #[test]
+    fn imbalanced_layout_gated_by_slowest_worker() {
+        // 12 tasks on node1 + 4 on node2 (imbalance) vs 8+8 (balanced), with
+        // a co-located STREAM job loading node1's sockets.
+        let c = Calibration::default();
+        let (mut api, job) = setup(
+            KubeletConfig::cpu_mem_affinity(),
+            Benchmark::EpStream,
+            &[(1, 12), (2, 4)],
+        );
+        // Co-locate a second STREAM job on node 1 to create contention.
+        let spec2 = JobSpec::paper_job(2, Benchmark::EpStream, 0.0);
+        let j2 = spec2.id;
+        let planned2 = PlannedJob {
+            spec: spec2,
+            granularity: Granularity { n_nodes: 1, n_workers: 1, n_groups: 1 },
+        };
+        let pid = api.fresh_pod_id();
+        let mut p = Pod::new(pid, j2, "j2-w0".into(), PodRole::Worker { index: 0 });
+        p.ntasks = 16;
+        p.requests = Resources::new(16_000, 16 * gib(2));
+        p.limits = p.requests;
+        api.create_job(planned2, vec![p], vec![], 0.0);
+        assert!(api.bind_pod(pid, NodeId(1), 0.0));
+        api.start_job(j2, 0.0);
+
+        // The kubelet packed job1's 12-core worker on socket 0 (72 GB/s
+        // demand, under capacity) and job2's 16-core worker on socket 1
+        // (96 GB/s, oversubscribed): job2 pays, job1 does not — NUMA
+        // isolation works as on the real testbed.
+        let s2 = job_slowdown(&api, j2, &c, 1.0);
+        assert!(
+            s2.compute > 1.2,
+            "16 STREAM tasks on one socket must hit membw contention: {s2:?}"
+        );
+        // Gang lockstep: each job's compute factor is its slowest worker.
+        let s = job_slowdown(&api, job, &c, 1.0);
+        let max = s.per_worker.iter().copied().fold(0.0_f64, f64::max);
+        assert_eq!(s.compute, max);
+        assert!(s.per_worker[0] > s.per_worker[1], "12-task cgroup > 4-task cgroup");
+    }
+
+    #[test]
+    fn noise_only_applies_to_shared_pool() {
+        let layout = [(1usize, 16u32)];
+        let c = Calibration::default();
+        let (api_cm, j) = setup(KubeletConfig::cpu_mem_affinity(), Benchmark::EpDgemm, &layout);
+        let a = job_slowdown(&api_cm, j, &c, 1.0).total;
+        let b = job_slowdown(&api_cm, j, &c, 1.3).total;
+        assert!((a - b).abs() < 1e-12, "noise must not affect pinned jobs");
+
+        let (api_none, j2) = setup(KubeletConfig::default_policy(), Benchmark::EpDgemm, &layout);
+        let a = job_slowdown(&api_none, j2, &c, 1.0).total;
+        let b = job_slowdown(&api_none, j2, &c, 1.3).total;
+        assert!(b > a, "noise must slow shared-pool jobs");
+    }
+
+    #[test]
+    fn more_colocation_never_speeds_up() {
+        // Monotonicity: adding a co-located job never *increases* another
+        // job's rate.
+        let c = Calibration::default();
+        let (mut api, job) = setup(KubeletConfig::cpu_mem_affinity(), Benchmark::MiniFe, &[(1, 16)]);
+        let before = job_slowdown(&api, job, &c, 1.0).total;
+        let spec2 = JobSpec::paper_job(2, Benchmark::EpStream, 0.0);
+        let j2 = spec2.id;
+        let planned2 = PlannedJob {
+            spec: spec2,
+            granularity: Granularity { n_nodes: 1, n_workers: 1, n_groups: 1 },
+        };
+        let pid = api.fresh_pod_id();
+        let mut p = Pod::new(pid, j2, "j2-w0".into(), PodRole::Worker { index: 0 });
+        p.ntasks = 16;
+        p.requests = Resources::new(16_000, 16 * gib(2));
+        p.limits = p.requests;
+        api.create_job(planned2, vec![p], vec![], 0.0);
+        assert!(api.bind_pod(pid, NodeId(1), 0.0));
+        api.start_job(j2, 0.0);
+        let after = job_slowdown(&api, job, &c, 1.0).total;
+        assert!(after >= before, "before={before} after={after}");
+    }
+}

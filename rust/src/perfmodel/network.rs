@@ -1,0 +1,160 @@
+//! Network model: pairwise traffic decomposition + 1-GbE NIC contention.
+//!
+//! The paper's testbed interconnect is 1-Gigabit Ethernet; when several
+//! scattered jobs communicate across nodes simultaneously (the native-
+//! Volcano scenario in §V-E) they share each node's NIC, which is exactly
+//! what turns "slow" into "catastrophic" (Table III). This module
+//! decomposes each job's traffic by locality (same container / same node /
+//! cross node, under a uniform pairwise pattern) and derives per-node NIC
+//! demand so co-scheduled network-intensive jobs degrade each other.
+
+use std::collections::BTreeMap;
+
+use crate::apiserver::{ApiServer, JobPhase};
+use crate::cluster::{NodeId, Pod};
+
+/// Locality split of a job's pairwise communication.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TrafficSplit {
+    /// Fraction of pairs inside one container (shared memory).
+    pub same_container: f64,
+    /// Fraction crossing containers within one node.
+    pub cross_container_intra: f64,
+    /// Fraction crossing nodes (on the wire).
+    pub cross_node: f64,
+}
+
+impl TrafficSplit {
+    pub fn single_container() -> TrafficSplit {
+        TrafficSplit { same_container: 1.0, cross_container_intra: 0.0, cross_node: 0.0 }
+    }
+}
+
+/// Decompose a worker placement into the traffic split under a uniform
+/// (all-to-all-ish) pairwise pattern: P(same container) = Σ share_i²,
+/// P(same node) = Σ_node (Σ_{i∈node} share_i)².
+pub fn traffic_split(workers: &[&Pod]) -> TrafficSplit {
+    let ntasks_total: u32 = workers.iter().map(|p| p.ntasks).sum();
+    if ntasks_total == 0 || workers.len() <= 1 {
+        return TrafficSplit::single_container();
+    }
+    let n = ntasks_total as f64;
+    let mut same_container = 0.0;
+    let mut tasks_per_node: BTreeMap<NodeId, f64> = BTreeMap::new();
+    for pod in workers {
+        let share = pod.ntasks as f64 / n;
+        same_container += share * share;
+        *tasks_per_node.entry(pod.node.expect("unbound worker")).or_insert(0.0) += share;
+    }
+    let same_node: f64 = tasks_per_node.values().map(|s| s * s).sum();
+    TrafficSplit {
+        same_container,
+        cross_container_intra: (same_node - same_container).max(0.0),
+        cross_node: 1.0 - same_node,
+    }
+}
+
+/// Per-node NIC demand (bytes/s) from every *running* job's cross-node
+/// traffic: each node's share of a job's wire traffic is proportional to
+/// the tasks it hosts, weighted by the job's communication fraction (a job
+/// that spends 65% of its time communicating loads the NIC 65% of the
+/// time).
+pub fn nic_demands(api: &ApiServer) -> BTreeMap<NodeId, f64> {
+    let mut demand: BTreeMap<NodeId, f64> = BTreeMap::new();
+    for (&job_id, job) in &api.jobs {
+        if job.phase != JobPhase::Running {
+            continue;
+        }
+        let bench = job.planned.spec.benchmark;
+        let workers = api.worker_pods_of(job_id);
+        let split = traffic_split(&workers);
+        if split.cross_node <= 0.0 {
+            continue;
+        }
+        let cf = bench.mpi_profile().comm_fraction;
+        for pod in &workers {
+            let node = pod.node.expect("unbound worker");
+            // Each task sends comm_bytes_per_task during comm phases; the
+            // cross-node share of it hits this node's NIC, duty-cycled by
+            // the communication fraction.
+            let bytes = pod.ntasks as f64 * bench.comm_bytes_per_task();
+            *demand.entry(node).or_insert(0.0) += bytes * split.cross_node * cf;
+        }
+    }
+    demand
+}
+
+/// NIC oversubscription factor for a set of nodes: how much slower wire
+/// transfers go because co-resident jobs share the NIC. 1.0 when total
+/// demand fits the NIC.
+pub fn nic_oversubscription(
+    api: &ApiServer,
+    demands: &BTreeMap<NodeId, f64>,
+    nodes: impl Iterator<Item = NodeId>,
+) -> f64 {
+    let mut worst = 1.0_f64;
+    for node in nodes {
+        let nic = api.spec.node(node).nic_bw;
+        if let Some(&d) = demands.get(&node) {
+            worst = worst.max(d / nic);
+        }
+    }
+    worst.max(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{JobId, PodId, PodRole};
+
+    fn worker(id: u64, node: usize, ntasks: u32) -> Pod {
+        let mut p = Pod::new(
+            PodId(id),
+            JobId(1),
+            format!("w{id}"),
+            PodRole::Worker { index: id as u32 },
+        );
+        p.ntasks = ntasks;
+        p.node = Some(NodeId(node));
+        p
+    }
+
+    #[test]
+    fn single_container_is_all_shared_memory() {
+        let w = worker(1, 1, 16);
+        let split = traffic_split(&[&w]);
+        assert_eq!(split, TrafficSplit::single_container());
+    }
+
+    #[test]
+    fn split_fractions_sum_to_one() {
+        let pods: Vec<Pod> = (0..16).map(|i| worker(i, 1 + (i % 4) as usize, 1)).collect();
+        let refs: Vec<&Pod> = pods.iter().collect();
+        let s = traffic_split(&refs);
+        let sum = s.same_container + s.cross_container_intra + s.cross_node;
+        assert!((sum - 1.0).abs() < 1e-12);
+        // 16 × 1-task containers over 4 nodes: P(same node) = 4(4/16)² = ¼.
+        assert!((s.cross_node - 0.75).abs() < 1e-12);
+        assert!((s.same_container - 1.0 / 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn two_containers_same_node_have_no_wire_traffic() {
+        let a = worker(1, 2, 8);
+        let b = worker(2, 2, 8);
+        let s = traffic_split(&[&a, &b]);
+        assert_eq!(s.cross_node, 0.0);
+        assert!((s.same_container - 0.5).abs() < 1e-12);
+        assert!((s.cross_container_intra - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn uneven_placement_has_less_cross_traffic_than_even() {
+        // 12+4 split keeps more pairs local than 8+8.
+        let a = [worker(1, 1, 12), worker(2, 2, 4)];
+        let b = [worker(3, 1, 8), worker(4, 2, 8)];
+        let sa = traffic_split(&[&a[0], &a[1]]);
+        let sb = traffic_split(&[&b[0], &b[1]]);
+        assert!(sa.cross_node < sb.cross_node);
+    }
+}

@@ -1,0 +1,155 @@
+//! Application-layer granularity selection — the Scanflow(MPI) planner
+//! agent (paper Algorithm 1).
+//!
+//! The agent follows Scanflow's sensor/rule/actuator structure: the sensor
+//! reads the job spec and system information (node counts, from the metrics
+//! registry standing in for Prometheus), the rule computes the granularity
+//! `(N_n, N_w, N_g)` from the admin-set policy and the application profile,
+//! and the actuator submits the updated job to the API server (done by the
+//! scenario driver, which couples the planner to the controller).
+
+use crate::workload::{Granularity, JobSpec, PlannedJob};
+
+/// Admin-set granularity policy (paper §IV-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GranularityPolicy {
+    /// No policy: keep the user's default worker count on a single node.
+    None,
+    /// "scale": one worker per node (`N_w = N_n`).
+    Scale,
+    /// "granularity": one worker per task (`N_w = N_t`).
+    Granularity,
+}
+
+/// System information the agent senses (the Prometheus query surface).
+#[derive(Debug, Clone, Copy)]
+pub struct SystemInfo {
+    /// Worker nodes available for MPI workloads.
+    pub available_nodes: u32,
+}
+
+/// Algorithm 1: Granularity Selection (Planner agent).
+///
+/// Line-by-line transcription of the paper's pseudocode:
+/// - network profile  => `N_n = 1, N_w = 1, N_g = 1` (both policies);
+/// - CPU/memory profile, "scale"       => `N_n = min(N_n, N_t), N_w = N_n, N_g = N_n`;
+/// - CPU/memory profile, "granularity" => `N_n = min(N_n, N_t), N_w = N_t, N_g = N_n`;
+/// - no policy => `N_n = 1`, keep the user's `N_w`, `N_g = N_n`.
+pub fn plan(job: &JobSpec, policy: GranularityPolicy, info: SystemInfo) -> PlannedJob {
+    // % Agent Sensor: get job specs and system information.
+    let n_t = job.ntasks;
+    let n_w_user = job.default_workers;
+    let n_n_max = info.available_nodes.max(1);
+    let profile = job.benchmark.profile();
+
+    // % Agent Rule: set granularity according to job profile.
+    let granularity = match policy {
+        GranularityPolicy::Scale => {
+            if profile.is_network() {
+                Granularity { n_nodes: 1, n_workers: 1, n_groups: 1 }
+            } else {
+                let n_n = n_n_max.min(n_t);
+                Granularity { n_nodes: n_n, n_workers: n_n, n_groups: n_n }
+            }
+        }
+        GranularityPolicy::Granularity => {
+            if profile.is_network() {
+                Granularity { n_nodes: 1, n_workers: 1, n_groups: 1 }
+            } else {
+                let n_n = n_n_max.min(n_t);
+                Granularity { n_nodes: n_n, n_workers: n_t, n_groups: n_n }
+            }
+        }
+        GranularityPolicy::None => Granularity {
+            n_nodes: 1,
+            n_workers: n_w_user.max(1),
+            n_groups: 1,
+        },
+    };
+
+    // % Agent Actuator: update and submit the job (caller submits).
+    PlannedJob { spec: job.clone(), granularity }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Benchmark;
+
+    const INFO: SystemInfo = SystemInfo { available_nodes: 4 };
+
+    fn job(bench: Benchmark) -> JobSpec {
+        JobSpec::paper_job(1, bench, 0.0)
+    }
+
+    #[test]
+    fn scale_policy_cpu_job_one_worker_per_node() {
+        let p = plan(&job(Benchmark::EpDgemm), GranularityPolicy::Scale, INFO);
+        assert_eq!(
+            p.granularity,
+            Granularity { n_nodes: 4, n_workers: 4, n_groups: 4 }
+        );
+    }
+
+    #[test]
+    fn granularity_policy_cpu_job_one_worker_per_task() {
+        let p = plan(&job(Benchmark::EpDgemm), GranularityPolicy::Granularity, INFO);
+        assert_eq!(
+            p.granularity,
+            Granularity { n_nodes: 4, n_workers: 16, n_groups: 4 }
+        );
+    }
+
+    #[test]
+    fn network_jobs_stay_in_single_container_under_both_policies() {
+        for bench in [Benchmark::GFft, Benchmark::GRandomRing] {
+            for pol in [GranularityPolicy::Scale, GranularityPolicy::Granularity] {
+                let p = plan(&job(bench), pol, INFO);
+                assert_eq!(
+                    p.granularity,
+                    Granularity { n_nodes: 1, n_workers: 1, n_groups: 1 },
+                    "{bench} under {pol:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn memory_and_cpumem_profiles_are_split() {
+        for bench in [Benchmark::EpStream, Benchmark::MiniFe] {
+            let p = plan(&job(bench), GranularityPolicy::Scale, INFO);
+            assert_eq!(p.granularity.n_workers, 4, "{bench}");
+        }
+    }
+
+    #[test]
+    fn no_policy_keeps_user_default() {
+        let mut j = job(Benchmark::EpStream);
+        j.default_workers = 2;
+        let p = plan(&j, GranularityPolicy::None, INFO);
+        assert_eq!(
+            p.granularity,
+            Granularity { n_nodes: 1, n_workers: 2, n_groups: 1 }
+        );
+    }
+
+    #[test]
+    fn nodes_clamped_by_task_count() {
+        // 2-task job on a 4-node cluster: N_n = min(N_n, N_t) = 2.
+        let mut j = job(Benchmark::EpDgemm);
+        j.ntasks = 2;
+        let p = plan(&j, GranularityPolicy::Scale, INFO);
+        assert_eq!(p.granularity.n_nodes, 2);
+        assert_eq!(p.granularity.n_workers, 2);
+    }
+
+    #[test]
+    fn zero_available_nodes_clamped_to_one() {
+        let p = plan(
+            &job(Benchmark::EpDgemm),
+            GranularityPolicy::Scale,
+            SystemInfo { available_nodes: 0 },
+        );
+        assert_eq!(p.granularity.n_nodes, 1);
+    }
+}

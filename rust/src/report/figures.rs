@@ -1,0 +1,212 @@
+//! Figure writer: renders every paper figure as a standalone SVG file
+//! (`kube-fgs figures --out <dir>`), using the same experiment drivers as
+//! the text tables so the two surfaces can never disagree.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::experiments;
+use crate::metrics::ExperimentMetrics;
+use crate::simulator::JobRecord;
+use crate::workload::{exp2_trace, Benchmark, ALL_BENCHMARKS};
+
+use super::svg::{bar_chart, gantt_chart, GanttRow, Series};
+
+fn write(dir: &Path, name: &str, content: &str) -> Result<()> {
+    let path = dir.join(name);
+    std::fs::write(&path, content).with_context(|| format!("writing {}", path.display()))?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+/// Render Figs. 4–9 (and the Fig. 7 Gantt panels) into `dir`.
+pub fn write_all(dir: &Path, seed: u64) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+
+    // --- Experiment 1: Figs. 4 and 5 ---
+    let exp1 = experiments::exp1_all_scenarios(seed);
+    let cats1: Vec<&str> = exp1.iter().map(|(s, _)| s.name()).collect();
+    write(
+        dir,
+        "fig4_dgemm_runtime.svg",
+        &bar_chart(
+            "Fig. 4 — Average job running time of 10 EP-DGEMM jobs",
+            &cats1,
+            &[Series {
+                name: "EP-DGEMM".into(),
+                values: exp1.iter().map(|(_, m)| m.avg_running[&Benchmark::EpDgemm]).collect(),
+            }],
+            "seconds",
+        ),
+    )?;
+    write(
+        dir,
+        "fig5_dgemm_response.svg",
+        &bar_chart(
+            "Fig. 5 — Overall response time of scheduling 10 EP-DGEMM jobs",
+            &cats1,
+            &[Series {
+                name: "overall response".into(),
+                values: exp1.iter().map(|(_, m)| m.overall_response).collect(),
+            }],
+            "seconds",
+        ),
+    )?;
+
+    // --- Experiment 2: Figs. 6 and 7 ---
+    let exp2 = experiments::exp2_all_scenarios(seed);
+    let cats2: Vec<&str> = exp2.iter().map(|(s, _)| s.name()).collect();
+    let series6: Vec<Series> = ALL_BENCHMARKS
+        .iter()
+        .map(|&b| Series {
+            name: b.name().into(),
+            values: exp2.iter().map(|(_, m)| m.avg_running[&b]).collect(),
+        })
+        .collect();
+    write(
+        dir,
+        "fig6_mixed_running.svg",
+        &bar_chart(
+            "Fig. 6 — Average job running time per benchmark (20 mixed jobs)",
+            &cats2,
+            &series6,
+            "seconds",
+        ),
+    )?;
+    write(
+        dir,
+        "fig6_overall_response.svg",
+        &bar_chart(
+            "Fig. 6 — Overall response time (20 mixed jobs)",
+            &cats2,
+            &[Series {
+                name: "overall response".into(),
+                values: exp2.iter().map(|(_, m)| m.overall_response).collect(),
+            }],
+            "seconds",
+        ),
+    )?;
+    write(
+        dir,
+        "fig7_makespan.svg",
+        &bar_chart(
+            "Fig. 7 — Makespan (20 mixed jobs)",
+            &cats2,
+            &[Series {
+                name: "makespan".into(),
+                values: exp2.iter().map(|(_, m)| m.makespan).collect(),
+            }],
+            "seconds",
+        ),
+    )?;
+    for (scenario, _) in &exp2 {
+        let out = experiments::run_scenario(*scenario, &exp2_trace(seed), seed, None);
+        let m = ExperimentMetrics::from(&out);
+        let rows: Vec<GanttRow> = m
+            .per_job
+            .iter()
+            .map(|r| GanttRow {
+                label: format!("{}-{}", r.benchmark.name(), r.id.0),
+                submit: r.submit_time,
+                start: r.start_time,
+                finish: r.finish_time,
+            })
+            .collect();
+        write(
+            dir,
+            &format!("fig7_gantt_{}.svg", scenario.name().to_lowercase()),
+            &gantt_chart(
+                &format!("Fig. 7 — scheduling process, {scenario}"),
+                &rows,
+            ),
+        )?;
+    }
+
+    // --- Experiment 3: Figs. 8 and 9 ---
+    let exp3 = experiments::exp3_all_scenarios(seed);
+    let job_labels: Vec<String> = exp3[0]
+        .1
+        .per_job
+        .iter()
+        .map(|r| format!("{}-{}", r.benchmark.name(), r.id.0))
+        .collect();
+    let cats3: Vec<&str> = job_labels.iter().map(String::as_str).collect();
+    let per_job_series = |metric: fn(&JobRecord) -> f64| -> Vec<Series> {
+        exp3.iter()
+            .map(|(s, m)| Series {
+                name: s.name().into(),
+                values: m.per_job.iter().map(metric).collect(),
+            })
+            .collect()
+    };
+    write(
+        dir,
+        "fig8_framework_runtime.svg",
+        &bar_chart(
+            "Fig. 8 — Job running time with different frameworks",
+            &cats3,
+            &per_job_series(JobRecord::running),
+            "seconds",
+        ),
+    )?;
+    write(
+        dir,
+        "fig9_framework_response.svg",
+        &bar_chart(
+            "Fig. 9 — Job response time with different frameworks",
+            &cats3,
+            &per_job_series(JobRecord::response),
+            "seconds",
+        ),
+    )?;
+
+    // Table III as CSV alongside the figures.
+    let rows: Vec<Vec<String>> = exp3
+        .iter()
+        .map(|(s, m)| vec![s.name().to_string(), format!("{:.0}", m.makespan)])
+        .collect();
+    write(dir, "table3_makespan.csv", &super::csv(&["scenario", "makespan_s"], &rows))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::Scenario;
+
+    #[test]
+    fn writes_every_figure_file() {
+        let dir = std::env::temp_dir().join(format!("kube_fgs_figs_{}", std::process::id()));
+        write_all(&dir, 2).unwrap();
+        let expected = [
+            "fig4_dgemm_runtime.svg",
+            "fig5_dgemm_response.svg",
+            "fig6_mixed_running.svg",
+            "fig6_overall_response.svg",
+            "fig7_makespan.svg",
+            "fig7_gantt_cm_g_tg.svg",
+            "fig8_framework_runtime.svg",
+            "fig9_framework_response.svg",
+            "table3_makespan.csv",
+        ];
+        for f in expected {
+            let p = dir.join(f);
+            assert!(p.exists(), "{f} missing");
+            let content = std::fs::read_to_string(&p).unwrap();
+            assert!(!content.is_empty());
+            if f.ends_with(".svg") {
+                assert!(content.starts_with("<svg"), "{f}");
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn scenario_parse_used_by_gantt_names() {
+        // Gantt filenames must round-trip through Scenario::parse.
+        for s in crate::scenario::TABLE2_SCENARIOS {
+            assert!(Scenario::parse(s.name()).is_some());
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! Reporting: text tables, CSV export, and the ASCII Gantt chart behind
+//! the Fig.-7 "scheduling process" panels.
+
+pub mod figures;
+pub mod svg;
+
+use std::collections::BTreeMap;
+
+use crate::apiserver::Event;
+use crate::metrics::ExperimentMetrics;
+use crate::simulator::SimOutput;
+use crate::workload::ALL_BENCHMARKS;
+
+/// Render a text table: header + rows, column-aligned.
+pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncols = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncols) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        let mut line = String::from("|");
+        for (cell, w) in cells.iter().zip(widths) {
+            line.push_str(&format!(" {cell:<w$} |"));
+        }
+        line.push('\n');
+        line
+    };
+    out.push_str(&fmt_row(
+        &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+        &widths,
+    ));
+    out.push('|');
+    for w in &widths {
+        out.push_str(&format!("{}|", "-".repeat(w + 2)));
+    }
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+    }
+    out
+}
+
+/// CSV rendering (RFC-4180-ish; quotes cells containing separators).
+pub fn csv(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let esc = |s: &str| -> String {
+        if s.contains(',') || s.contains('"') || s.contains('\n') {
+            format!("\"{}\"", s.replace('"', "\"\""))
+        } else {
+            s.to_string()
+        }
+    };
+    let mut out = headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",");
+    out.push('\n');
+    for row in rows {
+        out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+    }
+    out
+}
+
+/// Format seconds as the paper's Table-III "D days, HH:MM:SS (S s)" form.
+pub fn fmt_makespan(secs: f64) -> String {
+    let s = secs.round() as u64;
+    let days = s / 86_400;
+    let h = (s % 86_400) / 3_600;
+    let m = (s % 3_600) / 60;
+    let sec = s % 60;
+    format!("{days} days, {h:02}:{m:02}:{sec:02} ({s} s)")
+}
+
+/// Summary block for one scenario run (Fig.-6-style aggregate).
+pub fn scenario_summary(name: &str, m: &ExperimentMetrics) -> String {
+    let mut rows = Vec::new();
+    for b in ALL_BENCHMARKS {
+        if let Some(avg) = m.avg_running.get(&b) {
+            rows.push(vec![b.name().to_string(), format!("{avg:.1}")]);
+        }
+    }
+    rows.push(vec!["overall response (T)".into(), format!("{:.1}", m.overall_response)]);
+    rows.push(vec!["makespan".into(), format!("{:.1}", m.makespan)]);
+    rows.push(vec!["avg wait".into(), format!("{:.1}", m.avg_wait)]);
+    format!("== {name} ==\n{}", table(&["metric", "seconds"], &rows))
+}
+
+/// ASCII Gantt of the scheduling process (Fig. 7): one row per job,
+/// bracketed wait (`.`) and run (`#`) spans over a compressed time axis.
+pub fn gantt(out: &SimOutput, width: usize) -> String {
+    let m = ExperimentMetrics::from(out);
+    let t_end = m
+        .per_job
+        .iter()
+        .map(|r| r.finish_time)
+        .fold(1.0_f64, f64::max);
+    let scale = width as f64 / t_end;
+    let mut s = String::new();
+    s.push_str(&format!(
+        "time 0 .. {:.0}s  ('.' waiting, '#' running)\n",
+        t_end
+    ));
+    for r in &m.per_job {
+        let submit = (r.submit_time * scale).round() as usize;
+        let start = (r.start_time * scale).round() as usize;
+        let finish = ((r.finish_time * scale).round() as usize).max(start + 1);
+        let mut line = vec![b' '; width.max(finish)];
+        for c in line.iter_mut().take(start).skip(submit) {
+            *c = b'.';
+        }
+        for c in line.iter_mut().take(finish).skip(start) {
+            *c = b'#';
+        }
+        s.push_str(&format!(
+            "{:>12} |{}\n",
+            format!("{}-{}", r.benchmark.name(), r.id.0),
+            String::from_utf8(line).unwrap()
+        ));
+    }
+    s
+}
+
+/// Per-node pod-placement timeline extracted from the event log (the lower
+/// panels of Fig. 7).
+pub fn node_timeline(out: &SimOutput) -> String {
+    let mut per_node: BTreeMap<usize, Vec<String>> = BTreeMap::new();
+    for e in &out.api.events {
+        if let Event::PodBound { t, pod, node } = e {
+            let p = &out.api.pods[pod];
+            per_node
+                .entry(node.0)
+                .or_default()
+                .push(format!("t={t:.0}s {} ({} tasks)", p.name, p.ntasks));
+        }
+    }
+    let mut s = String::new();
+    for (node, pods) in per_node {
+        s.push_str(&format!(
+            "{}:\n",
+            out.api.spec.nodes[node].name
+        ));
+        for line in pods {
+            s.push_str(&format!("  {line}\n"));
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_aligns_columns() {
+        let t = table(
+            &["a", "long-header"],
+            &[
+                vec!["x".into(), "1".into()],
+                vec!["yyyy".into(), "22".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+    }
+
+    #[test]
+    fn csv_escapes_commas_and_quotes() {
+        let c = csv(&["a", "b"], &[vec!["x,y".into(), "q\"q".into()]]);
+        assert!(c.contains("\"x,y\""));
+        assert!(c.contains("\"q\"\"q\""));
+    }
+
+    #[test]
+    fn makespan_format_matches_table3() {
+        assert_eq!(fmt_makespan(2520.0), "0 days, 00:42:00 (2520 s)");
+        assert_eq!(fmt_makespan(123_055.0), "1 days, 10:10:55 (123055 s)");
+    }
+
+    #[test]
+    fn gantt_renders_wait_and_run() {
+        use crate::apiserver::ApiServer;
+        use crate::cluster::{ClusterSpec, JobId};
+        use crate::kubelet::KubeletConfig;
+        use crate::simulator::JobRecord;
+        use crate::workload::Benchmark;
+        let out = SimOutput {
+            records: vec![JobRecord {
+                id: JobId(1),
+                benchmark: Benchmark::EpDgemm,
+                submit_time: 0.0,
+                start_time: 50.0,
+                finish_time: 100.0,
+            }],
+            api: ApiServer::new(ClusterSpec::paper(), KubeletConfig::default_policy()),
+        };
+        let g = gantt(&out, 40);
+        assert!(g.contains('.'), "wait span rendered: {g}");
+        assert!(g.contains('#'), "run span rendered: {g}");
+        assert!(g.contains("EP-DGEMM-1"));
+    }
+}

@@ -1,0 +1,308 @@
+//! SVG figure rendering — publication-style versions of the paper's
+//! figures (grouped bar charts for Figs. 4–6/8–9, Gantt panels for
+//! Fig. 7), written without external dependencies.
+//!
+//! `kube-fgs exp2 --svg out/` drops one .svg per figure.
+
+use std::fmt::Write as _;
+
+/// A single data series (one scenario) in a grouped bar chart.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub values: Vec<f64>,
+}
+
+const PALETTE: [&str; 8] = [
+    "#4c72b0", "#dd8452", "#55a868", "#c44e52", "#8172b3", "#937860", "#da8bc3", "#8c8c8c",
+];
+
+fn esc(s: &str) -> String {
+    s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}
+
+/// Nice round step for an axis covering [0, max].
+fn axis_step(max: f64) -> f64 {
+    if max <= 0.0 {
+        return 1.0;
+    }
+    let raw = max / 5.0;
+    let mag = 10f64.powf(raw.log10().floor());
+    let norm = raw / mag;
+    let step = if norm < 1.5 {
+        1.0
+    } else if norm < 3.5 {
+        2.0
+    } else if norm < 7.5 {
+        5.0
+    } else {
+        10.0
+    };
+    step * mag
+}
+
+/// Grouped bar chart: `categories` on the x-axis, one bar per series in
+/// each category. Returns a complete standalone SVG document.
+pub fn bar_chart(
+    title: &str,
+    categories: &[&str],
+    series: &[Series],
+    y_label: &str,
+) -> String {
+    assert!(!categories.is_empty() && !series.is_empty());
+    for s in series {
+        assert_eq!(s.values.len(), categories.len(), "series {} length", s.name);
+    }
+    let (w, h) = (900.0, 420.0);
+    let (ml, mr, mt, mb) = (70.0, 20.0, 46.0, 88.0);
+    let plot_w = w - ml - mr;
+    let plot_h = h - mt - mb;
+    let max = series
+        .iter()
+        .flat_map(|s| s.values.iter().copied())
+        .fold(0.0_f64, f64::max)
+        .max(1e-9)
+        * 1.08;
+
+    let mut svg = String::new();
+    let _ = write!(
+        svg,
+        r#"<svg xmlns="http://www.w3.org/2000/svg" width="{w}" height="{h}" viewBox="0 0 {w} {h}" font-family="Helvetica,Arial,sans-serif">"#
+    );
+    let _ = write!(svg, r#"<rect width="{w}" height="{h}" fill="white"/>"#);
+    let _ = write!(
+        svg,
+        r#"<text x="{}" y="24" font-size="16" text-anchor="middle" font-weight="bold">{}</text>"#,
+        w / 2.0,
+        esc(title)
+    );
+
+    // y axis + gridlines.
+    let step = axis_step(max);
+    let mut y = 0.0;
+    while y <= max {
+        let py = mt + plot_h * (1.0 - y / max);
+        let _ = write!(
+            svg,
+            r##"<line x1="{ml}" y1="{py}" x2="{}" y2="{py}" stroke="#dddddd" stroke-width="1"/>"##,
+            ml + plot_w
+        );
+        let _ = write!(
+            svg,
+            r#"<text x="{}" y="{}" font-size="11" text-anchor="end">{}</text>"#,
+            ml - 6.0,
+            py + 4.0,
+            if step >= 1.0 { format!("{y:.0}") } else { format!("{y:.2}") }
+        );
+        y += step;
+    }
+    let _ = write!(
+        svg,
+        r#"<text x="16" y="{}" font-size="12" text-anchor="middle" transform="rotate(-90 16 {})">{}</text>"#,
+        mt + plot_h / 2.0,
+        mt + plot_h / 2.0,
+        esc(y_label)
+    );
+
+    // bars.
+    let ncat = categories.len() as f64;
+    let nser = series.len() as f64;
+    let group_w = plot_w / ncat;
+    let bar_w = (group_w * 0.8) / nser;
+    for (ci, _) in categories.iter().enumerate() {
+        for (si, s) in series.iter().enumerate() {
+            let v = s.values[ci];
+            let bh = plot_h * v / max;
+            let x = ml + group_w * ci as f64 + group_w * 0.1 + bar_w * si as f64;
+            let y = mt + plot_h - bh;
+            let color = PALETTE[si % PALETTE.len()];
+            let _ = write!(
+                svg,
+                r#"<rect x="{x:.1}" y="{y:.1}" width="{:.1}" height="{bh:.1}" fill="{color}"><title>{}: {v:.1}</title></rect>"#,
+                bar_w * 0.92,
+                esc(&s.name)
+            );
+        }
+    }
+
+    // x labels.
+    for (ci, cat) in categories.iter().enumerate() {
+        let x = ml + group_w * (ci as f64 + 0.5);
+        let _ = write!(
+            svg,
+            r#"<text x="{x:.1}" y="{}" font-size="11" text-anchor="end" transform="rotate(-30 {x:.1} {})">{}</text>"#,
+            mt + plot_h + 16.0,
+            mt + plot_h + 16.0,
+            esc(cat)
+        );
+    }
+
+    // legend.
+    let mut lx = ml;
+    let ly = h - 14.0;
+    for (si, s) in series.iter().enumerate() {
+        let color = PALETTE[si % PALETTE.len()];
+        let _ = write!(svg, r#"<rect x="{lx}" y="{}" width="11" height="11" fill="{color}"/>"#, ly - 10.0);
+        let _ = write!(
+            svg,
+            r#"<text x="{}" y="{ly}" font-size="11">{}</text>"#,
+            lx + 15.0,
+            esc(&s.name)
+        );
+        lx += 15.0 + 8.0 * s.name.len() as f64 + 18.0;
+    }
+    svg.push_str("</svg>");
+    svg
+}
+
+/// Gantt chart (Fig. 7 scheduling-process panel): one row per job with a
+/// waiting span and a running span.
+pub struct GanttRow {
+    pub label: String,
+    pub submit: f64,
+    pub start: f64,
+    pub finish: f64,
+}
+
+pub fn gantt_chart(title: &str, rows: &[GanttRow]) -> String {
+    assert!(!rows.is_empty());
+    let w = 960.0;
+    let row_h = 18.0;
+    let (ml, mr, mt, mb) = (150.0, 20.0, 46.0, 40.0);
+    let h = mt + mb + row_h * rows.len() as f64;
+    let t_end = rows.iter().map(|r| r.finish).fold(1.0_f64, f64::max);
+    let plot_w = w - ml - mr;
+    let px = |t: f64| ml + plot_w * t / t_end;
+
+    let mut svg = String::new();
+    let _ = write!(
+        svg,
+        r#"<svg xmlns="http://www.w3.org/2000/svg" width="{w}" height="{h}" viewBox="0 0 {w} {h}" font-family="Helvetica,Arial,sans-serif">"#
+    );
+    let _ = write!(svg, r#"<rect width="{w}" height="{h}" fill="white"/>"#);
+    let _ = write!(
+        svg,
+        r#"<text x="{}" y="24" font-size="15" text-anchor="middle" font-weight="bold">{}</text>"#,
+        w / 2.0,
+        esc(title)
+    );
+    // time gridlines.
+    let step = axis_step(t_end);
+    let mut t = 0.0;
+    while t <= t_end {
+        let x = px(t);
+        let _ = write!(
+            svg,
+            r##"<line x1="{x:.1}" y1="{mt}" x2="{x:.1}" y2="{}" stroke="#e5e5e5"/>"##,
+            h - mb
+        );
+        let _ = write!(
+            svg,
+            r#"<text x="{x:.1}" y="{}" font-size="10" text-anchor="middle">{t:.0}s</text>"#,
+            h - mb + 14.0
+        );
+        t += step;
+    }
+    for (i, r) in rows.iter().enumerate() {
+        let y = mt + row_h * i as f64;
+        let _ = write!(
+            svg,
+            r#"<text x="{}" y="{}" font-size="10" text-anchor="end">{}</text>"#,
+            ml - 6.0,
+            y + row_h * 0.7,
+            esc(&r.label)
+        );
+        // waiting span.
+        if r.start > r.submit {
+            let _ = write!(
+                svg,
+                r##"<rect x="{:.1}" y="{:.1}" width="{:.1}" height="{:.1}" fill="#cccccc"><title>wait {:.0}s</title></rect>"##,
+                px(r.submit),
+                y + 3.0,
+                (px(r.start) - px(r.submit)).max(0.5),
+                row_h - 6.0,
+                r.start - r.submit
+            );
+        }
+        // running span.
+        let _ = write!(
+            svg,
+            r##"<rect x="{:.1}" y="{:.1}" width="{:.1}" height="{:.1}" fill="#4c72b0"><title>run {:.0}s</title></rect>"##,
+            px(r.start),
+            y + 3.0,
+            (px(r.finish) - px(r.start)).max(0.5),
+            row_h - 6.0,
+            r.finish - r.start
+        );
+    }
+    svg.push_str("</svg>");
+    svg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bar_chart_is_valid_svg_with_all_elements() {
+        let svg = bar_chart(
+            "Fig. 4",
+            &["NONE", "CM"],
+            &[
+                Series { name: "EP-DGEMM".into(), values: vec![850.0, 690.0] },
+                Series { name: "EP-STREAM".into(), values: vec![1170.0, 980.0] },
+            ],
+            "seconds",
+        );
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.ends_with("</svg>"));
+        assert_eq!(svg.matches("<rect").count() >= 5, true, "bars + bg + legend");
+        assert!(svg.contains("EP-DGEMM") && svg.contains("NONE"));
+        assert!(svg.contains("Fig. 4"));
+    }
+
+    #[test]
+    fn bar_chart_escapes_markup() {
+        let svg = bar_chart(
+            "a<b & c>d",
+            &["x"],
+            &[Series { name: "s&s".into(), values: vec![1.0] }],
+            "y",
+        );
+        assert!(svg.contains("a&lt;b &amp; c&gt;d"));
+        assert!(!svg.contains("<b &"));
+    }
+
+    #[test]
+    fn gantt_renders_wait_and_run_spans() {
+        let svg = gantt_chart(
+            "Fig. 7",
+            &[
+                GanttRow { label: "j1".into(), submit: 0.0, start: 100.0, finish: 500.0 },
+                GanttRow { label: "j2".into(), submit: 50.0, start: 50.0, finish: 300.0 },
+            ],
+        );
+        assert!(svg.contains("wait 100s"));
+        assert!(svg.contains("run 400s"));
+        assert!(svg.contains("j2"));
+    }
+
+    #[test]
+    fn axis_step_is_round() {
+        assert_eq!(axis_step(10.0), 2.0);
+        assert_eq!(axis_step(97.0), 20.0);
+        assert_eq!(axis_step(3000.0), 500.0);
+        assert_eq!(axis_step(0.0), 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bar_chart_rejects_mismatched_series() {
+        bar_chart(
+            "t",
+            &["a", "b"],
+            &[Series { name: "s".into(), values: vec![1.0] }],
+            "y",
+        );
+    }
+}

@@ -1,0 +1,250 @@
+//! PJRT runtime — loads the AOT-compiled benchmark payloads
+//! (`artifacts/*.hlo.txt`, produced once by `make artifacts`) and executes
+//! them on the XLA CPU client. This is the only place the rust coordinator
+//! touches XLA; Python never runs on this path.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): HLO *text* -> HloModuleProto
+//! text parser -> XlaComputation -> PjRtClient::compile -> execute.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::Json;
+use crate::workload::{Benchmark, Profile};
+
+/// One entry-point argument's shape/dtype from the manifest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArgSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl ArgSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// Manifest entry for one compiled benchmark payload.
+#[derive(Debug, Clone)]
+pub struct PayloadSpec {
+    pub benchmark: Benchmark,
+    pub hlo_path: PathBuf,
+    pub args: Vec<ArgSpec>,
+    pub profile: Profile,
+    pub flops_per_step: u64,
+    pub bytes_per_step: u64,
+}
+
+/// Parse `artifacts/manifest.json` (written by python/compile/aot.py).
+pub fn load_manifest(artifacts_dir: &Path) -> Result<Vec<PayloadSpec>> {
+    let path = artifacts_dir.join("manifest.json");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+    let json = Json::parse(&text).map_err(|e| anyhow!("parsing manifest: {e}"))?;
+    let obj = json.as_obj().ok_or_else(|| anyhow!("manifest is not an object"))?;
+    let mut specs = Vec::new();
+    for (name, entry) in obj {
+        let benchmark = Benchmark::from_artifact(name)
+            .ok_or_else(|| anyhow!("unknown benchmark {name} in manifest"))?;
+        let hlo = entry
+            .get("hlo")
+            .as_str()
+            .ok_or_else(|| anyhow!("{name}: missing hlo"))?;
+        let profile_str = entry
+            .get("profile")
+            .as_str()
+            .ok_or_else(|| anyhow!("{name}: missing profile"))?;
+        let profile = Profile::parse(profile_str)
+            .ok_or_else(|| anyhow!("{name}: bad profile {profile_str}"))?;
+        let mut args = Vec::new();
+        for a in entry.get("args").as_arr().unwrap_or(&[]) {
+            let shape = a
+                .get("shape")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|d| d.as_u64().unwrap_or(0) as usize)
+                .collect();
+            let dtype = a.get("dtype").as_str().unwrap_or("float32").to_string();
+            args.push(ArgSpec { shape, dtype });
+        }
+        specs.push(PayloadSpec {
+            benchmark,
+            hlo_path: artifacts_dir.join(hlo),
+            args,
+            profile,
+            flops_per_step: entry.get("flops_per_step").as_u64().unwrap_or(0),
+            bytes_per_step: entry.get("bytes_per_step").as_u64().unwrap_or(0),
+        });
+    }
+    if specs.is_empty() {
+        bail!("empty manifest at {}", path.display());
+    }
+    Ok(specs)
+}
+
+/// Build a deterministic input literal for an argument spec. Values are
+/// small random floats (not zeros — keeps the numerics non-degenerate);
+/// int32 args are treated as the ring permutation.
+fn make_literal(arg: &ArgSpec, rng: &mut crate::util::Rng) -> Result<xla::Literal> {
+    let n = arg.elements();
+    let dims: Vec<i64> = arg.shape.iter().map(|&d| d as i64).collect();
+    let lit = match arg.dtype.as_str() {
+        "float32" => {
+            let data: Vec<f32> = (0..n).map(|_| (rng.f64() as f32 - 0.5) * 0.25).collect();
+            xla::Literal::vec1(&data)
+        }
+        "int32" => {
+            // Ring permutation: rotate by one (a valid random-ring order).
+            let p = n as i32;
+            let data: Vec<i32> = (0..p).map(|i| (i + 1) % p).collect();
+            xla::Literal::vec1(&data)
+        }
+        other => bail!("unsupported dtype {other}"),
+    };
+    Ok(if dims.len() == 1 && dims[0] as usize == n {
+        lit
+    } else {
+        lit.reshape(&dims)?
+    })
+}
+
+/// A compiled benchmark payload, ready to execute.
+pub struct Payload {
+    pub spec: PayloadSpec,
+    exe: xla::PjRtLoadedExecutable,
+    inputs: Vec<xla::Literal>,
+}
+
+impl Payload {
+    /// Execute one step; returns wall-clock seconds.
+    pub fn step(&self) -> Result<f64> {
+        let t0 = Instant::now();
+        let result = self.exe.execute::<xla::Literal>(&self.inputs)?;
+        // Force completion by materializing the first output.
+        let _ = result[0][0].to_literal_sync()?;
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    /// Execute one step and return the flattened f32 outputs (used by the
+    /// e2e driver to sanity-check numerics, e.g. MiniFE residual norms).
+    pub fn step_outputs(&self) -> Result<Vec<Vec<f32>>> {
+        let result = self.exe.execute::<xla::Literal>(&self.inputs)?;
+        let tuple = result[0][0].to_literal_sync()?.to_tuple()?;
+        let mut outs = Vec::new();
+        for lit in tuple {
+            outs.push(lit.to_vec::<f32>().unwrap_or_default());
+        }
+        Ok(outs)
+    }
+}
+
+/// The PJRT runtime: one CPU client + all compiled payloads.
+pub struct Runtime {
+    pub client_platform: String,
+    pub payloads: BTreeMap<Benchmark, Payload>,
+}
+
+impl Runtime {
+    /// Load every artifact in the manifest and compile it on the CPU PJRT
+    /// client.
+    pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let specs = load_manifest(artifacts_dir)?;
+        let mut rng = crate::util::Rng::seed_from_u64(0x9e37_79b9_7f4a_7c15);
+        let mut payloads = BTreeMap::new();
+        for spec in specs {
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.hlo_path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parsing {}", spec.hlo_path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", spec.benchmark))?;
+            let inputs = spec
+                .args
+                .iter()
+                .map(|a| make_literal(a, &mut rng))
+                .collect::<Result<Vec<_>>>()?;
+            payloads.insert(spec.benchmark, Payload { spec, exe, inputs });
+        }
+        Ok(Runtime { client_platform: client.platform_name(), payloads })
+    }
+
+    pub fn payload(&self, bench: Benchmark) -> Option<&Payload> {
+        self.payloads.get(&bench)
+    }
+
+    /// Measure mean per-step wall time of one benchmark payload.
+    pub fn measure(&self, bench: Benchmark, warmup: usize, iters: usize) -> Result<f64> {
+        let payload =
+            self.payload(bench).ok_or_else(|| anyhow!("no payload for {bench}"))?;
+        for _ in 0..warmup {
+            payload.step()?;
+        }
+        let mut total = 0.0;
+        for _ in 0..iters.max(1) {
+            total += payload.step()?;
+        }
+        Ok(total / iters.max(1) as f64)
+    }
+}
+
+/// Default artifacts directory: `$CARGO_MANIFEST_DIR/artifacts` at build
+/// time, overridable with `KUBE_FGS_ARTIFACTS`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("KUBE_FGS_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        default_artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn manifest_parses_all_benchmarks() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let specs = load_manifest(&default_artifacts_dir()).unwrap();
+        assert_eq!(specs.len(), 5);
+        for s in &specs {
+            assert!(!s.args.is_empty(), "{}", s.benchmark);
+            assert!(s.flops_per_step > 0);
+            assert!(s.hlo_path.exists());
+        }
+    }
+
+    #[test]
+    fn runtime_loads_and_executes_every_payload() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = Runtime::load(&default_artifacts_dir()).unwrap();
+        assert_eq!(rt.payloads.len(), 5);
+        for (bench, payload) in &rt.payloads {
+            let secs = payload.step().unwrap_or_else(|e| panic!("{bench}: {e}"));
+            assert!(secs > 0.0 && secs < 60.0, "{bench}: {secs}s");
+        }
+    }
+
+    #[test]
+    fn arg_spec_elements() {
+        let a = ArgSpec { shape: vec![4, 8], dtype: "float32".into() };
+        assert_eq!(a.elements(), 32);
+        let scalar = ArgSpec { shape: vec![], dtype: "float32".into() };
+        assert_eq!(scalar.elements(), 1);
+    }
+}

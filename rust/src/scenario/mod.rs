@@ -1,0 +1,173 @@
+//! Scenario matrix — the paper's Table II plus the §V-E framework
+//! baselines, each mapping to a fully configured [`Simulation`].
+
+use crate::cluster::ClusterSpec;
+use crate::controller::{
+    JobController, KubeflowController, NativeVolcanoController, VolcanoMpiController,
+};
+use crate::kubelet::KubeletConfig;
+use crate::perfmodel::Calibration;
+use crate::planner::GranularityPolicy;
+use crate::scheduler::SchedulerConfig;
+use crate::simulator::Simulation;
+
+/// All evaluated scenarios: six from Table II + two framework baselines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scenario {
+    /// Kubelet default, stock Volcano gang.
+    None_,
+    /// CPU/memory affinity, stock Volcano gang.
+    Cm,
+    /// Affinity + planner 'scale'.
+    CmS,
+    /// Affinity + planner 'granularity'.
+    CmG,
+    /// Affinity + 'scale' + task-group scheduling.
+    CmSTg,
+    /// Affinity + 'granularity' + task-group scheduling.
+    CmGTg,
+    /// Kubeflow MPI operator on the default scheduler (affinity kubelet).
+    Kubeflow,
+    /// Stock Volcano MPI example: one task per container (affinity kubelet).
+    VolcanoNative,
+}
+
+/// The six Table-II scenarios, in the paper's column order.
+pub const TABLE2_SCENARIOS: [Scenario; 6] = [
+    Scenario::None_,
+    Scenario::Cm,
+    Scenario::CmS,
+    Scenario::CmG,
+    Scenario::CmSTg,
+    Scenario::CmGTg,
+];
+
+/// The §V-E framework-comparison scenarios (Table III / Figs. 8–9 order).
+pub const EXP3_SCENARIOS: [Scenario; 5] = [
+    Scenario::Kubeflow,
+    Scenario::VolcanoNative,
+    Scenario::Cm,
+    Scenario::CmSTg,
+    Scenario::CmGTg,
+];
+
+impl Scenario {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scenario::None_ => "NONE",
+            Scenario::Cm => "CM",
+            Scenario::CmS => "CM_S",
+            Scenario::CmG => "CM_G",
+            Scenario::CmSTg => "CM_S_TG",
+            Scenario::CmGTg => "CM_G_TG",
+            Scenario::Kubeflow => "Kubeflow",
+            Scenario::VolcanoNative => "Volcano",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Scenario> {
+        let all = [
+            Scenario::None_,
+            Scenario::Cm,
+            Scenario::CmS,
+            Scenario::CmG,
+            Scenario::CmSTg,
+            Scenario::CmGTg,
+            Scenario::Kubeflow,
+            Scenario::VolcanoNative,
+        ];
+        all.iter().copied().find(|sc| sc.name().eq_ignore_ascii_case(s))
+    }
+
+    pub fn kubelet(&self) -> KubeletConfig {
+        match self {
+            Scenario::None_ => KubeletConfig::default_policy(),
+            _ => KubeletConfig::cpu_mem_affinity(),
+        }
+    }
+
+    pub fn policy(&self) -> GranularityPolicy {
+        match self {
+            Scenario::CmS | Scenario::CmSTg => GranularityPolicy::Scale,
+            Scenario::CmG | Scenario::CmGTg => GranularityPolicy::Granularity,
+            _ => GranularityPolicy::None,
+        }
+    }
+
+    pub fn controller(&self) -> Box<dyn JobController> {
+        match self {
+            Scenario::Kubeflow => Box::new(KubeflowController),
+            Scenario::VolcanoNative => Box::new(NativeVolcanoController),
+            _ => Box::new(VolcanoMpiController),
+        }
+    }
+
+    pub fn scheduler(&self, seed: u64) -> SchedulerConfig {
+        match self {
+            Scenario::CmSTg | Scenario::CmGTg => SchedulerConfig::fine_grained(seed),
+            Scenario::Kubeflow => SchedulerConfig::kube_default(seed),
+            _ => SchedulerConfig::volcano_default(seed),
+        }
+    }
+
+    /// Build a fully configured simulation for this scenario.
+    pub fn simulation(&self, seed: u64) -> Simulation {
+        self.simulation_on(ClusterSpec::paper(), seed)
+    }
+
+    pub fn simulation_on(&self, cluster: ClusterSpec, seed: u64) -> Simulation {
+        Simulation::new(
+            cluster,
+            self.kubelet(),
+            self.policy(),
+            self.controller(),
+            self.scheduler(seed),
+            Calibration::default(),
+            seed,
+        )
+    }
+}
+
+impl std::fmt::Display for Scenario {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kubelet::CpuManagerPolicy;
+
+    #[test]
+    fn table2_matrix_matches_paper() {
+        // NONE is the only default-kubelet scenario.
+        assert_eq!(Scenario::None_.kubelet().cpu_policy, CpuManagerPolicy::None);
+        for s in &TABLE2_SCENARIOS[1..] {
+            assert_eq!(s.kubelet().cpu_policy, CpuManagerPolicy::Static, "{s}");
+        }
+        // TG only in the _TG scenarios.
+        assert!(Scenario::CmSTg.scheduler(0).taskgroup);
+        assert!(Scenario::CmGTg.scheduler(0).taskgroup);
+        assert!(!Scenario::CmS.scheduler(0).taskgroup);
+        // Gang everywhere except Kubeflow.
+        assert!(!Scenario::Kubeflow.scheduler(0).gang);
+        assert!(Scenario::VolcanoNative.scheduler(0).gang);
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for s in TABLE2_SCENARIOS.iter().chain(EXP3_SCENARIOS.iter()) {
+            assert_eq!(Scenario::parse(s.name()), Some(*s));
+        }
+        assert_eq!(Scenario::parse("cm_g_tg"), Some(Scenario::CmGTg));
+        assert_eq!(Scenario::parse("bogus"), None);
+    }
+
+    #[test]
+    fn controllers_match_frameworks() {
+        assert_eq!(Scenario::Kubeflow.controller().name(), "kubeflow-mpi-operator");
+        assert_eq!(Scenario::VolcanoNative.controller().name(), "volcano-native");
+        assert_eq!(Scenario::CmGTg.controller().name(), "volcano+mpi-aware");
+    }
+}

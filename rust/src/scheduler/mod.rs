@@ -1,0 +1,451 @@
+//! Infrastructure-layer scheduler — a Volcano-style scheduling framework
+//! with pluggable gang admission, filtering (PredicateFn) and scoring
+//! (NodeOrderFn), hosting the paper's task-group plugin (Algorithms 3–4)
+//! next to the baseline policies (stock Volcano gang, Kubernetes default).
+//!
+//! Each [`Scheduler::cycle`] is one Volcano session: snapshot free
+//! resources, walk the pending-job queue FIFO, and for each job place its
+//! pods (gang: all-or-nothing on a trial state; no-gang: individually).
+
+pub mod score;
+pub mod taskgroup;
+
+use std::collections::BTreeMap;
+
+use crate::apiserver::ApiServer;
+use crate::cluster::{JobId, NodeId, NodeRole, Pod, PodId, PodPhase, Resources};
+use crate::util::Rng;
+
+pub use score::{least_requested, taskgroup_score, GroupKey, GroupPlacement};
+pub use taskgroup::{build_groups, group_assignment, worker_order, TaskGroup};
+
+/// Scheduler profile (paper Table II "Volcano" column + §V-E frameworks).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SchedulerConfig {
+    /// Volcano gang plugin: a job starts only when every pod is placeable.
+    pub gang: bool,
+    /// The paper's task-group plugin (Algorithms 3–4).
+    pub taskgroup: bool,
+    /// Seed for the default scheduler's random tie-breaking.
+    pub seed: u64,
+}
+
+impl SchedulerConfig {
+    /// Stock Volcano: gang only (baseline NONE/CM/CM_S/CM_G scenarios).
+    pub fn volcano_default(seed: u64) -> Self {
+        SchedulerConfig { gang: true, taskgroup: false, seed }
+    }
+
+    /// The paper's fine-grained scheduler: gang + task-group.
+    pub fn fine_grained(seed: u64) -> Self {
+        SchedulerConfig { gang: true, taskgroup: true, seed }
+    }
+
+    /// Kubernetes default scheduler (Kubeflow baseline): per-pod, no gang.
+    pub fn kube_default(seed: u64) -> Self {
+        SchedulerConfig { gang: false, taskgroup: false, seed }
+    }
+}
+
+pub struct Scheduler {
+    pub config: SchedulerConfig,
+    rng: Rng,
+}
+
+/// Trial state for one scheduling session (mutated as binds are decided,
+/// committed to the API server only when the gang succeeds). Gang
+/// all-or-nothing is implemented with an undo log instead of cloning the
+/// whole state per job (§Perf: the clone dominated large sessions).
+struct SessionState {
+    free: Vec<Resources>,
+    placement: GroupPlacement,
+    /// Undo log of (pod requests, node, group) applied since the last
+    /// checkpoint; replayed backwards on gang failure.
+    log: Vec<(Resources, NodeId, Option<GroupKey>)>,
+}
+
+impl SessionState {
+    fn apply(&mut self, requests: Resources, node: NodeId, group: Option<GroupKey>) {
+        self.free[node.0] -= requests;
+        if let Some(key) = group {
+            self.placement.record(key, node);
+        }
+        self.log.push((requests, node, group));
+    }
+
+    fn checkpoint(&self) -> usize {
+        self.log.len()
+    }
+
+    fn rollback_to(&mut self, checkpoint: usize) {
+        while self.log.len() > checkpoint {
+            let (requests, node, group) = self.log.pop().unwrap();
+            self.free[node.0] += requests;
+            if let Some(key) = group {
+                self.placement.remove(key, node);
+            }
+        }
+    }
+}
+
+impl Scheduler {
+    pub fn new(config: SchedulerConfig) -> Scheduler {
+        Scheduler { config, rng: Rng::seed_from_u64(config.seed) }
+    }
+
+    /// Rebuild the cluster-wide group-placement view from bound/running
+    /// pods (groups only exist for jobs scheduled by the task-group
+    /// plugin).
+    fn rebuild_placement(api: &ApiServer) -> GroupPlacement {
+        let mut p = GroupPlacement::default();
+        for pod in api.pods.values() {
+            if matches!(pod.phase, PodPhase::Bound | PodPhase::Running) {
+                if let (Some(group), Some(node)) = (pod.group, pod.node) {
+                    p.record((pod.job, group), node);
+                }
+            }
+        }
+        p
+    }
+
+    /// PredicateFn: feasibility filter for one pod on one node (role
+    /// constraint + resource fit against the session's free view).
+    fn predicate(api: &ApiServer, state: &SessionState, pod: &Pod, node: NodeId) -> bool {
+        let role_ok = match pod.role {
+            crate::cluster::PodRole::Launcher => {
+                api.spec.node(node).role == NodeRole::ControlPlane
+            }
+            crate::cluster::PodRole::Worker { .. } => {
+                api.spec.node(node).role == NodeRole::Worker
+            }
+        };
+        role_ok && pod.requests.fits_within(&state.free[node.0])
+    }
+
+    /// NodeOrderFn: composite score. The task-group term (Algorithm 4)
+    /// dominates when enabled; the default scheduler's integer-quantized
+    /// LeastRequested + random tie-break reproduces upstream behaviour
+    /// (near-equal nodes are chosen effectively at random — the paper's
+    /// "the scheduler randomly chooses the nodes").
+    fn node_score(
+        &mut self,
+        api: &ApiServer,
+        state: &SessionState,
+        _pod: &Pod,
+        group: Option<(GroupKey, usize)>,
+        node: NodeId,
+    ) -> f64 {
+        let mut score = 0.0;
+        if let Some((key, group_len)) = group {
+            score += 10.0 * taskgroup_score(&state.placement, key, group_len, node);
+        }
+        // Stock Volcano / default-scheduler behaviour: near-equal nodes
+        // are picked effectively at random (the paper: "by default the
+        // scheduler randomly chooses the nodes to deploy the pods within a
+        // same job") — jitter dominates unless utilization differs a lot.
+        let lr = least_requested(&state.free[node.0], &api.spec.node(node).allocatable());
+        score += lr * 0.2;
+        score + self.rng.f64() * 3.0
+    }
+
+    /// Place one pod on the best feasible node in the session state.
+    fn place_pod(
+        &mut self,
+        api: &ApiServer,
+        state: &mut SessionState,
+        pod: &Pod,
+        group: Option<(GroupKey, usize)>,
+    ) -> Option<NodeId> {
+        let mut best: Option<(f64, NodeId)> = None;
+        for node in api.spec.node_ids() {
+            if !Self::predicate(api, state, pod, node) {
+                continue;
+            }
+            let s = self.node_score(api, state, pod, group, node);
+            if best.map(|(bs, _)| s > bs).unwrap_or(true) {
+                best = Some((s, node));
+            }
+        }
+        let (_, node) = best?;
+        state.apply(pod.requests, node, group.map(|(key, _)| key));
+        Some(node)
+    }
+
+    /// Plan the bindings for one job on the trial state. Returns the
+    /// per-pod (pod, node, group) decisions, or None if some pod cannot be
+    /// placed (gang failure).
+    fn plan_job(
+        &mut self,
+        api: &ApiServer,
+        state: &mut SessionState,
+        job_id: JobId,
+    ) -> Option<Vec<(PodId, NodeId, Option<usize>)>> {
+        let job = &api.jobs[&job_id];
+        let pending_pods: Vec<&Pod> = job
+            .pods
+            .iter()
+            .map(|pid| &api.pods[pid])
+            .filter(|p| p.phase == PodPhase::Pending)
+            .collect();
+
+        // Worker ordering + group assignment (Algorithm 3 step 1 +
+        // WorkerOrderFn) under the task-group plugin; plain index order
+        // otherwise.
+        let workers: Vec<&Pod> = pending_pods.iter().copied().filter(|p| p.is_worker()).collect();
+        let (order, group_of): (Vec<PodId>, BTreeMap<PodId, usize>) = if self.config.taskgroup {
+            let n_groups = job.planned.granularity.n_groups.max(1) as usize;
+            let groups = build_groups(&workers, n_groups.min(workers.len().max(1)));
+            let order = worker_order(&groups);
+            let assignment = group_assignment(&groups).into_iter().collect();
+            (order, assignment)
+        } else {
+            (workers.iter().map(|p| p.id).collect(), BTreeMap::new())
+        };
+
+        let group_len: BTreeMap<usize, usize> = {
+            let mut m: BTreeMap<usize, usize> = BTreeMap::new();
+            for g in group_of.values() {
+                *m.entry(*g).or_insert(0) += 1;
+            }
+            m
+        };
+
+        let mut binds = Vec::with_capacity(pending_pods.len());
+        // Step 2 of Algorithm 3: predicate + priority for each worker, in
+        // WorkerOrderFn order.
+        for pid in &order {
+            let pod = &api.pods[pid];
+            let group = group_of
+                .get(pid)
+                .map(|&g| (((job_id, g)) as GroupKey, group_len[&g]));
+            match self.place_pod(api, state, pod, group) {
+                Some(node) => binds.push((*pid, node, group_of.get(pid).copied())),
+                None => return None,
+            }
+        }
+        // Launchers (and any non-worker pods) placed last.
+        for pod in pending_pods.iter().filter(|p| !p.is_worker()) {
+            match self.place_pod(api, state, pod, None) {
+                Some(node) => binds.push((pod.id, node, None)),
+                None => return None,
+            }
+        }
+        Some(binds)
+    }
+
+    /// One scheduling session. Returns the jobs started in this cycle.
+    pub fn cycle(&mut self, api: &mut ApiServer, now: f64) -> Vec<JobId> {
+        let mut started = Vec::new();
+        let mut state = SessionState {
+            free: api.spec.node_ids().map(|n| api.free_on(n)).collect(),
+            placement: Self::rebuild_placement(api),
+            log: Vec::new(),
+        };
+
+        for job_id in api.pending_jobs() {
+            if self.config.gang {
+                // All-or-nothing: plan against the live state, roll back the
+                // undo log on failure.
+                let checkpoint = state.checkpoint();
+                match self.plan_job(api, &mut state, job_id) {
+                    Some(binds) => {
+                        for (pid, node, group) in binds {
+                            if let Some(g) = group {
+                                api.pods.get_mut(&pid).unwrap().group = Some(g);
+                            }
+                            let ok = api.bind_pod(pid, node, now);
+                            assert!(ok, "kubelet admission failed after predicate pass");
+                        }
+                        api.start_job(job_id, now);
+                        started.push(job_id);
+                    }
+                    None => {
+                        state.rollback_to(checkpoint);
+                        continue; // job stays pending; try later jobs
+                    }
+                }
+            } else {
+                // Kubernetes default: bind pods individually as they fit.
+                let pending: Vec<PodId> = api.jobs[&job_id]
+                    .pods
+                    .iter()
+                    .filter(|pid| api.pods[pid].phase == PodPhase::Pending)
+                    .copied()
+                    .collect();
+                for pid in pending {
+                    let pod = api.pods[&pid].clone();
+                    if let Some(node) = self.place_pod(api, &mut state, &pod, None) {
+                        let ok = api.bind_pod(pid, node, now);
+                        assert!(ok, "kubelet admission failed after predicate pass");
+                    }
+                }
+                let all_bound = api.jobs[&job_id]
+                    .pods
+                    .iter()
+                    .all(|pid| api.pods[pid].phase == PodPhase::Bound);
+                if all_bound {
+                    api.start_job(job_id, now);
+                    started.push(job_id);
+                }
+            }
+        }
+        started
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::controller::{JobController, NativeVolcanoController, VolcanoMpiController};
+    use crate::kubelet::KubeletConfig;
+    use crate::planner::{plan, GranularityPolicy, SystemInfo};
+    use crate::workload::{Benchmark, JobSpec};
+
+    fn submit(
+        api: &mut ApiServer,
+        controller: &dyn JobController,
+        policy: GranularityPolicy,
+        id: u64,
+        bench: Benchmark,
+    ) -> JobId {
+        let spec = JobSpec::paper_job(id, bench, 0.0);
+        let info = SystemInfo { available_nodes: api.spec.worker_count() as u32 };
+        let planned = plan(&spec, policy, info);
+        let job_id = planned.spec.id;
+        let (pods, hostfile) = controller.build(&planned, api);
+        api.create_job(planned, pods, hostfile, 0.0);
+        job_id
+    }
+
+    fn api() -> ApiServer {
+        ApiServer::new(ClusterSpec::paper(), KubeletConfig::cpu_mem_affinity())
+    }
+
+    #[test]
+    fn baseline_schedules_single_worker_job() {
+        let mut api = api();
+        let job = submit(&mut api, &VolcanoMpiController, GranularityPolicy::None, 1, Benchmark::EpDgemm);
+        let mut sched = Scheduler::new(SchedulerConfig::volcano_default(1));
+        let started = sched.cycle(&mut api, 0.0);
+        assert_eq!(started, vec![job]);
+        let workers = api.worker_pods_of(job);
+        assert_eq!(workers.len(), 1);
+        assert!(api.spec.node(workers[0].node.unwrap()).role == NodeRole::Worker);
+        // Launcher landed on the control plane.
+        let launcher = api.pods.values().find(|p| !p.is_worker()).unwrap();
+        assert_eq!(launcher.node, Some(api.spec.control_plane_id()));
+    }
+
+    #[test]
+    fn taskgroup_spreads_scale_job_one_worker_per_node() {
+        let mut api = api();
+        let job = submit(&mut api, &VolcanoMpiController, GranularityPolicy::Scale, 1, Benchmark::EpDgemm);
+        let mut sched = Scheduler::new(SchedulerConfig::fine_grained(1));
+        assert_eq!(sched.cycle(&mut api, 0.0), vec![job]);
+        let mut nodes: Vec<usize> =
+            api.worker_pods_of(job).iter().map(|p| p.node.unwrap().0).collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        assert_eq!(nodes.len(), 4, "4 workers must land on 4 distinct nodes");
+    }
+
+    #[test]
+    fn taskgroup_accretes_granularity_groups_per_node() {
+        let mut api = api();
+        let job = submit(
+            &mut api,
+            &VolcanoMpiController,
+            GranularityPolicy::Granularity,
+            1,
+            Benchmark::EpDgemm,
+        );
+        let mut sched = Scheduler::new(SchedulerConfig::fine_grained(1));
+        assert_eq!(sched.cycle(&mut api, 0.0), vec![job]);
+        // 16 single-task workers in 4 groups: each node gets exactly one
+        // group of 4 workers.
+        let mut per_node: BTreeMap<usize, u32> = BTreeMap::new();
+        for p in api.worker_pods_of(job) {
+            *per_node.entry(p.node.unwrap().0).or_insert(0) += p.ntasks;
+        }
+        let counts: Vec<u32> = per_node.values().copied().collect();
+        assert_eq!(counts, vec![4, 4, 4, 4], "{per_node:?}");
+        // And group assignments were committed to the pods.
+        assert!(api.worker_pods_of(job).iter().all(|p| p.group.is_some()));
+    }
+
+    #[test]
+    fn gang_holds_job_until_capacity_frees() {
+        let mut api = api();
+        // Fill the cluster with 8 × 16-core single-worker jobs.
+        let mut sched = Scheduler::new(SchedulerConfig::volcano_default(1));
+        for i in 1..=8 {
+            submit(&mut api, &VolcanoMpiController, GranularityPolicy::None, i, Benchmark::EpDgemm);
+        }
+        assert_eq!(sched.cycle(&mut api, 0.0).len(), 8);
+        // A ninth job cannot gang-start.
+        let nine = submit(&mut api, &VolcanoMpiController, GranularityPolicy::None, 9, Benchmark::EpDgemm);
+        assert!(sched.cycle(&mut api, 1.0).is_empty());
+        assert_eq!(api.pending_jobs(), vec![nine]);
+        // No partial binding happened (gang all-or-nothing).
+        assert!(api.jobs[&nine]
+            .pods
+            .iter()
+            .all(|pid| api.pods[pid].phase == PodPhase::Pending));
+        // Finish one job; the queued one starts on the next cycle.
+        api.finish_job(JobId(1), 2.0);
+        assert_eq!(sched.cycle(&mut api, 2.0), vec![nine]);
+    }
+
+    #[test]
+    fn no_gang_binds_partially() {
+        let mut api = api();
+        // Fill all worker nodes.
+        let mut gang = Scheduler::new(SchedulerConfig::volcano_default(1));
+        for i in 1..=8 {
+            submit(&mut api, &VolcanoMpiController, GranularityPolicy::None, i, Benchmark::EpDgemm);
+        }
+        gang.cycle(&mut api, 0.0);
+        // Kubeflow-style job: launcher fits (control plane), worker does not.
+        let job = submit(&mut api, &crate::controller::KubeflowController, GranularityPolicy::None, 9, Benchmark::EpDgemm);
+        let mut kube = Scheduler::new(SchedulerConfig::kube_default(2));
+        assert!(kube.cycle(&mut api, 1.0).is_empty());
+        let phases: Vec<PodPhase> =
+            api.jobs[&job].pods.iter().map(|pid| api.pods[pid].phase).collect();
+        assert!(
+            phases.contains(&PodPhase::Bound) && phases.contains(&PodPhase::Pending),
+            "{phases:?}"
+        );
+    }
+
+    #[test]
+    fn native_volcano_scatters_sixteen_containers() {
+        let mut api = api();
+        let job = submit(&mut api, &NativeVolcanoController, GranularityPolicy::None, 1, Benchmark::GRandomRing);
+        let mut sched = Scheduler::new(SchedulerConfig::volcano_default(7));
+        assert_eq!(sched.cycle(&mut api, 0.0), vec![job]);
+        let workers = api.worker_pods_of(job);
+        assert_eq!(workers.len(), 16);
+        let mut nodes: Vec<usize> = workers.iter().map(|p| p.node.unwrap().0).collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        assert!(nodes.len() > 1, "stock spreading must scatter the containers");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = |seed| {
+            let mut api = api();
+            for i in 1..=4 {
+                submit(&mut api, &VolcanoMpiController, GranularityPolicy::Scale, i, Benchmark::EpStream);
+            }
+            let mut sched = Scheduler::new(SchedulerConfig::fine_grained(seed));
+            sched.cycle(&mut api, 0.0);
+            api.pods
+                .values()
+                .map(|p| (p.id, p.node.map(|n| n.0)))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(5), run(5));
+    }
+}

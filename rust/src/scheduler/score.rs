@@ -1,0 +1,163 @@
+//! Node scoring functions: the default Kubernetes-style priorities used by
+//! the baselines, and the task-group `NodeOrderFn` (paper Algorithm 4).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::cluster::{JobId, NodeId, Resources};
+
+/// Kubernetes `LeastRequestedPriority`-style score in [0, 10]: favour nodes
+/// with the most free requested resources (this is what the default
+/// scheduler and stock Volcano use for spreading).
+pub fn least_requested(free: &Resources, allocatable: &Resources) -> f64 {
+    let cpu = if allocatable.cpu_milli == 0 {
+        0.0
+    } else {
+        free.cpu_milli as f64 / allocatable.cpu_milli as f64
+    };
+    let mem = if allocatable.mem_bytes == 0 {
+        0.0
+    } else {
+        free.mem_bytes as f64 / allocatable.mem_bytes as f64
+    };
+    (cpu + mem) * 5.0
+}
+
+/// Group identity across jobs: groups are per-job objects.
+pub type GroupKey = (JobId, usize);
+
+/// The cluster-wide group placement view Algorithm 4 scores against,
+/// maintained incrementally by the scheduling session as binds commit.
+#[derive(Debug, Clone, Default)]
+pub struct GroupPlacement {
+    /// (job, group) -> nodes already bound for that group, with counts.
+    pub bound_nodes: BTreeMap<GroupKey, BTreeMap<NodeId, u32>>,
+    /// node -> set of groups with at least one pod bound there.
+    pub groups_on_node: BTreeMap<NodeId, BTreeSet<GroupKey>>,
+}
+
+impl GroupPlacement {
+    pub fn record(&mut self, key: GroupKey, node: NodeId) {
+        *self.bound_nodes.entry(key).or_default().entry(node).or_insert(0) += 1;
+        self.groups_on_node.entry(node).or_default().insert(key);
+    }
+
+    pub fn remove(&mut self, key: GroupKey, node: NodeId) {
+        if let Some(nodes) = self.bound_nodes.get_mut(&key) {
+            if let Some(c) = nodes.get_mut(&node) {
+                *c -= 1;
+                if *c == 0 {
+                    nodes.remove(&node);
+                    if let Some(set) = self.groups_on_node.get_mut(&node) {
+                        set.remove(&key);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Number of this group's pods already bound on `node`.
+    pub fn bound_on(&self, key: GroupKey, node: NodeId) -> u32 {
+        self.bound_nodes
+            .get(&key)
+            .and_then(|m| m.get(&node))
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Number of *other* groups present on `node`.
+    pub fn other_groups_on(&self, key: GroupKey, node: NodeId) -> usize {
+        self.groups_on_node
+            .get(&node)
+            .map(|s| s.iter().filter(|&&k| k != key).count())
+            .unwrap_or(0)
+    }
+}
+
+/// Algorithm 4 — `NodeOrderFn` node score for a worker of a task group:
+///
+/// 1. base score: pods of the *same group* already bound on this node
+///    (affinity: accrete the group onto one node);
+/// 2. plus the group's remaining worker count (constant across nodes —
+///    kept for fidelity with the pseudocode);
+/// 3. minus one per *other* group present on the node (anti-affinity:
+///    spread distinct groups apart).
+pub fn taskgroup_score(
+    placement: &GroupPlacement,
+    key: GroupKey,
+    group_len: usize,
+    node: NodeId,
+) -> f64 {
+    let mut score = placement.bound_on(key, node) as f64;
+    score += group_len as f64;
+    score -= placement.other_groups_on(key, node) as f64;
+    score
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::gib;
+
+    #[test]
+    fn least_requested_prefers_empty_nodes() {
+        let alloc = Resources::new(32_000, gib(248));
+        let empty = least_requested(&alloc, &alloc);
+        let half = least_requested(&Resources::new(16_000, gib(124)), &alloc);
+        let full = least_requested(&Resources::ZERO, &alloc);
+        assert!(empty > half && half > full);
+        assert!((empty - 10.0).abs() < 1e-9);
+        assert!((full - 0.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn group_affinity_raises_score_on_bound_node() {
+        let mut p = GroupPlacement::default();
+        let key = (JobId(1), 0);
+        p.record(key, NodeId(1));
+        p.record(key, NodeId(1));
+        let bound = taskgroup_score(&p, key, 4, NodeId(1));
+        let fresh = taskgroup_score(&p, key, 4, NodeId(2));
+        assert!(bound > fresh, "{bound} vs {fresh}");
+        assert_eq!(bound - fresh, 2.0);
+    }
+
+    #[test]
+    fn group_antiaffinity_lowers_score_with_other_groups() {
+        let mut p = GroupPlacement::default();
+        let mine = (JobId(1), 0);
+        let other1 = (JobId(1), 1);
+        let other2 = (JobId(2), 0);
+        p.record(other1, NodeId(1));
+        p.record(other2, NodeId(1));
+        let crowded = taskgroup_score(&p, mine, 4, NodeId(1));
+        let empty = taskgroup_score(&p, mine, 4, NodeId(2));
+        assert_eq!(empty - crowded, 2.0, "two other groups => -2");
+    }
+
+    #[test]
+    fn affinity_beats_antiaffinity_when_own_group_dominates() {
+        // A node with 3 of my pods + 1 other group still beats a fresh node.
+        let mut p = GroupPlacement::default();
+        let mine = (JobId(1), 0);
+        p.record(mine, NodeId(1));
+        p.record(mine, NodeId(1));
+        p.record(mine, NodeId(1));
+        p.record((JobId(2), 0), NodeId(1));
+        assert!(
+            taskgroup_score(&p, mine, 4, NodeId(1)) > taskgroup_score(&p, mine, 4, NodeId(2))
+        );
+    }
+
+    #[test]
+    fn remove_undoes_record() {
+        let mut p = GroupPlacement::default();
+        let key = (JobId(1), 0);
+        p.record(key, NodeId(1));
+        p.record(key, NodeId(1));
+        p.remove(key, NodeId(1));
+        assert_eq!(p.bound_on(key, NodeId(1)), 1);
+        p.remove(key, NodeId(1));
+        assert_eq!(p.bound_on(key, NodeId(1)), 0);
+        assert_eq!(p.other_groups_on((JobId(9), 9), NodeId(1)), 0);
+    }
+}

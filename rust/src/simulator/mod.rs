@@ -1,0 +1,450 @@
+//! Discrete-event simulation engine with rate-based job progress.
+//!
+//! Jobs progress at `rate = 1 / slowdown(placement, co-location)`; the
+//! performance model recomputes every running job's rate whenever the
+//! cluster state changes (a job starts or finishes), so contention is
+//! *dynamic* — exactly the effect the paper measures when co-scheduled
+//! workloads interfere.
+//!
+//! Event loop: the next event is either the next job arrival or the
+//! earliest projected completion; between events every running job's
+//! remaining work decreases linearly at its current rate.
+
+use std::collections::BTreeMap;
+
+use crate::apiserver::ApiServer;
+use crate::cluster::{ClusterSpec, JobId};
+use crate::controller::JobController;
+use crate::kubelet::KubeletConfig;
+use crate::perfmodel::{job_slowdown_with, Calibration, ClusterLoads};
+use crate::planner::{plan, GranularityPolicy, SystemInfo};
+use crate::scheduler::{Scheduler, SchedulerConfig};
+use crate::util::Rng;
+use crate::workload::JobSpec;
+
+/// Per-running-job progress state.
+#[derive(Debug, Clone)]
+struct JobProgress {
+    /// Remaining work, in ideal (slowdown-1) seconds.
+    remaining: f64,
+    /// Current progress rate (1 / slowdown).
+    rate: f64,
+    /// Shared-pool variance factor, drawn once per job.
+    noise: f64,
+}
+
+/// Completed-run record for one job.
+#[derive(Debug, Clone)]
+pub struct JobRecord {
+    pub id: JobId,
+    pub benchmark: crate::workload::Benchmark,
+    pub submit_time: f64,
+    pub start_time: f64,
+    pub finish_time: f64,
+}
+
+impl JobRecord {
+    /// `T_i^w`: queue wait.
+    pub fn wait(&self) -> f64 {
+        self.start_time - self.submit_time
+    }
+
+    /// `T_i^r`: running time.
+    pub fn running(&self) -> f64 {
+        self.finish_time - self.start_time
+    }
+
+    /// `T_i = T_i^w + T_i^r`: response time.
+    pub fn response(&self) -> f64 {
+        self.finish_time - self.submit_time
+    }
+}
+
+/// Simulation output: per-job records + the final API server (event log,
+/// placements) for reporting.
+pub struct SimOutput {
+    pub records: Vec<JobRecord>,
+    pub api: ApiServer,
+}
+
+impl SimOutput {
+    /// `T = Σ T_i`: overall response time (paper metric).
+    pub fn overall_response(&self) -> f64 {
+        self.records.iter().map(JobRecord::response).sum()
+    }
+
+    /// `T_makespan`: time for all jobs to terminate (0 for an empty run).
+    pub fn makespan(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        let first = self.records.iter().map(|r| r.submit_time).fold(f64::INFINITY, f64::min);
+        let last = self.records.iter().map(|r| r.finish_time).fold(0.0, f64::max);
+        last - first
+    }
+
+    /// Mean running time of one benchmark's jobs.
+    pub fn avg_running(&self, bench: crate::workload::Benchmark) -> f64 {
+        let xs: Vec<f64> = self
+            .records
+            .iter()
+            .filter(|r| r.benchmark == bench)
+            .map(JobRecord::running)
+            .collect();
+        if xs.is_empty() {
+            0.0
+        } else {
+            xs.iter().sum::<f64>() / xs.len() as f64
+        }
+    }
+}
+
+/// A fully configured simulation: cluster + kubelet setting + planner
+/// policy + controller + scheduler profile + perf model.
+pub struct Simulation {
+    pub api: ApiServer,
+    scheduler: Scheduler,
+    controller: Box<dyn JobController>,
+    policy: GranularityPolicy,
+    calib: Calibration,
+    rng: Rng,
+    progress: BTreeMap<JobId, JobProgress>,
+    now: f64,
+    /// Per-benchmark ideal work override (seconds); defaults to
+    /// `Benchmark::base_running_secs`. The e2e driver feeds PJRT-measured
+    /// kernel times through this.
+    pub base_work: BTreeMap<crate::workload::Benchmark, f64>,
+}
+
+impl Simulation {
+    pub fn new(
+        cluster: ClusterSpec,
+        kubelet: KubeletConfig,
+        policy: GranularityPolicy,
+        controller: Box<dyn JobController>,
+        scheduler_config: SchedulerConfig,
+        calib: Calibration,
+        seed: u64,
+    ) -> Simulation {
+        Simulation {
+            api: ApiServer::new(cluster, kubelet),
+            scheduler: Scheduler::new(scheduler_config),
+            controller,
+            policy,
+            calib,
+            rng: Rng::seed_from_u64(seed),
+            progress: BTreeMap::new(),
+            now: 0.0,
+            base_work: BTreeMap::new(),
+        }
+    }
+
+    fn base_work_of(&self, bench: crate::workload::Benchmark) -> f64 {
+        self.base_work.get(&bench).copied().unwrap_or_else(|| bench.base_running_secs())
+    }
+
+    /// Advance every running job's remaining work to time `t`.
+    fn advance_to(&mut self, t: f64) {
+        let dt = t - self.now;
+        debug_assert!(dt >= -1e-9, "time went backwards: {} -> {}", self.now, t);
+        if dt > 0.0 {
+            for p in self.progress.values_mut() {
+                p.remaining -= dt * p.rate;
+            }
+        }
+        self.now = t;
+    }
+
+    /// Recompute every running job's rate from the current cluster state.
+    /// The cluster-wide load snapshot is computed once and shared (§Perf).
+    fn recompute_rates(&mut self) {
+        let ids: Vec<JobId> = self.progress.keys().copied().collect();
+        let loads = ClusterLoads::snapshot(&self.api);
+        for id in ids {
+            let noise = self.progress[&id].noise;
+            let slowdown =
+                job_slowdown_with(&self.api, id, &self.calib, noise, &loads).total;
+            debug_assert!(slowdown >= 1.0 - 1e-9, "slowdown {slowdown} < 1");
+            self.progress.get_mut(&id).unwrap().rate = 1.0 / slowdown;
+        }
+    }
+
+    /// Earliest projected completion among running jobs.
+    fn next_completion(&self) -> Option<(f64, JobId)> {
+        self.progress
+            .iter()
+            .map(|(&id, p)| (self.now + (p.remaining / p.rate).max(0.0), id))
+            .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)))
+    }
+
+    /// Submit one job *now*: plan granularity (Algorithm 1), build pods
+    /// (Algorithm 2 or a baseline controller), register with the API
+    /// server.
+    fn submit(&mut self, spec: &JobSpec) {
+        let info = SystemInfo { available_nodes: self.api.spec.worker_count() as u32 };
+        let planned = plan(spec, self.policy, info);
+        let (pods, hostfile) = self.controller.build(&planned, &mut self.api);
+        self.api.create_job(planned, pods, hostfile, self.now);
+    }
+
+    /// Run one scheduling session and initialize progress for started jobs.
+    fn schedule(&mut self) {
+        let started = self.scheduler.cycle(&mut self.api, self.now);
+        if started.is_empty() {
+            return;
+        }
+        for job_id in started {
+            let bench = self.api.jobs[&job_id].planned.spec.benchmark;
+            let noise = self
+                .rng
+                .derive(job_id.0)
+                .lognormal_noise(self.calib.none_variance_sigma);
+            self.progress.insert(
+                job_id,
+                JobProgress { remaining: self.base_work_of(bench), rate: 1.0, noise },
+            );
+        }
+        self.recompute_rates();
+    }
+
+    /// Run a trace to completion; returns per-job records + final state.
+    pub fn run(mut self, trace: &[JobSpec]) -> SimOutput {
+        let mut arrivals: Vec<JobSpec> = trace.to_vec();
+        arrivals.sort_by(|a, b| a.submit_time.partial_cmp(&b.submit_time).unwrap());
+        let mut next_arrival = 0usize;
+        let total = arrivals.len();
+        let mut finished = 0usize;
+
+        while finished < total {
+            let arrival_t = arrivals.get(next_arrival).map(|j| j.submit_time);
+            let completion = self.next_completion();
+
+            let (t, is_arrival) = match (arrival_t, completion) {
+                (Some(a), Some((c, _))) if a <= c => (a, true),
+                (Some(a), None) => (a, true),
+                (_, Some((c, _))) => (c, false),
+                (None, None) => {
+                    // Pending jobs but nothing running and no arrivals:
+                    // capacity deadlock — impossible with gang + paper
+                    // job sizes; guard for robustness.
+                    panic!(
+                        "simulation stalled at t={} with {} pending jobs",
+                        self.now,
+                        self.api.pending_jobs().len()
+                    );
+                }
+            };
+
+            self.advance_to(t.max(self.now));
+
+            if is_arrival {
+                // Batch all arrivals at this instant.
+                while next_arrival < total
+                    && arrivals[next_arrival].submit_time <= self.now + 1e-12
+                {
+                    let spec = arrivals[next_arrival].clone();
+                    self.submit(&spec);
+                    next_arrival += 1;
+                }
+            } else {
+                // Complete every job whose remaining work reached zero.
+                let done: Vec<JobId> = self
+                    .progress
+                    .iter()
+                    .filter(|(_, p)| p.remaining <= 1e-6)
+                    .map(|(&id, _)| id)
+                    .collect();
+                debug_assert!(!done.is_empty(), "completion event with no finished job");
+                for id in done {
+                    self.progress.remove(&id);
+                    self.api.finish_job(id, self.now);
+                    finished += 1;
+                }
+                self.recompute_rates();
+            }
+
+            // State changed: run a scheduling session (Volcano reacts to
+            // job-add and resource-release events).
+            self.schedule();
+        }
+
+        let records = self
+            .api
+            .jobs
+            .values()
+            .map(|j| JobRecord {
+                id: j.planned.spec.id,
+                benchmark: j.planned.spec.benchmark,
+                submit_time: j.submit_time,
+                start_time: j.start_time.expect("job never started"),
+                finish_time: j.finish_time.expect("job never finished"),
+            })
+            .collect();
+        SimOutput { records, api: self.api }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::controller::VolcanoMpiController;
+    use crate::workload::{exp1_trace, Benchmark};
+
+    fn sim(kubelet: KubeletConfig, policy: GranularityPolicy, cfg: SchedulerConfig) -> Simulation {
+        Simulation::new(
+            ClusterSpec::paper(),
+            kubelet,
+            policy,
+            Box::new(VolcanoMpiController),
+            cfg,
+            Calibration::default(),
+            42,
+        )
+    }
+
+    #[test]
+    fn single_job_runs_at_base_time_when_pinned_single_task_containers() {
+        let s = sim(
+            KubeletConfig::cpu_mem_affinity(),
+            GranularityPolicy::Granularity,
+            SchedulerConfig::fine_grained(1),
+        );
+        let trace = vec![JobSpec::paper_job(1, Benchmark::EpDgemm, 0.0)];
+        let out = s.run(&trace);
+        assert_eq!(out.records.len(), 1);
+        let r = &out.records[0];
+        assert!((r.wait() - 0.0).abs() < 1e-9);
+        // CM_G placement: 16 pinned single-task containers, tiny comm cost.
+        let base = Benchmark::EpDgemm.base_running_secs();
+        assert!(
+            (r.running() - base).abs() / base < 0.05,
+            "running {} vs base {}",
+            r.running(),
+            base
+        );
+    }
+
+    #[test]
+    fn every_job_finishes_and_conserves_time_identities() {
+        let s = sim(
+            KubeletConfig::cpu_mem_affinity(),
+            GranularityPolicy::Scale,
+            SchedulerConfig::fine_grained(2),
+        );
+        let out = s.run(&exp1_trace());
+        assert_eq!(out.records.len(), 10);
+        for r in &out.records {
+            assert!(r.start_time >= r.submit_time - 1e-9);
+            assert!(r.finish_time > r.start_time);
+            assert!((r.response() - (r.wait() + r.running())).abs() < 1e-9);
+        }
+        assert!(out.makespan() > 0.0);
+        // All resources returned.
+        for n in out.api.spec.node_ids() {
+            assert_eq!(out.api.free_on(n), out.api.spec.node(n).allocatable());
+        }
+    }
+
+    #[test]
+    fn contention_slows_concurrent_jobs() {
+        // Two STREAM jobs co-scheduled under CM (single 16-task workers):
+        // each gets one socket per node or lands on separate nodes; if they
+        // share a node, each socket is oversubscribed.
+        let mk = |n_jobs: u64| {
+            let s = sim(
+                KubeletConfig::cpu_mem_affinity(),
+                GranularityPolicy::None,
+                SchedulerConfig::volcano_default(3),
+            );
+            let trace: Vec<JobSpec> = (1..=n_jobs)
+                .map(|i| JobSpec::paper_job(i, Benchmark::EpStream, 0.0))
+                .collect();
+            s.run(&trace)
+        };
+        let one = mk(1).avg_running(Benchmark::EpStream);
+        // A single 16-task STREAM worker on one socket already contends.
+        assert!(one > Benchmark::EpStream.base_running_secs());
+        let eight = mk(8);
+        assert!(eight.records.len() == 8);
+    }
+
+    #[test]
+    fn queueing_produces_wait_times() {
+        // 9 jobs at t=0 on a cluster that fits 8: the ninth must wait.
+        let s = sim(
+            KubeletConfig::cpu_mem_affinity(),
+            GranularityPolicy::None,
+            SchedulerConfig::volcano_default(4),
+        );
+        let trace: Vec<JobSpec> =
+            (1..=9).map(|i| JobSpec::paper_job(i, Benchmark::EpDgemm, 0.0)).collect();
+        let out = s.run(&trace);
+        let waited: Vec<&JobRecord> = out.records.iter().filter(|r| r.wait() > 1.0).collect();
+        assert_eq!(waited.len(), 1, "exactly one job queues");
+        assert!(out.overall_response() > 9.0 * Benchmark::EpDgemm.base_running_secs());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = || {
+            let s = sim(
+                KubeletConfig::default_policy(),
+                GranularityPolicy::None,
+                SchedulerConfig::volcano_default(5),
+            );
+            s.run(&exp1_trace())
+                .records
+                .iter()
+                .map(|r| (r.id, r.finish_time.to_bits()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn empty_trace_is_a_clean_noop() {
+        let s = sim(
+            KubeletConfig::cpu_mem_affinity(),
+            GranularityPolicy::None,
+            SchedulerConfig::volcano_default(1),
+        );
+        let out = s.run(&[]);
+        assert!(out.records.is_empty());
+        assert_eq!(out.makespan(), 0.0);
+        assert_eq!(out.overall_response(), 0.0);
+    }
+
+    #[test]
+    fn simultaneous_arrivals_all_complete() {
+        // Every job at t=0 — exercises the batched-arrival path.
+        let s = sim(
+            KubeletConfig::cpu_mem_affinity(),
+            GranularityPolicy::Granularity,
+            SchedulerConfig::fine_grained(3),
+        );
+        let trace: Vec<JobSpec> =
+            (1..=12).map(|i| JobSpec::paper_job(i, Benchmark::MiniFe, 0.0)).collect();
+        let out = s.run(&trace);
+        assert_eq!(out.records.len(), 12);
+        // 12 × 16 cores > 128-core cluster: at least 4 jobs must wait.
+        let waited = out.records.iter().filter(|r| r.wait() > 1.0).count();
+        assert!(waited >= 4, "waited={waited}");
+    }
+
+    #[test]
+    fn none_scenario_has_run_to_run_variance_across_jobs() {
+        let s = sim(
+            KubeletConfig::default_policy(),
+            GranularityPolicy::None,
+            SchedulerConfig::volcano_default(6),
+        );
+        let trace: Vec<JobSpec> = (1..=4)
+            .map(|i| JobSpec::paper_job(i, Benchmark::EpDgemm, (i - 1) as f64 * 2000.0))
+            .collect();
+        let out = s.run(&trace);
+        let times: Vec<f64> = out.records.iter().map(JobRecord::running).collect();
+        let min = times.iter().copied().fold(f64::INFINITY, f64::min);
+        let max = times.iter().copied().fold(0.0, f64::max);
+        assert!(max - min > 1.0, "shared-pool variance expected: {times:?}");
+    }
+}

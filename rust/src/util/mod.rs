@@ -1,0 +1,10 @@
+//! Self-built substrate utilities (the offline registry carries only the
+//! `xla` closure, so RNG, JSON, stats/bench live here — see DESIGN.md).
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use stats::{BenchTimer, Summary};

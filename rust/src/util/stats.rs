@@ -1,0 +1,153 @@
+//! Small statistics helpers shared by the metrics module and the bench
+//! harness (the vendored registry has no `criterion`; rust/benches uses
+//! [`BenchTimer`] instead — same warmup/measure/report discipline).
+
+use std::time::Instant;
+
+/// Summary statistics over a sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn from(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "Summary::from(empty)");
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            p50: percentile(&sorted, 0.50),
+            p95: percentile(&sorted, 0.95),
+            max: sorted[n - 1],
+        }
+    }
+}
+
+/// Linear-interpolated percentile over a pre-sorted slice, q in [0, 1].
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Minimal bench harness: warmup, timed iterations, Summary of per-iter
+/// seconds. Used by every target in rust/benches (harness = false).
+pub struct BenchTimer {
+    pub name: String,
+    pub warmup_iters: usize,
+    pub iters: usize,
+}
+
+impl BenchTimer {
+    pub fn new(name: &str) -> Self {
+        BenchTimer { name: name.to_string(), warmup_iters: 2, iters: 10 }
+    }
+
+    pub fn with_iters(mut self, warmup: usize, iters: usize) -> Self {
+        self.warmup_iters = warmup;
+        self.iters = iters;
+        self
+    }
+
+    /// Run `f` warmup+measured times; returns per-iteration seconds summary
+    /// and prints one criterion-style line.
+    pub fn run<F: FnMut()>(&self, mut f: F) -> Summary {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let s = Summary::from(&samples);
+        println!(
+            "bench {:<40} mean {:>12} p50 {:>12} p95 {:>12} (n={})",
+            self.name,
+            fmt_secs(s.mean),
+            fmt_secs(s.p50),
+            fmt_secs(s.p95),
+            s.n
+        );
+        s
+    }
+}
+
+/// Human duration formatting (ns/µs/ms/s).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::from(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.p50 - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [10.0, 20.0, 30.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 1.0), 30.0);
+        assert!((percentile(&xs, 0.5) - 20.0).abs() < 1e-12);
+        assert!((percentile(&xs, 0.25) - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_single_element() {
+        assert_eq!(percentile(&[5.0], 0.95), 5.0);
+    }
+
+    #[test]
+    fn bench_timer_runs() {
+        let mut count = 0;
+        let s = BenchTimer::new("noop").with_iters(1, 3).run(|| count += 1);
+        assert_eq!(count, 4);
+        assert_eq!(s.n, 3);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert!(fmt_secs(5e-9).ends_with("ns"));
+        assert!(fmt_secs(5e-6).ends_with("µs"));
+        assert!(fmt_secs(5e-3).ends_with("ms"));
+        assert!(fmt_secs(5.0).ends_with(" s"));
+    }
+}

@@ -1,0 +1,243 @@
+//! The paper's benchmark catalogue (§V-B): HPC Challenge EP-DGEMM,
+//! EP-STREAM, G-FFT, G-RandomRing Bandwidth, and the MiniFE proxy app.
+//!
+//! Each benchmark carries the application profile the Scanflow planner
+//! reads (Algorithm 1) and the resource-demand coefficients the performance
+//! model uses. The *compute payload* of each benchmark is the AOT-compiled
+//! Pallas kernel of the same name (see python/compile and rust/src/runtime).
+
+use std::fmt;
+
+/// Application profile — the classification the planner agent consumes.
+/// (Paper: network-, CPU-, memory-intensive; MiniFE is CPU+memory.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Profile {
+    Cpu,
+    Memory,
+    Network,
+    CpuMemory,
+}
+
+impl Profile {
+    /// Algorithm 1 branches on "network" vs "CPU || memory".
+    pub fn is_network(&self) -> bool {
+        matches!(self, Profile::Network)
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Profile::Cpu => "cpu",
+            Profile::Memory => "memory",
+            Profile::Network => "network",
+            Profile::CpuMemory => "cpu+memory",
+        }
+    }
+
+    /// Parse the manifest/profile string emitted by python/compile/aot.py.
+    pub fn parse(s: &str) -> Option<Profile> {
+        match s {
+            "cpu" => Some(Profile::Cpu),
+            "memory" => Some(Profile::Memory),
+            "network" => Some(Profile::Network),
+            "cpu+memory" => Some(Profile::CpuMemory),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Benchmark {
+    EpDgemm,
+    EpStream,
+    GFft,
+    GRandomRing,
+    MiniFe,
+}
+
+pub const ALL_BENCHMARKS: [Benchmark; 5] = [
+    Benchmark::EpDgemm,
+    Benchmark::EpStream,
+    Benchmark::GFft,
+    Benchmark::GRandomRing,
+    Benchmark::MiniFe,
+];
+
+/// Per-benchmark MPI profile — the data behind the paper's Fig. 3.
+#[derive(Debug, Clone, Copy)]
+pub struct MpiProfile {
+    /// Fraction of (well-placed, single-node) runtime spent in MPI calls.
+    pub comm_fraction: f64,
+    /// Dominant MPI operation, as Fig. 3 reports.
+    pub dominant_op: &'static str,
+    /// Fraction of MPI time that is global/collective (vs point-to-point).
+    pub collective_share: f64,
+}
+
+impl Benchmark {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Benchmark::EpDgemm => "EP-DGEMM",
+            Benchmark::EpStream => "EP-STREAM",
+            Benchmark::GFft => "G-FFT",
+            Benchmark::GRandomRing => "G-RandomRing",
+            Benchmark::MiniFe => "MiniFE",
+        }
+    }
+
+    /// Artifact key (matches python/compile/model.py SPECS and
+    /// artifacts/manifest.json).
+    pub fn artifact(&self) -> &'static str {
+        match self {
+            Benchmark::EpDgemm => "dgemm",
+            Benchmark::EpStream => "stream",
+            Benchmark::GFft => "fft",
+            Benchmark::GRandomRing => "ring",
+            Benchmark::MiniFe => "minife",
+        }
+    }
+
+    pub fn from_artifact(s: &str) -> Option<Benchmark> {
+        ALL_BENCHMARKS.iter().copied().find(|b| b.artifact() == s)
+    }
+
+    /// Application profile (paper §V-B): EP-DGEMM is CPU-intensive,
+    /// EP-STREAM memory-bandwidth-intensive, G-FFT and G-RandomRing
+    /// network-intensive, MiniFE memory+CPU-intensive.
+    pub fn profile(&self) -> Profile {
+        match self {
+            Benchmark::EpDgemm => Profile::Cpu,
+            Benchmark::EpStream => Profile::Memory,
+            Benchmark::GFft => Profile::Network,
+            Benchmark::GRandomRing => Profile::Network,
+            Benchmark::MiniFe => Profile::CpuMemory,
+        }
+    }
+
+    /// MPI profile behind Fig. 3. Communication fractions follow the
+    /// paper's classification (and [12]): throughput benchmarks barely
+    /// communicate; G-FFT/G-RandomRing are dominated by global exchange;
+    /// MiniFE has Allreduce that scales without much latency ([27]).
+    pub fn mpi_profile(&self) -> MpiProfile {
+        match self {
+            Benchmark::EpDgemm => MpiProfile {
+                comm_fraction: 0.02,
+                dominant_op: "MPI_Allreduce(8B)",
+                collective_share: 0.9,
+            },
+            Benchmark::EpStream => MpiProfile {
+                comm_fraction: 0.03,
+                dominant_op: "MPI_Allreduce(8B)",
+                collective_share: 0.9,
+            },
+            Benchmark::GFft => MpiProfile {
+                comm_fraction: 0.55,
+                dominant_op: "MPI_Alltoall(large)",
+                collective_share: 0.85,
+            },
+            Benchmark::GRandomRing => MpiProfile {
+                comm_fraction: 0.65,
+                dominant_op: "MPI_Sendrecv(ring)",
+                collective_share: 0.1,
+            },
+            Benchmark::MiniFe => MpiProfile {
+                comm_fraction: 0.12,
+                dominant_op: "MPI_Allreduce(dot)",
+                collective_share: 0.7,
+            },
+        }
+    }
+
+    /// Ideal (uncontended, best-placement) running time in seconds for the
+    /// paper's 16-task configuration. Calibrated to the Exp-2 scale
+    /// (makespan ≈ 2500 s for 20 jobs on 4 nodes — see perfmodel::calib).
+    pub fn base_running_secs(&self) -> f64 {
+        match self {
+            Benchmark::EpDgemm => 600.0,
+            Benchmark::EpStream => 480.0,
+            Benchmark::GFft => 400.0,
+            Benchmark::GRandomRing => 320.0,
+            Benchmark::MiniFe => 720.0,
+        }
+    }
+
+    /// Sustained memory-bandwidth demand per MPI task, bytes/s. Feeds the
+    /// per-socket bandwidth-contention model. STREAM tasks each demand
+    /// ~6 GB/s (16 tasks nearly saturate one 2697v4 socket, paper [12]).
+    pub fn membw_demand_per_task(&self) -> f64 {
+        match self {
+            Benchmark::EpDgemm => 0.8e9,
+            Benchmark::EpStream => 6.5e9,
+            Benchmark::GFft => 1.2e9,
+            Benchmark::GRandomRing => 0.6e9,
+            Benchmark::MiniFe => 2.6e9,
+        }
+    }
+
+    /// Bytes each task exchanges per second of communication phase —
+    /// drives the Hockney network model (perfmodel::network).
+    pub fn comm_bytes_per_task(&self) -> f64 {
+        match self {
+            Benchmark::EpDgemm => 1.0e5,
+            Benchmark::EpStream => 1.0e5,
+            Benchmark::GFft => 8.0e7,
+            Benchmark::GRandomRing => 3.0e8,
+            Benchmark::MiniFe => 1.0e5,
+        }
+    }
+}
+
+impl fmt::Display for Benchmark {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_match_paper_classification() {
+        assert_eq!(Benchmark::EpDgemm.profile(), Profile::Cpu);
+        assert_eq!(Benchmark::EpStream.profile(), Profile::Memory);
+        assert_eq!(Benchmark::GFft.profile(), Profile::Network);
+        assert_eq!(Benchmark::GRandomRing.profile(), Profile::Network);
+        assert_eq!(Benchmark::MiniFe.profile(), Profile::CpuMemory);
+    }
+
+    #[test]
+    fn artifact_round_trip() {
+        for b in ALL_BENCHMARKS {
+            assert_eq!(Benchmark::from_artifact(b.artifact()), Some(b));
+        }
+        assert_eq!(Benchmark::from_artifact("nope"), None);
+    }
+
+    #[test]
+    fn profile_parse_round_trip() {
+        for p in [Profile::Cpu, Profile::Memory, Profile::Network, Profile::CpuMemory] {
+            assert_eq!(Profile::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(Profile::parse("io"), None);
+    }
+
+    #[test]
+    fn network_benchmarks_have_high_comm_fraction() {
+        for b in ALL_BENCHMARKS {
+            let cf = b.mpi_profile().comm_fraction;
+            if b.profile().is_network() {
+                assert!(cf > 0.4, "{b}: {cf}");
+            } else {
+                assert!(cf < 0.2, "{b}: {cf}");
+            }
+        }
+    }
+
+    #[test]
+    fn stream_nearly_saturates_a_socket() {
+        let demand = 16.0 * Benchmark::EpStream.membw_demand_per_task();
+        let socket = 76.8e9;
+        assert!(demand > socket, "16 STREAM tasks must oversubscribe one socket");
+        assert!(demand < 1.5 * socket);
+    }
+}

@@ -1,0 +1,90 @@
+//! MPI job specifications — what the user submits to Scanflow.
+//!
+//! Mirrors the paper's notation (Table I): a Job fixes `N_t` (the number of
+//! MPI processes, as in `mpirun -np 16`) and per-job resource
+//! requirements/limits `R(cpu, memory)`; the planner agent later fills in
+//! the granularity (`N_w`, `N_g`, `N_n`).
+
+use crate::cluster::{gib, JobId, Resources};
+
+use super::benchmark::Benchmark;
+
+/// User-facing job specification.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub id: JobId,
+    pub name: String,
+    pub benchmark: Benchmark,
+    /// `N_t`: number of MPI tasks (fixed by the user).
+    pub ntasks: u32,
+    /// Total job resources `R(cpu, memory)` — the paper runs
+    /// exactly-subscribed: one core per task.
+    pub resources: Resources,
+    /// Submission time (seconds since experiment start).
+    pub submit_time: f64,
+    /// User-provided default worker count (used when no granularity policy
+    /// is active; the paper's default deployments use a single worker).
+    pub default_workers: u32,
+}
+
+impl JobSpec {
+    /// The paper's standard job: 16 tasks, exactly-subscribed (16 cores),
+    /// 2 GiB per task.
+    pub fn paper_job(id: u64, benchmark: Benchmark, submit_time: f64) -> JobSpec {
+        let ntasks = 16;
+        JobSpec {
+            id: JobId(id),
+            name: format!("{}-{}", benchmark.artifact(), id),
+            benchmark,
+            ntasks,
+            resources: Resources::new(ntasks as u64 * 1000, ntasks as u64 * gib(2)),
+            submit_time,
+            default_workers: 1,
+        }
+    }
+
+    /// Per-task resource share `R / N_t` (Algorithm 2 step 1).
+    pub fn per_task_resources(&self) -> Resources {
+        self.resources.scaled(1, self.ntasks as u64)
+    }
+}
+
+/// Granularity decision produced by the planner agent (Algorithm 1 output):
+/// the updated job metadata `(N_n, N_w, N_g)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Granularity {
+    /// `N_n`: number of nodes the job should span.
+    pub n_nodes: u32,
+    /// `N_w`: number of worker pods.
+    pub n_workers: u32,
+    /// `N_g`: number of task groups (for the task-group plugin).
+    pub n_groups: u32,
+}
+
+/// A job after planning: spec + granularity, ready for the job controller.
+#[derive(Debug, Clone)]
+pub struct PlannedJob {
+    pub spec: JobSpec,
+    pub granularity: Granularity,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_job_is_exactly_subscribed() {
+        let j = JobSpec::paper_job(1, Benchmark::EpDgemm, 0.0);
+        assert_eq!(j.ntasks, 16);
+        assert_eq!(j.resources.cpu_milli, 16_000);
+        assert_eq!(j.per_task_resources(), Resources::new(1000, gib(2)));
+        assert_eq!(j.default_workers, 1);
+    }
+
+    #[test]
+    fn job_names_are_unique_per_id() {
+        let a = JobSpec::paper_job(1, Benchmark::GFft, 0.0);
+        let b = JobSpec::paper_job(2, Benchmark::GFft, 0.0);
+        assert_ne!(a.name, b.name);
+    }
+}

@@ -1,0 +1,12 @@
+//! Workload substrate: the paper's benchmark catalogue, MPI job specs, and
+//! the experiment trace generators (Exp 1–3).
+
+pub mod benchmark;
+pub mod extensions;
+pub mod job;
+pub mod trace;
+
+pub use benchmark::{Benchmark, MpiProfile, Profile, ALL_BENCHMARKS};
+pub use extensions::{mixed_hpc_ai_trace, ExtBenchmark};
+pub use job::{Granularity, JobSpec, PlannedJob};
+pub use trace::{exp1_trace, exp2_trace, exp3_trace, uniform_trace};

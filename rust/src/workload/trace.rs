@@ -1,0 +1,121 @@
+//! Workload trace generators for the paper's three experiments.
+
+use crate::util::Rng;
+
+use super::benchmark::{Benchmark, ALL_BENCHMARKS};
+use super::job::JobSpec;
+
+/// Experiment 1 (§V-C): 10 EP-DGEMM jobs, arrival interval 60 s.
+pub fn exp1_trace() -> Vec<JobSpec> {
+    (0..10)
+        .map(|i| JobSpec::paper_job(i + 1, Benchmark::EpDgemm, i as f64 * 60.0))
+        .collect()
+}
+
+/// Experiment 2 (§V-D): 20 jobs — each of the five benchmarks four times,
+/// in a random sequence, with submission times drawn uniformly from
+/// [0, 1200] s. Fully determined by `seed`.
+pub fn exp2_trace(seed: u64) -> Vec<JobSpec> {
+    let mut rng = Rng::seed_from_u64(seed);
+    // Four instances of each benchmark ...
+    let mut benches: Vec<Benchmark> = ALL_BENCHMARKS
+        .iter()
+        .flat_map(|&b| std::iter::repeat(b).take(4))
+        .collect();
+    // ... in a random sequence,
+    rng.shuffle(&mut benches);
+    // ... with random submission times in [0, 1200].
+    let mut times: Vec<f64> = (0..benches.len()).map(|_| rng.range_f64(0.0, 1200.0)).collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    benches
+        .into_iter()
+        .zip(times)
+        .enumerate()
+        .map(|(i, (bench, t))| JobSpec::paper_job(i as u64 + 1, bench, t))
+        .collect()
+}
+
+/// Experiment 3 (§V-E) reuses the Experiment-2 trace ("other settings are
+/// the same as experiment 2").
+pub fn exp3_trace(seed: u64) -> Vec<JobSpec> {
+    exp2_trace(seed)
+}
+
+/// Scalability ablation: `n` jobs sampled uniformly over the benchmark set
+/// with Poisson-ish arrivals of the given mean interval.
+pub fn uniform_trace(n: usize, mean_interval: f64, seed: u64) -> Vec<JobSpec> {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut t = 0.0;
+    (0..n)
+        .map(|i| {
+            let bench = ALL_BENCHMARKS[rng.range_usize(0, ALL_BENCHMARKS.len())];
+            // Exponential inter-arrival via inverse CDF.
+            t += -mean_interval * (1.0 - rng.f64()).ln();
+            JobSpec::paper_job(i as u64 + 1, bench, t)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp1_shape() {
+        let t = exp1_trace();
+        assert_eq!(t.len(), 10);
+        assert!(t.iter().all(|j| j.benchmark == Benchmark::EpDgemm));
+        assert_eq!(t[0].submit_time, 0.0);
+        assert_eq!(t[9].submit_time, 540.0);
+    }
+
+    #[test]
+    fn exp2_has_four_of_each_benchmark() {
+        let t = exp2_trace(42);
+        assert_eq!(t.len(), 20);
+        for b in ALL_BENCHMARKS {
+            assert_eq!(t.iter().filter(|j| j.benchmark == b).count(), 4, "{b}");
+        }
+    }
+
+    #[test]
+    fn exp2_times_sorted_within_window() {
+        let t = exp2_trace(42);
+        for w in t.windows(2) {
+            assert!(w[0].submit_time <= w[1].submit_time);
+        }
+        assert!(t.iter().all(|j| (0.0..=1200.0).contains(&j.submit_time)));
+    }
+
+    #[test]
+    fn exp2_deterministic_per_seed() {
+        let a = exp2_trace(7);
+        let b = exp2_trace(7);
+        let c = exp2_trace(8);
+        assert_eq!(
+            a.iter().map(|j| (j.benchmark, j.submit_time.to_bits())).collect::<Vec<_>>(),
+            b.iter().map(|j| (j.benchmark, j.submit_time.to_bits())).collect::<Vec<_>>()
+        );
+        assert_ne!(
+            a.iter().map(|j| (j.benchmark, j.submit_time.to_bits())).collect::<Vec<_>>(),
+            c.iter().map(|j| (j.benchmark, j.submit_time.to_bits())).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn exp2_ids_unique_and_ordered() {
+        let t = exp2_trace(3);
+        for (i, j) in t.iter().enumerate() {
+            assert_eq!(j.id.0, i as u64 + 1);
+        }
+    }
+
+    #[test]
+    fn uniform_trace_monotone_arrivals() {
+        let t = uniform_trace(50, 30.0, 9);
+        assert_eq!(t.len(), 50);
+        for w in t.windows(2) {
+            assert!(w[0].submit_time <= w[1].submit_time);
+        }
+    }
+}

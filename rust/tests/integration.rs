@@ -1,0 +1,189 @@
+//! Integration tests: the full pipeline (planner -> controller ->
+//! scheduler -> kubelet -> simulator -> metrics) across scenarios, plus
+//! regression checks on the paper's headline results at the default seed.
+
+use kube_fgs::apiserver::JobPhase;
+use kube_fgs::cluster::PodPhase;
+use kube_fgs::experiments::{self, DEFAULT_SEED};
+use kube_fgs::metrics::ExperimentMetrics;
+use kube_fgs::scenario::{Scenario, EXP3_SCENARIOS, TABLE2_SCENARIOS};
+use kube_fgs::workload::{exp1_trace, exp2_trace, Benchmark, ALL_BENCHMARKS};
+
+#[test]
+fn every_scenario_completes_exp2_and_conserves_resources() {
+    let trace = exp2_trace(DEFAULT_SEED);
+    for scenario in TABLE2_SCENARIOS.iter().chain(EXP3_SCENARIOS.iter()) {
+        let out = experiments::run_scenario(*scenario, &trace, DEFAULT_SEED, None);
+        assert_eq!(out.records.len(), 20, "{scenario}");
+        // Every job succeeded, every pod succeeded, all resources returned.
+        for job in out.api.jobs.values() {
+            assert_eq!(job.phase, JobPhase::Succeeded, "{scenario}");
+        }
+        for pod in out.api.pods.values() {
+            assert_eq!(pod.phase, PodPhase::Succeeded, "{scenario}");
+            assert!(pod.node.is_some(), "{scenario}");
+        }
+        for n in out.api.spec.node_ids() {
+            assert_eq!(
+                out.api.free_on(n),
+                out.api.spec.node(n).allocatable(),
+                "{scenario}: node {n:?} leaked resources"
+            );
+        }
+        // Time identities.
+        for r in &out.records {
+            assert!(r.start_time >= r.submit_time - 1e-9, "{scenario}");
+            assert!(r.finish_time > r.start_time, "{scenario}");
+        }
+    }
+}
+
+#[test]
+fn paper_headline_shape_exp1() {
+    // Fig. 5: fine-grained policies beat the baselines; granularity beats
+    // scale; everything beats NONE.
+    let results = experiments::exp1_all_scenarios(DEFAULT_SEED);
+    let get = |name: &str| {
+        results
+            .iter()
+            .find(|(s, _)| s.name() == name)
+            .map(|(_, m)| m.overall_response)
+            .unwrap()
+    };
+    assert!(get("CM") < get("NONE"));
+    assert!(get("CM_S") < get("CM"));
+    assert!(get("CM_G") < get("CM_S"));
+    // TG does not help DGEMM-only workloads (paper: "TG incurs no
+    // significant benefit for DGEMM") — within 3%.
+    assert!((get("CM_S_TG") / get("CM_S") - 1.0).abs() < 0.03);
+    assert!((get("CM_G_TG") / get("CM_G") - 1.0).abs() < 0.03);
+}
+
+#[test]
+fn paper_headline_shape_exp2() {
+    let results = experiments::exp2_all_scenarios(DEFAULT_SEED);
+    let get = |name: &str| results.iter().find(|(s, _)| s.name() == name).unwrap();
+    let resp = |name: &str| get(name).1.overall_response;
+    let mk = |name: &str| get(name).1.makespan;
+
+    // Overall response: CM_G_TG reduces vs NONE by ~35% and vs CM by
+    // 10-25% (paper: 35% / 19%).
+    let vs_none = 1.0 - resp("CM_G_TG") / resp("NONE");
+    let vs_cm = 1.0 - resp("CM_G_TG") / resp("CM");
+    assert!((0.25..0.45).contains(&vs_none), "vs NONE: {vs_none}");
+    assert!((0.05..0.30).contains(&vs_cm), "vs CM: {vs_cm}");
+
+    // Makespan: CM_G_TG improves vs NONE (paper 34%) and vs CM (paper 11%).
+    assert!(mk("CM_G_TG") < mk("CM"), "TG must improve makespan over CM");
+    assert!(mk("CM_G_TG") < mk("NONE"));
+
+    // Granularity policies help CPU- and memory-intensive benchmarks...
+    for bench in [Benchmark::EpDgemm, Benchmark::EpStream] {
+        let cm = get("CM").1.avg_running[&bench];
+        let cm_g = get("CM_G").1.avg_running[&bench];
+        assert!(cm_g < cm, "{bench}: CM_G {cm_g} !< CM {cm}");
+    }
+    // ... but have no significant effect on network-intensive ones.
+    for bench in [Benchmark::GFft, Benchmark::GRandomRing] {
+        let cm = get("CM").1.avg_running[&bench];
+        let cm_g = get("CM_G").1.avg_running[&bench];
+        assert!((cm_g / cm - 1.0).abs() < 0.05, "{bench}: {cm} vs {cm_g}");
+    }
+}
+
+#[test]
+fn paper_headline_shape_exp3() {
+    let results = experiments::exp3_all_scenarios(DEFAULT_SEED);
+    let get = |name: &str| results.iter().find(|(s, _)| s.name() == name).unwrap();
+    // Kubeflow ~ CM (both: affinity + default-ish scheduling, no split).
+    let kubeflow = get("Kubeflow").1.makespan;
+    let cm = get("CM").1.makespan;
+    assert!((kubeflow / cm - 1.0).abs() < 0.10, "{kubeflow} vs {cm}");
+    // Native Volcano blows up by an order of magnitude+ (paper: 48.7x).
+    let volcano = get("Volcano").1.makespan;
+    assert!(volcano > 10.0 * cm, "Volcano {volcano} vs CM {cm}");
+    // The blow-up comes from network-intensive jobs.
+    let vol_metrics = &get("Volcano").1;
+    let worst = vol_metrics
+        .per_job
+        .iter()
+        .max_by(|a, b| a.running().partial_cmp(&b.running()).unwrap())
+        .unwrap();
+    assert!(worst.benchmark.profile().is_network());
+    // Fine-grained wins overall.
+    assert!(get("CM_G_TG").1.makespan < cm);
+}
+
+#[test]
+fn exp1_trace_queueing_is_visible_in_waits() {
+    // 10 jobs, 60 s apart, ~600 s each, 8 slots: later jobs must queue.
+    let out = experiments::run_scenario(Scenario::Cm, &exp1_trace(), DEFAULT_SEED, None);
+    let m = ExperimentMetrics::from(&out);
+    assert!(m.avg_wait > 0.0, "expected queueing in exp1");
+}
+
+#[test]
+fn reproducible_across_identical_runs() {
+    let a = experiments::run_scenario(Scenario::CmGTg, &exp2_trace(7), 7, None);
+    let b = experiments::run_scenario(Scenario::CmGTg, &exp2_trace(7), 7, None);
+    let key = |o: &kube_fgs::simulator::SimOutput| {
+        o.records
+            .iter()
+            .map(|r| (r.id, r.finish_time.to_bits()))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(key(&a), key(&b));
+}
+
+#[test]
+fn granularity_scenarios_place_single_task_containers() {
+    let out = experiments::run_scenario(Scenario::CmGTg, &exp2_trace(3), 3, None);
+    for job in out.api.jobs.values() {
+        let bench = job.planned.spec.benchmark;
+        let workers: Vec<_> = job
+            .pods
+            .iter()
+            .map(|p| &out.api.pods[p])
+            .filter(|p| p.is_worker())
+            .collect();
+        if bench.profile().is_network() {
+            assert_eq!(workers.len(), 1, "network job stays whole");
+            assert_eq!(workers[0].ntasks, 16);
+        } else {
+            assert_eq!(workers.len(), 16, "cpu/mem job fully split");
+            assert!(workers.iter().all(|w| w.ntasks == 1));
+            // Task-group: 16 workers in 4 cohesive groups of 4. Each
+            // group's workers stay on one node (affinity); groups prefer
+            // distinct nodes but may share one under capacity pressure
+            // from co-located jobs (anti-affinity is a score, not a hard
+            // constraint).
+            let mut group_nodes = std::collections::BTreeMap::new();
+            for w in &workers {
+                group_nodes
+                    .entry(w.group.expect("worker without group"))
+                    .or_insert_with(std::collections::BTreeSet::new)
+                    .insert(w.node.unwrap());
+            }
+            assert_eq!(group_nodes.len(), 4, "{}", job.planned.spec.name);
+            for (g, nodes) in &group_nodes {
+                assert_eq!(
+                    nodes.len(),
+                    1,
+                    "{}: group {g} split across {nodes:?}",
+                    job.planned.spec.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn all_benchmarks_appear_in_fig6() {
+    let results = experiments::exp2_all_scenarios(DEFAULT_SEED);
+    for (_, m) in &results {
+        for b in ALL_BENCHMARKS {
+            assert!(m.avg_running.contains_key(&b));
+            assert!(m.avg_running[&b] > 0.0);
+        }
+    }
+}

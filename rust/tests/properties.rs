@@ -1,0 +1,263 @@
+//! Property-based tests on coordinator invariants.
+//!
+//! The offline registry has no `proptest`, so these are randomized-input
+//! property tests driven by the crate's own seeded RNG: each property is
+//! checked over hundreds of generated cases, and any failure prints the
+//! case seed for replay (the substitute for proptest shrinking).
+
+use kube_fgs::cluster::{gib, ClusterSpec, JobId, NodeSpec, Pod, PodId, PodRole, Resources};
+use kube_fgs::controller::mpi_aware::allocate_tasks;
+use kube_fgs::kubelet::{CpuManagerPolicy, CpuManagerState, TopologyPolicy};
+use kube_fgs::perfmodel::{job_slowdown, Calibration};
+use kube_fgs::planner::{plan, GranularityPolicy, SystemInfo};
+use kube_fgs::scheduler::taskgroup::build_groups;
+use kube_fgs::scenario::Scenario;
+use kube_fgs::util::Rng;
+use kube_fgs::workload::{uniform_trace, Benchmark, JobSpec, ALL_BENCHMARKS};
+
+const CASES: usize = 300;
+
+/// Property: RoundRobin task allocation conserves N_t and balances within 1.
+#[test]
+fn prop_allocate_tasks_conserves_and_balances() {
+    let mut rng = Rng::seed_from_u64(101);
+    for case in 0..CASES {
+        let nt = rng.range_usize(1, 129) as u32;
+        let nw = rng.range_usize(1, 65) as u32;
+        let counts = allocate_tasks(nt, nw);
+        assert_eq!(counts.iter().sum::<u32>(), nt, "case {case}: nt={nt} nw={nw}");
+        let (max, min) = (counts.iter().max().unwrap(), counts.iter().min().unwrap());
+        assert!(max - min <= 1, "case {case}: {counts:?}");
+    }
+}
+
+/// Property: task-group construction is balanced (sizes differ by <= 1 for
+/// equal workers) and covers every worker exactly once.
+#[test]
+fn prop_taskgroups_balanced_partition() {
+    let mut rng = Rng::seed_from_u64(202);
+    for case in 0..CASES {
+        let n = rng.range_usize(1, 65);
+        let k = rng.range_usize(1, 17);
+        let pods: Vec<Pod> = (0..n)
+            .map(|i| {
+                let mut p = Pod::new(
+                    PodId(i as u64),
+                    JobId(1),
+                    format!("w{i}"),
+                    PodRole::Worker { index: i as u32 },
+                );
+                p.requests = Resources::new(1000, gib(2));
+                p
+            })
+            .collect();
+        let refs: Vec<&Pod> = pods.iter().collect();
+        let groups = build_groups(&refs, k);
+        let sizes: Vec<usize> = groups.iter().map(|g| g.workers.len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), n, "case {case}");
+        let max = sizes.iter().max().unwrap();
+        let min = sizes.iter().min().unwrap();
+        assert!(max - min <= 1, "case {case}: n={n} k={k} {sizes:?}");
+        let mut all: Vec<u64> = groups.iter().flat_map(|g| g.workers.iter().map(|p| p.0)).collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), n, "case {case}: duplicate/missing workers");
+    }
+}
+
+/// Property: the static CPU manager never double-allocates a CPU, never
+/// exceeds capacity, and release restores the exact free count.
+#[test]
+fn prop_cpu_manager_exclusive_and_conserving() {
+    let mut rng = Rng::seed_from_u64(303);
+    for case in 0..CASES {
+        let spec = NodeSpec::paper_worker("w");
+        let topo = if rng.f64() < 0.5 { TopologyPolicy::BestEffort } else { TopologyPolicy::None };
+        let mut st = CpuManagerState::new(&spec, CpuManagerPolicy::Static, topo);
+        let mut granted: Vec<kube_fgs::cluster::CpuSet> = Vec::new();
+        // Random allocate/release churn.
+        for _ in 0..rng.range_usize(1, 40) {
+            if granted.is_empty() || rng.f64() < 0.6 {
+                let want = rng.range_usize(1, 17) as u32;
+                if let Some(a) = st.allocate(want) {
+                    if let Some(cs) = a.cpuset() {
+                        // Exclusivity: disjoint from every live grant.
+                        for g in &granted {
+                            assert!(cs.is_disjoint(g), "case {case}: overlap");
+                        }
+                        granted.push(cs.clone());
+                    }
+                }
+            } else {
+                let i = rng.range_usize(0, granted.len());
+                let cs = granted.swap_remove(i);
+                st.release(&spec, &cs);
+            }
+            let live: usize = granted.iter().map(|g| g.len()).sum();
+            assert_eq!(st.free_total() + live, 32, "case {case}: leak");
+        }
+    }
+}
+
+/// Property: Algorithm 1 always yields a feasible granularity — workers
+/// within [1, N_t], nodes within [1, available], groups <= workers, and
+/// network jobs are never split.
+#[test]
+fn prop_planner_feasible_granularity() {
+    let mut rng = Rng::seed_from_u64(404);
+    let policies = [GranularityPolicy::None, GranularityPolicy::Scale, GranularityPolicy::Granularity];
+    for case in 0..CASES {
+        let bench = ALL_BENCHMARKS[rng.range_usize(0, 5)];
+        let mut spec = JobSpec::paper_job(1, bench, 0.0);
+        spec.ntasks = rng.range_usize(1, 65) as u32;
+        spec.default_workers = rng.range_usize(1, 17) as u32;
+        let info = SystemInfo { available_nodes: rng.range_usize(0, 17) as u32 };
+        let policy = policies[rng.range_usize(0, 3)];
+        let g = plan(&spec, policy, info).granularity;
+        assert!(g.n_workers >= 1 && g.n_workers <= spec.ntasks.max(spec.default_workers), "case {case}: {g:?}");
+        assert!(g.n_nodes >= 1, "case {case}");
+        assert!(g.n_groups >= 1 && g.n_groups <= g.n_workers.max(g.n_nodes), "case {case}: {g:?}");
+        if bench.profile().is_network() && policy != GranularityPolicy::None {
+            assert_eq!(g.n_workers, 1, "case {case}: network job split");
+        }
+    }
+}
+
+/// Property: simulation conservation — every submitted job finishes exactly
+/// once, response = wait + run, resources fully returned — across random
+/// scenarios, traces, and seeds.
+#[test]
+fn prop_simulation_conservation() {
+    let scenarios = [
+        Scenario::None_,
+        Scenario::Cm,
+        Scenario::CmS,
+        Scenario::CmG,
+        Scenario::CmSTg,
+        Scenario::CmGTg,
+        Scenario::Kubeflow,
+        Scenario::VolcanoNative,
+    ];
+    let mut rng = Rng::seed_from_u64(505);
+    for case in 0..40 {
+        let scenario = scenarios[rng.range_usize(0, scenarios.len())];
+        let n_jobs = rng.range_usize(1, 25);
+        let interval = rng.range_f64(10.0, 200.0);
+        let seed = rng.next_u64();
+        let trace = uniform_trace(n_jobs, interval, seed);
+        let out = experiments_run(scenario, &trace, seed);
+        assert_eq!(out.records.len(), n_jobs, "case {case} {scenario}");
+        let mut seen = std::collections::BTreeSet::new();
+        for r in &out.records {
+            assert!(seen.insert(r.id), "case {case}: duplicate record");
+            assert!(r.finish_time > r.submit_time, "case {case}");
+            assert!((r.response() - (r.wait() + r.running())).abs() < 1e-9);
+        }
+        for n in out.api.spec.node_ids() {
+            assert_eq!(out.api.free_on(n), out.api.spec.node(n).allocatable(), "case {case}");
+        }
+    }
+}
+
+fn experiments_run(
+    scenario: Scenario,
+    trace: &[JobSpec],
+    seed: u64,
+) -> kube_fgs::simulator::SimOutput {
+    kube_fgs::experiments::run_scenario(scenario, trace, seed, None)
+}
+
+/// Property: perf-model monotonicity — a job's slowdown is never below 1,
+/// and network jobs never beat their single-container placement when
+/// scattered.
+#[test]
+fn prop_perfmodel_slowdown_at_least_one() {
+    let mut rng = Rng::seed_from_u64(606);
+    for case in 0..60 {
+        let scenario = [Scenario::Cm, Scenario::CmGTg, Scenario::VolcanoNative]
+            [rng.range_usize(0, 3)];
+        let n_jobs = rng.range_usize(1, 9);
+        let seed = rng.next_u64();
+        let trace = uniform_trace(n_jobs, 1.0, seed);
+        // Build a running cluster snapshot by driving a simulation's first
+        // scheduling cycle manually.
+        let mut sim_api = kube_fgs::apiserver::ApiServer::new(
+            ClusterSpec::paper(),
+            scenario.kubelet(),
+        );
+        let controller = scenario.controller();
+        let info = SystemInfo { available_nodes: 4 };
+        for spec in &trace {
+            let planned = plan(spec, scenario.policy(), info);
+            let (pods, hostfile) = controller.build(&planned, &mut sim_api);
+            sim_api.create_job(planned, pods, hostfile, 0.0);
+        }
+        let mut sched = kube_fgs::scheduler::Scheduler::new(scenario.scheduler(seed));
+        let started = sched.cycle(&mut sim_api, 0.0);
+        let calib = Calibration::default();
+        for job in started {
+            let s = job_slowdown(&sim_api, job, &calib, 1.0);
+            assert!(s.total >= 1.0 - 1e-9, "case {case}: slowdown {s:?}");
+            assert!(s.compute >= 1.0 - 1e-9, "case {case}");
+            assert!(s.comm >= 1.0 - 1e-9, "case {case}");
+        }
+    }
+}
+
+/// Property: a benchmark's running time under CM_G_TG is never worse than
+/// under NONE for isolated single-job traces (the paper's core claim in
+/// the small).
+#[test]
+fn prop_fine_grained_never_loses_isolated() {
+    for (i, &bench) in ALL_BENCHMARKS.iter().enumerate() {
+        let trace = vec![JobSpec::paper_job(1, bench, 0.0)];
+        let none = experiments_run(Scenario::None_, &trace, i as u64 + 1);
+        let fg = experiments_run(Scenario::CmGTg, &trace, i as u64 + 1);
+        let t_none = none.records[0].running();
+        let t_fg = fg.records[0].running();
+        assert!(
+            t_fg <= t_none * 1.001,
+            "{bench}: CM_G_TG {t_fg} vs NONE {t_none}"
+        );
+    }
+}
+
+/// Property: Kubelet admission under the affinity config grants
+/// single-NUMA cpusets whenever a socket can fit the request.
+#[test]
+fn prop_best_effort_single_numa_when_possible() {
+    let mut rng = Rng::seed_from_u64(707);
+    for case in 0..CASES {
+        let spec = NodeSpec::paper_worker("w");
+        let mut st = CpuManagerState::new(&spec, CpuManagerPolicy::Static, TopologyPolicy::BestEffort);
+        loop {
+            let want = rng.range_usize(1, 17) as u32;
+            let fits_single = (0..2).any(|s| st.free_of_socket(s) >= want as usize);
+            match st.allocate(want) {
+                Some(a) => {
+                    if fits_single {
+                        assert!(!a.spans_numa(), "case {case}: spanned despite fit");
+                    }
+                }
+                None => break,
+            }
+            if st.free_total() == 0 {
+                break;
+            }
+        }
+    }
+}
+
+/// Property: per-benchmark base work overrides scale running times
+/// proportionally for isolated jobs.
+#[test]
+fn prop_base_work_scales_runtime() {
+    let trace = vec![JobSpec::paper_job(1, Benchmark::EpDgemm, 0.0)];
+    let mut bw = std::collections::BTreeMap::new();
+    bw.insert(Benchmark::EpDgemm, 100.0);
+    let out100 = kube_fgs::experiments::run_scenario(Scenario::CmGTg, &trace, 1, Some(&bw));
+    bw.insert(Benchmark::EpDgemm, 200.0);
+    let out200 = kube_fgs::experiments::run_scenario(Scenario::CmGTg, &trace, 1, Some(&bw));
+    let r = out200.records[0].running() / out100.records[0].running();
+    assert!((r - 2.0).abs() < 1e-6, "ratio {r}");
+}
