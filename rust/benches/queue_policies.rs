@@ -1,0 +1,62 @@
+//! Queue-policy microbenchmarks: the cost of one scheduling session per
+//! queue discipline at 1k-job `uniform_trace` scale, plus full-trace
+//! simulations per policy (the queue-policy ablation's runtime envelope).
+//!
+//! Run: cargo bench --bench queue_policies
+
+use kube_fgs::apiserver::ApiServer;
+use kube_fgs::cluster::ClusterSpec;
+use kube_fgs::controller::{JobController, VolcanoMpiController};
+use kube_fgs::kubelet::KubeletConfig;
+use kube_fgs::planner::{plan, GranularityPolicy, SystemInfo};
+use kube_fgs::scheduler::{Scheduler, SchedulerConfig, ALL_QUEUE_POLICIES};
+use kube_fgs::util::BenchTimer;
+use kube_fgs::workload::uniform_trace;
+
+/// API server with every job of a 1k uniform trace pending at t=0.
+fn pending_uniform_cluster(n: usize, workers: usize) -> ApiServer {
+    let mut api = ApiServer::new(
+        ClusterSpec::with_workers(workers),
+        KubeletConfig::cpu_mem_affinity(),
+    );
+    let info = SystemInfo { available_nodes: workers as u32 };
+    for spec in uniform_trace(n, 60.0, 7) {
+        let planned = plan(&spec, GranularityPolicy::Granularity, info);
+        let (pods, hostfile) = VolcanoMpiController.build(&planned, &mut api);
+        api.create_job(planned, pods, hostfile, 0.0);
+    }
+    api
+}
+
+fn main() {
+    println!("=== Queue-policy benchmarks ===\n");
+
+    // One scheduling session over a 1000-job pending queue, per policy:
+    // the per-cycle cost of ordering + gang trials + (for EASY) the
+    // shadow-time computation.
+    for kind in ALL_QUEUE_POLICIES {
+        BenchTimer::new(&format!("session/1k-pending/{}", kind.name()))
+            .with_iters(1, 5)
+            .run(|| {
+                let mut api = pending_uniform_cluster(1000, 16);
+                let mut sched =
+                    Scheduler::new(SchedulerConfig::fine_grained(1).with_queue(kind));
+                let started = sched.cycle(&mut api, 0.0);
+                assert!(!started.is_empty());
+            });
+    }
+
+    // Full 200-job ablation trace, per policy (what `kube-fgs queues`
+    // runs once per policy).
+    let trace = uniform_trace(200, 60.0, 2);
+    for kind in ALL_QUEUE_POLICIES {
+        BenchTimer::new(&format!("simulate/uniform-200/{}", kind.name()))
+            .with_iters(0, 2)
+            .run(|| {
+                let sim =
+                    kube_fgs::scenario::Scenario::CmGTg.simulation_with_queue(2, kind);
+                let out = sim.run(&trace);
+                assert_eq!(out.records.len() + out.unschedulable.len(), 200);
+            });
+    }
+}

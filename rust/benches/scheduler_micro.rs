@@ -74,6 +74,19 @@ fn main() {
         });
     }
 
+    // Queue-policy session cost: one cycle over a 64-job congested queue
+    // per discipline (see benches/queue_policies.rs for the 1k-job scale).
+    for kind in kube_fgs::scheduler::ALL_QUEUE_POLICIES {
+        BenchTimer::new(&format!("session/64-jobs-queue-{}", kind.name()))
+            .with_iters(1, 10)
+            .run(|| {
+                let mut api = pending_cluster(64, 4);
+                let mut sched =
+                    Scheduler::new(SchedulerConfig::fine_grained(1).with_queue(kind));
+                sched.cycle(&mut api, 0.0);
+            });
+    }
+
     // Full experiment-2 simulation, one scenario.
     BenchTimer::new("simulate/exp2-CM_G_TG").with_iters(1, 10).run(|| {
         let sim = kube_fgs::scenario::Scenario::CmGTg.simulation(2);

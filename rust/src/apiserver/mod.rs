@@ -25,6 +25,9 @@ pub enum JobPhase {
     /// All pods bound and admitted; MPI processes running.
     Running,
     Succeeded,
+    /// Gang can never fit the cluster (detected at submit, or by the
+    /// simulator's stall guard); removed from the scheduling queue.
+    Unschedulable,
 }
 
 /// The job object stored in the API server (Volcano Job + PodGroup merged).
@@ -46,6 +49,7 @@ pub enum Event {
     PodBound { t: f64, pod: PodId, node: NodeId },
     JobStarted { t: f64, job: JobId },
     JobFinished { t: f64, job: JobId },
+    JobUnschedulable { t: f64, job: JobId },
 }
 
 impl Event {
@@ -54,7 +58,8 @@ impl Event {
             Event::JobSubmitted { t, .. }
             | Event::PodBound { t, .. }
             | Event::JobStarted { t, .. }
-            | Event::JobFinished { t, .. } => *t,
+            | Event::JobFinished { t, .. }
+            | Event::JobUnschedulable { t, .. } => *t,
         }
     }
 }
@@ -71,6 +76,11 @@ pub struct ApiServer {
     pub events: Vec<Event>,
     /// Kubernetes-style list/watch surface over the event log.
     pub watch: WatchBus,
+    /// Pending-job queue, kept ordered by (submit_time, id) incrementally
+    /// (§Perf: recomputing it by filter+sort of the whole job map on every
+    /// scheduling session dominated large queues, and `partial_cmp`
+    /// panicked on NaN submit times).
+    pending: Vec<JobId>,
     next_pod_id: u64,
 }
 
@@ -90,6 +100,7 @@ impl ApiServer {
             allocated,
             events: Vec::new(),
             watch: WatchBus::new(),
+            pending: Vec::new(),
             next_pod_id: 0,
         }
     }
@@ -125,6 +136,16 @@ impl ApiServer {
                 finish_time: None,
             },
         );
+        // Keep the pending queue ordered by (submit_time, id); total_cmp
+        // gives a total order even for pathological (NaN) submit times.
+        let pos = self.pending.partition_point(|&id| {
+            match self.jobs[&id].submit_time.total_cmp(&now) {
+                std::cmp::Ordering::Less => true,
+                std::cmp::Ordering::Greater => false,
+                std::cmp::Ordering::Equal => id < job_id,
+            }
+        });
+        self.pending.insert(pos, job_id);
         self.events.push(Event::JobSubmitted { t: now, job: job_id });
         self.watch.publish(Event::JobSubmitted { t: now, job: job_id });
     }
@@ -164,8 +185,36 @@ impl ApiServer {
         }
         job.phase = JobPhase::Running;
         job.start_time = Some(now);
+        self.pending.retain(|&id| id != job_id);
         self.events.push(Event::JobStarted { t: now, job: job_id });
         self.watch.publish(Event::JobStarted { t: now, job: job_id });
+    }
+
+    /// Mark a pending job as unschedulable (its gang can never fit the
+    /// cluster, or it deadlocked under a no-gang scheduler). Removed from
+    /// the scheduling queue; any pods a no-gang scheduler already bound
+    /// are released back to Pending so the job pins no resources.
+    pub fn mark_unschedulable(&mut self, job_id: JobId, now: f64) {
+        let job = self.jobs.get_mut(&job_id).expect("mark of unknown job");
+        debug_assert_eq!(job.phase, JobPhase::Pending);
+        job.phase = JobPhase::Unschedulable;
+        let pods = job.pods.clone();
+        for pid in pods {
+            let pod = self.pods.get_mut(&pid).unwrap();
+            if pod.phase == PodPhase::Bound {
+                let node = pod.node.expect("bound pod without node");
+                let snapshot = pod.clone();
+                pod.phase = PodPhase::Pending;
+                pod.node = None;
+                pod.cpuset = None;
+                pod.spans_numa = false;
+                self.allocated[node.0] -= snapshot.requests;
+                self.kubelets[node.0].terminate(&snapshot);
+            }
+        }
+        self.pending.retain(|&id| id != job_id);
+        self.events.push(Event::JobUnschedulable { t: now, job: job_id });
+        self.watch.publish(Event::JobUnschedulable { t: now, job: job_id });
     }
 
     /// Complete a job: release every pod's resources and cpusets.
@@ -186,16 +235,10 @@ impl ApiServer {
         self.watch.publish(Event::JobFinished { t: now, job: job_id });
     }
 
-    /// Pending jobs in FIFO (creation) order — the scheduler queue.
+    /// Pending jobs in FIFO (submit-time) order — the scheduler queue,
+    /// maintained incrementally by create/start/mark_unschedulable.
     pub fn pending_jobs(&self) -> Vec<JobId> {
-        let mut v: Vec<(f64, JobId)> = self
-            .jobs
-            .iter()
-            .filter(|(_, j)| j.phase == JobPhase::Pending)
-            .map(|(&id, j)| (j.submit_time, id))
-            .collect();
-        v.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
-        v.into_iter().map(|(_, id)| id).collect()
+        self.pending.clone()
     }
 
     pub fn running_jobs(&self) -> Vec<JobId> {
@@ -291,6 +334,95 @@ mod tests {
     }
 
     #[test]
+    fn pending_queue_matches_reference_under_random_churn() {
+        // The incrementally maintained queue must always equal the old
+        // filter+sort reference computation.
+        let reference = |api: &ApiServer| -> Vec<JobId> {
+            let mut v: Vec<(f64, JobId)> = api
+                .jobs
+                .iter()
+                .filter(|(_, j)| j.phase == JobPhase::Pending)
+                .map(|(&id, j)| (j.submit_time, id))
+                .collect();
+            v.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            v.into_iter().map(|(_, id)| id).collect()
+        };
+        let mut rng = crate::util::Rng::seed_from_u64(88);
+        let mut api = api();
+        let mut created: Vec<JobId> = Vec::new();
+        for step in 0..200u64 {
+            let roll = rng.f64();
+            if created.len() < 3 || roll < 0.5 {
+                let id = step + 1;
+                let t = rng.range_f64(0.0, 100.0);
+                let mut pj = planned(id);
+                pj.spec.submit_time = t;
+                api.create_job(pj, vec![], vec![], t);
+                created.push(JobId(id));
+            } else if roll < 0.8 {
+                // Start (and immediately finish) a random pending job.
+                let pending = api.pending_jobs();
+                if !pending.is_empty() {
+                    let id = pending[rng.range_usize(0, pending.len())];
+                    api.start_job(id, 100.0);
+                    api.finish_job(id, 200.0);
+                }
+            } else {
+                let pending = api.pending_jobs();
+                if !pending.is_empty() {
+                    let id = pending[rng.range_usize(0, pending.len())];
+                    api.mark_unschedulable(id, 100.0);
+                }
+            }
+            assert_eq!(api.pending_jobs(), reference(&api), "step {step}");
+        }
+    }
+
+    #[test]
+    fn unschedulable_job_leaves_queue_and_logs_event() {
+        let mut api = api();
+        let pj = planned(1);
+        let job_id = pj.spec.id;
+        api.create_job(pj, vec![], vec![], 0.0);
+        assert_eq!(api.pending_jobs(), vec![job_id]);
+        api.mark_unschedulable(job_id, 3.0);
+        assert!(api.pending_jobs().is_empty());
+        assert_eq!(api.jobs[&job_id].phase, JobPhase::Unschedulable);
+        assert!(api
+            .events
+            .iter()
+            .any(|e| matches!(e, Event::JobUnschedulable { t, job } if *t == 3.0 && *job == job_id)));
+    }
+
+    #[test]
+    fn unschedulable_releases_partially_bound_pods() {
+        // A no-gang scheduler can leave a deadlocked job partially bound;
+        // marking it unschedulable must return those resources and cpusets.
+        let mut api = api();
+        let pj = planned(1);
+        let job_id = pj.spec.id;
+        let a = make_worker(&mut api, job_id, 0, 16);
+        let b = make_worker(&mut api, job_id, 1, 32);
+        let aid = a.id;
+        api.create_job(pj, vec![a, b], vec![], 0.0);
+        let node = NodeId(1);
+        let before = api.free_on(node);
+        assert!(api.bind_pod(aid, node, 1.0));
+        api.mark_unschedulable(job_id, 2.0);
+        assert_eq!(api.free_on(node), before, "bound pod's resources returned");
+        let pod = &api.pods[&aid];
+        assert_eq!(pod.phase, PodPhase::Pending);
+        assert_eq!(pod.node, None);
+        assert!(pod.cpuset.is_none(), "exclusive cpuset released");
+        // The freed cpuset is actually reusable: an equal-size pod admits.
+        let pj2 = planned(2);
+        let c = make_worker(&mut api, JobId(2), 0, 16);
+        let cid = c.id;
+        api.create_job(pj2, vec![c], vec![], 3.0);
+        assert!(api.bind_pod(cid, node, 3.0));
+    }
+
+    #[test]
     fn bind_fails_if_kubelet_cannot_admit() {
         let mut api = api();
         let pj = planned(1);
@@ -323,6 +455,7 @@ mod tests {
                 Event::PodBound { .. } => "bind",
                 Event::JobStarted { .. } => "start",
                 Event::JobFinished { .. } => "finish",
+                Event::JobUnschedulable { .. } => "unschedulable",
             })
             .collect();
         assert_eq!(kinds, vec!["submit", "bind", "start", "finish"]);

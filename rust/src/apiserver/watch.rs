@@ -24,7 +24,10 @@ impl WatchFilter {
             WatchFilter::All => true,
             WatchFilter::Jobs => matches!(
                 event,
-                Event::JobSubmitted { .. } | Event::JobStarted { .. } | Event::JobFinished { .. }
+                Event::JobSubmitted { .. }
+                    | Event::JobStarted { .. }
+                    | Event::JobFinished { .. }
+                    | Event::JobUnschedulable { .. }
             ),
             WatchFilter::Pods => matches!(event, Event::PodBound { .. }),
         }

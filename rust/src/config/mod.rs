@@ -7,6 +7,7 @@
 //! {
 //!   "scenario": "CM_G_TG",
 //!   "seed": 2,
+//!   "queue": "easy_backfill",
 //!   "cluster": { "worker_nodes": 4 },
 //!   "trace": { "kind": "exp2" },
 //!   "output": { "gantt": true, "csv": false }
@@ -17,6 +18,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::cluster::ClusterSpec;
 use crate::scenario::Scenario;
+use crate::scheduler::QueuePolicyKind;
 use crate::util::Json;
 use crate::workload::{exp1_trace, exp2_trace, uniform_trace, JobSpec};
 
@@ -25,6 +27,9 @@ use crate::workload::{exp1_trace, exp2_trace, uniform_trace, JobSpec};
 pub struct ExperimentConfig {
     pub scenario: Scenario,
     pub seed: u64,
+    /// Queue discipline; defaults to the scenario's own (FIFO-skip for
+    /// the Table-II names).
+    pub queue: QueuePolicyKind,
     pub worker_nodes: usize,
     pub trace: TraceConfig,
     pub gantt: bool,
@@ -53,6 +58,22 @@ impl ExperimentConfig {
             .ok_or_else(|| anyhow!("config: unknown scenario {scenario_name:?}"))?;
 
         let seed = json.get("seed").as_u64().unwrap_or(crate::experiments::DEFAULT_SEED);
+        let queue = match json.get("queue").as_str() {
+            Some(q) => QueuePolicyKind::parse(q)
+                .ok_or_else(|| anyhow!("config: unknown queue policy {q:?}"))?,
+            None => scenario.queue(),
+        };
+        // Block/reserve semantics only exist for gang schedulers; a no-gang
+        // profile would silently degrade to FIFO-skip, so reject it.
+        if !scenario.scheduler(0).gang
+            && matches!(queue, QueuePolicyKind::FifoStrict | QueuePolicyKind::EasyBackfill)
+        {
+            bail!(
+                "config: queue policy {} requires a gang scheduler (scenario {} has gang=false)",
+                queue.name(),
+                scenario.name()
+            );
+        }
         let worker_nodes = json
             .get("cluster")
             .get("worker_nodes")
@@ -79,6 +100,7 @@ impl ExperimentConfig {
         Ok(ExperimentConfig {
             scenario,
             seed,
+            queue,
             worker_nodes,
             trace,
             gantt: matches!(json.get("output").get("gantt"), crate::util::Json::Bool(true)),
@@ -125,6 +147,7 @@ mod tests {
         .unwrap();
         assert_eq!(c.scenario, Scenario::CmGTg);
         assert_eq!(c.seed, 9);
+        assert_eq!(c.queue, QueuePolicyKind::FifoSkip);
         assert_eq!(c.worker_nodes, 8);
         assert_eq!(c.trace, TraceConfig::Uniform { jobs: 10, mean_interval: 30.0 });
         assert!(c.gantt && !c.csv);
@@ -139,6 +162,26 @@ mod tests {
         assert_eq!(c.worker_nodes, 4);
         assert_eq!(c.trace, TraceConfig::Exp2);
         assert_eq!(c.build_trace().len(), 20);
+    }
+
+    #[test]
+    fn queue_key_parses_and_defaults_to_scenario_discipline() {
+        let c = ExperimentConfig::parse(r#"{"scenario":"CM","queue":"easy_backfill"}"#)
+            .unwrap();
+        assert_eq!(c.queue, QueuePolicyKind::EasyBackfill);
+        let d = ExperimentConfig::parse(r#"{"scenario":"CM_G_TG_SJF"}"#).unwrap();
+        assert_eq!(d.queue, QueuePolicyKind::Sjf, "scenario's own discipline");
+        assert!(ExperimentConfig::parse(r#"{"scenario":"CM","queue":"lifo"}"#).is_err());
+        // Block/reserve disciplines are rejected for no-gang schedulers.
+        assert!(
+            ExperimentConfig::parse(r#"{"scenario":"Kubeflow","queue":"fifo_strict"}"#)
+                .is_err()
+        );
+        assert!(
+            ExperimentConfig::parse(r#"{"scenario":"Kubeflow","queue":"easy_backfill"}"#)
+                .is_err()
+        );
+        assert!(ExperimentConfig::parse(r#"{"scenario":"Kubeflow","queue":"sjf"}"#).is_ok());
     }
 
     #[test]

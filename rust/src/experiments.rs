@@ -7,8 +7,11 @@ use std::collections::BTreeMap;
 use crate::metrics::ExperimentMetrics;
 use crate::report;
 use crate::scenario::{Scenario, EXP3_SCENARIOS, TABLE2_SCENARIOS};
+use crate::scheduler::{QueuePolicyKind, ALL_QUEUE_POLICIES};
 use crate::simulator::SimOutput;
-use crate::workload::{exp1_trace, exp2_trace, Benchmark, JobSpec, ALL_BENCHMARKS};
+use crate::workload::{
+    exp1_trace, exp2_trace, uniform_trace, Benchmark, JobSpec, ALL_BENCHMARKS,
+};
 
 /// Default experiment seed (any seed reproduces the paper's *shape*; this
 /// one is used for every number recorded in EXPERIMENTS.md).
@@ -32,6 +35,70 @@ pub fn run_scenario(
 /// One scenario's aggregated metrics for a trace.
 pub fn run_metrics(scenario: Scenario, trace: &[JobSpec], seed: u64) -> ExperimentMetrics {
     ExperimentMetrics::from(&run_scenario(scenario, trace, seed, None))
+}
+
+/// Run one scenario with its queue discipline overridden.
+pub fn run_scenario_with_queue(
+    scenario: Scenario,
+    queue: QueuePolicyKind,
+    trace: &[JobSpec],
+    seed: u64,
+) -> SimOutput {
+    scenario.simulation_with_queue(seed, queue).run(trace)
+}
+
+// ---------------------------------------------------------------------
+// Queue-policy ablation — FIFO / strict FIFO / SJF / EASY backfill on a
+// heavy mixed trace (the queue axis of the scenario matrix).
+// ---------------------------------------------------------------------
+
+/// The ablation's default trace shape: 200 mixed jobs, 60 s mean
+/// inter-arrival — enough pressure that the queue discipline, not the
+/// placement, dominates the overall response time.
+pub const QUEUE_ABLATION_JOBS: usize = 200;
+pub const QUEUE_ABLATION_INTERVAL: f64 = 60.0;
+
+/// Run every queue policy over the same uniform trace on the CM_G_TG
+/// placement configuration.
+pub fn queue_ablation(
+    seed: u64,
+    jobs: usize,
+    mean_interval: f64,
+) -> Vec<(QueuePolicyKind, ExperimentMetrics)> {
+    let trace = uniform_trace(jobs, mean_interval, seed);
+    ALL_QUEUE_POLICIES
+        .iter()
+        .map(|&q| {
+            let out = run_scenario_with_queue(Scenario::CmGTg, q, &trace, seed);
+            (q, ExperimentMetrics::from(&out))
+        })
+        .collect()
+}
+
+/// Queue-ablation table: overall response, makespan, and average wait per
+/// policy (+ response delta vs the seed's FIFO-skip behaviour).
+pub fn queue_table(results: &[(QueuePolicyKind, ExperimentMetrics)]) -> String {
+    let fifo = results
+        .iter()
+        .find(|(q, _)| *q == QueuePolicyKind::FifoSkip)
+        .map(|(_, m)| m.overall_response)
+        .unwrap_or(f64::NAN);
+    let rows = results
+        .iter()
+        .map(|(q, m)| {
+            vec![
+                q.name().to_string(),
+                format!("{:.0}", m.overall_response),
+                format!("{:+.0}%", (m.overall_response / fifo - 1.0) * 100.0),
+                format!("{:.0}", m.makespan),
+                format!("{:.0}", m.avg_wait),
+            ]
+        })
+        .collect::<Vec<_>>();
+    report::table(
+        &["queue policy", "overall response (s)", "vs fifo", "makespan (s)", "avg wait (s)"],
+        &rows,
+    )
 }
 
 // ---------------------------------------------------------------------
@@ -240,6 +307,49 @@ mod tests {
         // Smoke the renderers.
         assert!(fig4_table(&results).contains("NONE"));
         assert!(fig5_table(&results).contains("vs CM"));
+    }
+
+    #[test]
+    fn queue_ablation_easy_backfill_beats_strict_fifo() {
+        let results =
+            queue_ablation(DEFAULT_SEED, QUEUE_ABLATION_JOBS, QUEUE_ABLATION_INTERVAL);
+        assert_eq!(results.len(), 4);
+        let get = |k: QueuePolicyKind| {
+            results.iter().find(|(q, _)| *q == k).map(|(_, m)| m.overall_response).unwrap()
+        };
+        // Head-blocking wastes the fragmented capacity the fine-grained
+        // placement creates; EASY backfills it without starving the head.
+        assert!(
+            get(QueuePolicyKind::EasyBackfill) < get(QueuePolicyKind::FifoStrict),
+            "EASY {} !< strict {}",
+            get(QueuePolicyKind::EasyBackfill),
+            get(QueuePolicyKind::FifoStrict)
+        );
+        // Every policy completes the whole trace (nothing starves forever).
+        for (q, m) in &results {
+            assert_eq!(m.per_job.len(), QUEUE_ABLATION_JOBS, "{q}");
+        }
+        let table = queue_table(&results);
+        assert!(table.contains("easy_backfill") && table.contains("vs fifo"));
+    }
+
+    #[test]
+    fn explicit_fifo_skip_is_bit_identical_to_seed_behaviour() {
+        let trace = exp2_trace(DEFAULT_SEED);
+        let a = run_scenario(Scenario::CmGTg, &trace, DEFAULT_SEED, None);
+        let b = run_scenario_with_queue(
+            Scenario::CmGTg,
+            QueuePolicyKind::FifoSkip,
+            &trace,
+            DEFAULT_SEED,
+        );
+        let key = |o: &SimOutput| {
+            o.records
+                .iter()
+                .map(|r| (r.id, r.start_time.to_bits(), r.finish_time.to_bits()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(key(&a), key(&b));
     }
 
     #[test]

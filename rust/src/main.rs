@@ -6,8 +6,16 @@
 //!   exp2 [--seed N] [--gantt]    Figs. 6–7 (20 mixed jobs, 6 scenarios)
 //!   exp3 [--seed N]              Table III + Figs. 8–9 (frameworks)
 //!   run --scenario S [--jobs N]  one scenario on a uniform trace
+//!   queues [--jobs N]            queue-policy ablation (FIFO / strict /
+//!                                SJF / EASY backfill)
 //!   e2e [--steps N]              end-to-end: PJRT payload execution feeds
 //!                                the simulator's base rates
+//!
+//! A scenario name pins all five knobs of the experiment matrix:
+//! (kubelet, planner, controller, scheduler, queue). The Table-II names
+//! (NONE, CM, CM_S, CM_G, CM_S_TG, CM_G_TG) keep the seed's FIFO-skip
+//! queue; the `*_SJF` / `*_BF` variants swap in shortest-job-first or
+//! EASY backfilling, and `--queue` overrides the knob on any scenario.
 //!
 //! (The vendored offline registry has no clap; argument parsing is a small
 //! hand-rolled layer — see DESIGN.md §Dependencies.)
@@ -21,6 +29,7 @@ use kube_fgs::metrics::ExperimentMetrics;
 use kube_fgs::report;
 use kube_fgs::runtime::{default_artifacts_dir, Runtime};
 use kube_fgs::scenario::Scenario;
+use kube_fgs::scheduler::QueuePolicyKind;
 use kube_fgs::simulator::JobRecord;
 use kube_fgs::workload::{exp2_trace, uniform_trace, Benchmark, ALL_BENCHMARKS};
 
@@ -83,14 +92,25 @@ COMMANDS:
   exp2 [--seed N] [--gantt] [--csv]
                         Figs. 6-7: 20 mixed jobs, 6 scenarios
   exp3 [--seed N]       Table III + Figs. 8-9: framework comparison
-  run --scenario NAME [--jobs N] [--interval S] [--seed N]
-                        one scenario on a uniform random trace
+  run --scenario NAME [--jobs N] [--interval S] [--seed N] [--queue POLICY]
+                        one scenario on a uniform random trace; POLICY is
+                        fifo | fifo_strict | sjf | easy_backfill and
+                        overrides the scenario's queue discipline
+  queues [--jobs N] [--interval S] [--seed N]
+                        queue-policy ablation table on CM_G_TG placement
+                        (default: 200 jobs, 60 s mean interval)
   e2e [--steps N] [--seed N]
                         end-to-end: execute AOT payloads via PJRT and feed
                         measured step times into the simulator
   figures --out DIR [--seed N]
                         render every paper figure as SVG into DIR
   config PATH           run an experiment described by a JSON config file
+                        (keys: scenario, seed, queue, cluster, trace, output)
+
+SCENARIOS (each pins kubelet, planner, controller, scheduler, queue):
+  NONE CM CM_S CM_G CM_S_TG CM_G_TG          Table II (FIFO-skip queue)
+  Kubeflow Volcano                           SS V-E framework baselines
+  CM_SJF CM_BF CM_G_TG_SJF CM_G_TG_BF       queue-policy variants
 ";
 
 fn main() {
@@ -123,6 +143,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "exp2" => cmd_exp2(args),
         "exp3" => cmd_exp3(args),
         "run" => cmd_run(args),
+        "queues" => cmd_queues(args),
         "e2e" => cmd_e2e(args),
         "figures" => cmd_figures(args),
         "config" => cmd_config(args),
@@ -221,13 +242,54 @@ fn cmd_run(args: &Args) -> Result<()> {
     let jobs = args.get_usize("jobs", 20);
     let interval = args.get_usize("interval", 60) as f64;
     let trace = uniform_trace(jobs, interval, seed);
-    let out = experiments::run_scenario(scenario, &trace, seed, None);
+    let out = match args.flags.get("queue") {
+        Some(q) => {
+            let queue = QueuePolicyKind::parse(q)
+                .ok_or_else(|| anyhow!("unknown queue policy {q:?} (fifo | fifo_strict | sjf | easy_backfill)"))?;
+            // Block/reserve semantics need gang all-or-nothing; on a
+            // no-gang scenario they would silently run as FIFO-skip.
+            if !scenario.scheduler(seed).gang
+                && matches!(
+                    queue,
+                    QueuePolicyKind::FifoStrict | QueuePolicyKind::EasyBackfill
+                )
+            {
+                bail!(
+                    "queue policy {} requires a gang scheduler (scenario {} has gang=false)",
+                    queue.name(),
+                    scenario.name()
+                );
+            }
+            experiments::run_scenario_with_queue(scenario, queue, &trace, seed)
+        }
+        None => experiments::run_scenario(scenario, &trace, seed, None),
+    };
     let m = ExperimentMetrics::from(&out);
     print!("{}", report::scenario_summary(scenario.name(), &m));
+    if !out.unschedulable.is_empty() {
+        println!("unschedulable jobs: {:?}", out.unschedulable);
+    }
     println!("\nScheduling process:");
     print!("{}", report::gantt(&out, 100));
     println!("\nPod placements:");
     print!("{}", report::node_timeline(&out));
+    Ok(())
+}
+
+fn cmd_queues(args: &Args) -> Result<()> {
+    let seed = args.seed();
+    let jobs = args.get_usize("jobs", experiments::QUEUE_ABLATION_JOBS);
+    let interval = args
+        .flags
+        .get("interval")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(experiments::QUEUE_ABLATION_INTERVAL);
+    println!(
+        "Queue-policy ablation — {jobs} mixed jobs, {interval} s mean interval, \
+         CM_G_TG placement (seed {seed})\n"
+    );
+    let results = experiments::queue_ablation(seed, jobs, interval);
+    print!("{}", experiments::queue_table(&results));
     Ok(())
 }
 
@@ -248,10 +310,10 @@ fn cmd_config(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("usage: kube-fgs config <path.json>"))?;
     let cfg = kube_fgs::config::ExperimentConfig::load(std::path::Path::new(path))?;
     println!(
-        "config: scenario {} seed {} workers {} trace {:?}\n",
-        cfg.scenario, cfg.seed, cfg.worker_nodes, cfg.trace
+        "config: scenario {} queue {} seed {} workers {} trace {:?}\n",
+        cfg.scenario, cfg.queue, cfg.seed, cfg.worker_nodes, cfg.trace
     );
-    let sim = cfg.scenario.simulation_on(cfg.cluster(), cfg.seed);
+    let sim = cfg.scenario.simulation_on_queue(cfg.cluster(), cfg.seed, cfg.queue);
     let out = sim.run(&cfg.build_trace());
     let m = ExperimentMetrics::from(&out);
     print!("{}", report::scenario_summary(cfg.scenario.name(), &m));

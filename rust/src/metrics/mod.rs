@@ -121,6 +121,7 @@ mod tests {
                 record(2, Benchmark::EpDgemm, 10.0, 20.0, 150.0),
                 record(3, Benchmark::GFft, 20.0, 20.0, 120.0),
             ],
+            unschedulable: vec![],
             api: ApiServer::new(ClusterSpec::paper(), KubeletConfig::default_policy()),
         }
     }

@@ -167,6 +167,43 @@ pub fn write_all(dir: &Path, seed: u64) -> Result<()> {
         .map(|(s, m)| vec![s.name().to_string(), format!("{:.0}", m.makespan)])
         .collect();
     write(dir, "table3_makespan.csv", &super::csv(&["scenario", "makespan_s"], &rows))?;
+
+    // --- Queue-policy ablation (FIFO / strict / SJF / EASY backfill) ---
+    let qres = experiments::queue_ablation(
+        seed,
+        experiments::QUEUE_ABLATION_JOBS,
+        experiments::QUEUE_ABLATION_INTERVAL,
+    );
+    let qcats: Vec<&str> = qres.iter().map(|(q, _)| q.name()).collect();
+    write(
+        dir,
+        "queue_policy_response.svg",
+        &bar_chart(
+            "Queue-policy ablation — overall response (200 mixed jobs, CM_G_TG)",
+            &qcats,
+            &[Series {
+                name: "overall response".into(),
+                values: qres.iter().map(|(_, m)| m.overall_response).collect(),
+            }],
+            "seconds",
+        ),
+    )?;
+    let qrows: Vec<Vec<String>> = qres
+        .iter()
+        .map(|(q, m)| {
+            vec![
+                q.name().to_string(),
+                format!("{:.0}", m.overall_response),
+                format!("{:.0}", m.makespan),
+                format!("{:.0}", m.avg_wait),
+            ]
+        })
+        .collect();
+    write(
+        dir,
+        "queue_policy_ablation.csv",
+        &super::csv(&["queue_policy", "overall_response_s", "makespan_s", "avg_wait_s"], &qrows),
+    )?;
     Ok(())
 }
 
@@ -189,6 +226,8 @@ mod tests {
             "fig8_framework_runtime.svg",
             "fig9_framework_response.svg",
             "table3_makespan.csv",
+            "queue_policy_response.svg",
+            "queue_policy_ablation.csv",
         ];
         for f in expected {
             let p = dir.join(f);

@@ -193,6 +193,7 @@ mod tests {
                 start_time: 50.0,
                 finish_time: 100.0,
             }],
+            unschedulable: vec![],
             api: ApiServer::new(ClusterSpec::paper(), KubeletConfig::default_policy()),
         };
         let g = gantt(&out, 40);

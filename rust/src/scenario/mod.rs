@@ -1,5 +1,7 @@
 //! Scenario matrix — the paper's Table II plus the §V-E framework
-//! baselines, each mapping to a fully configured [`Simulation`].
+//! baselines and the queue-policy variants, each mapping to a fully
+//! configured [`Simulation`]. A scenario pins all five knobs of the
+//! experiment space: (kubelet, planner, controller, scheduler, queue).
 
 use crate::cluster::ClusterSpec;
 use crate::controller::{
@@ -8,10 +10,11 @@ use crate::controller::{
 use crate::kubelet::KubeletConfig;
 use crate::perfmodel::Calibration;
 use crate::planner::GranularityPolicy;
-use crate::scheduler::SchedulerConfig;
+use crate::scheduler::{QueuePolicyKind, SchedulerConfig};
 use crate::simulator::Simulation;
 
-/// All evaluated scenarios: six from Table II + two framework baselines.
+/// All evaluated scenarios: six from Table II + two framework baselines
+/// + four queue-policy variants (the `*_SJF` / `*_BF` axis).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Scenario {
     /// Kubelet default, stock Volcano gang.
@@ -30,6 +33,14 @@ pub enum Scenario {
     Kubeflow,
     /// Stock Volcano MPI example: one task per container (affinity kubelet).
     VolcanoNative,
+    /// CM with a shortest-job-first queue.
+    CmSjf,
+    /// CM with EASY backfilling.
+    CmBf,
+    /// The paper's fine-grained scheduler with a shortest-job-first queue.
+    CmGTgSjf,
+    /// The paper's fine-grained scheduler with EASY backfilling.
+    CmGTgBf,
 }
 
 /// The six Table-II scenarios, in the paper's column order.
@@ -62,6 +73,10 @@ impl Scenario {
             Scenario::CmGTg => "CM_G_TG",
             Scenario::Kubeflow => "Kubeflow",
             Scenario::VolcanoNative => "Volcano",
+            Scenario::CmSjf => "CM_SJF",
+            Scenario::CmBf => "CM_BF",
+            Scenario::CmGTgSjf => "CM_G_TG_SJF",
+            Scenario::CmGTgBf => "CM_G_TG_BF",
         }
     }
 
@@ -75,6 +90,10 @@ impl Scenario {
             Scenario::CmGTg,
             Scenario::Kubeflow,
             Scenario::VolcanoNative,
+            Scenario::CmSjf,
+            Scenario::CmBf,
+            Scenario::CmGTgSjf,
+            Scenario::CmGTgBf,
         ];
         all.iter().copied().find(|sc| sc.name().eq_ignore_ascii_case(s))
     }
@@ -89,8 +108,19 @@ impl Scenario {
     pub fn policy(&self) -> GranularityPolicy {
         match self {
             Scenario::CmS | Scenario::CmSTg => GranularityPolicy::Scale,
-            Scenario::CmG | Scenario::CmGTg => GranularityPolicy::Granularity,
+            Scenario::CmG | Scenario::CmGTg | Scenario::CmGTgSjf | Scenario::CmGTgBf => {
+                GranularityPolicy::Granularity
+            }
             _ => GranularityPolicy::None,
+        }
+    }
+
+    /// Queue discipline of this scenario (the fifth matrix knob).
+    pub fn queue(&self) -> QueuePolicyKind {
+        match self {
+            Scenario::CmSjf | Scenario::CmGTgSjf => QueuePolicyKind::Sjf,
+            Scenario::CmBf | Scenario::CmGTgBf => QueuePolicyKind::EasyBackfill,
+            _ => QueuePolicyKind::FifoSkip,
         }
     }
 
@@ -103,11 +133,14 @@ impl Scenario {
     }
 
     pub fn scheduler(&self, seed: u64) -> SchedulerConfig {
-        match self {
-            Scenario::CmSTg | Scenario::CmGTg => SchedulerConfig::fine_grained(seed),
+        let base = match self {
+            Scenario::CmSTg | Scenario::CmGTg | Scenario::CmGTgSjf | Scenario::CmGTgBf => {
+                SchedulerConfig::fine_grained(seed)
+            }
             Scenario::Kubeflow => SchedulerConfig::kube_default(seed),
             _ => SchedulerConfig::volcano_default(seed),
-        }
+        };
+        base.with_queue(self.queue())
     }
 
     /// Build a fully configured simulation for this scenario.
@@ -116,12 +149,27 @@ impl Scenario {
     }
 
     pub fn simulation_on(&self, cluster: ClusterSpec, seed: u64) -> Simulation {
+        self.simulation_on_queue(cluster, seed, self.queue())
+    }
+
+    /// Same scenario with its queue discipline overridden (the CLI
+    /// `--queue` flag and the queue-policy ablation use this).
+    pub fn simulation_with_queue(&self, seed: u64, queue: QueuePolicyKind) -> Simulation {
+        self.simulation_on_queue(ClusterSpec::paper(), seed, queue)
+    }
+
+    pub fn simulation_on_queue(
+        &self,
+        cluster: ClusterSpec,
+        seed: u64,
+        queue: QueuePolicyKind,
+    ) -> Simulation {
         Simulation::new(
             cluster,
             self.kubelet(),
             self.policy(),
             self.controller(),
-            self.scheduler(seed),
+            self.scheduler(seed).with_queue(queue),
             Calibration::default(),
             seed,
         )
@@ -161,7 +209,27 @@ mod tests {
             assert_eq!(Scenario::parse(s.name()), Some(*s));
         }
         assert_eq!(Scenario::parse("cm_g_tg"), Some(Scenario::CmGTg));
+        assert_eq!(Scenario::parse("cm_g_tg_bf"), Some(Scenario::CmGTgBf));
+        assert_eq!(Scenario::parse("CM_SJF"), Some(Scenario::CmSjf));
         assert_eq!(Scenario::parse("bogus"), None);
+    }
+
+    #[test]
+    fn queue_variants_only_change_the_queue_knob() {
+        use crate::scheduler::QueuePolicyKind;
+        for (base, variant, queue) in [
+            (Scenario::Cm, Scenario::CmSjf, QueuePolicyKind::Sjf),
+            (Scenario::Cm, Scenario::CmBf, QueuePolicyKind::EasyBackfill),
+            (Scenario::CmGTg, Scenario::CmGTgSjf, QueuePolicyKind::Sjf),
+            (Scenario::CmGTg, Scenario::CmGTgBf, QueuePolicyKind::EasyBackfill),
+        ] {
+            assert_eq!(variant.queue(), queue);
+            assert_eq!(variant.scheduler(0), base.scheduler(0).with_queue(queue));
+            assert_eq!(variant.policy(), base.policy());
+            assert_eq!(variant.kubelet().cpu_policy, base.kubelet().cpu_policy);
+            assert_eq!(variant.controller().name(), base.controller().name());
+        }
+        assert_eq!(Scenario::CmGTg.queue(), QueuePolicyKind::FifoSkip);
     }
 
     #[test]

@@ -4,9 +4,13 @@
 //! next to the baseline policies (stock Volcano gang, Kubernetes default).
 //!
 //! Each [`Scheduler::cycle`] is one Volcano session: snapshot free
-//! resources, walk the pending-job queue FIFO, and for each job place its
-//! pods (gang: all-or-nothing on a trial state; no-gang: individually).
+//! resources, walk the pending-job queue in the [`QueuePolicy`]'s order,
+//! and for each job place its pods (gang: all-or-nothing on a trial
+//! state; no-gang: individually). The queue policy decides what a gang
+//! failure means — skip (seed behaviour), block, or an EASY backfill
+//! reservation (see [`queue`]).
 
+pub mod queue;
 pub mod score;
 pub mod taskgroup;
 
@@ -16,6 +20,11 @@ use crate::apiserver::ApiServer;
 use crate::cluster::{JobId, NodeId, NodeRole, Pod, PodId, PodPhase, Resources};
 use crate::util::Rng;
 
+pub use queue::{
+    estimated_completions, estimated_runtime, shadow_time, EasyBackfill, FifoSkip,
+    FifoStrict, GangDecision, QueueContext, QueuePolicy, QueuePolicyKind, Sjf,
+    ALL_QUEUE_POLICIES,
+};
 pub use score::{least_requested, taskgroup_score, GroupKey, GroupPlacement};
 pub use taskgroup::{build_groups, group_assignment, worker_order, TaskGroup};
 
@@ -26,6 +35,8 @@ pub struct SchedulerConfig {
     pub gang: bool,
     /// The paper's task-group plugin (Algorithms 3–4).
     pub taskgroup: bool,
+    /// Queue discipline for the pending-job walk.
+    pub queue: QueuePolicyKind,
     /// Seed for the default scheduler's random tie-breaking.
     pub seed: u64,
 }
@@ -33,23 +44,45 @@ pub struct SchedulerConfig {
 impl SchedulerConfig {
     /// Stock Volcano: gang only (baseline NONE/CM/CM_S/CM_G scenarios).
     pub fn volcano_default(seed: u64) -> Self {
-        SchedulerConfig { gang: true, taskgroup: false, seed }
+        SchedulerConfig {
+            gang: true,
+            taskgroup: false,
+            queue: QueuePolicyKind::FifoSkip,
+            seed,
+        }
     }
 
     /// The paper's fine-grained scheduler: gang + task-group.
     pub fn fine_grained(seed: u64) -> Self {
-        SchedulerConfig { gang: true, taskgroup: true, seed }
+        SchedulerConfig {
+            gang: true,
+            taskgroup: true,
+            queue: QueuePolicyKind::FifoSkip,
+            seed,
+        }
     }
 
     /// Kubernetes default scheduler (Kubeflow baseline): per-pod, no gang.
     pub fn kube_default(seed: u64) -> Self {
-        SchedulerConfig { gang: false, taskgroup: false, seed }
+        SchedulerConfig {
+            gang: false,
+            taskgroup: false,
+            queue: QueuePolicyKind::FifoSkip,
+            seed,
+        }
+    }
+
+    /// Same profile under a different queue discipline.
+    pub fn with_queue(mut self, queue: QueuePolicyKind) -> Self {
+        self.queue = queue;
+        self
     }
 }
 
 pub struct Scheduler {
     pub config: SchedulerConfig,
     rng: Rng,
+    queue_policy: Box<dyn QueuePolicy>,
 }
 
 /// Trial state for one scheduling session (mutated as binds are decided,
@@ -90,7 +123,11 @@ impl SessionState {
 
 impl Scheduler {
     pub fn new(config: SchedulerConfig) -> Scheduler {
-        Scheduler { config, rng: Rng::seed_from_u64(config.seed) }
+        Scheduler {
+            config,
+            rng: Rng::seed_from_u64(config.seed),
+            queue_policy: config.queue.build(),
+        }
     }
 
     /// Rebuild the cluster-wide group-placement view from bound/running
@@ -215,9 +252,7 @@ impl Scheduler {
         // WorkerOrderFn order.
         for pid in &order {
             let pod = &api.pods[pid];
-            let group = group_of
-                .get(pid)
-                .map(|&g| (((job_id, g)) as GroupKey, group_len[&g]));
+            let group = group_of.get(pid).map(|&g| ((job_id, g), group_len[&g]));
             match self.place_pod(api, state, pod, group) {
                 Some(node) => binds.push((*pid, node, group_of.get(pid).copied())),
                 None => return None,
@@ -233,8 +268,31 @@ impl Scheduler {
         Some(binds)
     }
 
-    /// One scheduling session. Returns the jobs started in this cycle.
+    /// One scheduling session with base-time completion estimates (callers
+    /// with a simulator should prefer [`Scheduler::cycle_with_projections`],
+    /// which feeds exact projections to the backfill reservation). The
+    /// estimates are only built for policies that read them, so the
+    /// default FIFO hot path stays allocation-free here.
     pub fn cycle(&mut self, api: &mut ApiServer, now: f64) -> Vec<JobId> {
+        let projected = if self.queue_policy.needs_projections() {
+            estimated_completions(api, now)
+        } else {
+            BTreeMap::new()
+        };
+        self.cycle_with_projections(api, now, &projected)
+    }
+
+    /// One scheduling session. Walks the pending queue in the queue
+    /// policy's order; on a gang failure the policy decides whether to
+    /// skip the job (seed behaviour), end the session, or hold an EASY
+    /// reservation that only lets provably-shorter jobs backfill.
+    /// Returns the jobs started in this cycle.
+    pub fn cycle_with_projections(
+        &mut self,
+        api: &mut ApiServer,
+        now: f64,
+        projected: &BTreeMap<JobId, f64>,
+    ) -> Vec<JobId> {
         let mut started = Vec::new();
         let mut state = SessionState {
             free: api.spec.node_ids().map(|n| api.free_on(n)).collect(),
@@ -242,7 +300,24 @@ impl Scheduler {
             log: Vec::new(),
         };
 
-        for job_id in api.pending_jobs() {
+        let mut pending = api.pending_jobs();
+        self.queue_policy.order(api, &mut pending);
+        // Shadow time of the reservation held for the first blocked job
+        // (EASY); None until a gang failure asks for one.
+        let mut reservation: Option<f64> = None;
+
+        for job_id in pending {
+            if let Some(shadow) = reservation {
+                let ctx = QueueContext {
+                    api: &*api,
+                    now,
+                    projected_completion: projected,
+                    free: &state.free,
+                };
+                if !self.queue_policy.may_backfill(&ctx, job_id, shadow) {
+                    continue;
+                }
+            }
             if self.config.gang {
                 // All-or-nothing: plan against the live state, roll back the
                 // undo log on failure.
@@ -261,6 +336,21 @@ impl Scheduler {
                     }
                     None => {
                         state.rollback_to(checkpoint);
+                        if reservation.is_none() {
+                            let ctx = QueueContext {
+                                api: &*api,
+                                now,
+                                projected_completion: projected,
+                                free: &state.free,
+                            };
+                            match self.queue_policy.on_gang_failure(&ctx, job_id) {
+                                GangDecision::Skip => {}
+                                GangDecision::Block => break,
+                                GangDecision::Reserve { shadow_time } => {
+                                    reservation = Some(shadow_time);
+                                }
+                            }
+                        }
                         continue; // job stays pending; try later jobs
                     }
                 }
@@ -447,5 +537,167 @@ mod tests {
                 .collect::<Vec<_>>()
         };
         assert_eq!(run(5), run(5));
+    }
+
+    /// Submit a job with a custom task count (one worker holding all tasks
+    /// under `GranularityPolicy::None`, so the worker requests
+    /// `ntasks` cores).
+    fn submit_sized(api: &mut ApiServer, id: u64, bench: Benchmark, ntasks: u32) -> JobId {
+        let mut spec = JobSpec::paper_job(id, bench, 0.0);
+        spec.ntasks = ntasks;
+        spec.resources =
+            Resources::new(ntasks as u64 * 1000, ntasks as u64 * crate::cluster::gib(2));
+        let info = SystemInfo { available_nodes: api.spec.worker_count() as u32 };
+        let planned = plan(&spec, GranularityPolicy::None, info);
+        let job_id = planned.spec.id;
+        let (pods, hostfile) = VolcanoMpiController.build(&planned, api);
+        api.create_job(planned, pods, hostfile, 0.0);
+        job_id
+    }
+
+    /// Cluster with 7 running 16-core jobs + one finished, leaving exactly
+    /// one node with 16 free cores, then three queued jobs: a 32-core job
+    /// that cannot fit (the gang blocker), an 8-core ring job (short, 320 s
+    /// estimate), and an 8-core DGEMM job (long, 600 s estimate).
+    fn congested_api_with_blocker(queue: QueuePolicyKind) -> (ApiServer, Scheduler, Vec<JobId>) {
+        let mut api = api();
+        let mut sched =
+            Scheduler::new(SchedulerConfig::volcano_default(1).with_queue(queue));
+        for i in 1..=8 {
+            submit(&mut api, &VolcanoMpiController, GranularityPolicy::None, i, Benchmark::EpDgemm);
+        }
+        assert_eq!(sched.cycle(&mut api, 0.0).len(), 8);
+        api.finish_job(JobId(1), 2.0);
+        let blocker = submit_sized(&mut api, 9, Benchmark::EpDgemm, 32);
+        let short = submit_sized(&mut api, 10, Benchmark::GRandomRing, 8);
+        let long = submit_sized(&mut api, 11, Benchmark::EpDgemm, 8);
+        (api, sched, vec![blocker, short, long])
+    }
+
+    #[test]
+    fn fifo_skip_overtakes_blocked_head() {
+        let (mut api, mut sched, ids) = congested_api_with_blocker(QueuePolicyKind::FifoSkip);
+        let started = sched.cycle(&mut api, 2.0);
+        assert_eq!(started, vec![ids[1], ids[2]], "both small jobs overtake");
+        assert_eq!(api.pending_jobs(), vec![ids[0]]);
+    }
+
+    #[test]
+    fn fifo_strict_blocks_session_behind_gang_failure() {
+        let (mut api, mut sched, ids) = congested_api_with_blocker(QueuePolicyKind::FifoStrict);
+        assert!(sched.cycle(&mut api, 2.0).is_empty(), "head blocks everything");
+        assert_eq!(api.pending_jobs(), ids);
+    }
+
+    #[test]
+    fn easy_backfill_admits_only_jobs_within_shadow_window() {
+        // Shadow time for the 32-core blocker is ~600 s (projected end of
+        // the running DGEMMs); the 320 s ring job fits the window, the
+        // 600 s DGEMM does not (2 + 600 > 600).
+        let (mut api, mut sched, ids) =
+            congested_api_with_blocker(QueuePolicyKind::EasyBackfill);
+        let started = sched.cycle(&mut api, 2.0);
+        assert_eq!(started, vec![ids[1]], "only the short job backfills");
+        assert_eq!(api.pending_jobs(), vec![ids[0], ids[2]]);
+    }
+
+    #[test]
+    fn sjf_starts_shorter_jobs_first() {
+        let mut api = api();
+        let long = submit_sized(&mut api, 1, Benchmark::EpDgemm, 8);
+        let short = submit_sized(&mut api, 2, Benchmark::GRandomRing, 8);
+        let mut sched = Scheduler::new(
+            SchedulerConfig::volcano_default(3).with_queue(QueuePolicyKind::Sjf),
+        );
+        assert_eq!(sched.cycle(&mut api, 0.0), vec![short, long]);
+    }
+
+    #[test]
+    fn fifo_skip_reproduces_default_config_decisions() {
+        // The explicit FifoSkip policy is the seed's implicit behaviour:
+        // identical configs modulo the queue field must place identically.
+        let run = |cfg: SchedulerConfig| {
+            let mut api = api();
+            for i in 1..=6 {
+                submit(&mut api, &VolcanoMpiController, GranularityPolicy::Granularity, i, Benchmark::MiniFe);
+            }
+            let mut sched = Scheduler::new(cfg);
+            sched.cycle(&mut api, 0.0);
+            api.pods
+                .values()
+                .map(|p| (p.id, p.node.map(|n| n.0), p.group))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(
+            run(SchedulerConfig::fine_grained(5)),
+            run(SchedulerConfig::fine_grained(5).with_queue(QueuePolicyKind::FifoSkip))
+        );
+    }
+
+    /// Property: gang rollback is exact. After `rollback_to`, the session's
+    /// free view and group placement must equal their pre-plan snapshots at
+    /// every nesting level, and a fully-unwound session must equal a fresh
+    /// rebuild from the API server — across randomized multi-job sessions
+    /// and every queue policy (which reorder the jobs being planned).
+    #[test]
+    fn prop_gang_rollback_restores_session_exactly() {
+        let benches = [
+            Benchmark::EpDgemm,
+            Benchmark::EpStream,
+            Benchmark::GFft,
+            Benchmark::GRandomRing,
+            Benchmark::MiniFe,
+        ];
+        let policies = [
+            GranularityPolicy::None,
+            GranularityPolicy::Scale,
+            GranularityPolicy::Granularity,
+        ];
+        for case in 0..30u64 {
+            let mut rng = Rng::seed_from_u64(9000 + case);
+            let mut api = api();
+            let n = rng.range_usize(4, 14);
+            for i in 1..=n {
+                submit(
+                    &mut api,
+                    &VolcanoMpiController,
+                    policies[rng.range_usize(0, policies.len())],
+                    i as u64,
+                    benches[rng.range_usize(0, benches.len())],
+                );
+            }
+            let kind = ALL_QUEUE_POLICIES[rng.range_usize(0, ALL_QUEUE_POLICIES.len())];
+            let mut sched =
+                Scheduler::new(SchedulerConfig::fine_grained(case).with_queue(kind));
+            // Commit some jobs for real so the session starts from a dirty
+            // cluster; the rest stay pending.
+            sched.cycle(&mut api, 0.0);
+
+            let mut state = SessionState {
+                free: api.spec.node_ids().map(|nd| api.free_on(nd)).collect(),
+                placement: Scheduler::rebuild_placement(&api),
+                log: Vec::new(),
+            };
+            let mut frames = Vec::new();
+            for &job in &api.pending_jobs() {
+                frames.push((state.checkpoint(), state.free.clone(), state.placement.clone()));
+                let _ = sched.plan_job(&api, &mut state, job);
+            }
+            for (cp, free, placement) in frames.into_iter().rev() {
+                state.rollback_to(cp);
+                assert_eq!(state.free, free, "case {case}: free drifted");
+                assert_eq!(state.placement, placement, "case {case}: placement drifted");
+            }
+            state.rollback_to(0);
+            let rebuilt_free: Vec<Resources> =
+                api.spec.node_ids().map(|nd| api.free_on(nd)).collect();
+            assert_eq!(state.free, rebuilt_free, "case {case}: free != rebuild");
+            assert_eq!(
+                state.placement,
+                Scheduler::rebuild_placement(&api),
+                "case {case}: placement != rebuild"
+            );
+            assert!(state.log.is_empty(), "case {case}: log not fully unwound");
+        }
     }
 }

@@ -1,0 +1,464 @@
+//! Job-queue policy subsystem — *which job goes next* (the layer next to
+//! the placement plugins, which decide *where* its pods land).
+//!
+//! The paper's scheduler walks the pending queue FIFO and silently skips
+//! gang-blocked jobs, so a large job at the head can starve behind a
+//! stream of small ones. This module makes the queue discipline a plugin:
+//! a [`QueuePolicy`] orders the pending queue, decides skip-vs-block on a
+//! gang failure, and may hold an EASY-style backfill reservation for the
+//! first blocked job, computed from the projected completion times of the
+//! running jobs.
+//!
+//! Four implementations:
+//! - [`FifoSkip`] — the seed behaviour made explicit: FIFO order, a
+//!   blocked job is skipped (later jobs may overtake it indefinitely);
+//! - [`FifoStrict`] — FIFO order, a blocked job blocks the session (no
+//!   overtaking, no starvation, poor utilization);
+//! - [`Sjf`] — shortest-job-first by the perf model's estimated base
+//!   runtime, blocked jobs skipped;
+//! - [`EasyBackfill`] — FIFO order; the first blocked job gets a
+//!   reservation at its *shadow time* (the projected instant enough
+//!   resources free up for its gang), and later jobs are backfilled only
+//!   if their estimated completion does not cross the shadow time.
+
+use std::collections::BTreeMap;
+
+use crate::apiserver::ApiServer;
+use crate::cluster::{ClusterSpec, JobId, NodeRole, Pod, PodPhase, PodRole, Resources};
+
+/// Selector for the queue discipline, carried by `SchedulerConfig`
+/// (kept `Copy` so scheduler profiles stay plain values).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum QueuePolicyKind {
+    /// Seed behaviour: FIFO walk, gang-blocked jobs skipped.
+    FifoSkip,
+    /// FIFO walk, first gang-blocked job ends the session.
+    FifoStrict,
+    /// Shortest-job-first by estimated base runtime.
+    Sjf,
+    /// EASY backfilling: FIFO + reservation for the first blocked job.
+    EasyBackfill,
+}
+
+/// All queue policies, in ablation-table order.
+pub const ALL_QUEUE_POLICIES: [QueuePolicyKind; 4] = [
+    QueuePolicyKind::FifoSkip,
+    QueuePolicyKind::FifoStrict,
+    QueuePolicyKind::Sjf,
+    QueuePolicyKind::EasyBackfill,
+];
+
+impl QueuePolicyKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            QueuePolicyKind::FifoSkip => "fifo",
+            QueuePolicyKind::FifoStrict => "fifo_strict",
+            QueuePolicyKind::Sjf => "sjf",
+            QueuePolicyKind::EasyBackfill => "easy_backfill",
+        }
+    }
+
+    /// Parse a CLI/config spelling (case-insensitive, common aliases).
+    pub fn parse(s: &str) -> Option<QueuePolicyKind> {
+        match s.to_ascii_lowercase().replace('-', "_").as_str() {
+            "fifo" | "fifo_skip" => Some(QueuePolicyKind::FifoSkip),
+            "fifo_strict" | "strict" => Some(QueuePolicyKind::FifoStrict),
+            "sjf" | "shortest_job_first" => Some(QueuePolicyKind::Sjf),
+            "easy_backfill" | "easy" | "backfill" | "bf" => {
+                Some(QueuePolicyKind::EasyBackfill)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn build(&self) -> Box<dyn QueuePolicy> {
+        match self {
+            QueuePolicyKind::FifoSkip => Box::new(FifoSkip),
+            QueuePolicyKind::FifoStrict => Box::new(FifoStrict),
+            QueuePolicyKind::Sjf => Box::new(Sjf),
+            QueuePolicyKind::EasyBackfill => Box::new(EasyBackfill),
+        }
+    }
+}
+
+impl std::fmt::Display for QueuePolicyKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Read-only view of one scheduling session handed to queue decisions.
+pub struct QueueContext<'a> {
+    pub api: &'a ApiServer,
+    pub now: f64,
+    /// Projected completion time of each running job (the simulator feeds
+    /// its exact projections; standalone callers get base-time estimates).
+    pub projected_completion: &'a BTreeMap<JobId, f64>,
+    /// The session's current free-resource view, indexed by node.
+    pub free: &'a [Resources],
+}
+
+/// What a gang-placement failure means for the rest of the session.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum GangDecision {
+    /// Keep walking the queue; the failed job stays pending.
+    Skip,
+    /// Stop the session: nothing behind the failed job may start.
+    Block,
+    /// Hold a reservation for the failed job: later jobs may start only
+    /// if they are projected to finish before `shadow_time`.
+    Reserve { shadow_time: f64 },
+}
+
+/// The queue discipline plugin: ordering + gang-failure semantics +
+/// backfill admission under a held reservation.
+///
+/// `order` applies to every scheduler profile; the gang-failure and
+/// backfill hooks only fire under gang all-or-nothing (`config.gang`), so
+/// the block/reserve disciplines are rejected for no-gang profiles at the
+/// CLI/config boundary rather than silently degrading to FIFO-skip.
+pub trait QueuePolicy {
+    fn kind(&self) -> QueuePolicyKind;
+
+    /// Reorder the pending queue (input: FIFO by submit time).
+    fn order(&self, api: &ApiServer, pending: &mut Vec<JobId>);
+
+    /// Decide what the *first* gang failure of the session means.
+    fn on_gang_failure(&self, ctx: &QueueContext<'_>, job: JobId) -> GangDecision;
+
+    /// With a reservation at `shadow_time`, may `job` still be tried?
+    fn may_backfill(&self, ctx: &QueueContext<'_>, job: JobId, shadow_time: f64) -> bool;
+
+    /// Whether this policy reads the projected-completion map. Lets
+    /// [`Scheduler::cycle`](crate::scheduler::Scheduler::cycle) skip
+    /// building completion estimates on the default (FIFO) hot path.
+    fn needs_projections(&self) -> bool {
+        false
+    }
+}
+
+/// Estimated base runtime of a job — the perf model's uncontended,
+/// best-placement running time for its benchmark. SJF ordering and the
+/// backfill window both use this estimate (contention slowdowns are not
+/// known ahead of time, so backfill guarantees are soft, as in real EASY
+/// deployments with user-supplied walltimes).
+pub fn estimated_runtime(api: &ApiServer, job: JobId) -> f64 {
+    api.jobs[&job].planned.spec.benchmark.base_running_secs()
+}
+
+/// Base-time estimate of every running job's completion, for callers that
+/// schedule without a simulator (`Scheduler::cycle`): started + estimated
+/// base runtime, clamped to `now` for overrunning jobs.
+pub fn estimated_completions(api: &ApiServer, now: f64) -> BTreeMap<JobId, f64> {
+    api.running_jobs()
+        .into_iter()
+        .map(|id| {
+            let job = &api.jobs[&id];
+            let start = job.start_time.unwrap_or(now);
+            (id, (start + estimated_runtime(api, id)).max(now))
+        })
+        .collect()
+}
+
+/// Greedy role-constrained first-fit of `pods` into the per-node `free`
+/// vector, mutating it as pods are placed. Returns false as soon as some
+/// pod cannot fit. A cheap stand-in for a full scored placement, shared
+/// by the EASY shadow-time search and the simulator's submit-time
+/// gang-feasibility check.
+pub fn first_fit_pods<'a>(
+    spec: &ClusterSpec,
+    free: &mut [Resources],
+    pods: impl Iterator<Item = &'a Pod>,
+) -> bool {
+    for pod in pods {
+        let mut placed = false;
+        for (n, f) in free.iter_mut().enumerate() {
+            let role_ok = match pod.role {
+                PodRole::Launcher => spec.nodes[n].role == NodeRole::ControlPlane,
+                PodRole::Worker { .. } => spec.nodes[n].role == NodeRole::Worker,
+            };
+            if role_ok && pod.requests.fits_within(f) {
+                *f -= pod.requests;
+                placed = true;
+                break;
+            }
+        }
+        if !placed {
+            return false;
+        }
+    }
+    true
+}
+
+/// Can `job`'s pending pods be first-fit placed into `free`?
+fn fits(api: &ApiServer, free: &[Resources], job: JobId) -> bool {
+    let mut trial: Vec<Resources> = free.to_vec();
+    let pending = api.jobs[&job]
+        .pods
+        .iter()
+        .map(|pid| &api.pods[pid])
+        .filter(|p| p.phase == PodPhase::Pending);
+    first_fit_pods(&api.spec, &mut trial, pending)
+}
+
+/// EASY shadow time: walk the running jobs in projected-completion order,
+/// releasing their resources onto the session's free view, until the
+/// blocked job's gang fits. Returns `None` when it can never fit (the job
+/// is infeasible for this cluster even when idle).
+pub fn shadow_time(ctx: &QueueContext<'_>, job: JobId) -> Option<f64> {
+    let mut free: Vec<Resources> = ctx.free.to_vec();
+    if fits(ctx.api, &free, job) {
+        return Some(ctx.now);
+    }
+    let mut releases: Vec<(f64, JobId)> = ctx
+        .api
+        .running_jobs()
+        .into_iter()
+        .map(|id| {
+            let t = ctx
+                .projected_completion
+                .get(&id)
+                .copied()
+                .unwrap_or_else(|| ctx.now + estimated_runtime(ctx.api, id));
+            (t.max(ctx.now), id)
+        })
+        .collect();
+    releases.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    for (t, id) in releases {
+        for pid in &ctx.api.jobs[&id].pods {
+            let pod = &ctx.api.pods[pid];
+            if let (Some(node), PodPhase::Bound | PodPhase::Running) = (pod.node, pod.phase) {
+                free[node.0] += pod.requests;
+            }
+        }
+        if fits(ctx.api, &free, job) {
+            return Some(t);
+        }
+    }
+    None
+}
+
+/// Seed behaviour: FIFO, blocked jobs skipped.
+pub struct FifoSkip;
+
+impl QueuePolicy for FifoSkip {
+    fn kind(&self) -> QueuePolicyKind {
+        QueuePolicyKind::FifoSkip
+    }
+
+    fn order(&self, _api: &ApiServer, _pending: &mut Vec<JobId>) {}
+
+    fn on_gang_failure(&self, _ctx: &QueueContext<'_>, _job: JobId) -> GangDecision {
+        GangDecision::Skip
+    }
+
+    fn may_backfill(&self, _ctx: &QueueContext<'_>, _job: JobId, _shadow: f64) -> bool {
+        true
+    }
+}
+
+/// FIFO where the head blocks: no overtaking, so no starvation.
+pub struct FifoStrict;
+
+impl QueuePolicy for FifoStrict {
+    fn kind(&self) -> QueuePolicyKind {
+        QueuePolicyKind::FifoStrict
+    }
+
+    fn order(&self, _api: &ApiServer, _pending: &mut Vec<JobId>) {}
+
+    fn on_gang_failure(&self, _ctx: &QueueContext<'_>, _job: JobId) -> GangDecision {
+        GangDecision::Block
+    }
+
+    fn may_backfill(&self, _ctx: &QueueContext<'_>, _job: JobId, _shadow: f64) -> bool {
+        false
+    }
+}
+
+/// Shortest-job-first on the estimated base runtime; FIFO + id tiebreak
+/// keeps the order total and deterministic.
+pub struct Sjf;
+
+impl QueuePolicy for Sjf {
+    fn kind(&self) -> QueuePolicyKind {
+        QueuePolicyKind::Sjf
+    }
+
+    fn order(&self, api: &ApiServer, pending: &mut Vec<JobId>) {
+        pending.sort_by(|&a, &b| {
+            estimated_runtime(api, a)
+                .total_cmp(&estimated_runtime(api, b))
+                .then_with(|| {
+                    api.jobs[&a].submit_time.total_cmp(&api.jobs[&b].submit_time)
+                })
+                .then(a.cmp(&b))
+        });
+    }
+
+    fn on_gang_failure(&self, _ctx: &QueueContext<'_>, _job: JobId) -> GangDecision {
+        GangDecision::Skip
+    }
+
+    fn may_backfill(&self, _ctx: &QueueContext<'_>, _job: JobId, _shadow: f64) -> bool {
+        true
+    }
+}
+
+/// EASY backfilling (Lifka '95): FIFO, with a shadow-time reservation for
+/// the first blocked job; later jobs start only if they are projected to
+/// finish before the shadow time, so the reservation is never pushed back
+/// (up to estimate error).
+pub struct EasyBackfill;
+
+impl QueuePolicy for EasyBackfill {
+    fn kind(&self) -> QueuePolicyKind {
+        QueuePolicyKind::EasyBackfill
+    }
+
+    fn order(&self, _api: &ApiServer, _pending: &mut Vec<JobId>) {}
+
+    fn on_gang_failure(&self, ctx: &QueueContext<'_>, job: JobId) -> GangDecision {
+        match shadow_time(ctx, job) {
+            Some(t) => GangDecision::Reserve { shadow_time: t },
+            // Infeasible even on an idle cluster: don't let it dam the
+            // queue (the simulator marks such jobs unschedulable anyway).
+            None => GangDecision::Skip,
+        }
+    }
+
+    fn may_backfill(&self, ctx: &QueueContext<'_>, job: JobId, shadow: f64) -> bool {
+        ctx.now + estimated_runtime(ctx.api, job) <= shadow + 1e-9
+    }
+
+    fn needs_projections(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::controller::{JobController, VolcanoMpiController};
+    use crate::kubelet::KubeletConfig;
+    use crate::planner::{plan, GranularityPolicy, SystemInfo};
+    use crate::workload::{Benchmark, JobSpec};
+
+    fn api_with_jobs(benches: &[Benchmark]) -> ApiServer {
+        let mut api = ApiServer::new(ClusterSpec::paper(), KubeletConfig::cpu_mem_affinity());
+        let info = SystemInfo { available_nodes: 4 };
+        for (i, &b) in benches.iter().enumerate() {
+            let spec = JobSpec::paper_job(i as u64 + 1, b, i as f64);
+            let planned = plan(&spec, GranularityPolicy::None, info);
+            let (pods, hostfile) = VolcanoMpiController.build(&planned, &mut api);
+            api.create_job(planned, pods, hostfile, i as f64);
+        }
+        api
+    }
+
+    #[test]
+    fn kind_names_round_trip_and_aliases_parse() {
+        for kind in ALL_QUEUE_POLICIES {
+            assert_eq!(QueuePolicyKind::parse(kind.name()), Some(kind));
+            assert_eq!(kind.build().kind(), kind);
+        }
+        assert_eq!(QueuePolicyKind::parse("EASY"), Some(QueuePolicyKind::EasyBackfill));
+        assert_eq!(QueuePolicyKind::parse("bf"), Some(QueuePolicyKind::EasyBackfill));
+        assert_eq!(QueuePolicyKind::parse("FIFO-STRICT"), Some(QueuePolicyKind::FifoStrict));
+        assert_eq!(QueuePolicyKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn sjf_orders_by_estimated_runtime() {
+        // G-RandomRing (320 s) < G-FFT (400 s) < EP-STREAM (480 s) <
+        // EP-DGEMM (600 s) < MiniFE (720 s).
+        let api = api_with_jobs(&[
+            Benchmark::MiniFe,
+            Benchmark::GRandomRing,
+            Benchmark::EpDgemm,
+            Benchmark::GFft,
+            Benchmark::EpStream,
+        ]);
+        let mut pending = api.pending_jobs();
+        Sjf.order(&api, &mut pending);
+        let ordered: Vec<u64> = pending.iter().map(|j| j.0).collect();
+        assert_eq!(ordered, vec![2, 4, 5, 3, 1]);
+    }
+
+    #[test]
+    fn sjf_ties_break_fifo_then_id() {
+        let api = api_with_jobs(&[Benchmark::EpDgemm, Benchmark::EpDgemm, Benchmark::EpDgemm]);
+        let mut pending = api.pending_jobs();
+        Sjf.order(&api, &mut pending);
+        assert_eq!(pending, api.pending_jobs(), "equal runtimes keep FIFO order");
+    }
+
+    #[test]
+    fn shadow_time_is_earliest_sufficient_release() {
+        // Fill the 8 single-worker slots, then ask for the shadow time of a
+        // 9th identical job: it fits as soon as the first running job ends.
+        let mut api = api_with_jobs(&[Benchmark::EpDgemm; 9]);
+        let mut sched = crate::scheduler::Scheduler::new(
+            crate::scheduler::SchedulerConfig::volcano_default(1),
+        );
+        let started = sched.cycle(&mut api, 0.0);
+        assert_eq!(started.len(), 8);
+        let blocked = api.pending_jobs()[0];
+        let mut projected = BTreeMap::new();
+        for (i, &j) in started.iter().enumerate() {
+            projected.insert(j, 100.0 + i as f64 * 10.0);
+        }
+        let free: Vec<Resources> = api.spec.node_ids().map(|n| api.free_on(n)).collect();
+        let ctx = QueueContext { api: &api, now: 9.0, projected_completion: &projected, free: &free };
+        assert_eq!(shadow_time(&ctx, blocked), Some(100.0));
+    }
+
+    #[test]
+    fn shadow_time_none_for_infeasible_job() {
+        let mut api = api_with_jobs(&[Benchmark::EpDgemm]);
+        // A job whose single worker wants 64 cores can never fit a 32-core
+        // node.
+        let mut spec = JobSpec::paper_job(7, Benchmark::EpDgemm, 0.0);
+        spec.ntasks = 64;
+        spec.resources = crate::cluster::Resources::new(64_000, crate::cluster::gib(128));
+        let planned = plan(&spec, GranularityPolicy::None, SystemInfo { available_nodes: 4 });
+        let (pods, hostfile) = VolcanoMpiController.build(&planned, &mut api);
+        api.create_job(planned, pods, hostfile, 0.0);
+        let free: Vec<Resources> = api.spec.node_ids().map(|n| api.free_on(n)).collect();
+        let projected = BTreeMap::new();
+        let ctx = QueueContext { api: &api, now: 0.0, projected_completion: &projected, free: &free };
+        assert_eq!(shadow_time(&ctx, JobId(7)), None);
+        assert_eq!(
+            EasyBackfill.on_gang_failure(&ctx, JobId(7)),
+            GangDecision::Skip,
+            "infeasible jobs must not dam the queue"
+        );
+    }
+
+    #[test]
+    fn backfill_window_admits_only_jobs_that_finish_before_shadow() {
+        let api = api_with_jobs(&[Benchmark::GRandomRing, Benchmark::MiniFe]);
+        let free: Vec<Resources> = api.spec.node_ids().map(|n| api.free_on(n)).collect();
+        let projected = BTreeMap::new();
+        let ctx = QueueContext { api: &api, now: 0.0, projected_completion: &projected, free: &free };
+        // Shadow at 350 s: the 320 s ring job fits the window, MiniFE (720 s)
+        // does not.
+        assert!(EasyBackfill.may_backfill(&ctx, JobId(1), 350.0));
+        assert!(!EasyBackfill.may_backfill(&ctx, JobId(2), 350.0));
+        // Strict never backfills; FIFO-skip always walks on.
+        assert!(!FifoStrict.may_backfill(&ctx, JobId(1), 350.0));
+        assert!(FifoSkip.may_backfill(&ctx, JobId(2), 350.0));
+    }
+
+    #[test]
+    fn gang_failure_decisions_match_policies() {
+        let api = api_with_jobs(&[Benchmark::EpDgemm]);
+        let free: Vec<Resources> = api.spec.node_ids().map(|n| api.free_on(n)).collect();
+        let projected = BTreeMap::new();
+        let ctx = QueueContext { api: &api, now: 0.0, projected_completion: &projected, free: &free };
+        assert_eq!(FifoSkip.on_gang_failure(&ctx, JobId(1)), GangDecision::Skip);
+        assert_eq!(FifoStrict.on_gang_failure(&ctx, JobId(1)), GangDecision::Block);
+        assert_eq!(Sjf.on_gang_failure(&ctx, JobId(1)), GangDecision::Skip);
+    }
+}

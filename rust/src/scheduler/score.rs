@@ -27,7 +27,7 @@ pub type GroupKey = (JobId, usize);
 
 /// The cluster-wide group placement view Algorithm 4 scores against,
 /// maintained incrementally by the scheduling session as binds commit.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct GroupPlacement {
     /// (job, group) -> nodes already bound for that group, with counts.
     pub bound_nodes: BTreeMap<GroupKey, BTreeMap<NodeId, u32>>,
@@ -41,6 +41,10 @@ impl GroupPlacement {
         self.groups_on_node.entry(node).or_default().insert(key);
     }
 
+    /// Exact inverse of [`GroupPlacement::record`]: empty inner maps/sets
+    /// are pruned so a record+remove pair restores the structure
+    /// bit-for-bit (the gang undo-log relies on this for its rollback
+    /// invariant).
     pub fn remove(&mut self, key: GroupKey, node: NodeId) {
         if let Some(nodes) = self.bound_nodes.get_mut(&key) {
             if let Some(c) = nodes.get_mut(&node) {
@@ -49,8 +53,14 @@ impl GroupPlacement {
                     nodes.remove(&node);
                     if let Some(set) = self.groups_on_node.get_mut(&node) {
                         set.remove(&key);
+                        if set.is_empty() {
+                            self.groups_on_node.remove(&node);
+                        }
                     }
                 }
+            }
+            if nodes.is_empty() {
+                self.bound_nodes.remove(&key);
             }
         }
     }

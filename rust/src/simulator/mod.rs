@@ -12,8 +12,8 @@
 
 use std::collections::BTreeMap;
 
-use crate::apiserver::ApiServer;
-use crate::cluster::{ClusterSpec, JobId};
+use crate::apiserver::{ApiServer, JobPhase};
+use crate::cluster::{ClusterSpec, JobId, Pod, Resources};
 use crate::controller::JobController;
 use crate::kubelet::KubeletConfig;
 use crate::perfmodel::{job_slowdown_with, Calibration, ClusterLoads};
@@ -64,6 +64,9 @@ impl JobRecord {
 /// placements) for reporting.
 pub struct SimOutput {
     pub records: Vec<JobRecord>,
+    /// Jobs whose gang can never fit the cluster, recorded as failed
+    /// instead of aborting the run (they have no JobRecord).
+    pub unschedulable: Vec<JobId>,
     pub api: ApiServer,
 }
 
@@ -109,6 +112,7 @@ pub struct Simulation {
     calib: Calibration,
     rng: Rng,
     progress: BTreeMap<JobId, JobProgress>,
+    unschedulable: Vec<JobId>,
     now: f64,
     /// Per-benchmark ideal work override (seconds); defaults to
     /// `Benchmark::base_running_secs`. The e2e driver feeds PJRT-measured
@@ -134,6 +138,7 @@ impl Simulation {
             calib,
             rng: Rng::seed_from_u64(seed),
             progress: BTreeMap::new(),
+            unschedulable: Vec::new(),
             now: 0.0,
             base_work: BTreeMap::new(),
         }
@@ -179,17 +184,33 @@ impl Simulation {
 
     /// Submit one job *now*: plan granularity (Algorithm 1), build pods
     /// (Algorithm 2 or a baseline controller), register with the API
-    /// server.
+    /// server. Jobs whose gang can never fit the cluster (requests vs.
+    /// total allocatable per role) are registered but immediately marked
+    /// unschedulable instead of stalling the event loop forever.
     fn submit(&mut self, spec: &JobSpec) {
         let info = SystemInfo { available_nodes: self.api.spec.worker_count() as u32 };
         let planned = plan(spec, self.policy, info);
         let (pods, hostfile) = self.controller.build(&planned, &mut self.api);
+        let job_id = planned.spec.id;
+        let feasible = gang_feasible(&self.api.spec, &pods);
         self.api.create_job(planned, pods, hostfile, self.now);
+        if !feasible {
+            self.api.mark_unschedulable(job_id, self.now);
+            self.unschedulable.push(job_id);
+        }
     }
 
-    /// Run one scheduling session and initialize progress for started jobs.
+    /// Run one scheduling session and initialize progress for started
+    /// jobs. The scheduler gets the simulator's exact projected completion
+    /// times, which the EASY-backfill queue policy uses for its shadow-time
+    /// reservation.
     fn schedule(&mut self) {
-        let started = self.scheduler.cycle(&mut self.api, self.now);
+        let projected: BTreeMap<JobId, f64> = self
+            .progress
+            .iter()
+            .map(|(&id, p)| (id, self.now + (p.remaining / p.rate).max(0.0)))
+            .collect();
+        let started = self.scheduler.cycle_with_projections(&mut self.api, self.now, &projected);
         if started.is_empty() {
             return;
         }
@@ -215,7 +236,7 @@ impl Simulation {
         let total = arrivals.len();
         let mut finished = 0usize;
 
-        while finished < total {
+        while finished + self.unschedulable.len() < total {
             let arrival_t = arrivals.get(next_arrival).map(|j| j.submit_time);
             let completion = self.next_completion();
 
@@ -225,13 +246,19 @@ impl Simulation {
                 (_, Some((c, _))) => (c, false),
                 (None, None) => {
                     // Pending jobs but nothing running and no arrivals:
-                    // capacity deadlock — impossible with gang + paper
-                    // job sizes; guard for robustness.
-                    panic!(
-                        "simulation stalled at t={} with {} pending jobs",
-                        self.now,
-                        self.api.pending_jobs().len()
-                    );
+                    // the leftovers can never fit (the submit-time
+                    // feasibility check should catch this; guard so an
+                    // adversarial trace degrades to failed jobs instead of
+                    // aborting the process).
+                    let stuck = self.api.pending_jobs();
+                    if stuck.is_empty() {
+                        break;
+                    }
+                    for id in stuck {
+                        self.api.mark_unschedulable(id, self.now);
+                        self.unschedulable.push(id);
+                    }
+                    continue;
                 }
             };
 
@@ -272,6 +299,7 @@ impl Simulation {
             .api
             .jobs
             .values()
+            .filter(|j| j.phase == JobPhase::Succeeded)
             .map(|j| JobRecord {
                 id: j.planned.spec.id,
                 benchmark: j.planned.spec.benchmark,
@@ -280,8 +308,26 @@ impl Simulation {
                 finish_time: j.finish_time.expect("job never finished"),
             })
             .collect();
-        SimOutput { records, api: self.api }
+        SimOutput { records, unschedulable: self.unschedulable, api: self.api }
     }
+}
+
+/// Gang-feasibility on an *idle* cluster: greedy first-fit-decreasing of
+/// the job's pods into per-node allocatable capacity, respecting node
+/// roles (shared first-fit with the EASY shadow-time search). A job that
+/// fails this can never be scheduled, no matter what finishes — the
+/// simulator records it as unschedulable at submit.
+pub fn gang_feasible(spec: &ClusterSpec, pods: &[Pod]) -> bool {
+    let mut free: Vec<Resources> = spec.nodes.iter().map(|n| n.allocatable()).collect();
+    // Big pods first so the greedy check is not order-sensitive for the
+    // homogeneous pod shapes the controllers emit.
+    let mut order: Vec<usize> = (0..pods.len()).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(pods[i].requests.sort_key()));
+    crate::scheduler::queue::first_fit_pods(
+        spec,
+        &mut free,
+        order.iter().map(|&i| &pods[i]),
+    )
 }
 
 #[cfg(test)]
@@ -412,6 +458,71 @@ mod tests {
         assert!(out.records.is_empty());
         assert_eq!(out.makespan(), 0.0);
         assert_eq!(out.overall_response(), 0.0);
+    }
+
+    #[test]
+    fn oversized_job_is_recorded_unschedulable_not_a_panic() {
+        // A 64-task job under GranularityPolicy::None becomes one 64-core
+        // worker, which can never fit a 32-core node. The seed panicked
+        // with "simulation stalled"; it must now be recorded as failed
+        // while the rest of the trace completes.
+        let s = sim(
+            KubeletConfig::cpu_mem_affinity(),
+            GranularityPolicy::None,
+            SchedulerConfig::volcano_default(1),
+        );
+        let mut big = JobSpec::paper_job(1, Benchmark::EpDgemm, 0.0);
+        big.ntasks = 64;
+        big.resources = Resources::new(64_000, crate::cluster::gib(128));
+        let trace = vec![big, JobSpec::paper_job(2, Benchmark::EpStream, 10.0)];
+        let out = s.run(&trace);
+        assert_eq!(out.unschedulable, vec![JobId(1)]);
+        assert_eq!(out.api.jobs[&JobId(1)].phase, JobPhase::Unschedulable);
+        assert_eq!(out.records.len(), 1);
+        assert_eq!(out.records[0].id, JobId(2));
+        // The feasible job ran clean — no resource leak from the failed one.
+        for n in out.api.spec.node_ids() {
+            assert_eq!(out.api.free_on(n), out.api.spec.node(n).allocatable());
+        }
+    }
+
+    #[test]
+    fn all_infeasible_trace_terminates_with_empty_records() {
+        let s = sim(
+            KubeletConfig::cpu_mem_affinity(),
+            GranularityPolicy::None,
+            SchedulerConfig::volcano_default(1),
+        );
+        let mut big = JobSpec::paper_job(1, Benchmark::MiniFe, 0.0);
+        big.ntasks = 40;
+        big.resources = Resources::new(40_000, crate::cluster::gib(80));
+        let out = s.run(&[big]);
+        assert!(out.records.is_empty());
+        assert_eq!(out.unschedulable, vec![JobId(1)]);
+    }
+
+    #[test]
+    fn gang_feasible_respects_roles_and_capacity() {
+        use crate::cluster::{PodId, PodRole};
+        let spec = ClusterSpec::paper();
+        let mk = |id: u64, role: PodRole, cores: u64| {
+            let mut p = Pod::new(PodId(id), JobId(1), format!("p{id}"), role);
+            p.requests = Resources::new(cores * 1000, crate::cluster::gib(2));
+            p
+        };
+        // Four 32-core workers exactly fill the four worker nodes.
+        let full: Vec<Pod> =
+            (0..4).map(|i| mk(i, PodRole::Worker { index: i as u32 }, 32)).collect();
+        assert!(gang_feasible(&spec, &full));
+        // A fifth worker cannot fit anywhere.
+        let mut five = full.clone();
+        five.push(mk(9, PodRole::Worker { index: 4 }, 32));
+        assert!(!gang_feasible(&spec, &five));
+        // A 33-core worker can never fit a 32-core node.
+        assert!(!gang_feasible(&spec, &[mk(0, PodRole::Worker { index: 0 }, 33)]));
+        // Launchers are role-constrained to the control plane (which a
+        // worker may not use).
+        assert!(gang_feasible(&spec, &[mk(0, PodRole::Launcher, 1)]));
     }
 
     #[test]

@@ -167,6 +167,37 @@ fn experiments_run(
     kube_fgs::experiments::run_scenario(scenario, trace, seed, None)
 }
 
+/// Property: every queue policy completes every feasible job — no
+/// discipline (including strict head-blocking and EASY reservations)
+/// starves a job forever — and resources are fully returned.
+#[test]
+fn prop_queue_policies_complete_all_jobs() {
+    let mut rng = Rng::seed_from_u64(808);
+    for case in 0..12 {
+        let n_jobs = rng.range_usize(5, 30);
+        let interval = rng.range_f64(20.0, 120.0);
+        let seed = rng.next_u64();
+        let trace = uniform_trace(n_jobs, interval, seed);
+        for kind in kube_fgs::scheduler::ALL_QUEUE_POLICIES {
+            let out = kube_fgs::experiments::run_scenario_with_queue(
+                Scenario::CmGTg,
+                kind,
+                &trace,
+                seed,
+            );
+            assert_eq!(out.records.len(), n_jobs, "case {case} {kind}");
+            assert!(out.unschedulable.is_empty(), "case {case} {kind}");
+            for n in out.api.spec.node_ids() {
+                assert_eq!(
+                    out.api.free_on(n),
+                    out.api.spec.node(n).allocatable(),
+                    "case {case} {kind}: leaked resources"
+                );
+            }
+        }
+    }
+}
+
 /// Property: perf-model monotonicity — a job's slowdown is never below 1,
 /// and network jobs never beat their single-container placement when
 /// scattered.
