@@ -15,7 +15,7 @@ use kube_fgs::perfmodel::{job_slowdown, job_slowdown_with, Calibration, ClusterL
 use kube_fgs::planner::{plan, GranularityPolicy, SystemInfo};
 use kube_fgs::scheduler::{Scheduler, SchedulerConfig};
 use kube_fgs::util::BenchTimer;
-use kube_fgs::workload::{exp2_trace, JobSpec, Benchmark};
+use kube_fgs::workload::{exp2_trace, uniform_trace, Benchmark, JobSpec};
 
 /// API server with `n` pending granularity jobs (16 pods each).
 fn pending_cluster(n: u64, workers: usize) -> ApiServer {
@@ -85,6 +85,25 @@ fn main() {
                     Scheduler::new(SchedulerConfig::fine_grained(1).with_queue(kind));
                 sched.cycle(&mut api, 0.0);
             });
+    }
+
+    // Group-placement session view: the old full pod scan (reference,
+    // kept as Scheduler::rebuild_placement) vs the API server's
+    // incrementally maintained view that sessions now clone. The gap grows
+    // with schedule history — after a 200-job trace the scan walks ~3.4k
+    // mostly-succeeded pods while the incremental view is near-empty.
+    {
+        let sim = kube_fgs::scenario::Scenario::CmGTg.simulation(2);
+        let out = sim.run(&uniform_trace(200, 60.0, 2));
+        let api = out.api;
+        BenchTimer::new("placement/full-pod-scan (before)").with_iters(5, 200).run(|| {
+            let p = Scheduler::rebuild_placement(&api);
+            std::hint::black_box(&p);
+        });
+        BenchTimer::new("placement/incremental-clone (after)").with_iters(5, 200).run(|| {
+            let p = api.group_placement().clone();
+            std::hint::black_box(&p);
+        });
     }
 
     // Full experiment-2 simulation, one scenario.

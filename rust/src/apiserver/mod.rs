@@ -15,7 +15,8 @@ use crate::cluster::{
     ClusterSpec, HostfileEntry, JobId, NodeId, Pod, PodId, PodPhase, Resources,
 };
 use crate::kubelet::{Kubelet, KubeletConfig};
-use crate::workload::PlannedJob;
+use crate::scheduler::score::GroupPlacement;
+use crate::workload::{PlannedJob, TenantId};
 
 /// Lifecycle of a job (podgroup) object.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -25,6 +26,9 @@ pub enum JobPhase {
     /// All pods bound and admitted; MPI processes running.
     Running,
     Succeeded,
+    /// Evicted by priority preemption: pods released, waiting to be
+    /// re-queued (checkpoint-restart) by the simulator.
+    Preempted,
     /// Gang can never fit the cluster (detected at submit, or by the
     /// simulator's stall guard); removed from the scheduling queue.
     Unschedulable,
@@ -38,7 +42,14 @@ pub struct JobObject {
     pub hostfile: Vec<HostfileEntry>,
     pub phase: JobPhase,
     pub submit_time: f64,
+    /// Start of the current/most recent stint (cleared on requeue).
     pub start_time: Option<f64>,
+    /// First time the job ever started (survives preemption).
+    pub first_start_time: Option<f64>,
+    /// Wall-clock seconds of *completed* stints (preempted runs); the
+    /// current stint is added at finish/preempt time, so after completion
+    /// this is the job's total in-service time.
+    pub served_secs: f64,
     pub finish_time: Option<f64>,
 }
 
@@ -49,6 +60,7 @@ pub enum Event {
     PodBound { t: f64, pod: PodId, node: NodeId },
     JobStarted { t: f64, job: JobId },
     JobFinished { t: f64, job: JobId },
+    JobPreempted { t: f64, job: JobId },
     JobUnschedulable { t: f64, job: JobId },
 }
 
@@ -59,6 +71,7 @@ impl Event {
             | Event::PodBound { t, .. }
             | Event::JobStarted { t, .. }
             | Event::JobFinished { t, .. }
+            | Event::JobPreempted { t, .. }
             | Event::JobUnschedulable { t, .. } => *t,
         }
     }
@@ -81,6 +94,16 @@ pub struct ApiServer {
     /// scheduling session dominated large queues, and `partial_cmp`
     /// panicked on NaN submit times).
     pending: Vec<JobId>,
+    /// Cluster-wide task-group placement view, maintained incrementally on
+    /// bind/finish/preempt (§Perf: `Scheduler::rebuild_placement` scanned
+    /// every pod — including succeeded ones — once per scheduling session).
+    placement: GroupPlacement,
+    /// Fair-share weight per tenant (PriorityClass/ResourceQuota stand-in);
+    /// unknown tenants default to weight 1.0.
+    tenant_weights: BTreeMap<TenantId, f64>,
+    /// Core-seconds consumed by each tenant's *terminated* (succeeded or
+    /// preempted) runs; running jobs are added live by `tenant_usage`.
+    consumed_service: BTreeMap<TenantId, f64>,
     next_pod_id: u64,
 }
 
@@ -101,7 +124,68 @@ impl ApiServer {
             events: Vec::new(),
             watch: WatchBus::new(),
             pending: Vec::new(),
+            placement: GroupPlacement::default(),
+            tenant_weights: BTreeMap::new(),
+            consumed_service: BTreeMap::new(),
             next_pod_id: 0,
+        }
+    }
+
+    /// The incrementally maintained task-group placement view (equal, at
+    /// all times, to `Scheduler::rebuild_placement`'s full pod scan —
+    /// guarded by a property test).
+    pub fn group_placement(&self) -> &GroupPlacement {
+        &self.placement
+    }
+
+    /// Register a tenant's fair-share weight (default 1.0 when unset).
+    pub fn set_tenant_weight(&mut self, tenant: TenantId, weight: f64) {
+        assert!(weight > 0.0, "tenant weight must be positive");
+        self.tenant_weights.insert(tenant, weight);
+    }
+
+    pub fn tenant_weight(&self, tenant: TenantId) -> f64 {
+        self.tenant_weights.get(&tenant).copied().unwrap_or(1.0)
+    }
+
+    /// Core-seconds of service each tenant has received up to `now`
+    /// (terminated runs plus the live elapsed time of running jobs) — the
+    /// deficit counter the fair-share queue orders by.
+    pub fn tenant_usage(&self, now: f64) -> BTreeMap<TenantId, f64> {
+        let mut usage = self.consumed_service.clone();
+        for job in self.jobs.values() {
+            if job.phase == JobPhase::Running {
+                let cores = job.planned.spec.resources.cpu_milli as f64 / 1000.0;
+                let elapsed = (now - job.start_time.unwrap_or(now)).max(0.0);
+                *usage.entry(job.planned.spec.tenant).or_insert(0.0) += elapsed * cores;
+            }
+        }
+        usage
+    }
+
+    /// Record a finished stint of `job` (started .. now) into the job's
+    /// served-time and the tenant service accumulators.
+    fn account_service(&mut self, job_id: JobId, now: f64) {
+        let job = self.jobs.get_mut(&job_id).expect("service of unknown job");
+        let cores = job.planned.spec.resources.cpu_milli as f64 / 1000.0;
+        let elapsed = (now - job.start_time.expect("service of unstarted job")).max(0.0);
+        let tenant = job.planned.spec.tenant;
+        job.served_secs += elapsed;
+        *self.consumed_service.entry(tenant).or_insert(0.0) += elapsed * cores;
+    }
+
+    /// Release one bound/running pod's node resources, cpuset grant, and
+    /// group-placement entry (shared by finish/preempt/unschedulable —
+    /// callers decide the pod's next phase and whether the historical
+    /// node/cpuset stay on the object for post-mortem reporting).
+    fn release_pod_resources(&mut self, pid: PodId, job_id: JobId) {
+        let pod = &self.pods[&pid];
+        let node = pod.node.expect("release of unbound pod");
+        let snapshot = pod.clone();
+        self.allocated[node.0] -= snapshot.requests;
+        self.kubelets[node.0].terminate(&snapshot);
+        if let Some(g) = snapshot.group {
+            self.placement.remove((job_id, g), node);
         }
     }
 
@@ -133,6 +217,8 @@ impl ApiServer {
                 phase: JobPhase::Pending,
                 submit_time: now,
                 start_time: None,
+                first_start_time: None,
+                served_secs: 0.0,
                 finish_time: None,
             },
         );
@@ -168,7 +254,12 @@ impl ApiServer {
         }
         pod.node = Some(node);
         pod.phase = PodPhase::Bound;
-        self.allocated[node.0] += pod.requests;
+        let requests = pod.requests;
+        let group = pod.group.map(|g| (pod.job, g));
+        self.allocated[node.0] += requests;
+        if let Some(key) = group {
+            self.placement.record(key, node);
+        }
         self.events.push(Event::PodBound { t: now, pod: pod_id, node });
         self.watch.publish(Event::PodBound { t: now, pod: pod_id, node });
         true
@@ -185,6 +276,9 @@ impl ApiServer {
         }
         job.phase = JobPhase::Running;
         job.start_time = Some(now);
+        if job.first_start_time.is_none() {
+            job.first_start_time = Some(now);
+        }
         self.pending.retain(|&id| id != job_id);
         self.events.push(Event::JobStarted { t: now, job: job_id });
         self.watch.publish(Event::JobStarted { t: now, job: job_id });
@@ -200,16 +294,14 @@ impl ApiServer {
         job.phase = JobPhase::Unschedulable;
         let pods = job.pods.clone();
         for pid in pods {
-            let pod = self.pods.get_mut(&pid).unwrap();
-            if pod.phase == PodPhase::Bound {
-                let node = pod.node.expect("bound pod without node");
-                let snapshot = pod.clone();
+            if self.pods[&pid].phase == PodPhase::Bound {
+                self.release_pod_resources(pid, job_id);
+                let pod = self.pods.get_mut(&pid).unwrap();
                 pod.phase = PodPhase::Pending;
                 pod.node = None;
                 pod.cpuset = None;
                 pod.spans_numa = false;
-                self.allocated[node.0] -= snapshot.requests;
-                self.kubelets[node.0].terminate(&snapshot);
+                pod.group = None;
             }
         }
         self.pending.retain(|&id| id != job_id);
@@ -219,20 +311,70 @@ impl ApiServer {
 
     /// Complete a job: release every pod's resources and cpusets.
     pub fn finish_job(&mut self, job_id: JobId, now: f64) {
+        self.account_service(job_id, now);
         let job = self.jobs.get_mut(&job_id).expect("finish of unknown job");
         debug_assert_eq!(job.phase, JobPhase::Running);
         job.phase = JobPhase::Succeeded;
         job.finish_time = Some(now);
         let pods = job.pods.clone();
         for pid in pods {
-            let pod = self.pods.get_mut(&pid).unwrap();
-            let node = pod.node.expect("running pod without node");
-            self.allocated[node.0] -= pod.requests;
-            self.kubelets[node.0].terminate(&pod.clone());
-            pod.phase = PodPhase::Succeeded;
+            self.release_pod_resources(pid, job_id);
+            // Node/cpuset stay on the object for post-mortem reporting.
+            self.pods.get_mut(&pid).unwrap().phase = PodPhase::Succeeded;
         }
         self.events.push(Event::JobFinished { t: now, job: job_id });
         self.watch.publish(Event::JobFinished { t: now, job: job_id });
+    }
+
+    /// Priority preemption: evict a running job, releasing every pod's
+    /// resources and cpusets back to the cluster. The job lands in
+    /// [`JobPhase::Preempted`] — off the scheduling queue — until
+    /// [`ApiServer::requeue_job`] returns it to Pending (the simulator does
+    /// this immediately, charging the checkpoint-restart cost to the job's
+    /// remaining work).
+    pub fn preempt_job(&mut self, job_id: JobId, now: f64) {
+        assert_eq!(
+            self.jobs.get(&job_id).expect("preempt of unknown job").phase,
+            JobPhase::Running,
+            "preempt of non-running {job_id:?}"
+        );
+        self.account_service(job_id, now);
+        let job = self.jobs.get_mut(&job_id).expect("preempt of unknown job");
+        job.phase = JobPhase::Preempted;
+        let pods = job.pods.clone();
+        for pid in pods {
+            self.release_pod_resources(pid, job_id);
+            let pod = self.pods.get_mut(&pid).unwrap();
+            pod.phase = PodPhase::Pending;
+            pod.node = None;
+            pod.cpuset = None;
+            pod.spans_numa = false;
+            pod.group = None;
+        }
+        self.events.push(Event::JobPreempted { t: now, job: job_id });
+        self.watch.publish(Event::JobPreempted { t: now, job: job_id });
+    }
+
+    /// Return a preempted job to the pending queue (checkpoint-restart).
+    /// The queue position is by the job's *original* submit time, so a
+    /// preempted job goes back near the head rather than to the tail.
+    pub fn requeue_job(&mut self, job_id: JobId, _now: f64) {
+        let submit;
+        {
+            let job = self.jobs.get_mut(&job_id).expect("requeue of unknown job");
+            assert_eq!(job.phase, JobPhase::Preempted, "requeue of non-preempted {job_id:?}");
+            job.phase = JobPhase::Pending;
+            job.start_time = None;
+            submit = job.submit_time;
+        }
+        let pos = self.pending.partition_point(|&id| {
+            match self.jobs[&id].submit_time.total_cmp(&submit) {
+                std::cmp::Ordering::Less => true,
+                std::cmp::Ordering::Greater => false,
+                std::cmp::Ordering::Equal => id < job_id,
+            }
+        });
+        self.pending.insert(pos, job_id);
     }
 
     /// Pending jobs in FIFO (submit-time) order — the scheduler queue,
@@ -423,6 +565,77 @@ mod tests {
     }
 
     #[test]
+    fn preempt_releases_resources_and_requeue_restores_queue_position() {
+        let mut api = api();
+        // Two jobs: an old one (submit 0) and a newer one (submit 5).
+        let pj1 = planned(1);
+        let w1 = make_worker(&mut api, JobId(1), 0, 16);
+        let w1id = w1.id;
+        api.create_job(pj1, vec![w1], vec![], 0.0);
+        let mut pj2 = planned(2);
+        pj2.spec.submit_time = 5.0;
+        api.create_job(pj2, vec![], vec![], 5.0);
+
+        let node = NodeId(1);
+        let before = api.free_on(node);
+        assert!(api.bind_pod(w1id, node, 1.0));
+        api.start_job(JobId(1), 1.0);
+        assert_eq!(api.pending_jobs(), vec![JobId(2)]);
+
+        api.preempt_job(JobId(1), 10.0);
+        assert_eq!(api.jobs[&JobId(1)].phase, JobPhase::Preempted);
+        assert_eq!(api.free_on(node), before, "preempted pod's resources returned");
+        let pod = &api.pods[&w1id];
+        assert_eq!(pod.phase, PodPhase::Pending);
+        assert_eq!(pod.node, None);
+        assert!(pod.cpuset.is_none(), "exclusive cpuset released");
+        assert!(api
+            .events
+            .iter()
+            .any(|e| matches!(e, Event::JobPreempted { t, job } if *t == 10.0 && *job == JobId(1))));
+        // Not in the queue until requeued.
+        assert_eq!(api.pending_jobs(), vec![JobId(2)]);
+
+        api.requeue_job(JobId(1), 10.0);
+        assert_eq!(api.jobs[&JobId(1)].phase, JobPhase::Pending);
+        assert_eq!(api.jobs[&JobId(1)].start_time, None);
+        // Original submit time (0.0) puts it ahead of the newer job.
+        assert_eq!(api.pending_jobs(), vec![JobId(1), JobId(2)]);
+        // And it can start again.
+        assert!(api.bind_pod(w1id, node, 11.0));
+        api.start_job(JobId(1), 11.0);
+        api.finish_job(JobId(1), 20.0);
+        assert_eq!(api.free_on(node), before);
+    }
+
+    #[test]
+    fn tenant_usage_accumulates_over_runs_and_preemptions() {
+        let mut api = api();
+        let mut pj = planned(1);
+        pj.spec.tenant = crate::workload::TenantId(3);
+        let w = make_worker(&mut api, JobId(1), 0, 16);
+        let wid = w.id;
+        api.create_job(pj, vec![w], vec![], 0.0);
+        assert!(api.tenant_usage(0.0).is_empty());
+
+        api.bind_pod(wid, NodeId(1), 0.0);
+        api.start_job(JobId(1), 0.0);
+        // Live usage: 10 s × 16 cores.
+        let live = api.tenant_usage(10.0);
+        assert!((live[&crate::workload::TenantId(3)] - 160.0).abs() < 1e-9);
+
+        api.preempt_job(JobId(1), 10.0);
+        // Preempted stint persisted into the accumulator.
+        let after = api.tenant_usage(100.0);
+        assert!((after[&crate::workload::TenantId(3)] - 160.0).abs() < 1e-9);
+
+        // Weights default to 1.0 and are settable.
+        assert_eq!(api.tenant_weight(crate::workload::TenantId(3)), 1.0);
+        api.set_tenant_weight(crate::workload::TenantId(3), 2.5);
+        assert_eq!(api.tenant_weight(crate::workload::TenantId(3)), 2.5);
+    }
+
+    #[test]
     fn bind_fails_if_kubelet_cannot_admit() {
         let mut api = api();
         let pj = planned(1);
@@ -455,6 +668,7 @@ mod tests {
                 Event::PodBound { .. } => "bind",
                 Event::JobStarted { .. } => "start",
                 Event::JobFinished { .. } => "finish",
+                Event::JobPreempted { .. } => "preempt",
                 Event::JobUnschedulable { .. } => "unschedulable",
             })
             .collect();

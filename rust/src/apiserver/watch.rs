@@ -27,6 +27,7 @@ impl WatchFilter {
                 Event::JobSubmitted { .. }
                     | Event::JobStarted { .. }
                     | Event::JobFinished { .. }
+                    | Event::JobPreempted { .. }
                     | Event::JobUnschedulable { .. }
             ),
             WatchFilter::Pods => matches!(event, Event::PodBound { .. }),

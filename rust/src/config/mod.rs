@@ -7,9 +7,11 @@
 //! {
 //!   "scenario": "CM_G_TG",
 //!   "seed": 2,
-//!   "queue": "easy_backfill",
+//!   "queue": "fair_share",
+//!   "preemption": true,
+//!   "tenants": [ { "id": 0, "weight": 1.0 }, { "id": 1, "weight": 3.0 } ],
 //!   "cluster": { "worker_nodes": 4 },
-//!   "trace": { "kind": "exp2" },
+//!   "trace": { "kind": "two_tenant", "jobs": 200, "mean_interval": 60 },
 //!   "output": { "gantt": true, "csv": false }
 //! }
 //! ```
@@ -17,10 +19,14 @@
 use anyhow::{anyhow, bail, Result};
 
 use crate::cluster::ClusterSpec;
+use crate::perfmodel::Calibration;
 use crate::scenario::Scenario;
 use crate::scheduler::QueuePolicyKind;
+use crate::simulator::Simulation;
 use crate::util::Json;
-use crate::workload::{exp1_trace, exp2_trace, uniform_trace, JobSpec};
+use crate::workload::{
+    exp1_trace, exp2_trace, two_tenant_trace, uniform_trace, JobSpec, TenantId,
+};
 
 /// Parsed experiment configuration.
 #[derive(Debug, Clone)]
@@ -30,6 +36,12 @@ pub struct ExperimentConfig {
     /// Queue discipline; defaults to the scenario's own (FIFO-skip for
     /// the Table-II names).
     pub queue: QueuePolicyKind,
+    /// Priority preemption; defaults to the scenario's own (only
+    /// CM_G_TG_PRE enables it).
+    pub preemption: bool,
+    /// Per-tenant fair-share weights, applied to the API server before
+    /// the run (unlisted tenants weigh 1.0).
+    pub tenants: Vec<(TenantId, f64)>,
     pub worker_nodes: usize,
     pub trace: TraceConfig,
     pub gantt: bool,
@@ -41,6 +53,7 @@ pub enum TraceConfig {
     Exp1,
     Exp2,
     Uniform { jobs: usize, mean_interval: f64 },
+    TwoTenant { jobs: usize, mean_interval: f64 },
 }
 
 impl ExperimentConfig {
@@ -65,14 +78,46 @@ impl ExperimentConfig {
         };
         // Block/reserve semantics only exist for gang schedulers; a no-gang
         // profile would silently degrade to FIFO-skip, so reject it.
-        if !scenario.scheduler(0).gang
-            && matches!(queue, QueuePolicyKind::FifoStrict | QueuePolicyKind::EasyBackfill)
-        {
+        if !scenario.scheduler(0).gang && queue.requires_gang() {
             bail!(
                 "config: queue policy {} requires a gang scheduler (scenario {} has gang=false)",
                 queue.name(),
                 scenario.name()
             );
+        }
+        let preemption = match json.get("preemption") {
+            Json::Bool(b) => *b,
+            Json::Null => scenario.preemption(),
+            other => bail!("config: \"preemption\" must be a bool, got {other:?}"),
+        };
+        if preemption && !scenario.scheduler(0).gang {
+            bail!(
+                "config: preemption requires a gang scheduler (scenario {} has gang=false)",
+                scenario.name()
+            );
+        }
+        let mut tenants = Vec::new();
+        match json.get("tenants") {
+            Json::Null => {}
+            Json::Arr(entries) => {
+                for e in entries {
+                    let id = e
+                        .get("id")
+                        .as_u64()
+                        .ok_or_else(|| anyhow!("config: tenants[].id must be an integer"))?;
+                    let weight = match e.get("weight") {
+                        Json::Null => 1.0,
+                        w => w.as_f64().ok_or_else(|| {
+                            anyhow!("config: tenants[].weight must be a number")
+                        })?,
+                    };
+                    if weight <= 0.0 {
+                        bail!("config: tenants[].weight must be positive");
+                    }
+                    tenants.push((TenantId(id as u32), weight));
+                }
+            }
+            other => bail!("config: \"tenants\" must be an array, got {other:?}"),
         }
         let worker_nodes = json
             .get("cluster")
@@ -94,6 +139,14 @@ impl ExperimentConfig {
                     .as_f64()
                     .unwrap_or(60.0),
             },
+            "two_tenant" => TraceConfig::TwoTenant {
+                jobs: json.get("trace").get("jobs").as_u64().unwrap_or(200) as usize,
+                mean_interval: json
+                    .get("trace")
+                    .get("mean_interval")
+                    .as_f64()
+                    .unwrap_or(60.0),
+            },
             other => bail!("config: unknown trace.kind {other:?}"),
         };
 
@@ -101,6 +154,8 @@ impl ExperimentConfig {
             scenario,
             seed,
             queue,
+            preemption,
+            tenants,
             worker_nodes,
             trace,
             gantt: matches!(json.get("output").get("gantt"), crate::util::Json::Bool(true)),
@@ -125,7 +180,33 @@ impl ExperimentConfig {
             TraceConfig::Uniform { jobs, mean_interval } => {
                 uniform_trace(jobs, mean_interval, self.seed)
             }
+            TraceConfig::TwoTenant { jobs, mean_interval } => {
+                two_tenant_trace(jobs, mean_interval, self.seed)
+            }
         }
+    }
+
+    /// Build the fully configured simulation this config describes
+    /// (cluster size, queue, preemption, tenant weights).
+    pub fn build_simulation(&self) -> Simulation {
+        let cfg = self
+            .scenario
+            .scheduler(self.seed)
+            .with_queue(self.queue)
+            .with_preemption(self.preemption);
+        let mut sim = Simulation::new(
+            self.cluster(),
+            self.scenario.kubelet(),
+            self.scenario.policy(),
+            self.scenario.controller(),
+            cfg,
+            Calibration::default(),
+            self.seed,
+        );
+        for &(tenant, weight) in &self.tenants {
+            sim.api.set_tenant_weight(tenant, weight);
+        }
+        sim
     }
 }
 
@@ -204,8 +285,64 @@ mod tests {
             r#"{"scenario":"CM_S_TG","trace":{"kind":"uniform","jobs":4,"mean_interval":10}}"#,
         )
         .unwrap();
-        let sim = c.scenario.simulation_on(c.cluster(), c.seed);
+        let sim = c.build_simulation();
         let out = sim.run(&c.build_trace());
         assert_eq!(out.records.len(), 4);
+    }
+
+    #[test]
+    fn multi_tenant_keys_parse_and_validate() {
+        let c = ExperimentConfig::parse(
+            r#"{
+              "scenario": "CM_G_TG",
+              "queue": "fair_share",
+              "preemption": true,
+              "tenants": [ {"id": 0, "weight": 1.0}, {"id": 1, "weight": 3.0} ],
+              "trace": { "kind": "two_tenant", "jobs": 12, "mean_interval": 30 }
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(c.queue, QueuePolicyKind::FairShare);
+        assert!(c.preemption);
+        assert_eq!(c.tenants, vec![(TenantId(0), 1.0), (TenantId(1), 3.0)]);
+        assert_eq!(c.trace, TraceConfig::TwoTenant { jobs: 12, mean_interval: 30.0 });
+        assert_eq!(c.build_trace().len(), 12);
+        // The PRE scenario defaults preemption on without the key.
+        let pre = ExperimentConfig::parse(r#"{"scenario":"CM_G_TG_PRE"}"#).unwrap();
+        assert!(pre.preemption);
+        assert_eq!(pre.queue, QueuePolicyKind::FairShare);
+        // Rejections: preemption without gang, bad tenant weight, and the
+        // conservative discipline on a no-gang profile.
+        assert!(ExperimentConfig::parse(r#"{"scenario":"Kubeflow","preemption":true}"#).is_err());
+        assert!(ExperimentConfig::parse(
+            r#"{"scenario":"CM","tenants":[{"id":0,"weight":0}]}"#
+        )
+        .is_err());
+        // A mistyped weight must error, not silently fall back to 1.0.
+        assert!(ExperimentConfig::parse(
+            r#"{"scenario":"CM","tenants":[{"id":0,"weight":"3.0"}]}"#
+        )
+        .is_err());
+        // An omitted weight defaults to 1.0.
+        let defaulted =
+            ExperimentConfig::parse(r#"{"scenario":"CM","tenants":[{"id":2}]}"#).unwrap();
+        assert_eq!(defaulted.tenants, vec![(TenantId(2), 1.0)]);
+        assert!(ExperimentConfig::parse(
+            r#"{"scenario":"Kubeflow","queue":"cons_backfill"}"#
+        )
+        .is_err());
+        assert!(ExperimentConfig::parse(r#"{"scenario":"Kubeflow","queue":"fair_share"}"#)
+            .is_ok());
+        // A tenant-weighted preemptive config runs end-to-end.
+        let run = ExperimentConfig::parse(
+            r#"{
+              "scenario": "CM_G_TG_PRE",
+              "tenants": [ {"id": 1, "weight": 3.0} ],
+              "trace": { "kind": "two_tenant", "jobs": 8, "mean_interval": 30 }
+            }"#,
+        )
+        .unwrap();
+        let out = run.build_simulation().run(&run.build_trace());
+        assert_eq!(out.records.len(), 8);
     }
 }

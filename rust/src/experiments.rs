@@ -4,13 +4,16 @@
 
 use std::collections::BTreeMap;
 
+use crate::cluster::ClusterSpec;
 use crate::metrics::ExperimentMetrics;
 use crate::report;
 use crate::scenario::{Scenario, EXP3_SCENARIOS, TABLE2_SCENARIOS};
 use crate::scheduler::{QueuePolicyKind, ALL_QUEUE_POLICIES};
 use crate::simulator::SimOutput;
+use crate::util::jain_index;
 use crate::workload::{
-    exp1_trace, exp2_trace, uniform_trace, Benchmark, JobSpec, ALL_BENCHMARKS,
+    exp1_trace, exp2_trace, two_tenant_trace, uniform_trace, Benchmark, JobSpec, TenantId,
+    ALL_BENCHMARKS, BATCH_TENANT, PROD_TENANT,
 };
 
 /// Default experiment seed (any seed reproduces the paper's *shape*; this
@@ -45,6 +48,25 @@ pub fn run_scenario_with_queue(
     seed: u64,
 ) -> SimOutput {
     scenario.simulation_with_queue(seed, queue).run(trace)
+}
+
+/// Run one scenario with queue discipline, preemption, and per-tenant
+/// fair-share weights all overridden (the fairness ablation and the CLI
+/// `run --preempt` path).
+pub fn run_scenario_configured(
+    scenario: Scenario,
+    queue: QueuePolicyKind,
+    preemption: bool,
+    tenant_weights: &[(TenantId, f64)],
+    trace: &[JobSpec],
+    seed: u64,
+) -> SimOutput {
+    let mut sim =
+        scenario.simulation_configured(ClusterSpec::paper(), seed, queue, preemption);
+    for &(tenant, weight) in tenant_weights {
+        sim.api.set_tenant_weight(tenant, weight);
+    }
+    sim.run(trace)
 }
 
 // ---------------------------------------------------------------------
@@ -99,6 +121,194 @@ pub fn queue_table(results: &[(QueuePolicyKind, ExperimentMetrics)]) -> String {
         &["queue policy", "overall response (s)", "vs fifo", "makespan (s)", "avg wait (s)"],
         &rows,
     )
+}
+
+/// Queue-ablation results as a JSON document (the CI perf-trajectory
+/// artifact; hand-rendered — the substrate has no serde).
+pub fn queue_json(seed: u64, jobs: usize, mean_interval: f64, results: &[(QueuePolicyKind, ExperimentMetrics)]) -> String {
+    let mut out = String::from("{\n");
+    out.push_str(&format!(
+        "  \"ablation\": \"queues\", \"seed\": {seed}, \"jobs\": {jobs}, \"mean_interval_s\": {mean_interval},\n"
+    ));
+    out.push_str("  \"policies\": [\n");
+    for (i, (q, m)) in results.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"policy\": \"{}\", \"overall_response_s\": {:.3}, \"makespan_s\": {:.3}, \"avg_wait_s\": {:.3}}}{}\n",
+            q.name(),
+            m.overall_response,
+            m.makespan,
+            m.avg_wait,
+            if i + 1 < results.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+// ---------------------------------------------------------------------
+// Fairness ablation — multi-tenant queues (FIFO / fair-share /
+// fair-share+preemption / conservative backfill) on a two-tenant trace.
+// ---------------------------------------------------------------------
+
+/// The fairness ablation's default trace shape (same pressure as the
+/// queue ablation, split across two tenants).
+pub const FAIRNESS_JOBS: usize = 200;
+pub const FAIRNESS_INTERVAL: f64 = 60.0;
+
+/// Fair-share weight of the production tenant (batch keeps 1.0): prod is
+/// entitled to 3× batch's share per unit weight.
+pub const PROD_WEIGHT: f64 = 3.0;
+
+/// Per-tenant aggregate of one run.
+#[derive(Debug, Clone)]
+pub struct TenantStats {
+    pub tenant: TenantId,
+    pub jobs: usize,
+    pub mean_response: f64,
+    pub mean_wait: f64,
+}
+
+/// Group a run's per-job records by tenant.
+pub fn tenant_stats(m: &ExperimentMetrics) -> Vec<TenantStats> {
+    let mut grouped: BTreeMap<TenantId, Vec<&crate::simulator::JobRecord>> = BTreeMap::new();
+    for r in &m.per_job {
+        grouped.entry(r.tenant).or_default().push(r);
+    }
+    grouped
+        .into_iter()
+        .map(|(tenant, rs)| {
+            let n = rs.len() as f64;
+            TenantStats {
+                tenant,
+                jobs: rs.len(),
+                mean_response: rs.iter().map(|r| r.response()).sum::<f64>() / n,
+                mean_wait: rs.iter().map(|r| r.wait()).sum::<f64>() / n,
+            }
+        })
+        .collect()
+}
+
+/// One row of the fairness ablation.
+#[derive(Debug, Clone)]
+pub struct FairnessRow {
+    pub label: &'static str,
+    pub queue: QueuePolicyKind,
+    pub preemption: bool,
+    pub metrics: ExperimentMetrics,
+    pub per_tenant: Vec<TenantStats>,
+    /// Jain fairness index over the tenants' mean response times
+    /// (1.0 = every tenant sees the same mean response).
+    pub jain: f64,
+    /// Number of preemption events in the run.
+    pub preemptions: usize,
+}
+
+impl FairnessRow {
+    pub fn tenant(&self, t: TenantId) -> Option<&TenantStats> {
+        self.per_tenant.iter().find(|s| s.tenant == t)
+    }
+
+    /// The standard six report cells (label, overall response, prod mean
+    /// response, batch mean response, Jain index, preemptions) — shared by
+    /// the text table and the figures CSV so the two can never drift.
+    pub fn report_cells(&self) -> Vec<String> {
+        let cell = |t: TenantId| {
+            self.tenant(t).map(|s| format!("{:.0}", s.mean_response)).unwrap_or_else(|| "-".into())
+        };
+        vec![
+            self.label.to_string(),
+            format!("{:.0}", self.metrics.overall_response),
+            cell(PROD_TENANT),
+            cell(BATCH_TENANT),
+            format!("{:.4}", self.jain),
+            self.preemptions.to_string(),
+        ]
+    }
+}
+
+/// The fairness ablation: four queue configurations over the same
+/// two-tenant trace on the CM_G_TG placement configuration, with the
+/// production tenant weighted [`PROD_WEIGHT`].
+pub fn fairness_ablation(seed: u64, jobs: usize, mean_interval: f64) -> Vec<FairnessRow> {
+    let trace = two_tenant_trace(jobs, mean_interval, seed);
+    let weights = [(BATCH_TENANT, 1.0), (PROD_TENANT, PROD_WEIGHT)];
+    let configs: [(&'static str, QueuePolicyKind, bool); 4] = [
+        ("fifo", QueuePolicyKind::FifoSkip, false),
+        ("fair_share", QueuePolicyKind::FairShare, false),
+        ("fair_share+preempt", QueuePolicyKind::FairShare, true),
+        ("cons_backfill", QueuePolicyKind::ConservativeBackfill, false),
+    ];
+    configs
+        .into_iter()
+        .map(|(label, queue, preemption)| {
+            let out = run_scenario_configured(
+                Scenario::CmGTg,
+                queue,
+                preemption,
+                &weights,
+                &trace,
+                seed,
+            );
+            let preemptions = out.preemption_count();
+            let metrics = ExperimentMetrics::from(&out);
+            let per_tenant = tenant_stats(&metrics);
+            let jain =
+                jain_index(&per_tenant.iter().map(|s| s.mean_response).collect::<Vec<_>>());
+            FairnessRow { label, queue, preemption, metrics, per_tenant, jain, preemptions }
+        })
+        .collect()
+}
+
+/// Fairness-ablation table: per-tenant mean response, evenness, and
+/// preemption counts per configuration.
+pub fn fairness_table(rows: &[FairnessRow]) -> String {
+    let table_rows = rows.iter().map(FairnessRow::report_cells).collect::<Vec<_>>();
+    report::table(
+        &[
+            "queue config",
+            "overall response (s)",
+            "prod mean resp (s)",
+            "batch mean resp (s)",
+            "jain",
+            "preemptions",
+        ],
+        &table_rows,
+    )
+}
+
+/// Fairness-ablation results as a JSON document (CI artifact).
+pub fn fairness_json(seed: u64, jobs: usize, mean_interval: f64, rows: &[FairnessRow]) -> String {
+    let mut out = String::from("{\n");
+    out.push_str(&format!(
+        "  \"ablation\": \"fairness\", \"seed\": {seed}, \"jobs\": {jobs}, \"mean_interval_s\": {mean_interval}, \"prod_weight\": {PROD_WEIGHT},\n"
+    ));
+    out.push_str("  \"configs\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let tenant_json = |t: TenantId, name: &str| -> String {
+            match r.tenant(t) {
+                Some(s) => format!(
+                    "\"{name}\": {{\"jobs\": {}, \"mean_response_s\": {:.3}, \"mean_wait_s\": {:.3}}}",
+                    s.jobs, s.mean_response, s.mean_wait
+                ),
+                None => format!("\"{name}\": null"),
+            }
+        };
+        out.push_str(&format!(
+            "    {{\"config\": \"{}\", \"queue\": \"{}\", \"preemption\": {}, \"overall_response_s\": {:.3}, \"makespan_s\": {:.3}, \"jain\": {:.4}, \"preemptions\": {}, {}, {}}}{}\n",
+            r.label,
+            r.queue.name(),
+            r.preemption,
+            r.metrics.overall_response,
+            r.metrics.makespan,
+            r.jain,
+            r.preemptions,
+            tenant_json(PROD_TENANT, "prod"),
+            tenant_json(BATCH_TENANT, "batch"),
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
 }
 
 // ---------------------------------------------------------------------
@@ -313,7 +523,7 @@ mod tests {
     fn queue_ablation_easy_backfill_beats_strict_fifo() {
         let results =
             queue_ablation(DEFAULT_SEED, QUEUE_ABLATION_JOBS, QUEUE_ABLATION_INTERVAL);
-        assert_eq!(results.len(), 4);
+        assert_eq!(results.len(), ALL_QUEUE_POLICIES.len());
         let get = |k: QueuePolicyKind| {
             results.iter().find(|(q, _)| *q == k).map(|(_, m)| m.overall_response).unwrap()
         };
@@ -331,6 +541,35 @@ mod tests {
         }
         let table = queue_table(&results);
         assert!(table.contains("easy_backfill") && table.contains("vs fifo"));
+    }
+
+    #[test]
+    fn fairness_ablation_shape_and_json_render() {
+        // Small trace: shape checks only (the 200-job acceptance assertion
+        // lives in tests/integration.rs).
+        let rows = fairness_ablation(DEFAULT_SEED, 30, 60.0);
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            assert_eq!(r.metrics.per_job.len(), 30, "{}", r.label);
+            assert!(r.jain > 0.0 && r.jain <= 1.0 + 1e-12, "{}: jain {}", r.label, r.jain);
+            if !r.preemption {
+                assert_eq!(r.preemptions, 0, "{}", r.label);
+            }
+        }
+        let fifo = &rows[0];
+        assert_eq!(fifo.queue, QueuePolicyKind::FifoSkip);
+        assert!(!fifo.preemption);
+        let table = fairness_table(&rows);
+        assert!(table.contains("fair_share+preempt") && table.contains("jain"));
+        let json = fairness_json(DEFAULT_SEED, 30, 60.0, &rows);
+        assert!(json.contains("\"ablation\": \"fairness\""));
+        assert!(json.contains("\"prod\""));
+        let qres = queue_ablation(DEFAULT_SEED, 10, 60.0);
+        let qjson = queue_json(DEFAULT_SEED, 10, 60.0, &qres);
+        assert!(qjson.contains("\"policy\": \"easy_backfill\""));
+        // Both documents must parse with the crate's own JSON substrate.
+        assert!(crate::util::Json::parse(&json).is_ok(), "fairness json invalid");
+        assert!(crate::util::Json::parse(&qjson).is_ok(), "queues json invalid");
     }
 
     #[test]

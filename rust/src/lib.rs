@@ -10,6 +10,16 @@
 //! - L2/L1 (python/compile): JAX step functions + Pallas kernels, lowered
 //!   once to `artifacts/*.hlo.txt`; Python never runs on the request path.
 
+// Style lints silenced crate-wide (CI runs `clippy -- -D warnings`): the
+// substrate favours explicit constructor args and tuple-heavy internal
+// plumbing over Default impls and type aliases.
+#![allow(
+    clippy::new_without_default,
+    clippy::too_many_arguments,
+    clippy::type_complexity,
+    clippy::needless_range_loop
+)]
+
 pub mod apiserver;
 pub mod metrics;
 pub mod report;

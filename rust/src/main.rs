@@ -7,15 +7,19 @@
 //!   exp3 [--seed N]              Table III + Figs. 8–9 (frameworks)
 //!   run --scenario S [--jobs N]  one scenario on a uniform trace
 //!   queues [--jobs N]            queue-policy ablation (FIFO / strict /
-//!                                SJF / EASY backfill)
+//!                                SJF / EASY / conservative / fair-share)
+//!   fairness [--jobs N]          multi-tenant fairness ablation on a
+//!                                two-tenant trace (priority + preemption)
 //!   e2e [--steps N]              end-to-end: PJRT payload execution feeds
 //!                                the simulator's base rates
 //!
-//! A scenario name pins all five knobs of the experiment matrix:
-//! (kubelet, planner, controller, scheduler, queue). The Table-II names
-//! (NONE, CM, CM_S, CM_G, CM_S_TG, CM_G_TG) keep the seed's FIFO-skip
-//! queue; the `*_SJF` / `*_BF` variants swap in shortest-job-first or
-//! EASY backfilling, and `--queue` overrides the knob on any scenario.
+//! A scenario name pins all six knobs of the experiment matrix:
+//! (kubelet, planner, controller, scheduler, queue, preemption). The
+//! Table-II names (NONE, CM, CM_S, CM_G, CM_S_TG, CM_G_TG) keep the
+//! seed's FIFO-skip queue; the `*_SJF` / `*_BF` / `*_FS` / `*_CBF`
+//! variants swap the queue discipline, CM_G_TG_PRE adds fair-share +
+//! priority preemption, and `--queue` / `--preempt` override the knobs on
+//! any scenario.
 //!
 //! (The vendored offline registry has no clap; argument parsing is a small
 //! hand-rolled layer — see DESIGN.md §Dependencies.)
@@ -93,24 +97,37 @@ COMMANDS:
                         Figs. 6-7: 20 mixed jobs, 6 scenarios
   exp3 [--seed N]       Table III + Figs. 8-9: framework comparison
   run --scenario NAME [--jobs N] [--interval S] [--seed N] [--queue POLICY]
+      [--preempt] [--two-tenant]
                         one scenario on a uniform random trace; POLICY is
-                        fifo | fifo_strict | sjf | easy_backfill and
-                        overrides the scenario's queue discipline
-  queues [--jobs N] [--interval S] [--seed N]
+                        fifo | fifo_strict | sjf | easy_backfill |
+                        cons_backfill | fair_share and overrides the
+                        scenario's queue discipline; --preempt enables
+                        priority preemption; --two-tenant swaps in the
+                        two-tenant trace (batch + high-priority prod)
+  queues [--jobs N] [--interval S] [--seed N] [--json PATH]
                         queue-policy ablation table on CM_G_TG placement
                         (default: 200 jobs, 60 s mean interval)
+  fairness [--jobs N] [--interval S] [--seed N] [--json PATH]
+                        multi-tenant fairness ablation: FIFO vs fair-share
+                        (+preemption) vs conservative backfill on a
+                        two-tenant trace; reports per-tenant response and
+                        Jain's fairness index
   e2e [--steps N] [--seed N]
                         end-to-end: execute AOT payloads via PJRT and feed
                         measured step times into the simulator
   figures --out DIR [--seed N]
                         render every paper figure as SVG into DIR
   config PATH           run an experiment described by a JSON config file
-                        (keys: scenario, seed, queue, cluster, trace, output)
+                        (keys: scenario, seed, queue, preemption, tenants,
+                        cluster, trace, output)
 
-SCENARIOS (each pins kubelet, planner, controller, scheduler, queue):
+SCENARIOS (each pins kubelet, planner, controller, scheduler, queue,
+preemption):
   NONE CM CM_S CM_G CM_S_TG CM_G_TG          Table II (FIFO-skip queue)
   Kubeflow Volcano                           SS V-E framework baselines
   CM_SJF CM_BF CM_G_TG_SJF CM_G_TG_BF       queue-policy variants
+  CM_FS CM_CBF CM_G_TG_FS CM_G_TG_CBF       fair-share / conservative
+  CM_G_TG_PRE                               fair-share + preemption
 ";
 
 fn main() {
@@ -144,6 +161,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "exp3" => cmd_exp3(args),
         "run" => cmd_run(args),
         "queues" => cmd_queues(args),
+        "fairness" => cmd_fairness(args),
         "e2e" => cmd_e2e(args),
         "figures" => cmd_figures(args),
         "config" => cmd_config(args),
@@ -241,33 +259,43 @@ fn cmd_run(args: &Args) -> Result<()> {
     let seed = args.seed();
     let jobs = args.get_usize("jobs", 20);
     let interval = args.get_usize("interval", 60) as f64;
-    let trace = uniform_trace(jobs, interval, seed);
-    let out = match args.flags.get("queue") {
-        Some(q) => {
-            let queue = QueuePolicyKind::parse(q)
-                .ok_or_else(|| anyhow!("unknown queue policy {q:?} (fifo | fifo_strict | sjf | easy_backfill)"))?;
-            // Block/reserve semantics need gang all-or-nothing; on a
-            // no-gang scenario they would silently run as FIFO-skip.
-            if !scenario.scheduler(seed).gang
-                && matches!(
-                    queue,
-                    QueuePolicyKind::FifoStrict | QueuePolicyKind::EasyBackfill
-                )
-            {
-                bail!(
-                    "queue policy {} requires a gang scheduler (scenario {} has gang=false)",
-                    queue.name(),
-                    scenario.name()
-                );
-            }
-            experiments::run_scenario_with_queue(scenario, queue, &trace, seed)
-        }
-        None => experiments::run_scenario(scenario, &trace, seed, None),
+    let trace = if args.has("two-tenant") {
+        kube_fgs::workload::two_tenant_trace(jobs, interval, seed)
+    } else {
+        uniform_trace(jobs, interval, seed)
     };
+    let queue = match args.flags.get("queue") {
+        Some(q) => QueuePolicyKind::parse(q).ok_or_else(|| {
+            anyhow!(
+                "unknown queue policy {q:?} (fifo | fifo_strict | sjf | easy_backfill | \
+                 cons_backfill | fair_share)"
+            )
+        })?,
+        None => scenario.queue(),
+    };
+    // Block/reserve semantics need gang all-or-nothing; on a no-gang
+    // scenario they would silently run as FIFO-skip.
+    if !scenario.scheduler(seed).gang && queue.requires_gang() {
+        bail!(
+            "queue policy {} requires a gang scheduler (scenario {} has gang=false)",
+            queue.name(),
+            scenario.name()
+        );
+    }
+    let preempt = args.has("preempt") || scenario.preemption();
+    if preempt && !scenario.scheduler(seed).gang {
+        bail!("--preempt requires a gang scheduler (scenario {} has gang=false)", scenario.name());
+    }
+    let out =
+        experiments::run_scenario_configured(scenario, queue, preempt, &[], &trace, seed);
     let m = ExperimentMetrics::from(&out);
     print!("{}", report::scenario_summary(scenario.name(), &m));
     if !out.unschedulable.is_empty() {
         println!("unschedulable jobs: {:?}", out.unschedulable);
+    }
+    let preemptions = out.preemption_count();
+    if preemptions > 0 {
+        println!("preemptions: {preemptions}");
     }
     println!("\nScheduling process:");
     print!("{}", report::gantt(&out, 100));
@@ -290,6 +318,35 @@ fn cmd_queues(args: &Args) -> Result<()> {
     );
     let results = experiments::queue_ablation(seed, jobs, interval);
     print!("{}", experiments::queue_table(&results));
+    if let Some(path) = args.flags.get("json") {
+        std::fs::write(path, experiments::queue_json(seed, jobs, interval, &results))
+            .map_err(|e| anyhow!("writing {path}: {e}"))?;
+        println!("\nwrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_fairness(args: &Args) -> Result<()> {
+    let seed = args.seed();
+    let jobs = args.get_usize("jobs", experiments::FAIRNESS_JOBS);
+    let interval = args
+        .flags
+        .get("interval")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(experiments::FAIRNESS_INTERVAL);
+    println!(
+        "Fairness ablation — {jobs} two-tenant jobs ({}% high-priority prod, weight {}), \
+         {interval} s mean interval, CM_G_TG placement (seed {seed})\n",
+        (kube_fgs::workload::PROD_SHARE * 100.0) as u32,
+        experiments::PROD_WEIGHT,
+    );
+    let rows = experiments::fairness_ablation(seed, jobs, interval);
+    print!("{}", experiments::fairness_table(&rows));
+    if let Some(path) = args.flags.get("json") {
+        std::fs::write(path, experiments::fairness_json(seed, jobs, interval, &rows))
+            .map_err(|e| anyhow!("writing {path}: {e}"))?;
+        println!("\nwrote {path}");
+    }
     Ok(())
 }
 
@@ -310,10 +367,10 @@ fn cmd_config(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("usage: kube-fgs config <path.json>"))?;
     let cfg = kube_fgs::config::ExperimentConfig::load(std::path::Path::new(path))?;
     println!(
-        "config: scenario {} queue {} seed {} workers {} trace {:?}\n",
-        cfg.scenario, cfg.queue, cfg.seed, cfg.worker_nodes, cfg.trace
+        "config: scenario {} queue {} preemption {} seed {} workers {} trace {:?}\n",
+        cfg.scenario, cfg.queue, cfg.preemption, cfg.seed, cfg.worker_nodes, cfg.trace
     );
-    let sim = cfg.scenario.simulation_on_queue(cfg.cluster(), cfg.seed, cfg.queue);
+    let sim = cfg.build_simulation();
     let out = sim.run(&cfg.build_trace());
     let m = ExperimentMetrics::from(&out);
     print!("{}", report::scenario_summary(cfg.scenario.name(), &m));

@@ -108,7 +108,16 @@ mod tests {
     use crate::cluster::JobId;
 
     fn record(id: u64, bench: Benchmark, submit: f64, start: f64, finish: f64) -> JobRecord {
-        JobRecord { id: JobId(id), benchmark: bench, submit_time: submit, start_time: start, finish_time: finish }
+        JobRecord {
+            id: JobId(id),
+            benchmark: bench,
+            tenant: crate::workload::DEFAULT_TENANT,
+            priority: 0,
+            submit_time: submit,
+            start_time: start,
+            finish_time: finish,
+            running_secs: finish - start,
+        }
     }
 
     fn fake_output() -> SimOutput {

@@ -243,6 +243,48 @@ pub fn job_slowdown(
     job_slowdown_with(api, job_id, calib, noise, &ClusterLoads::snapshot(api))
 }
 
+/// Static walltime slowdown estimate for a job *before* placement — the
+/// queue policies' walltime source (SJF ordering, EASY/conservative
+/// backfill windows), replacing the raw base-runtime estimate with one
+/// informed by the calibrated model. Placement-dependent terms (NUMA,
+/// memory-bandwidth contention, NIC sharing) are unknown ahead of time and
+/// left out; what remains is the part determined by the job's own shape:
+///
+/// - intra-cgroup scheduling: `1 + coef·ln(tasks)` of the *largest* worker
+///   (gang lockstep gates on the slowest container);
+/// - communication: the pairwise traffic fraction that leaves a container
+///   (from the planned worker split) priced at the cross-node Hockney cost
+///   — pessimistic for splits the scheduler manages to co-locate, which
+///   keeps backfill guarantees conservative.
+pub fn walltime_factor(bench: Benchmark, worker_tasks: &[u32], calib: &Calibration) -> f64 {
+    if worker_tasks.is_empty() {
+        return 1.0;
+    }
+    let total: u32 = worker_tasks.iter().sum();
+    let max_tasks = worker_tasks.iter().copied().max().unwrap_or(1).max(1);
+    let f_sched = 1.0 + calib.cgroup_sched_log_coef * (max_tasks as f64).ln();
+
+    let t = total as f64;
+    let same_container = if total > 1 {
+        worker_tasks
+            .iter()
+            .map(|&ti| {
+                let ti = ti as f64;
+                ti * (ti - 1.0)
+            })
+            .sum::<f64>()
+            / (t * (t - 1.0))
+    } else {
+        1.0
+    };
+    let cross = (1.0 - same_container).max(0.0);
+    let eth = calib.eth_latency_floor + bench.comm_bytes_per_task() * calib.eth_penalty_per_byte;
+    let comm = same_container + cross * eth;
+
+    let cf = bench.mpi_profile().comm_fraction;
+    (1.0 - cf) * f_sched + cf * comm
+}
+
 /// [`job_slowdown`] against a pre-computed load snapshot — the simulator
 /// calls this once per running job per state change, amortizing the
 /// cluster-wide scans across the whole recomputation.
@@ -418,6 +460,31 @@ mod tests {
         let max = s.per_worker.iter().copied().fold(0.0_f64, f64::max);
         assert_eq!(s.compute, max);
         assert!(s.per_worker[0] > s.per_worker[1], "12-task cgroup > 4-task cgroup");
+    }
+
+    #[test]
+    fn walltime_factor_shapes() {
+        let c = Calibration::default();
+        // Single container, single task: no penalty at all.
+        assert!((walltime_factor(Benchmark::EpDgemm, &[1], &c) - 1.0).abs() < 1e-12);
+        // Single 16-task container: only the intra-cgroup term, weighted by
+        // the compute fraction.
+        let single = walltime_factor(Benchmark::EpDgemm, &[16], &c);
+        assert!(single > 1.0 && single < 1.2, "{single}");
+        // A fully scattered network job is estimated far slower than the
+        // same job in one container.
+        let whole = walltime_factor(Benchmark::GRandomRing, &[16], &c);
+        let scattered = walltime_factor(Benchmark::GRandomRing, &[1; 16], &c);
+        assert!(scattered > 5.0 * whole, "whole={whole} scattered={scattered}");
+        // A scattered CPU job barely pays (tiny comm fraction).
+        let dgemm_split = walltime_factor(Benchmark::EpDgemm, &[1; 16], &c);
+        assert!(dgemm_split < 1.1, "{dgemm_split}");
+        // Estimates never fall below the ideal runtime.
+        for b in crate::workload::ALL_BENCHMARKS {
+            for tasks in [vec![16u32], vec![4; 4], vec![1; 16], vec![]] {
+                assert!(walltime_factor(b, &tasks, &c) >= 1.0 - 1e-12, "{b} {tasks:?}");
+            }
+        }
     }
 
     #[test]

@@ -204,6 +204,53 @@ pub fn write_all(dir: &Path, seed: u64) -> Result<()> {
         "queue_policy_ablation.csv",
         &super::csv(&["queue_policy", "overall_response_s", "makespan_s", "avg_wait_s"], &qrows),
     )?;
+
+    // --- Fairness ablation (two-tenant trace: batch + high-prio prod) ---
+    let fres = experiments::fairness_ablation(
+        seed,
+        experiments::FAIRNESS_JOBS,
+        experiments::FAIRNESS_INTERVAL,
+    );
+    let fcats: Vec<&str> = fres.iter().map(|r| r.label).collect();
+    let tenant_series = |tenant: crate::workload::TenantId, name: &str| -> Series {
+        Series {
+            name: name.into(),
+            values: fres
+                .iter()
+                .map(|r| r.tenant(tenant).map(|s| s.mean_response).unwrap_or(0.0))
+                .collect(),
+        }
+    };
+    write(
+        dir,
+        "fairness_tenant_response.svg",
+        &bar_chart(
+            "Fairness ablation — per-tenant mean response (200 two-tenant jobs, CM_G_TG)",
+            &fcats,
+            &[
+                tenant_series(crate::workload::PROD_TENANT, "prod (high prio)"),
+                tenant_series(crate::workload::BATCH_TENANT, "batch"),
+            ],
+            "seconds",
+        ),
+    )?;
+    let frows: Vec<Vec<String>> =
+        fres.iter().map(experiments::FairnessRow::report_cells).collect();
+    write(
+        dir,
+        "fairness_ablation.csv",
+        &super::csv(
+            &[
+                "config",
+                "overall_response_s",
+                "prod_mean_response_s",
+                "batch_mean_response_s",
+                "jain_index",
+                "preemptions",
+            ],
+            &frows,
+        ),
+    )?;
     Ok(())
 }
 
@@ -228,6 +275,8 @@ mod tests {
             "table3_makespan.csv",
             "queue_policy_response.svg",
             "queue_policy_ablation.csv",
+            "fairness_tenant_response.svg",
+            "fairness_ablation.csv",
         ];
         for f in expected {
             let p = dir.join(f);

@@ -189,9 +189,12 @@ mod tests {
             records: vec![JobRecord {
                 id: JobId(1),
                 benchmark: Benchmark::EpDgemm,
+                tenant: crate::workload::DEFAULT_TENANT,
+                priority: 0,
                 submit_time: 0.0,
                 start_time: 50.0,
                 finish_time: 100.0,
+                running_secs: 50.0,
             }],
             unschedulable: vec![],
             api: ApiServer::new(ClusterSpec::paper(), KubeletConfig::default_policy()),

@@ -5,10 +5,14 @@
 //!
 //! Pattern (see /opt/xla-example/load_hlo): HLO *text* -> HloModuleProto
 //! text parser -> XlaComputation -> PjRtClient::compile -> execute.
+//!
+//! The `xla` crate only exists in the offline HPC toolchain registry, so
+//! the execution path is gated behind the off-by-default `pjrt` feature
+//! (Cargo.toml): without it, manifest parsing still works and
+//! [`Runtime::load`] returns a descriptive error, so the CLI, examples,
+//! and tier-1 tests build and run on a bare checkout.
 
-use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -87,113 +91,187 @@ pub fn load_manifest(artifacts_dir: &Path) -> Result<Vec<PayloadSpec>> {
     Ok(specs)
 }
 
-/// Build a deterministic input literal for an argument spec. Values are
-/// small random floats (not zeros — keeps the numerics non-degenerate);
-/// int32 args are treated as the ring permutation.
-fn make_literal(arg: &ArgSpec, rng: &mut crate::util::Rng) -> Result<xla::Literal> {
-    let n = arg.elements();
-    let dims: Vec<i64> = arg.shape.iter().map(|&d| d as i64).collect();
-    let lit = match arg.dtype.as_str() {
-        "float32" => {
-            let data: Vec<f32> = (0..n).map(|_| (rng.f64() as f32 - 0.5) * 0.25).collect();
-            xla::Literal::vec1(&data)
-        }
-        "int32" => {
-            // Ring permutation: rotate by one (a valid random-ring order).
-            let p = n as i32;
-            let data: Vec<i32> = (0..p).map(|i| (i + 1) % p).collect();
-            xla::Literal::vec1(&data)
-        }
-        other => bail!("unsupported dtype {other}"),
-    };
-    Ok(if dims.len() == 1 && dims[0] as usize == n {
-        lit
-    } else {
-        lit.reshape(&dims)?
-    })
-}
+/// Real PJRT execution path — compiled only with the `pjrt` feature.
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use std::collections::BTreeMap;
+    use std::path::Path;
+    use std::time::Instant;
 
-/// A compiled benchmark payload, ready to execute.
-pub struct Payload {
-    pub spec: PayloadSpec,
-    exe: xla::PjRtLoadedExecutable,
-    inputs: Vec<xla::Literal>,
-}
+    use anyhow::{anyhow, bail, Context, Result};
 
-impl Payload {
-    /// Execute one step; returns wall-clock seconds.
-    pub fn step(&self) -> Result<f64> {
-        let t0 = Instant::now();
-        let result = self.exe.execute::<xla::Literal>(&self.inputs)?;
-        // Force completion by materializing the first output.
-        let _ = result[0][0].to_literal_sync()?;
-        Ok(t0.elapsed().as_secs_f64())
+    use super::{load_manifest, ArgSpec, PayloadSpec};
+    use crate::workload::Benchmark;
+
+    /// Build a deterministic input literal for an argument spec. Values are
+    /// small random floats (not zeros — keeps the numerics non-degenerate);
+    /// int32 args are treated as the ring permutation.
+    fn make_literal(arg: &ArgSpec, rng: &mut crate::util::Rng) -> Result<xla::Literal> {
+        let n = arg.elements();
+        let dims: Vec<i64> = arg.shape.iter().map(|&d| d as i64).collect();
+        let lit = match arg.dtype.as_str() {
+            "float32" => {
+                let data: Vec<f32> =
+                    (0..n).map(|_| (rng.f64() as f32 - 0.5) * 0.25).collect();
+                xla::Literal::vec1(&data)
+            }
+            "int32" => {
+                // Ring permutation: rotate by one (a valid random-ring order).
+                let p = n as i32;
+                let data: Vec<i32> = (0..p).map(|i| (i + 1) % p).collect();
+                xla::Literal::vec1(&data)
+            }
+            other => bail!("unsupported dtype {other}"),
+        };
+        Ok(if dims.len() == 1 && dims[0] as usize == n {
+            lit
+        } else {
+            lit.reshape(&dims)?
+        })
     }
 
-    /// Execute one step and return the flattened f32 outputs (used by the
-    /// e2e driver to sanity-check numerics, e.g. MiniFE residual norms).
-    pub fn step_outputs(&self) -> Result<Vec<Vec<f32>>> {
-        let result = self.exe.execute::<xla::Literal>(&self.inputs)?;
-        let tuple = result[0][0].to_literal_sync()?.to_tuple()?;
-        let mut outs = Vec::new();
-        for lit in tuple {
-            outs.push(lit.to_vec::<f32>().unwrap_or_default());
+    /// A compiled benchmark payload, ready to execute.
+    pub struct Payload {
+        pub spec: PayloadSpec,
+        exe: xla::PjRtLoadedExecutable,
+        inputs: Vec<xla::Literal>,
+    }
+
+    impl Payload {
+        /// Execute one step; returns wall-clock seconds.
+        pub fn step(&self) -> Result<f64> {
+            let t0 = Instant::now();
+            let result = self.exe.execute::<xla::Literal>(&self.inputs)?;
+            // Force completion by materializing the first output.
+            let _ = result[0][0].to_literal_sync()?;
+            Ok(t0.elapsed().as_secs_f64())
         }
-        Ok(outs)
+
+        /// Execute one step and return the flattened f32 outputs (used by the
+        /// e2e driver to sanity-check numerics, e.g. MiniFE residual norms).
+        pub fn step_outputs(&self) -> Result<Vec<Vec<f32>>> {
+            let result = self.exe.execute::<xla::Literal>(&self.inputs)?;
+            let tuple = result[0][0].to_literal_sync()?.to_tuple()?;
+            let mut outs = Vec::new();
+            for lit in tuple {
+                outs.push(lit.to_vec::<f32>().unwrap_or_default());
+            }
+            Ok(outs)
+        }
+    }
+
+    /// The PJRT runtime: one CPU client + all compiled payloads.
+    pub struct Runtime {
+        pub client_platform: String,
+        pub payloads: BTreeMap<Benchmark, Payload>,
+    }
+
+    impl Runtime {
+        /// Load every artifact in the manifest and compile it on the CPU
+        /// PJRT client.
+        pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            let specs = load_manifest(artifacts_dir)?;
+            let mut rng = crate::util::Rng::seed_from_u64(0x9e37_79b9_7f4a_7c15);
+            let mut payloads = BTreeMap::new();
+            for spec in specs {
+                let proto = xla::HloModuleProto::from_text_file(
+                    spec.hlo_path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+                )
+                .with_context(|| format!("parsing {}", spec.hlo_path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .with_context(|| format!("compiling {}", spec.benchmark))?;
+                let inputs = spec
+                    .args
+                    .iter()
+                    .map(|a| make_literal(a, &mut rng))
+                    .collect::<Result<Vec<_>>>()?;
+                payloads.insert(spec.benchmark, Payload { spec, exe, inputs });
+            }
+            Ok(Runtime { client_platform: client.platform_name(), payloads })
+        }
+
+        pub fn payload(&self, bench: Benchmark) -> Option<&Payload> {
+            self.payloads.get(&bench)
+        }
+
+        /// Measure mean per-step wall time of one benchmark payload.
+        pub fn measure(&self, bench: Benchmark, warmup: usize, iters: usize) -> Result<f64> {
+            let payload =
+                self.payload(bench).ok_or_else(|| anyhow!("no payload for {bench}"))?;
+            for _ in 0..warmup {
+                payload.step()?;
+            }
+            let mut total = 0.0;
+            for _ in 0..iters.max(1) {
+                total += payload.step()?;
+            }
+            Ok(total / iters.max(1) as f64)
+        }
     }
 }
 
-/// The PJRT runtime: one CPU client + all compiled payloads.
-pub struct Runtime {
-    pub client_platform: String,
-    pub payloads: BTreeMap<Benchmark, Payload>,
-}
+#[cfg(feature = "pjrt")]
+pub use pjrt::{Payload, Runtime};
 
-impl Runtime {
-    /// Load every artifact in the manifest and compile it on the CPU PJRT
-    /// client.
-    pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let specs = load_manifest(artifacts_dir)?;
-        let mut rng = crate::util::Rng::seed_from_u64(0x9e37_79b9_7f4a_7c15);
-        let mut payloads = BTreeMap::new();
-        for spec in specs {
-            let proto = xla::HloModuleProto::from_text_file(
-                spec.hlo_path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+/// Stub execution path — same public surface as the PJRT runtime, but
+/// [`Runtime::load`] fails with a descriptive error. Keeps the CLI's `e2e`
+/// subcommand and the `e2e_serve` / `profile_benchmarks` examples
+/// compiling on a checkout without the offline `xla` registry.
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use std::collections::BTreeMap;
+    use std::path::Path;
+
+    use anyhow::{bail, Result};
+
+    use super::PayloadSpec;
+    use crate::workload::Benchmark;
+
+    /// Placeholder for a compiled benchmark payload (never constructed).
+    pub struct Payload {
+        pub spec: PayloadSpec,
+    }
+
+    impl Payload {
+        pub fn step(&self) -> Result<f64> {
+            bail!("kube-fgs was built without the `pjrt` feature")
+        }
+
+        pub fn step_outputs(&self) -> Result<Vec<Vec<f32>>> {
+            bail!("kube-fgs was built without the `pjrt` feature")
+        }
+    }
+
+    /// Placeholder runtime: `load` always fails.
+    pub struct Runtime {
+        pub client_platform: String,
+        pub payloads: BTreeMap<Benchmark, Payload>,
+    }
+
+    impl Runtime {
+        pub fn load(_artifacts_dir: &Path) -> Result<Runtime> {
+            bail!(
+                "PJRT execution requires the `pjrt` feature (and the `xla` \
+                 crate from the offline toolchain registry); rebuild with \
+                 `cargo build --features pjrt`"
             )
-            .with_context(|| format!("parsing {}", spec.hlo_path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .with_context(|| format!("compiling {}", spec.benchmark))?;
-            let inputs = spec
-                .args
-                .iter()
-                .map(|a| make_literal(a, &mut rng))
-                .collect::<Result<Vec<_>>>()?;
-            payloads.insert(spec.benchmark, Payload { spec, exe, inputs });
         }
-        Ok(Runtime { client_platform: client.platform_name(), payloads })
-    }
 
-    pub fn payload(&self, bench: Benchmark) -> Option<&Payload> {
-        self.payloads.get(&bench)
-    }
+        pub fn payload(&self, bench: Benchmark) -> Option<&Payload> {
+            self.payloads.get(&bench)
+        }
 
-    /// Measure mean per-step wall time of one benchmark payload.
-    pub fn measure(&self, bench: Benchmark, warmup: usize, iters: usize) -> Result<f64> {
-        let payload =
-            self.payload(bench).ok_or_else(|| anyhow!("no payload for {bench}"))?;
-        for _ in 0..warmup {
-            payload.step()?;
+        pub fn measure(&self, _bench: Benchmark, _warmup: usize, _iters: usize) -> Result<f64> {
+            bail!("kube-fgs was built without the `pjrt` feature")
         }
-        let mut total = 0.0;
-        for _ in 0..iters.max(1) {
-            total += payload.step()?;
-        }
-        Ok(total / iters.max(1) as f64)
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Payload, Runtime};
 
 /// Default artifacts directory: `$CARGO_MANIFEST_DIR/artifacts` at build
 /// time, overridable with `KUBE_FGS_ARTIFACTS`.
@@ -226,6 +304,7 @@ mod tests {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn runtime_loads_and_executes_every_payload() {
         if !have_artifacts() {
@@ -238,6 +317,13 @@ mod tests {
             let secs = payload.step().unwrap_or_else(|e| panic!("{bench}: {e}"));
             assert!(secs > 0.0 && secs < 60.0, "{bench}: {secs}s");
         }
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_fails_with_clear_error() {
+        let err = Runtime::load(&default_artifacts_dir()).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err:#}");
     }
 
     #[test]

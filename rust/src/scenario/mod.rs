@@ -41,6 +41,17 @@ pub enum Scenario {
     CmGTgSjf,
     /// The paper's fine-grained scheduler with EASY backfilling.
     CmGTgBf,
+    /// CM with multi-tenant fair-share queues.
+    CmFs,
+    /// CM with conservative backfilling.
+    CmCbf,
+    /// The paper's fine-grained scheduler with fair-share queues.
+    CmGTgFs,
+    /// The paper's fine-grained scheduler with conservative backfilling.
+    CmGTgCbf,
+    /// The paper's fine-grained scheduler with fair-share queues AND
+    /// priority preemption (the full multi-tenant configuration).
+    CmGTgPre,
 }
 
 /// The six Table-II scenarios, in the paper's column order.
@@ -77,6 +88,11 @@ impl Scenario {
             Scenario::CmBf => "CM_BF",
             Scenario::CmGTgSjf => "CM_G_TG_SJF",
             Scenario::CmGTgBf => "CM_G_TG_BF",
+            Scenario::CmFs => "CM_FS",
+            Scenario::CmCbf => "CM_CBF",
+            Scenario::CmGTgFs => "CM_G_TG_FS",
+            Scenario::CmGTgCbf => "CM_G_TG_CBF",
+            Scenario::CmGTgPre => "CM_G_TG_PRE",
         }
     }
 
@@ -94,6 +110,11 @@ impl Scenario {
             Scenario::CmBf,
             Scenario::CmGTgSjf,
             Scenario::CmGTgBf,
+            Scenario::CmFs,
+            Scenario::CmCbf,
+            Scenario::CmGTgFs,
+            Scenario::CmGTgCbf,
+            Scenario::CmGTgPre,
         ];
         all.iter().copied().find(|sc| sc.name().eq_ignore_ascii_case(s))
     }
@@ -108,9 +129,13 @@ impl Scenario {
     pub fn policy(&self) -> GranularityPolicy {
         match self {
             Scenario::CmS | Scenario::CmSTg => GranularityPolicy::Scale,
-            Scenario::CmG | Scenario::CmGTg | Scenario::CmGTgSjf | Scenario::CmGTgBf => {
-                GranularityPolicy::Granularity
-            }
+            Scenario::CmG
+            | Scenario::CmGTg
+            | Scenario::CmGTgSjf
+            | Scenario::CmGTgBf
+            | Scenario::CmGTgFs
+            | Scenario::CmGTgCbf
+            | Scenario::CmGTgPre => GranularityPolicy::Granularity,
             _ => GranularityPolicy::None,
         }
     }
@@ -120,8 +145,17 @@ impl Scenario {
         match self {
             Scenario::CmSjf | Scenario::CmGTgSjf => QueuePolicyKind::Sjf,
             Scenario::CmBf | Scenario::CmGTgBf => QueuePolicyKind::EasyBackfill,
+            Scenario::CmCbf | Scenario::CmGTgCbf => QueuePolicyKind::ConservativeBackfill,
+            Scenario::CmFs | Scenario::CmGTgFs | Scenario::CmGTgPre => {
+                QueuePolicyKind::FairShare
+            }
             _ => QueuePolicyKind::FifoSkip,
         }
+    }
+
+    /// Whether this scenario enables priority preemption (the sixth knob).
+    pub fn preemption(&self) -> bool {
+        matches!(self, Scenario::CmGTgPre)
     }
 
     pub fn controller(&self) -> Box<dyn JobController> {
@@ -134,13 +168,17 @@ impl Scenario {
 
     pub fn scheduler(&self, seed: u64) -> SchedulerConfig {
         let base = match self {
-            Scenario::CmSTg | Scenario::CmGTg | Scenario::CmGTgSjf | Scenario::CmGTgBf => {
-                SchedulerConfig::fine_grained(seed)
-            }
+            Scenario::CmSTg
+            | Scenario::CmGTg
+            | Scenario::CmGTgSjf
+            | Scenario::CmGTgBf
+            | Scenario::CmGTgFs
+            | Scenario::CmGTgCbf
+            | Scenario::CmGTgPre => SchedulerConfig::fine_grained(seed),
             Scenario::Kubeflow => SchedulerConfig::kube_default(seed),
             _ => SchedulerConfig::volcano_default(seed),
         };
-        base.with_queue(self.queue())
+        base.with_queue(self.queue()).with_preemption(self.preemption())
     }
 
     /// Build a fully configured simulation for this scenario.
@@ -164,12 +202,25 @@ impl Scenario {
         seed: u64,
         queue: QueuePolicyKind,
     ) -> Simulation {
+        self.simulation_configured(cluster, seed, queue, self.preemption())
+    }
+
+    /// Fully custom build: queue discipline and preemption both
+    /// overridden (the fairness ablation, `run --preempt`, and the config
+    /// file use this).
+    pub fn simulation_configured(
+        &self,
+        cluster: ClusterSpec,
+        seed: u64,
+        queue: QueuePolicyKind,
+        preemption: bool,
+    ) -> Simulation {
         Simulation::new(
             cluster,
             self.kubelet(),
             self.policy(),
             self.controller(),
-            self.scheduler(seed).with_queue(queue),
+            self.scheduler(seed).with_queue(queue).with_preemption(preemption),
             Calibration::default(),
             seed,
         )
@@ -211,6 +262,9 @@ mod tests {
         assert_eq!(Scenario::parse("cm_g_tg"), Some(Scenario::CmGTg));
         assert_eq!(Scenario::parse("cm_g_tg_bf"), Some(Scenario::CmGTgBf));
         assert_eq!(Scenario::parse("CM_SJF"), Some(Scenario::CmSjf));
+        assert_eq!(Scenario::parse("cm_fs"), Some(Scenario::CmFs));
+        assert_eq!(Scenario::parse("CM_G_TG_CBF"), Some(Scenario::CmGTgCbf));
+        assert_eq!(Scenario::parse("cm_g_tg_pre"), Some(Scenario::CmGTgPre));
         assert_eq!(Scenario::parse("bogus"), None);
     }
 
@@ -220,16 +274,39 @@ mod tests {
         for (base, variant, queue) in [
             (Scenario::Cm, Scenario::CmSjf, QueuePolicyKind::Sjf),
             (Scenario::Cm, Scenario::CmBf, QueuePolicyKind::EasyBackfill),
+            (Scenario::Cm, Scenario::CmFs, QueuePolicyKind::FairShare),
+            (Scenario::Cm, Scenario::CmCbf, QueuePolicyKind::ConservativeBackfill),
             (Scenario::CmGTg, Scenario::CmGTgSjf, QueuePolicyKind::Sjf),
             (Scenario::CmGTg, Scenario::CmGTgBf, QueuePolicyKind::EasyBackfill),
+            (Scenario::CmGTg, Scenario::CmGTgFs, QueuePolicyKind::FairShare),
+            (Scenario::CmGTg, Scenario::CmGTgCbf, QueuePolicyKind::ConservativeBackfill),
         ] {
             assert_eq!(variant.queue(), queue);
             assert_eq!(variant.scheduler(0), base.scheduler(0).with_queue(queue));
             assert_eq!(variant.policy(), base.policy());
             assert_eq!(variant.kubelet().cpu_policy, base.kubelet().cpu_policy);
             assert_eq!(variant.controller().name(), base.controller().name());
+            assert!(!variant.preemption());
         }
         assert_eq!(Scenario::CmGTg.queue(), QueuePolicyKind::FifoSkip);
+    }
+
+    #[test]
+    fn pre_variant_enables_fair_share_and_preemption() {
+        use crate::scheduler::QueuePolicyKind;
+        let pre = Scenario::CmGTgPre;
+        assert!(pre.preemption());
+        assert_eq!(pre.queue(), QueuePolicyKind::FairShare);
+        assert_eq!(
+            pre.scheduler(0),
+            Scenario::CmGTg
+                .scheduler(0)
+                .with_queue(QueuePolicyKind::FairShare)
+                .with_preemption(true)
+        );
+        assert_eq!(pre.policy(), Scenario::CmGTg.policy());
+        // Preemption needs gang all-or-nothing.
+        assert!(pre.scheduler(0).gang);
     }
 
     #[test]

@@ -21,9 +21,9 @@ use crate::cluster::{JobId, NodeId, NodeRole, Pod, PodId, PodPhase, Resources};
 use crate::util::Rng;
 
 pub use queue::{
-    estimated_completions, estimated_runtime, shadow_time, EasyBackfill, FifoSkip,
-    FifoStrict, GangDecision, QueueContext, QueuePolicy, QueuePolicyKind, Sjf,
-    ALL_QUEUE_POLICIES,
+    estimated_completions, estimated_runtime, job_fits, shadow_time, ConservativeBackfill,
+    EasyBackfill, FairShare, FifoSkip, FifoStrict, GangDecision, QueueContext, QueuePolicy,
+    QueuePolicyKind, Sjf, ALL_QUEUE_POLICIES,
 };
 pub use score::{least_requested, taskgroup_score, GroupKey, GroupPlacement};
 pub use taskgroup::{build_groups, group_assignment, worker_order, TaskGroup};
@@ -37,6 +37,9 @@ pub struct SchedulerConfig {
     pub taskgroup: bool,
     /// Queue discipline for the pending-job walk.
     pub queue: QueuePolicyKind,
+    /// Priority preemption: a gang-blocked job may evict a minimal set of
+    /// strictly-lower-priority running jobs (requires `gang`).
+    pub preemption: bool,
     /// Seed for the default scheduler's random tie-breaking.
     pub seed: u64,
 }
@@ -48,6 +51,7 @@ impl SchedulerConfig {
             gang: true,
             taskgroup: false,
             queue: QueuePolicyKind::FifoSkip,
+            preemption: false,
             seed,
         }
     }
@@ -58,6 +62,7 @@ impl SchedulerConfig {
             gang: true,
             taskgroup: true,
             queue: QueuePolicyKind::FifoSkip,
+            preemption: false,
             seed,
         }
     }
@@ -68,6 +73,7 @@ impl SchedulerConfig {
             gang: false,
             taskgroup: false,
             queue: QueuePolicyKind::FifoSkip,
+            preemption: false,
             seed,
         }
     }
@@ -77,12 +83,22 @@ impl SchedulerConfig {
         self.queue = queue;
         self
     }
+
+    /// Same profile with priority preemption toggled.
+    pub fn with_preemption(mut self, preemption: bool) -> Self {
+        self.preemption = preemption;
+        self
+    }
 }
 
 pub struct Scheduler {
     pub config: SchedulerConfig,
     rng: Rng,
     queue_policy: Box<dyn QueuePolicy>,
+    /// Jobs evicted by priority preemption since the last
+    /// [`Scheduler::take_preempted`] call (the simulator drains this after
+    /// every cycle and re-queues them with checkpoint-restart cost).
+    preempted: Vec<JobId>,
 }
 
 /// Trial state for one scheduling session (mutated as binds are decided,
@@ -127,13 +143,25 @@ impl Scheduler {
             config,
             rng: Rng::seed_from_u64(config.seed),
             queue_policy: config.queue.build(),
+            preempted: Vec::new(),
         }
     }
 
-    /// Rebuild the cluster-wide group-placement view from bound/running
-    /// pods (groups only exist for jobs scheduled by the task-group
-    /// plugin).
-    fn rebuild_placement(api: &ApiServer) -> GroupPlacement {
+    /// Drain the jobs preempted by the most recent cycle(s). The simulator
+    /// calls this after every session; standalone callers that enable
+    /// preemption must re-queue the drained jobs themselves
+    /// (`ApiServer::requeue_job`).
+    pub fn take_preempted(&mut self) -> Vec<JobId> {
+        std::mem::take(&mut self.preempted)
+    }
+
+    /// Reference implementation: rebuild the cluster-wide group-placement
+    /// view by scanning every pod (groups only exist for jobs scheduled by
+    /// the task-group plugin). Sessions use the API server's incrementally
+    /// maintained [`ApiServer::group_placement`] instead (§Perf: this scan
+    /// touches every pod ever created — including succeeded ones — once
+    /// per session); a property test pins the two views equal.
+    pub fn rebuild_placement(api: &ApiServer) -> GroupPlacement {
         let mut p = GroupPlacement::default();
         for pod in api.pods.values() {
             if matches!(pod.phase, PodPhase::Bound | PodPhase::Running) {
@@ -268,6 +296,146 @@ impl Scheduler {
         Some(binds)
     }
 
+    /// Select a minimal set of running jobs whose eviction would let
+    /// `job`'s gang fit the session's free view. Candidates are running
+    /// jobs of *strictly lower* priority (never jobs started this
+    /// session); cheapest victims first — lowest priority, then latest
+    /// start (least progress lost), then highest id. A backward pass drops
+    /// victims whose release turned out unnecessary, so the returned set
+    /// is minimal (no proper subset suffices). Returns `None` when no
+    /// candidate set makes the gang fit.
+    fn select_victims(
+        &self,
+        api: &ApiServer,
+        state: &SessionState,
+        job: JobId,
+        started: &[JobId],
+    ) -> Option<Vec<JobId>> {
+        // The scored-greedy planner can fail where first-fit succeeds; if
+        // the gang already first-fits the session's free view, eviction
+        // cannot help — never preempt for nothing.
+        if queue::job_fits(api, &state.free, job) {
+            return None;
+        }
+        let priority = api.jobs[&job].planned.spec.priority;
+        let mut candidates: Vec<JobId> = api
+            .running_jobs()
+            .into_iter()
+            .filter(|id| api.jobs[id].planned.spec.priority < priority)
+            .filter(|id| !started.contains(id))
+            .collect();
+        if candidates.is_empty() {
+            return None;
+        }
+        candidates.sort_by(|a, b| {
+            let (ja, jb) = (&api.jobs[a], &api.jobs[b]);
+            ja.planned
+                .spec
+                .priority
+                .cmp(&jb.planned.spec.priority)
+                .then_with(|| {
+                    jb.start_time
+                        .unwrap_or(f64::NEG_INFINITY)
+                        .total_cmp(&ja.start_time.unwrap_or(f64::NEG_INFINITY))
+                })
+                .then(b.cmp(a))
+        });
+        let release = |free: &mut [Resources], id: JobId| {
+            for pid in &api.jobs[&id].pods {
+                let pod = &api.pods[pid];
+                if let (Some(node), PodPhase::Bound | PodPhase::Running) =
+                    (pod.node, pod.phase)
+                {
+                    free[node.0] += pod.requests;
+                }
+            }
+        };
+        let mut free = state.free.clone();
+        let mut chosen: Vec<JobId> = Vec::new();
+        let mut sufficient = false;
+        for &id in &candidates {
+            release(&mut free, id);
+            chosen.push(id);
+            if queue::job_fits(api, &free, job) {
+                sufficient = true;
+                break;
+            }
+        }
+        if !sufficient {
+            return None;
+        }
+        // Backward minimization: try dropping each victim in turn.
+        let mut i = 0;
+        while i < chosen.len() && chosen.len() > 1 {
+            let mut trial = state.free.clone();
+            for (k, &id) in chosen.iter().enumerate() {
+                if k != i {
+                    release(&mut trial, id);
+                }
+            }
+            if queue::job_fits(api, &trial, job) {
+                chosen.remove(i);
+            } else {
+                i += 1;
+            }
+        }
+        Some(chosen)
+    }
+
+    /// Try to place `job` by preemption: pick a minimal victim set
+    /// ([`Scheduler::select_victims`]) and plan the gang against a trial
+    /// view with the victims' resources released. Returns the victims and
+    /// the proven plan, or `None` — in which case nothing was evicted
+    /// (the scored-greedy planner may still corner itself where first-fit
+    /// succeeds; that failure must never cost a running job its slot).
+    fn plan_with_preemption(
+        &mut self,
+        api: &ApiServer,
+        state: &SessionState,
+        job: JobId,
+        started: &[JobId],
+    ) -> Option<(Vec<JobId>, Vec<(PodId, NodeId, Option<usize>)>)> {
+        let victims = self.select_victims(api, state, job, started)?;
+        let mut free = state.free.clone();
+        let mut placement = state.placement.clone();
+        for &v in &victims {
+            for pid in &api.jobs[&v].pods {
+                let pod = &api.pods[pid];
+                if let (Some(node), PodPhase::Bound | PodPhase::Running) =
+                    (pod.node, pod.phase)
+                {
+                    free[node.0] += pod.requests;
+                    if let Some(g) = pod.group {
+                        placement.remove((v, g), node);
+                    }
+                }
+            }
+        }
+        let mut trial = SessionState { free, placement, log: Vec::new() };
+        let binds = self.plan_job(api, &mut trial, job)?;
+        Some((victims, binds))
+    }
+
+    /// Commit a successful gang plan: persist group assignments, bind
+    /// every pod (kubelet admission must succeed after the predicate
+    /// pass), and start the job. Shared by the normal gang-success arm
+    /// and the post-preemption retry.
+    fn commit_gang(
+        api: &mut ApiServer,
+        binds: Vec<(PodId, NodeId, Option<usize>)>,
+        job_id: JobId,
+        now: f64,
+    ) {
+        for (pid, node, group) in binds {
+            if let Some(g) = group {
+                api.pods.get_mut(&pid).unwrap().group = Some(g);
+            }
+            let ok = api.bind_pod(pid, node, now);
+            assert!(ok, "kubelet admission failed after predicate pass");
+        }
+        api.start_job(job_id, now);
+    }
+
     /// One scheduling session with base-time completion estimates (callers
     /// with a simulator should prefer [`Scheduler::cycle_with_projections`],
     /// which feeds exact projections to the backfill reservation). The
@@ -283,9 +451,12 @@ impl Scheduler {
     }
 
     /// One scheduling session. Walks the pending queue in the queue
-    /// policy's order; on a gang failure the policy decides whether to
-    /// skip the job (seed behaviour), end the session, or hold an EASY
-    /// reservation that only lets provably-shorter jobs backfill.
+    /// policy's order; on a gang failure the scheduler may first attempt
+    /// priority preemption (`config.preemption`), then the policy decides
+    /// whether to skip the job (seed behaviour), end the session, or hold
+    /// a backfill reservation — one for the first blocked job (EASY) or
+    /// one per blocked job (conservative). Backfill candidates are gated
+    /// on the *earliest* held shadow time, so no reservation is delayed.
     /// Returns the jobs started in this cycle.
     pub fn cycle_with_projections(
         &mut self,
@@ -296,18 +467,18 @@ impl Scheduler {
         let mut started = Vec::new();
         let mut state = SessionState {
             free: api.spec.node_ids().map(|n| api.free_on(n)).collect(),
-            placement: Self::rebuild_placement(api),
+            placement: api.group_placement().clone(),
             log: Vec::new(),
         };
 
         let mut pending = api.pending_jobs();
-        self.queue_policy.order(api, &mut pending);
-        // Shadow time of the reservation held for the first blocked job
-        // (EASY); None until a gang failure asks for one.
-        let mut reservation: Option<f64> = None;
+        self.queue_policy.order(api, now, &mut pending);
+        // Shadow times of the reservations held for blocked jobs: at most
+        // one under EASY, one per blocked job under conservative backfill.
+        let mut reservations: Vec<f64> = Vec::new();
 
         for job_id in pending {
-            if let Some(shadow) = reservation {
+            if let Some(shadow) = reservations.iter().copied().reduce(f64::min) {
                 let ctx = QueueContext {
                     api: &*api,
                     now,
@@ -315,6 +486,23 @@ impl Scheduler {
                     free: &state.free,
                 };
                 if !self.queue_policy.may_backfill(&ctx, job_id, shadow) {
+                    // Conservative discipline: a window-rejected job that
+                    // is waiting on a genuine future release holds a
+                    // reservation of its own — later backfills may not
+                    // push *its* start back either. A job that fits right
+                    // now is held only by the window itself: reserving it
+                    // at `now` would collapse the session's backfill
+                    // window to zero, so it relies on the FIFO retry at
+                    // the next session instead.
+                    if self.queue_policy.reserves_every_job() {
+                        if let GangDecision::Reserve { shadow_time } =
+                            self.queue_policy.on_gang_failure(&ctx, job_id)
+                        {
+                            if shadow_time > now + 1e-9 {
+                                reservations.push(shadow_time);
+                            }
+                        }
+                    }
                     continue;
                 }
             }
@@ -324,30 +512,64 @@ impl Scheduler {
                 let checkpoint = state.checkpoint();
                 match self.plan_job(api, &mut state, job_id) {
                     Some(binds) => {
-                        for (pid, node, group) in binds {
-                            if let Some(g) = group {
-                                api.pods.get_mut(&pid).unwrap().group = Some(g);
-                            }
-                            let ok = api.bind_pod(pid, node, now);
-                            assert!(ok, "kubelet admission failed after predicate pass");
-                        }
-                        api.start_job(job_id, now);
+                        Self::commit_gang(api, binds, job_id, now);
                         started.push(job_id);
                     }
                     None => {
                         state.rollback_to(checkpoint);
-                        if reservation.is_none() {
+                        // Priority preemption: plan against a trial view
+                        // with a minimal victim set released, and only
+                        // evict once the plan is proven — a scored-greedy
+                        // corner case must never preempt for nothing.
+                        if self.config.preemption {
+                            if let Some((victims, binds)) =
+                                self.plan_with_preemption(api, &state, job_id, &started)
+                            {
+                                for &v in &victims {
+                                    api.preempt_job(v, now);
+                                }
+                                self.preempted.extend_from_slice(&victims);
+                                Self::commit_gang(api, binds, job_id, now);
+                                started.push(job_id);
+                                // The eviction + commit invalidated the
+                                // session view: rebuild free + placement
+                                // (the undo log only covers this session's
+                                // own binds).
+                                state = SessionState {
+                                    free: api
+                                        .spec
+                                        .node_ids()
+                                        .map(|n| api.free_on(n))
+                                        .collect(),
+                                    placement: api.group_placement().clone(),
+                                    log: Vec::new(),
+                                };
+                                continue;
+                            }
+                        }
+                        let decision = if reservations.is_empty()
+                            || self.queue_policy.reserves_every_job()
+                        {
                             let ctx = QueueContext {
                                 api: &*api,
                                 now,
                                 projected_completion: projected,
                                 free: &state.free,
                             };
-                            match self.queue_policy.on_gang_failure(&ctx, job_id) {
-                                GangDecision::Skip => {}
-                                GangDecision::Block => break,
-                                GangDecision::Reserve { shadow_time } => {
-                                    reservation = Some(shadow_time);
+                            self.queue_policy.on_gang_failure(&ctx, job_id)
+                        } else {
+                            GangDecision::Skip
+                        };
+                        match decision {
+                            GangDecision::Skip => {}
+                            GangDecision::Block => break,
+                            GangDecision::Reserve { shadow_time } => {
+                                // A shadow at `now` (the gang first-fits
+                                // but scored-greedy cornered itself) would
+                                // zero the backfill window — same guard as
+                                // the window-rejection path above.
+                                if shadow_time > now + 1e-9 {
+                                    reservations.push(shadow_time);
                                 }
                             }
                         }
@@ -557,8 +779,10 @@ mod tests {
 
     /// Cluster with 7 running 16-core jobs + one finished, leaving exactly
     /// one node with 16 free cores, then three queued jobs: a 32-core job
-    /// that cannot fit (the gang blocker), an 8-core ring job (short, 320 s
-    /// estimate), and an 8-core DGEMM job (long, 600 s estimate).
+    /// that cannot fit (the gang blocker), an 8-core ring job (short,
+    /// ~333 s walltime estimate), and an 8-core MiniFE job (long, ~791 s
+    /// estimate — past the ~688 s shadow time projected from the running
+    /// DGEMMs' walltime estimates).
     fn congested_api_with_blocker(queue: QueuePolicyKind) -> (ApiServer, Scheduler, Vec<JobId>) {
         let mut api = api();
         let mut sched =
@@ -570,7 +794,7 @@ mod tests {
         api.finish_job(JobId(1), 2.0);
         let blocker = submit_sized(&mut api, 9, Benchmark::EpDgemm, 32);
         let short = submit_sized(&mut api, 10, Benchmark::GRandomRing, 8);
-        let long = submit_sized(&mut api, 11, Benchmark::EpDgemm, 8);
+        let long = submit_sized(&mut api, 11, Benchmark::MiniFe, 8);
         (api, sched, vec![blocker, short, long])
     }
 
@@ -591,14 +815,55 @@ mod tests {
 
     #[test]
     fn easy_backfill_admits_only_jobs_within_shadow_window() {
-        // Shadow time for the 32-core blocker is ~600 s (projected end of
-        // the running DGEMMs); the 320 s ring job fits the window, the
-        // 600 s DGEMM does not (2 + 600 > 600).
+        // Shadow time for the 32-core blocker is ~688 s (projected end of
+        // the running DGEMMs at their walltime estimates); the ~333 s ring
+        // job fits the window, the ~791 s MiniFE job does not.
         let (mut api, mut sched, ids) =
             congested_api_with_blocker(QueuePolicyKind::EasyBackfill);
         let started = sched.cycle(&mut api, 2.0);
         assert_eq!(started, vec![ids[1]], "only the short job backfills");
         assert_eq!(api.pending_jobs(), vec![ids[0], ids[2]]);
+    }
+
+    #[test]
+    fn conservative_backfill_guards_every_reservation() {
+        // Same congested cluster under conservative backfilling: the
+        // blocker reserves at ~688 s, the ring job backfills inside the
+        // window, and MiniFE is rejected against the earliest reservation
+        // (it fits the leftover cores *now*, so it takes no reservation of
+        // its own — see the ConservativeBackfill docs).
+        let (mut api, mut sched, ids) =
+            congested_api_with_blocker(QueuePolicyKind::ConservativeBackfill);
+        let started = sched.cycle(&mut api, 2.0);
+        assert_eq!(started, vec![ids[1]], "only the short job backfills");
+        assert_eq!(api.pending_jobs(), vec![ids[0], ids[2]]);
+    }
+
+    #[test]
+    fn conservative_window_rejected_job_reserves_when_waiting_on_a_release() {
+        // Conservative backfilling with two blocked jobs: a 32-core gang
+        // blocker reserves at ~688 s; a 24-core job is window-rejected
+        // (estimate ~701 s crosses the shadow) and — because it cannot fit
+        // the 16 free cores now — takes a reservation of its own (the
+        // EASY policy would give it nothing). A short ring job still
+        // backfills under both shadows; neither blocked job dams the
+        // session.
+        let mut api = api();
+        let mut sched = Scheduler::new(
+            SchedulerConfig::volcano_default(1)
+                .with_queue(QueuePolicyKind::ConservativeBackfill),
+        );
+        for i in 1..=8 {
+            submit(&mut api, &VolcanoMpiController, GranularityPolicy::None, i, Benchmark::EpDgemm);
+        }
+        assert_eq!(sched.cycle(&mut api, 0.0).len(), 8);
+        api.finish_job(JobId(1), 2.0);
+        let blocker = submit_sized(&mut api, 9, Benchmark::EpDgemm, 32);
+        let second = submit_sized(&mut api, 10, Benchmark::EpDgemm, 24);
+        let short = submit_sized(&mut api, 11, Benchmark::GRandomRing, 8);
+        let started = sched.cycle(&mut api, 2.0);
+        assert_eq!(started, vec![short], "short job backfills under both reservations");
+        assert_eq!(api.pending_jobs(), vec![blocker, second]);
     }
 
     #[test]
@@ -632,6 +897,170 @@ mod tests {
             run(SchedulerConfig::fine_grained(5)),
             run(SchedulerConfig::fine_grained(5).with_queue(QueuePolicyKind::FifoSkip))
         );
+    }
+
+    /// Submit like [`submit`] but with a tenant/priority on the job spec.
+    fn submit_prio(
+        api: &mut ApiServer,
+        policy: GranularityPolicy,
+        id: u64,
+        bench: Benchmark,
+        priority: u32,
+        now: f64,
+    ) -> JobId {
+        let spec = JobSpec::paper_job(id, bench, now)
+            .with_tenant(crate::workload::TenantId(priority.min(1)), priority);
+        let info = SystemInfo { available_nodes: api.spec.worker_count() as u32 };
+        let planned = plan(&spec, policy, info);
+        let job_id = planned.spec.id;
+        let (pods, hostfile) = VolcanoMpiController.build(&planned, api);
+        api.create_job(planned, pods, hostfile, now);
+        job_id
+    }
+
+    #[test]
+    fn preemption_evicts_minimal_lower_priority_victim_set() {
+        let mut api = api();
+        let mut sched = Scheduler::new(
+            SchedulerConfig::volcano_default(1).with_preemption(true),
+        );
+        // Fill the cluster with 8 priority-0 jobs.
+        for i in 1..=8 {
+            submit_prio(&mut api, GranularityPolicy::None, i, Benchmark::EpDgemm, 0, 0.0);
+        }
+        assert_eq!(sched.cycle(&mut api, 0.0).len(), 8);
+        // A priority-10 16-core job arrives: exactly one victim needed.
+        let hi = submit_prio(&mut api, GranularityPolicy::None, 9, Benchmark::EpDgemm, 10, 1.0);
+        let started = sched.cycle(&mut api, 1.0);
+        assert_eq!(started, vec![hi], "high-priority job starts via preemption");
+        let victims = sched.take_preempted();
+        assert_eq!(victims.len(), 1, "minimal victim set: {victims:?}");
+        assert_eq!(api.jobs[&victims[0]].phase, crate::apiserver::JobPhase::Preempted);
+        assert_eq!(api.jobs[&victims[0]].planned.spec.priority, 0);
+        // The victim's pods are fully released.
+        for pid in &api.jobs[&victims[0]].pods {
+            let pod = &api.pods[pid];
+            assert_eq!(pod.phase, PodPhase::Pending);
+            assert_eq!(pod.node, None);
+        }
+        // Re-queue the victim; once capacity frees it runs again.
+        api.requeue_job(victims[0], 1.0);
+        assert_eq!(api.pending_jobs(), vec![victims[0]]);
+        api.finish_job(hi, 2.0);
+        assert_eq!(sched.cycle(&mut api, 2.0), vec![victims[0]]);
+        // No preemption was needed the second time.
+        assert!(sched.take_preempted().is_empty());
+    }
+
+    #[test]
+    fn preemption_never_evicts_equal_or_higher_priority() {
+        let mut api = api();
+        let mut sched = Scheduler::new(
+            SchedulerConfig::volcano_default(1).with_preemption(true),
+        );
+        for i in 1..=8 {
+            submit_prio(&mut api, GranularityPolicy::None, i, Benchmark::EpDgemm, 10, 0.0);
+        }
+        assert_eq!(sched.cycle(&mut api, 0.0).len(), 8);
+        // Equal priority: must queue, not preempt.
+        let equal = submit_prio(&mut api, GranularityPolicy::None, 9, Benchmark::EpDgemm, 10, 1.0);
+        assert!(sched.cycle(&mut api, 1.0).is_empty());
+        assert!(sched.take_preempted().is_empty());
+        assert_eq!(api.pending_jobs(), vec![equal]);
+        // Disabled preemption: a higher-priority job also queues.
+        let mut no_pre = Scheduler::new(SchedulerConfig::volcano_default(2));
+        let hi = submit_prio(&mut api, GranularityPolicy::None, 10, Benchmark::EpDgemm, 99, 2.0);
+        assert!(no_pre.cycle(&mut api, 2.0).is_empty());
+        assert!(no_pre.take_preempted().is_empty());
+        assert!(api.pending_jobs().contains(&hi));
+    }
+
+    /// Property: the API server's incrementally maintained group-placement
+    /// view equals the full pod-scan rebuild at every step of a randomized
+    /// schedule → preempt → requeue → finish churn, and preempt → re-place
+    /// → complete leaves free resources and placement identical to
+    /// never-preempted bookkeeping (everything returned, placement empty).
+    #[test]
+    fn prop_incremental_placement_matches_rebuild_under_preemption_churn() {
+        let benches = [
+            Benchmark::EpDgemm,
+            Benchmark::EpStream,
+            Benchmark::GFft,
+            Benchmark::GRandomRing,
+            Benchmark::MiniFe,
+        ];
+        for case in 0..20u64 {
+            let mut rng = Rng::seed_from_u64(7100 + case);
+            let mut api = api();
+            let mut sched = Scheduler::new(
+                SchedulerConfig::fine_grained(case).with_preemption(true),
+            );
+            let check = |api: &ApiServer, step: &str| {
+                assert_eq!(
+                    api.group_placement(),
+                    &Scheduler::rebuild_placement(api),
+                    "case {case}: placement drifted after {step}"
+                );
+            };
+            let n = rng.range_usize(4, 12);
+            for i in 1..=n {
+                let prio = if rng.f64() < 0.3 { 10 } else { 0 };
+                submit_prio(
+                    &mut api,
+                    GranularityPolicy::Granularity,
+                    i as u64,
+                    benches[rng.range_usize(0, benches.len())],
+                    prio,
+                    0.0,
+                );
+            }
+            let mut t = 0.0;
+            for _ in 0..20 {
+                t += 1.0;
+                sched.cycle(&mut api, t);
+                check(&api, "cycle");
+                for id in sched.take_preempted() {
+                    api.requeue_job(id, t);
+                    check(&api, "requeue");
+                }
+                let running = api.running_jobs();
+                if running.is_empty() && api.pending_jobs().is_empty() {
+                    break;
+                }
+                if !running.is_empty() && rng.f64() < 0.7 {
+                    let id = running[rng.range_usize(0, running.len())];
+                    api.finish_job(id, t);
+                    check(&api, "finish");
+                }
+            }
+            // Drain: finish everything still running, then keep cycling
+            // until the queue is empty (requeue any stragglers).
+            for _ in 0..200 {
+                t += 1.0;
+                for id in api.running_jobs() {
+                    api.finish_job(id, t);
+                }
+                check(&api, "drain-finish");
+                if api.pending_jobs().is_empty() {
+                    break;
+                }
+                sched.cycle(&mut api, t);
+                for id in sched.take_preempted() {
+                    api.requeue_job(id, t);
+                }
+                check(&api, "drain-cycle");
+            }
+            assert!(api.pending_jobs().is_empty(), "case {case}: queue not drained");
+            // Never-preempted bookkeeping: all resources home, empty view.
+            for nd in api.spec.node_ids() {
+                assert_eq!(
+                    api.free_on(nd),
+                    api.spec.node(nd).allocatable(),
+                    "case {case}: leaked resources"
+                );
+            }
+            assert_eq!(api.group_placement(), &GroupPlacement::default(), "case {case}");
+        }
     }
 
     /// Property: gang rollback is exact. After `rollback_to`, the session's

@@ -9,22 +9,30 @@
 //! first blocked job, computed from the projected completion times of the
 //! running jobs.
 //!
-//! Four implementations:
+//! Six implementations:
 //! - [`FifoSkip`] — the seed behaviour made explicit: FIFO order, a
 //!   blocked job is skipped (later jobs may overtake it indefinitely);
 //! - [`FifoStrict`] — FIFO order, a blocked job blocks the session (no
 //!   overtaking, no starvation, poor utilization);
-//! - [`Sjf`] — shortest-job-first by the perf model's estimated base
-//!   runtime, blocked jobs skipped;
+//! - [`Sjf`] — shortest-job-first by the perf model's walltime estimate,
+//!   blocked jobs skipped;
 //! - [`EasyBackfill`] — FIFO order; the first blocked job gets a
 //!   reservation at its *shadow time* (the projected instant enough
 //!   resources free up for its gang), and later jobs are backfilled only
-//!   if their estimated completion does not cross the shadow time.
+//!   if their estimated completion does not cross the shadow time;
+//! - [`ConservativeBackfill`] — like EASY, but *every* blocked job holds a
+//!   reservation: a later job may start only if it is projected to finish
+//!   before the earliest held shadow time, so no queued job's start is
+//!   ever pushed back (up to estimate error);
+//! - [`FairShare`] — multi-tenant weighted deficit ordering: tenants with
+//!   the least weight-normalized service consumed go first, then priority,
+//!   then FIFO within a tenant.
 
 use std::collections::BTreeMap;
 
 use crate::apiserver::ApiServer;
 use crate::cluster::{ClusterSpec, JobId, NodeRole, Pod, PodPhase, PodRole, Resources};
+use crate::perfmodel::{walltime_factor, Calibration};
 
 /// Selector for the queue discipline, carried by `SchedulerConfig`
 /// (kept `Copy` so scheduler profiles stay plain values).
@@ -34,18 +42,24 @@ pub enum QueuePolicyKind {
     FifoSkip,
     /// FIFO walk, first gang-blocked job ends the session.
     FifoStrict,
-    /// Shortest-job-first by estimated base runtime.
+    /// Shortest-job-first by estimated walltime.
     Sjf,
     /// EASY backfilling: FIFO + reservation for the first blocked job.
     EasyBackfill,
+    /// Conservative backfilling: a reservation for every blocked job.
+    ConservativeBackfill,
+    /// Multi-tenant weighted fair share (deficit ordering).
+    FairShare,
 }
 
 /// All queue policies, in ablation-table order.
-pub const ALL_QUEUE_POLICIES: [QueuePolicyKind; 4] = [
+pub const ALL_QUEUE_POLICIES: [QueuePolicyKind; 6] = [
     QueuePolicyKind::FifoSkip,
     QueuePolicyKind::FifoStrict,
     QueuePolicyKind::Sjf,
     QueuePolicyKind::EasyBackfill,
+    QueuePolicyKind::ConservativeBackfill,
+    QueuePolicyKind::FairShare,
 ];
 
 impl QueuePolicyKind {
@@ -55,6 +69,8 @@ impl QueuePolicyKind {
             QueuePolicyKind::FifoStrict => "fifo_strict",
             QueuePolicyKind::Sjf => "sjf",
             QueuePolicyKind::EasyBackfill => "easy_backfill",
+            QueuePolicyKind::ConservativeBackfill => "cons_backfill",
+            QueuePolicyKind::FairShare => "fair_share",
         }
     }
 
@@ -67,6 +83,10 @@ impl QueuePolicyKind {
             "easy_backfill" | "easy" | "backfill" | "bf" => {
                 Some(QueuePolicyKind::EasyBackfill)
             }
+            "cons_backfill" | "conservative" | "conservative_backfill" | "cbf" => {
+                Some(QueuePolicyKind::ConservativeBackfill)
+            }
+            "fair_share" | "fairshare" | "fair" | "fs" => Some(QueuePolicyKind::FairShare),
             _ => None,
         }
     }
@@ -77,7 +97,21 @@ impl QueuePolicyKind {
             QueuePolicyKind::FifoStrict => Box::new(FifoStrict),
             QueuePolicyKind::Sjf => Box::new(Sjf),
             QueuePolicyKind::EasyBackfill => Box::new(EasyBackfill),
+            QueuePolicyKind::ConservativeBackfill => Box::new(ConservativeBackfill),
+            QueuePolicyKind::FairShare => Box::new(FairShare),
         }
+    }
+
+    /// Disciplines whose block/reserve semantics only exist under gang
+    /// all-or-nothing; rejected for no-gang scheduler profiles at the
+    /// CLI/config boundary.
+    pub fn requires_gang(&self) -> bool {
+        matches!(
+            self,
+            QueuePolicyKind::FifoStrict
+                | QueuePolicyKind::EasyBackfill
+                | QueuePolicyKind::ConservativeBackfill
+        )
     }
 }
 
@@ -120,13 +154,18 @@ pub enum GangDecision {
 pub trait QueuePolicy {
     fn kind(&self) -> QueuePolicyKind;
 
-    /// Reorder the pending queue (input: FIFO by submit time).
-    fn order(&self, api: &ApiServer, pending: &mut Vec<JobId>);
+    /// Reorder the pending queue (input: FIFO by submit time). `now` feeds
+    /// time-dependent orderings (fair-share deficit counters).
+    fn order(&self, api: &ApiServer, now: f64, pending: &mut Vec<JobId>);
 
-    /// Decide what the *first* gang failure of the session means.
+    /// Decide what a gang failure means. Policies where
+    /// [`QueuePolicy::reserves_every_job`] is false are only consulted for
+    /// the *first* failure of a session (EASY semantics); conservative
+    /// backfilling is consulted for every one.
     fn on_gang_failure(&self, ctx: &QueueContext<'_>, job: JobId) -> GangDecision;
 
-    /// With a reservation at `shadow_time`, may `job` still be tried?
+    /// With the session's earliest reservation at `shadow_time`, may `job`
+    /// still be tried?
     fn may_backfill(&self, ctx: &QueueContext<'_>, job: JobId, shadow_time: f64) -> bool;
 
     /// Whether this policy reads the projected-completion map. Lets
@@ -135,15 +174,36 @@ pub trait QueuePolicy {
     fn needs_projections(&self) -> bool {
         false
     }
+
+    /// Conservative disciplines hold a reservation for *every* blocked job
+    /// of the session, not just the first.
+    fn reserves_every_job(&self) -> bool {
+        false
+    }
 }
 
-/// Estimated base runtime of a job — the perf model's uncontended,
-/// best-placement running time for its benchmark. SJF ordering and the
-/// backfill window both use this estimate (contention slowdowns are not
-/// known ahead of time, so backfill guarantees are soft, as in real EASY
-/// deployments with user-supplied walltimes).
+/// Estimated walltime of a job: the benchmark's calibrated base runtime
+/// scaled by the perf model's pre-placement slowdown estimate
+/// ([`walltime_factor`]) for the job's planned worker split. SJF ordering
+/// and the backfill windows use this estimate (placement-dependent
+/// contention is not known ahead of time, so backfill guarantees are soft,
+/// as in real EASY deployments with user-supplied walltimes).
+///
+/// Uses the default [`Calibration`] — the queue layer has no handle on a
+/// per-simulation calibration, and every current scenario runs the
+/// defaults. A calibration-sweep feature would need to thread the
+/// instance through [`QueueContext`] (ROADMAP: queue-policy axis).
 pub fn estimated_runtime(api: &ApiServer, job: JobId) -> f64 {
-    api.jobs[&job].planned.spec.benchmark.base_running_secs()
+    let obj = &api.jobs[&job];
+    let bench = obj.planned.spec.benchmark;
+    let worker_tasks: Vec<u32> = obj
+        .pods
+        .iter()
+        .map(|pid| &api.pods[pid])
+        .filter(|p| p.is_worker())
+        .map(|p| p.ntasks)
+        .collect();
+    bench.base_running_secs() * walltime_factor(bench, &worker_tasks, &Calibration::default())
 }
 
 /// Base-time estimate of every running job's completion, for callers that
@@ -190,8 +250,9 @@ pub fn first_fit_pods<'a>(
     true
 }
 
-/// Can `job`'s pending pods be first-fit placed into `free`?
-fn fits(api: &ApiServer, free: &[Resources], job: JobId) -> bool {
+/// Can `job`'s pending pods be first-fit placed into `free`? Shared by the
+/// shadow-time search and the preemption victim selection.
+pub fn job_fits(api: &ApiServer, free: &[Resources], job: JobId) -> bool {
     let mut trial: Vec<Resources> = free.to_vec();
     let pending = api.jobs[&job]
         .pods
@@ -207,7 +268,7 @@ fn fits(api: &ApiServer, free: &[Resources], job: JobId) -> bool {
 /// is infeasible for this cluster even when idle).
 pub fn shadow_time(ctx: &QueueContext<'_>, job: JobId) -> Option<f64> {
     let mut free: Vec<Resources> = ctx.free.to_vec();
-    if fits(ctx.api, &free, job) {
+    if job_fits(ctx.api, &free, job) {
         return Some(ctx.now);
     }
     let mut releases: Vec<(f64, JobId)> = ctx
@@ -231,7 +292,7 @@ pub fn shadow_time(ctx: &QueueContext<'_>, job: JobId) -> Option<f64> {
                 free[node.0] += pod.requests;
             }
         }
-        if fits(ctx.api, &free, job) {
+        if job_fits(ctx.api, &free, job) {
             return Some(t);
         }
     }
@@ -246,7 +307,7 @@ impl QueuePolicy for FifoSkip {
         QueuePolicyKind::FifoSkip
     }
 
-    fn order(&self, _api: &ApiServer, _pending: &mut Vec<JobId>) {}
+    fn order(&self, _api: &ApiServer, _now: f64, _pending: &mut Vec<JobId>) {}
 
     fn on_gang_failure(&self, _ctx: &QueueContext<'_>, _job: JobId) -> GangDecision {
         GangDecision::Skip
@@ -265,7 +326,7 @@ impl QueuePolicy for FifoStrict {
         QueuePolicyKind::FifoStrict
     }
 
-    fn order(&self, _api: &ApiServer, _pending: &mut Vec<JobId>) {}
+    fn order(&self, _api: &ApiServer, _now: f64, _pending: &mut Vec<JobId>) {}
 
     fn on_gang_failure(&self, _ctx: &QueueContext<'_>, _job: JobId) -> GangDecision {
         GangDecision::Block
@@ -276,8 +337,8 @@ impl QueuePolicy for FifoStrict {
     }
 }
 
-/// Shortest-job-first on the estimated base runtime; FIFO + id tiebreak
-/// keeps the order total and deterministic.
+/// Shortest-job-first on the estimated walltime; FIFO + id tiebreak keeps
+/// the order total and deterministic.
 pub struct Sjf;
 
 impl QueuePolicy for Sjf {
@@ -285,10 +346,14 @@ impl QueuePolicy for Sjf {
         QueuePolicyKind::Sjf
     }
 
-    fn order(&self, api: &ApiServer, pending: &mut Vec<JobId>) {
+    fn order(&self, api: &ApiServer, _now: f64, pending: &mut Vec<JobId>) {
+        // Walltime estimates scan the job's pods — compute each key once,
+        // not once per comparison.
+        let est: BTreeMap<JobId, f64> =
+            pending.iter().map(|&id| (id, estimated_runtime(api, id))).collect();
         pending.sort_by(|&a, &b| {
-            estimated_runtime(api, a)
-                .total_cmp(&estimated_runtime(api, b))
+            est[&a]
+                .total_cmp(&est[&b])
                 .then_with(|| {
                     api.jobs[&a].submit_time.total_cmp(&api.jobs[&b].submit_time)
                 })
@@ -316,7 +381,7 @@ impl QueuePolicy for EasyBackfill {
         QueuePolicyKind::EasyBackfill
     }
 
-    fn order(&self, _api: &ApiServer, _pending: &mut Vec<JobId>) {}
+    fn order(&self, _api: &ApiServer, _now: f64, _pending: &mut Vec<JobId>) {}
 
     fn on_gang_failure(&self, ctx: &QueueContext<'_>, job: JobId) -> GangDecision {
         match shadow_time(ctx, job) {
@@ -332,6 +397,95 @@ impl QueuePolicy for EasyBackfill {
     }
 
     fn needs_projections(&self) -> bool {
+        true
+    }
+}
+
+/// Conservative backfilling (Mu'alem & Feitelson '01): FIFO, with a
+/// shadow-time reservation for *every* blocked job of the session. A later
+/// job may start only if its estimated completion stays before the
+/// earliest held shadow time, so no queued job's reservation is ever
+/// pushed back.
+///
+/// Approximation boundary: a full conservative scheduler maintains a
+/// resource-time profile and lets backfills use holes *behind* later
+/// reservations; this implementation reuses the EASY shadow-time machinery
+/// and gates every backfill on the earliest reservation — strictly safer
+/// (never delays anyone) at some utilization cost, and deterministic.
+/// Window-rejected jobs that are waiting on a future release reserve too;
+/// a job the window holds despite fitting *now* adds no reservation (it
+/// would zero the window) and relies on the next session's FIFO retry.
+pub struct ConservativeBackfill;
+
+impl QueuePolicy for ConservativeBackfill {
+    fn kind(&self) -> QueuePolicyKind {
+        QueuePolicyKind::ConservativeBackfill
+    }
+
+    fn order(&self, _api: &ApiServer, _now: f64, _pending: &mut Vec<JobId>) {}
+
+    fn on_gang_failure(&self, ctx: &QueueContext<'_>, job: JobId) -> GangDecision {
+        match shadow_time(ctx, job) {
+            Some(t) => GangDecision::Reserve { shadow_time: t },
+            None => GangDecision::Skip,
+        }
+    }
+
+    fn may_backfill(&self, ctx: &QueueContext<'_>, job: JobId, shadow: f64) -> bool {
+        ctx.now + estimated_runtime(ctx.api, job) <= shadow + 1e-9
+    }
+
+    fn needs_projections(&self) -> bool {
+        true
+    }
+
+    fn reserves_every_job(&self) -> bool {
+        true
+    }
+}
+
+/// Multi-tenant weighted fair share: order the queue by each tenant's
+/// weight-normalized service deficit (core-seconds consumed so far divided
+/// by the tenant's weight, ascending — the tenant furthest below its share
+/// goes first), then by job priority (descending), then FIFO. Weights live
+/// on the API server (`ApiServer::set_tenant_weight`); unknown tenants
+/// weigh 1.0. Gang failures skip (EASY-style starvation protection can be
+/// layered via the scheduler's priority preemption instead).
+pub struct FairShare;
+
+impl QueuePolicy for FairShare {
+    fn kind(&self) -> QueuePolicyKind {
+        QueuePolicyKind::FairShare
+    }
+
+    fn order(&self, api: &ApiServer, now: f64, pending: &mut Vec<JobId>) {
+        let usage = api.tenant_usage(now);
+        let deficit = |id: JobId| -> f64 {
+            let tenant = api.jobs[&id].planned.spec.tenant;
+            usage.get(&tenant).copied().unwrap_or(0.0) / api.tenant_weight(tenant)
+        };
+        pending.sort_by(|&a, &b| {
+            deficit(a)
+                .total_cmp(&deficit(b))
+                .then_with(|| {
+                    api.jobs[&b]
+                        .planned
+                        .spec
+                        .priority
+                        .cmp(&api.jobs[&a].planned.spec.priority)
+                })
+                .then_with(|| {
+                    api.jobs[&a].submit_time.total_cmp(&api.jobs[&b].submit_time)
+                })
+                .then(a.cmp(&b))
+        });
+    }
+
+    fn on_gang_failure(&self, _ctx: &QueueContext<'_>, _job: JobId) -> GangDecision {
+        GangDecision::Skip
+    }
+
+    fn may_backfill(&self, _ctx: &QueueContext<'_>, _job: JobId, _shadow: f64) -> bool {
         true
     }
 }
@@ -366,13 +520,27 @@ mod tests {
         assert_eq!(QueuePolicyKind::parse("EASY"), Some(QueuePolicyKind::EasyBackfill));
         assert_eq!(QueuePolicyKind::parse("bf"), Some(QueuePolicyKind::EasyBackfill));
         assert_eq!(QueuePolicyKind::parse("FIFO-STRICT"), Some(QueuePolicyKind::FifoStrict));
+        assert_eq!(
+            QueuePolicyKind::parse("conservative"),
+            Some(QueuePolicyKind::ConservativeBackfill)
+        );
+        assert_eq!(QueuePolicyKind::parse("CBF"), Some(QueuePolicyKind::ConservativeBackfill));
+        assert_eq!(QueuePolicyKind::parse("fair-share"), Some(QueuePolicyKind::FairShare));
+        assert_eq!(QueuePolicyKind::parse("fs"), Some(QueuePolicyKind::FairShare));
         assert_eq!(QueuePolicyKind::parse("nope"), None);
+        // Gang requirement: reserve/block disciplines only.
+        assert!(QueuePolicyKind::FifoStrict.requires_gang());
+        assert!(QueuePolicyKind::EasyBackfill.requires_gang());
+        assert!(QueuePolicyKind::ConservativeBackfill.requires_gang());
+        assert!(!QueuePolicyKind::FairShare.requires_gang());
+        assert!(!QueuePolicyKind::Sjf.requires_gang());
     }
 
     #[test]
     fn sjf_orders_by_estimated_runtime() {
-        // G-RandomRing (320 s) < G-FFT (400 s) < EP-STREAM (480 s) <
-        // EP-DGEMM (600 s) < MiniFE (720 s).
+        // Walltime estimates keep the base-runtime ordering for identical
+        // single-worker shapes: G-RandomRing (320 s base) < G-FFT (400 s) <
+        // EP-STREAM (480 s) < EP-DGEMM (600 s) < MiniFE (720 s).
         let api = api_with_jobs(&[
             Benchmark::MiniFe,
             Benchmark::GRandomRing,
@@ -381,17 +549,82 @@ mod tests {
             Benchmark::EpStream,
         ]);
         let mut pending = api.pending_jobs();
-        Sjf.order(&api, &mut pending);
+        Sjf.order(&api, 0.0, &mut pending);
         let ordered: Vec<u64> = pending.iter().map(|j| j.0).collect();
         assert_eq!(ordered, vec![2, 4, 5, 3, 1]);
+    }
+
+    #[test]
+    fn estimated_runtime_is_perfmodel_walltime_not_base_time() {
+        let api = api_with_jobs(&[Benchmark::EpDgemm]);
+        let est = estimated_runtime(&api, JobId(1));
+        let base = Benchmark::EpDgemm.base_running_secs();
+        // A single 16-task container pays the intra-cgroup scheduling term.
+        assert!(est > base, "est {est} must exceed base {base}");
+        assert!(est < base * 1.3, "est {est} within model range");
     }
 
     #[test]
     fn sjf_ties_break_fifo_then_id() {
         let api = api_with_jobs(&[Benchmark::EpDgemm, Benchmark::EpDgemm, Benchmark::EpDgemm]);
         let mut pending = api.pending_jobs();
-        Sjf.order(&api, &mut pending);
+        Sjf.order(&api, 0.0, &mut pending);
         assert_eq!(pending, api.pending_jobs(), "equal runtimes keep FIFO order");
+    }
+
+    #[test]
+    fn fair_share_orders_by_weighted_deficit_then_priority() {
+        use crate::workload::TenantId;
+        // Jobs 1..4: tenants A, A, B, B (equal shapes). Tenant A has
+        // consumed service; B has not — B's jobs go first.
+        let mut api = ApiServer::new(ClusterSpec::paper(), KubeletConfig::cpu_mem_affinity());
+        let info = SystemInfo { available_nodes: 4 };
+        for (i, (tenant, priority)) in
+            [(TenantId(0), 0u32), (TenantId(0), 5), (TenantId(1), 0), (TenantId(1), 5)]
+                .into_iter()
+                .enumerate()
+        {
+            let spec = JobSpec::paper_job(i as u64 + 1, Benchmark::EpDgemm, i as f64)
+                .with_tenant(tenant, priority);
+            let planned = plan(&spec, GranularityPolicy::None, info);
+            let (pods, hostfile) = VolcanoMpiController.build(&planned, &mut api);
+            api.create_job(planned, pods, hostfile, i as f64);
+        }
+        // Give tenant 0 prior service by running+finishing one of its jobs.
+        let mut sched = crate::scheduler::Scheduler::new(
+            crate::scheduler::SchedulerConfig::volcano_default(1),
+        );
+        let started = sched.cycle(&mut api, 0.0);
+        assert_eq!(started.len(), 4, "idle cluster fits all four");
+        for &j in &started {
+            api.finish_job(j, 100.0);
+        }
+        // Re-submit the same four shapes as jobs 5..8.
+        for (i, (tenant, priority)) in
+            [(TenantId(0), 0u32), (TenantId(0), 5), (TenantId(1), 0), (TenantId(1), 5)]
+                .into_iter()
+                .enumerate()
+        {
+            let spec = JobSpec::paper_job(i as u64 + 5, Benchmark::EpDgemm, 100.0 + i as f64)
+                .with_tenant(tenant, priority);
+            let planned = plan(&spec, GranularityPolicy::None, info);
+            let (pods, hostfile) = VolcanoMpiController.build(&planned, &mut api);
+            api.create_job(planned, pods, hostfile, 100.0 + i as f64);
+        }
+        // Both tenants consumed equally so far; weight tenant 1 higher →
+        // smaller normalized deficit → its jobs first, priority desc within.
+        api.set_tenant_weight(TenantId(1), 4.0);
+        let mut pending = api.pending_jobs();
+        FairShare.order(&api, 100.0, &mut pending);
+        let ordered: Vec<u64> = pending.iter().map(|j| j.0).collect();
+        assert_eq!(ordered, vec![8, 7, 6, 5], "tenant 1 first, priority desc within tenant");
+    }
+
+    #[test]
+    fn conservative_reserves_for_every_blocked_job() {
+        assert!(ConservativeBackfill.reserves_every_job());
+        assert!(!EasyBackfill.reserves_every_job());
+        assert!(ConservativeBackfill.needs_projections());
     }
 
     #[test]
@@ -442,8 +675,8 @@ mod tests {
         let free: Vec<Resources> = api.spec.node_ids().map(|n| api.free_on(n)).collect();
         let projected = BTreeMap::new();
         let ctx = QueueContext { api: &api, now: 0.0, projected_completion: &projected, free: &free };
-        // Shadow at 350 s: the 320 s ring job fits the window, MiniFE (720 s)
-        // does not.
+        // Shadow at 350 s: the ring job (walltime estimate ~333 s) fits the
+        // window, MiniFE (~791 s estimate) does not.
         assert!(EasyBackfill.may_backfill(&ctx, JobId(1), 350.0));
         assert!(!EasyBackfill.may_backfill(&ctx, JobId(2), 350.0));
         // Strict never backfills; FIFO-skip always walks on.

@@ -20,7 +20,7 @@ use crate::perfmodel::{job_slowdown_with, Calibration, ClusterLoads};
 use crate::planner::{plan, GranularityPolicy, SystemInfo};
 use crate::scheduler::{Scheduler, SchedulerConfig};
 use crate::util::Rng;
-use crate::workload::JobSpec;
+use crate::workload::{JobSpec, TenantId};
 
 /// Per-running-job progress state.
 #[derive(Debug, Clone)]
@@ -38,20 +38,28 @@ struct JobProgress {
 pub struct JobRecord {
     pub id: JobId,
     pub benchmark: crate::workload::Benchmark,
+    pub tenant: TenantId,
+    pub priority: u32,
     pub submit_time: f64,
+    /// First time the job started (preempted jobs may restart later).
     pub start_time: f64,
     pub finish_time: f64,
+    /// Total in-service seconds across all stints. For never-preempted
+    /// jobs this equals `finish_time - start_time`; a preempted job's
+    /// suspended gaps count as waiting, not running.
+    pub running_secs: f64,
 }
 
 impl JobRecord {
-    /// `T_i^w`: queue wait.
+    /// `T_i^w`: total queue wait — everything that was not service time
+    /// (initial queueing plus any post-preemption re-queue gaps).
     pub fn wait(&self) -> f64 {
-        self.start_time - self.submit_time
+        self.response() - self.running_secs
     }
 
-    /// `T_i^r`: running time.
+    /// `T_i^r`: in-service running time (summed across stints).
     pub fn running(&self) -> f64 {
-        self.finish_time - self.start_time
+        self.running_secs
     }
 
     /// `T_i = T_i^w + T_i^r`: response time.
@@ -74,6 +82,15 @@ impl SimOutput {
     /// `T = Σ T_i`: overall response time (paper metric).
     pub fn overall_response(&self) -> f64 {
         self.records.iter().map(JobRecord::response).sum()
+    }
+
+    /// Number of preemption events recorded in the run's event log.
+    pub fn preemption_count(&self) -> usize {
+        self.api
+            .events
+            .iter()
+            .filter(|e| matches!(e, crate::apiserver::Event::JobPreempted { .. }))
+            .count()
     }
 
     /// `T_makespan`: time for all jobs to terminate (0 for an empty run).
@@ -112,6 +129,9 @@ pub struct Simulation {
     calib: Calibration,
     rng: Rng,
     progress: BTreeMap<JobId, JobProgress>,
+    /// Checkpointed progress of preempted jobs, restored (plus the
+    /// calibrated restart cost) when the job is re-placed.
+    suspended: BTreeMap<JobId, JobProgress>,
     unschedulable: Vec<JobId>,
     now: f64,
     /// Per-benchmark ideal work override (seconds); defaults to
@@ -138,6 +158,7 @@ impl Simulation {
             calib,
             rng: Rng::seed_from_u64(seed),
             progress: BTreeMap::new(),
+            suspended: BTreeMap::new(),
             unschedulable: Vec::new(),
             now: 0.0,
             base_work: BTreeMap::new(),
@@ -202,8 +223,11 @@ impl Simulation {
 
     /// Run one scheduling session and initialize progress for started
     /// jobs. The scheduler gets the simulator's exact projected completion
-    /// times, which the EASY-backfill queue policy uses for its shadow-time
-    /// reservation.
+    /// times, which the backfill queue policies use for their shadow-time
+    /// reservations. Jobs the scheduler preempted are checkpointed
+    /// (progress preserved) and re-queued; when they are re-placed, they
+    /// resume with the calibrated checkpoint-restart cost added to their
+    /// remaining work.
     fn schedule(&mut self) {
         let projected: BTreeMap<JobId, f64> = self
             .progress
@@ -211,19 +235,38 @@ impl Simulation {
             .map(|(&id, p)| (id, self.now + (p.remaining / p.rate).max(0.0)))
             .collect();
         let started = self.scheduler.cycle_with_projections(&mut self.api, self.now, &projected);
-        if started.is_empty() {
+        let preempted = self.scheduler.take_preempted();
+        for &id in &preempted {
+            let checkpoint =
+                self.progress.remove(&id).expect("preempted job without progress");
+            self.api.requeue_job(id, self.now);
+            self.suspended.insert(id, checkpoint);
+        }
+        if started.is_empty() && preempted.is_empty() {
             return;
         }
         for job_id in started {
             let bench = self.api.jobs[&job_id].planned.spec.benchmark;
-            let noise = self
-                .rng
-                .derive(job_id.0)
-                .lognormal_noise(self.calib.none_variance_sigma);
-            self.progress.insert(
-                job_id,
-                JobProgress { remaining: self.base_work_of(bench), rate: 1.0, noise },
-            );
+            match self.suspended.remove(&job_id) {
+                Some(mut p) => {
+                    // Checkpoint-restart: preserved remaining work plus the
+                    // restore cost for this job's memory image.
+                    let mem = self.api.jobs[&job_id].planned.spec.resources.mem_bytes;
+                    p.remaining += self.calib.restart_cost_secs(mem);
+                    p.rate = 1.0;
+                    self.progress.insert(job_id, p);
+                }
+                None => {
+                    let noise = self
+                        .rng
+                        .derive(job_id.0)
+                        .lognormal_noise(self.calib.none_variance_sigma);
+                    self.progress.insert(
+                        job_id,
+                        JobProgress { remaining: self.base_work_of(bench), rate: 1.0, noise },
+                    );
+                }
+            }
         }
         self.recompute_rates();
     }
@@ -245,11 +288,18 @@ impl Simulation {
                 (Some(a), None) => (a, true),
                 (_, Some((c, _))) => (c, false),
                 (None, None) => {
-                    // Pending jobs but nothing running and no arrivals:
-                    // the leftovers can never fit (the submit-time
-                    // feasibility check should catch this; guard so an
-                    // adversarial trace degrades to failed jobs instead of
-                    // aborting the process).
+                    // Pending jobs but nothing running and no arrivals.
+                    // Give the scheduler one more session first (defensive:
+                    // re-queued preemption victims on an idle cluster must
+                    // get a chance to restart before being declared stuck).
+                    self.schedule();
+                    if !self.progress.is_empty() {
+                        continue;
+                    }
+                    // Nothing can start: the leftovers can never fit (the
+                    // submit-time feasibility check should catch this;
+                    // guard so an adversarial trace degrades to failed
+                    // jobs instead of aborting the process).
                     let stuck = self.api.pending_jobs();
                     if stuck.is_empty() {
                         break;
@@ -303,9 +353,12 @@ impl Simulation {
             .map(|j| JobRecord {
                 id: j.planned.spec.id,
                 benchmark: j.planned.spec.benchmark,
+                tenant: j.planned.spec.tenant,
+                priority: j.planned.spec.priority,
                 submit_time: j.submit_time,
-                start_time: j.start_time.expect("job never started"),
+                start_time: j.first_start_time.expect("job never started"),
                 finish_time: j.finish_time.expect("job never finished"),
+                running_secs: j.served_secs,
             })
             .collect();
         SimOutput { records, unschedulable: self.unschedulable, api: self.api }
@@ -540,6 +593,55 @@ mod tests {
         // 12 × 16 cores > 128-core cluster: at least 4 jobs must wait.
         let waited = out.records.iter().filter(|r| r.wait() > 1.0).count();
         assert!(waited >= 4, "waited={waited}");
+    }
+
+    #[test]
+    fn high_priority_job_preempts_and_victim_restarts_with_cost() {
+        use crate::workload::TenantId;
+        // Fill the cluster with 8 long batch jobs at t=0; a priority-10
+        // job arrives at t=50. With preemption it starts almost
+        // immediately; the evicted victim restarts and pays the
+        // checkpoint-restart cost, and every job still completes.
+        let mk = |preemption: bool| {
+            let cfg = SchedulerConfig::volcano_default(3).with_preemption(preemption);
+            let s = Simulation::new(
+                ClusterSpec::paper(),
+                KubeletConfig::cpu_mem_affinity(),
+                GranularityPolicy::None,
+                Box::new(VolcanoMpiController),
+                cfg,
+                Calibration::default(),
+                3,
+            );
+            let mut trace: Vec<JobSpec> =
+                (1..=8).map(|i| JobSpec::paper_job(i, Benchmark::EpDgemm, 0.0)).collect();
+            trace.push(
+                JobSpec::paper_job(9, Benchmark::EpDgemm, 50.0).with_tenant(TenantId(1), 10),
+            );
+            s.run(&trace)
+        };
+
+        let pre = mk(true);
+        assert_eq!(pre.records.len(), 9, "every job completes");
+        let hi = pre.records.iter().find(|r| r.id == JobId(9)).unwrap();
+        assert!(hi.wait() < 1.0, "high-priority wait {} should be ~0", hi.wait());
+        assert_eq!(pre.preemption_count(), 1, "exactly one victim evicted");
+        // Resources fully returned.
+        for n in pre.api.spec.node_ids() {
+            assert_eq!(pre.api.free_on(n), pre.api.spec.node(n).allocatable());
+        }
+
+        // Without preemption the high-priority job queues behind a full
+        // cluster instead.
+        let base = mk(false);
+        let hi_base = base.records.iter().find(|r| r.id == JobId(9)).unwrap();
+        assert!(hi_base.wait() > 100.0, "baseline wait {}", hi_base.wait());
+        assert!(
+            hi.response() < hi_base.response(),
+            "preemption must cut the high-priority response: {} vs {}",
+            hi.response(),
+            hi_base.response()
+        );
     }
 
     #[test]

@@ -7,4 +7,4 @@ pub mod stats;
 
 pub use json::Json;
 pub use rng::Rng;
-pub use stats::{BenchTimer, Summary};
+pub use stats::{jain_index, BenchTimer, Summary};

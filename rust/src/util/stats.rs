@@ -36,6 +36,22 @@ impl Summary {
     }
 }
 
+/// Jain's fairness index over a set of per-entity allocations:
+/// `(Σx)² / (n · Σx²)`, in (0, 1]; 1.0 means perfectly even. Empty or
+/// all-zero inputs count as perfectly fair (no one is disadvantaged).
+pub fn jain_index(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let sum: f64 = xs.iter().sum();
+    let sum_sq: f64 = xs.iter().map(|x| x * x).sum();
+    if sum_sq == 0.0 {
+        1.0
+    } else {
+        sum * sum / (xs.len() as f64 * sum_sq)
+    }
+}
+
 /// Linear-interpolated percentile over a pre-sorted slice, q in [0, 1].
 pub fn percentile(sorted: &[f64], q: f64) -> f64 {
     assert!(!sorted.is_empty());
@@ -133,6 +149,17 @@ mod tests {
     #[test]
     fn percentile_single_element() {
         assert_eq!(percentile(&[5.0], 0.95), 5.0);
+    }
+
+    #[test]
+    fn jain_index_bounds_and_known_values() {
+        assert_eq!(jain_index(&[]), 1.0);
+        assert_eq!(jain_index(&[0.0, 0.0]), 1.0);
+        assert!((jain_index(&[3.0, 3.0, 3.0]) - 1.0).abs() < 1e-12);
+        // One of three gets everything: index = 1/3.
+        assert!((jain_index(&[9.0, 0.0, 0.0]) - 1.0 / 3.0).abs() < 1e-12);
+        // More even is fairer.
+        assert!(jain_index(&[2.0, 3.0]) > jain_index(&[1.0, 4.0]));
     }
 
     #[test]

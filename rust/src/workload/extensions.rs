@@ -106,6 +106,8 @@ impl ExtBenchmark {
             resources: Resources::new(ntasks as u64 * 1000, ntasks as u64 * gib(2)),
             submit_time,
             default_workers: 1,
+            tenant: super::job::DEFAULT_TENANT,
+            priority: 0,
         }
     }
 }

@@ -9,6 +9,15 @@ use crate::cluster::{gib, JobId, Resources};
 
 use super::benchmark::Benchmark;
 
+/// Tenant (namespace/queue owner) identity for multi-tenant scheduling.
+/// Fair-share weights are registered per tenant on the API server
+/// (`ApiServer::set_tenant_weight`); jobs carry only the id.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TenantId(pub u32);
+
+/// The default (single-submitter) tenant every paper trace uses.
+pub const DEFAULT_TENANT: TenantId = TenantId(0);
+
 /// User-facing job specification.
 #[derive(Debug, Clone)]
 pub struct JobSpec {
@@ -25,6 +34,13 @@ pub struct JobSpec {
     /// User-provided default worker count (used when no granularity policy
     /// is active; the paper's default deployments use a single worker).
     pub default_workers: u32,
+    /// Submitting tenant (multi-tenant queues; the paper's single-submitter
+    /// traces all use [`DEFAULT_TENANT`]).
+    pub tenant: TenantId,
+    /// Scheduling priority (PriorityClass value): higher wins. Under a
+    /// preemption-enabled scheduler, a gang-blocked job may evict running
+    /// jobs of *strictly lower* priority.
+    pub priority: u32,
 }
 
 impl JobSpec {
@@ -40,7 +56,16 @@ impl JobSpec {
             resources: Resources::new(ntasks as u64 * 1000, ntasks as u64 * gib(2)),
             submit_time,
             default_workers: 1,
+            tenant: DEFAULT_TENANT,
+            priority: 0,
         }
+    }
+
+    /// Same job submitted by `tenant` at the given priority.
+    pub fn with_tenant(mut self, tenant: TenantId, priority: u32) -> JobSpec {
+        self.tenant = tenant;
+        self.priority = priority;
+        self
     }
 
     /// Per-task resource share `R / N_t` (Algorithm 2 step 1).
@@ -79,6 +104,16 @@ mod tests {
         assert_eq!(j.resources.cpu_milli, 16_000);
         assert_eq!(j.per_task_resources(), Resources::new(1000, gib(2)));
         assert_eq!(j.default_workers, 1);
+        // Single-submitter default: tenant 0, priority 0.
+        assert_eq!(j.tenant, DEFAULT_TENANT);
+        assert_eq!(j.priority, 0);
+    }
+
+    #[test]
+    fn with_tenant_sets_queue_identity() {
+        let j = JobSpec::paper_job(1, Benchmark::GFft, 0.0).with_tenant(TenantId(3), 7);
+        assert_eq!(j.tenant, TenantId(3));
+        assert_eq!(j.priority, 7);
     }
 
     #[test]

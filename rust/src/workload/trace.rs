@@ -3,7 +3,7 @@
 use crate::util::Rng;
 
 use super::benchmark::{Benchmark, ALL_BENCHMARKS};
-use super::job::JobSpec;
+use super::job::{JobSpec, TenantId};
 
 /// Experiment 1 (§V-C): 10 EP-DGEMM jobs, arrival interval 60 s.
 pub fn exp1_trace() -> Vec<JobSpec> {
@@ -52,6 +52,42 @@ pub fn uniform_trace(n: usize, mean_interval: f64, seed: u64) -> Vec<JobSpec> {
             // Exponential inter-arrival via inverse CDF.
             t += -mean_interval * (1.0 - rng.f64()).ln();
             JobSpec::paper_job(i as u64 + 1, bench, t)
+        })
+        .collect()
+}
+
+/// The batch tenant of the fairness ablation: the bulk submitter,
+/// default priority.
+pub const BATCH_TENANT: TenantId = TenantId(0);
+
+/// The production tenant of the fairness ablation: a minority submitter
+/// whose jobs carry [`PROD_PRIORITY`] and (by convention — weights are
+/// registered on the API server) a larger fair-share weight.
+pub const PROD_TENANT: TenantId = TenantId(1);
+
+/// Priority of the production tenant's jobs (> 0 = may preempt batch jobs
+/// under a preemption-enabled scheduler).
+pub const PROD_PRIORITY: u32 = 10;
+
+/// Share of the two-tenant trace submitted by the production tenant.
+pub const PROD_SHARE: f64 = 0.2;
+
+/// Multi-tenant fairness trace: the shape of [`uniform_trace`], but ~20% of
+/// the jobs belong to a high-priority production tenant and the rest to a
+/// batch tenant. Fully determined by `seed`.
+pub fn two_tenant_trace(n: usize, mean_interval: f64, seed: u64) -> Vec<JobSpec> {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut t = 0.0;
+    (0..n)
+        .map(|i| {
+            let bench = ALL_BENCHMARKS[rng.range_usize(0, ALL_BENCHMARKS.len())];
+            t += -mean_interval * (1.0 - rng.f64()).ln();
+            let spec = JobSpec::paper_job(i as u64 + 1, bench, t);
+            if rng.f64() < PROD_SHARE {
+                spec.with_tenant(PROD_TENANT, PROD_PRIORITY)
+            } else {
+                spec.with_tenant(BATCH_TENANT, 0)
+            }
         })
         .collect()
 }
@@ -117,5 +153,37 @@ mod tests {
         for w in t.windows(2) {
             assert!(w[0].submit_time <= w[1].submit_time);
         }
+    }
+
+    #[test]
+    fn two_tenant_trace_has_both_tenants_with_prod_minority() {
+        let t = two_tenant_trace(200, 60.0, 7);
+        assert_eq!(t.len(), 200);
+        let prod = t.iter().filter(|j| j.tenant == PROD_TENANT).count();
+        let batch = t.iter().filter(|j| j.tenant == BATCH_TENANT).count();
+        assert_eq!(prod + batch, 200);
+        // ~20% prod, with generous slack for the seeded draw.
+        assert!((20..=70).contains(&prod), "prod={prod}");
+        for j in &t {
+            if j.tenant == PROD_TENANT {
+                assert_eq!(j.priority, PROD_PRIORITY);
+            } else {
+                assert_eq!(j.priority, 0);
+            }
+        }
+        for w in t.windows(2) {
+            assert!(w[0].submit_time <= w[1].submit_time);
+        }
+    }
+
+    #[test]
+    fn two_tenant_trace_deterministic_per_seed() {
+        let key = |t: &[JobSpec]| {
+            t.iter()
+                .map(|j| (j.benchmark, j.tenant, j.priority, j.submit_time.to_bits()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(key(&two_tenant_trace(40, 60.0, 5)), key(&two_tenant_trace(40, 60.0, 5)));
+        assert_ne!(key(&two_tenant_trace(40, 60.0, 5)), key(&two_tenant_trace(40, 60.0, 6)));
     }
 }

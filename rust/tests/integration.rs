@@ -115,6 +115,54 @@ fn paper_headline_shape_exp3() {
 }
 
 #[test]
+fn fair_share_with_preemption_improves_high_priority_response() {
+    // Acceptance (ISSUE 3): on the 200-job two-tenant trace, the
+    // fair-share + preemption configuration must strictly improve the
+    // high-priority (prod) tenant's mean response time over FIFO-skip.
+    let rows = experiments::fairness_ablation(
+        DEFAULT_SEED,
+        experiments::FAIRNESS_JOBS,
+        experiments::FAIRNESS_INTERVAL,
+    );
+    let get = |label: &str| rows.iter().find(|r| r.label == label).unwrap();
+    let fifo = get("fifo");
+    let fsp = get("fair_share+preempt");
+    // Every configuration completes the whole trace.
+    for r in &rows {
+        assert_eq!(r.metrics.per_job.len(), experiments::FAIRNESS_JOBS, "{}", r.label);
+    }
+    let prod = kube_fgs::workload::PROD_TENANT;
+    let fifo_prod = fifo.tenant(prod).expect("prod tenant in fifo run").mean_response;
+    let fsp_prod = fsp.tenant(prod).expect("prod tenant in fs+p run").mean_response;
+    assert!(
+        fsp_prod < fifo_prod,
+        "fair_share+preempt prod mean response {fsp_prod} must beat fifo {fifo_prod}"
+    );
+    // Preemption actually fired, and only in the preemption config.
+    assert!(fsp.preemptions > 0, "expected preemptions under fair_share+preempt");
+    assert_eq!(fifo.preemptions, 0);
+}
+
+#[test]
+fn preemptive_runs_conserve_resources_and_complete() {
+    // CM_G_TG_PRE over the two-tenant trace: every job completes despite
+    // evictions + restarts, and all bookkeeping returns to zero.
+    let trace = kube_fgs::workload::two_tenant_trace(60, 60.0, DEFAULT_SEED);
+    let out = experiments::run_scenario(Scenario::parse("CM_G_TG_PRE").unwrap(), &trace, DEFAULT_SEED, None);
+    assert_eq!(out.records.len(), 60);
+    for job in out.api.jobs.values() {
+        assert_eq!(job.phase, JobPhase::Succeeded);
+    }
+    for n in out.api.spec.node_ids() {
+        assert_eq!(out.api.free_on(n), out.api.spec.node(n).allocatable());
+    }
+    for r in &out.records {
+        assert!(r.start_time >= r.submit_time - 1e-9);
+        assert!(r.finish_time > r.start_time);
+    }
+}
+
+#[test]
 fn exp1_trace_queueing_is_visible_in_waits() {
     // 10 jobs, 60 s apart, ~600 s each, 8 slots: later jobs must queue.
     let out = experiments::run_scenario(Scenario::Cm, &exp1_trace(), DEFAULT_SEED, None);

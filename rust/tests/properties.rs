@@ -198,6 +198,56 @@ fn prop_queue_policies_complete_all_jobs() {
     }
 }
 
+/// Property: preemption rollback — across randomized two-tenant traces
+/// under fair-share + priority preemption, preempt → re-place → complete
+/// leaves the bookkeeping identical to a never-preempted run's end state:
+/// every job completes exactly once, all node allocations return to the
+/// full allocatable capacity, and the incrementally maintained
+/// group-placement view equals the full pod-scan rebuild (both empty).
+#[test]
+fn prop_preempt_replace_complete_restores_bookkeeping() {
+    use kube_fgs::scheduler::{QueuePolicyKind, Scheduler};
+    use kube_fgs::workload::{two_tenant_trace, PROD_TENANT};
+    let mut rng = Rng::seed_from_u64(909);
+    for case in 0..10 {
+        let n_jobs = rng.range_usize(8, 30);
+        let interval = rng.range_f64(20.0, 100.0);
+        let seed = rng.next_u64();
+        let trace = two_tenant_trace(n_jobs, interval, seed);
+        let mut sim = Scenario::CmGTg.simulation_configured(
+            ClusterSpec::paper(),
+            seed,
+            QueuePolicyKind::FairShare,
+            true,
+        );
+        sim.api.set_tenant_weight(PROD_TENANT, 3.0);
+        let out = sim.run(&trace);
+        assert_eq!(out.records.len(), n_jobs, "case {case}: every job completes");
+        let mut seen = std::collections::BTreeSet::new();
+        for r in &out.records {
+            assert!(seen.insert(r.id), "case {case}: duplicate record");
+            assert!(r.finish_time > r.start_time, "case {case}");
+            assert!(r.start_time >= r.submit_time - 1e-9, "case {case}");
+        }
+        for n in out.api.spec.node_ids() {
+            assert_eq!(
+                out.api.free_on(n),
+                out.api.spec.node(n).allocatable(),
+                "case {case}: node {n:?} leaked resources after preemption churn"
+            );
+        }
+        assert_eq!(
+            out.api.group_placement(),
+            &Scheduler::rebuild_placement(&out.api),
+            "case {case}: incremental placement drifted from rebuild"
+        );
+        assert!(
+            out.api.group_placement().bound_nodes.is_empty(),
+            "case {case}: placement not empty after completion"
+        );
+    }
+}
+
 /// Property: perf-model monotonicity — a job's slowdown is never below 1,
 /// and network jobs never beat their single-container placement when
 /// scattered.

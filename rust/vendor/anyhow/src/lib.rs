@@ -1,0 +1,183 @@
+//! Minimal, dependency-free `anyhow` stand-in (see Cargo.toml for why).
+//!
+//! API subset implemented — enough for every call site in kube-fgs:
+//! - [`Error`]: an erased error with a context chain. `Display` prints the
+//!   outermost message; the alternate form (`{:#}`) and `Debug` print the
+//!   full `outer: cause: root` chain, matching `anyhow`'s behaviour.
+//! - [`Result<T>`] with `E = Error`, usable with `?` over any
+//!   `std::error::Error` (blanket `From`).
+//! - [`anyhow!`], [`bail!`], [`ensure!`] format-string macros.
+//! - [`Context`]: `.context(..)` / `.with_context(|| ..)` on `Result` and
+//!   `Option`.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Erased error: a chain of messages, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a printable message (what `anyhow!` expands to).
+    pub fn msg(message: impl fmt::Display) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context(mut self, context: impl fmt::Display) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The messages of the chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain.join(": "))
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`; that
+// is what makes the blanket `From` below coherent (same trick as the real
+// `anyhow`).
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow`-style result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to a fallible value.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e: Error = Error::from(io_err()).context("reading config");
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: missing");
+        assert_eq!(format!("{e:?}"), "reading config: missing");
+        assert_eq!(e.root_cause(), "missing");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn fails() -> Result<()> {
+            bail!("bad value {}", 7);
+        }
+        let e = fails().unwrap_err();
+        assert_eq!(format!("{e}"), "bad value 7");
+
+        fn checks(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(x)
+        }
+        assert!(checks(1).is_ok());
+        assert!(checks(-1).is_err());
+        let m = anyhow!("plain {}", "message");
+        assert_eq!(m.to_string(), "plain message");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = std::str::from_utf8(&[0xff])?;
+            Ok(s.to_string())
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("step {}", 2)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "step 2: missing");
+        let o: Option<u32> = None;
+        assert_eq!(o.context("empty").unwrap_err().to_string(), "empty");
+        assert_eq!(Some(5u32).context("never").unwrap(), 5);
+    }
+}
