@@ -28,7 +28,7 @@ fn main() {
     let planned = kube_fgs::planner::plan(
         &job,
         scenario.policy(),
-        kube_fgs::planner::SystemInfo { available_nodes: 4 },
+        kube_fgs::planner::SystemInfo::homogeneous(4),
     );
     println!(
         "planner (Algorithm 1): N_n={} nodes, N_w={} workers, N_g={} groups",

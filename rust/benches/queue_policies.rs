@@ -19,7 +19,7 @@ fn pending_uniform_cluster(n: usize, workers: usize) -> ApiServer {
         ClusterSpec::with_workers(workers),
         KubeletConfig::cpu_mem_affinity(),
     );
-    let info = SystemInfo { available_nodes: workers as u32 };
+    let info = SystemInfo::homogeneous(workers as u32);
     for spec in uniform_trace(n, 60.0, 7) {
         let planned = plan(&spec, GranularityPolicy::Granularity, info);
         let (pods, hostfile) = VolcanoMpiController.build(&planned, &mut api);

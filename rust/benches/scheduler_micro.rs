@@ -23,7 +23,7 @@ fn pending_cluster(n: u64, workers: usize) -> ApiServer {
         ClusterSpec::with_workers(workers),
         KubeletConfig::cpu_mem_affinity(),
     );
-    let info = SystemInfo { available_nodes: workers as u32 };
+    let info = SystemInfo::homogeneous(workers as u32);
     for i in 1..=n {
         let spec = JobSpec::paper_job(i, Benchmark::EpDgemm, 0.0);
         let planned = plan(&spec, GranularityPolicy::Granularity, info);
@@ -85,6 +85,53 @@ fn main() {
                     Scheduler::new(SchedulerConfig::fine_grained(1).with_queue(kind));
                 sched.cycle(&mut api, 0.0);
             });
+    }
+
+    // Rate maintenance over a whole run: the incremental placement-delta
+    // path (contention-set dirty tracking + per-node rebuild) vs forcing
+    // the pre-optimization full rescan on every event. Same seeds, same
+    // trace — the outputs are bit-identical (pinned by a property test);
+    // only the bookkeeping cost differs, and it grows with cluster size.
+    for workers in [16usize, 64] {
+        let jobs = 3 * workers;
+        let interval = 60.0 * 8.0 / workers as f64;
+        let mk = |force: bool| {
+            let cluster = kube_fgs::cluster::ClusterSpec::with_workers(workers);
+            let mut sim = kube_fgs::scenario::Scenario::CmGTg
+                .simulation_on_queue(cluster, 2, kube_fgs::scheduler::QueuePolicyKind::FifoSkip);
+            sim.force_full_recompute = force;
+            sim
+        };
+        let trace = uniform_trace(jobs, interval, 2);
+        BenchTimer::new(&format!("rates/full-rescan-{workers}w-{jobs}j (before)"))
+            .with_iters(1, 5)
+            .run(|| {
+                let out = mk(true).run(&trace);
+                assert_eq!(out.records.len(), jobs);
+            });
+        BenchTimer::new(&format!("rates/incremental-{workers}w-{jobs}j (after)"))
+            .with_iters(1, 5)
+            .run(|| {
+                let out = mk(false).run(&trace);
+                assert_eq!(out.records.len(), jobs);
+            });
+    }
+
+    // Tenant-usage accounting: the maintained O(tenants) ledgers vs the
+    // full job-map recompute the fair-share ordering used to run on every
+    // session.
+    {
+        let sim = kube_fgs::scenario::Scenario::CmGTgFs.simulation(2);
+        let out = sim.run(&kube_fgs::workload::two_tenant_trace(300, 20.0, 2));
+        let api = out.api;
+        BenchTimer::new("tenant-usage/full-scan-300j (before)").with_iters(5, 500).run(|| {
+            let u = api.tenant_usage_reference(1e7);
+            std::hint::black_box(&u);
+        });
+        BenchTimer::new("tenant-usage/ledgers-300j (after)").with_iters(5, 500).run(|| {
+            let u = api.tenant_usage(1e7);
+            std::hint::black_box(&u);
+        });
     }
 
     // Group-placement session view: the old full pod scan (reference,

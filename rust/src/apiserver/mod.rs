@@ -1,9 +1,17 @@
 //! API-server substrate: the typed object store + event log that stands in
 //! for Kubernetes' API server/etcd (DESIGN.md §1).
 //!
-//! Controllers create job/pod objects here, the scheduler binds pods, and
-//! kubelets admit them; every mutation appends to the event log, which the
-//! report module replays to draw the Fig.-7 Gantt chart.
+//! In the paper's multi-layer design this is the shared control-plane
+//! state every other layer converges on: controllers create job/pod
+//! objects here, the scheduler binds pods, kubelets admit them, and the
+//! simulator drives the lifecycle; every mutation appends to the event
+//! log, which the report module replays to draw the Fig.-7 Gantt chart.
+//!
+//! Views the hot paths read every session are maintained incrementally on
+//! the mutation events instead of recomputed from the object store: the
+//! pending queue, the task-group placement ([`ApiServer::group_placement`])
+//! and the per-tenant service ledgers behind [`ApiServer::tenant_usage`] —
+//! each pinned to its full-recompute reference by a property test.
 
 pub mod watch;
 
@@ -101,10 +109,41 @@ pub struct ApiServer {
     /// Fair-share weight per tenant (PriorityClass/ResourceQuota stand-in);
     /// unknown tenants default to weight 1.0.
     tenant_weights: BTreeMap<TenantId, f64>,
-    /// Core-seconds consumed by each tenant's *terminated* (succeeded or
-    /// preempted) runs; running jobs are added live by `tenant_usage`.
-    consumed_service: BTreeMap<TenantId, f64>,
+    /// Maintained per-tenant service accumulators, updated on job
+    /// start/preempt/complete (§Perf: `tenant_usage` was a full job-map
+    /// scan per fair-share ordering; it is now O(tenants)).
+    tenant_service: BTreeMap<TenantId, TenantService>,
     next_pod_id: u64,
+}
+
+/// One tenant's maintained service ledger: core-seconds consumed through
+/// `last_t`, plus the aggregate core rate of its currently running jobs —
+/// enough to answer `tenant_usage(now)` without touching the job map.
+#[derive(Debug, Clone, Copy, Default)]
+struct TenantService {
+    /// Core-seconds of service accumulated up to `last_t`.
+    accum: f64,
+    /// Cores currently in service (sum over the tenant's running jobs).
+    rate_cores: f64,
+    /// Time of the last start/preempt/complete event folded into `accum`.
+    last_t: f64,
+}
+
+impl TenantService {
+    /// Fold the elapsed service since the last event into the
+    /// accumulator. Out-of-order bookkeeping calls (possible through the
+    /// public API, not from the simulator) accrue nothing and must not
+    /// rewind `last_t` — that would double-count the interval on the next
+    /// fold.
+    fn touch(&mut self, now: f64) {
+        self.accum += self.rate_cores * (now - self.last_t).max(0.0);
+        self.last_t = self.last_t.max(now);
+    }
+
+    /// Service consumed as of `now` (without folding).
+    fn at(&self, now: f64) -> f64 {
+        self.accum + self.rate_cores * (now - self.last_t).max(0.0)
+    }
 }
 
 impl ApiServer {
@@ -126,7 +165,7 @@ impl ApiServer {
             pending: Vec::new(),
             placement: GroupPlacement::default(),
             tenant_weights: BTreeMap::new(),
-            consumed_service: BTreeMap::new(),
+            tenant_service: BTreeMap::new(),
             next_pod_id: 0,
         }
     }
@@ -150,28 +189,50 @@ impl ApiServer {
 
     /// Core-seconds of service each tenant has received up to `now`
     /// (terminated runs plus the live elapsed time of running jobs) — the
-    /// deficit counter the fair-share queue orders by.
+    /// deficit counter the fair-share queue orders by. O(tenants): read
+    /// from the maintained ledgers, not the job map (§Perf; the full
+    /// recompute survives as [`ApiServer::tenant_usage_reference`], pinned
+    /// equal by a randomized property test).
     pub fn tenant_usage(&self, now: f64) -> BTreeMap<TenantId, f64> {
-        let mut usage = self.consumed_service.clone();
+        self.tenant_service.iter().map(|(&t, s)| (t, s.at(now))).collect()
+    }
+
+    /// Reference implementation of [`ApiServer::tenant_usage`]: recompute
+    /// every tenant's service from first principles by scanning the whole
+    /// job map (completed stints from `served_secs`, running stints live).
+    pub fn tenant_usage_reference(&self, now: f64) -> BTreeMap<TenantId, f64> {
+        let mut usage: BTreeMap<TenantId, f64> = BTreeMap::new();
         for job in self.jobs.values() {
+            let cores = job.planned.spec.resources.cpu_milli as f64 / 1000.0;
+            let mut service = job.served_secs;
             if job.phase == JobPhase::Running {
-                let cores = job.planned.spec.resources.cpu_milli as f64 / 1000.0;
-                let elapsed = (now - job.start_time.unwrap_or(now)).max(0.0);
-                *usage.entry(job.planned.spec.tenant).or_insert(0.0) += elapsed * cores;
+                service += (now - job.start_time.unwrap_or(now)).max(0.0);
+            }
+            if job.phase == JobPhase::Running || job.served_secs > 0.0 {
+                *usage.entry(job.planned.spec.tenant).or_insert(0.0) += service * cores;
             }
         }
         usage
     }
 
+    /// Fold a tenant's elapsed service into its ledger and adjust the
+    /// in-service core rate by `delta_cores` (positive on start, negative
+    /// on preempt/complete).
+    fn adjust_tenant_rate(&mut self, tenant: TenantId, now: f64, delta_cores: f64) {
+        let ledger = self.tenant_service.entry(tenant).or_default();
+        ledger.touch(now);
+        ledger.rate_cores = (ledger.rate_cores + delta_cores).max(0.0);
+    }
+
     /// Record a finished stint of `job` (started .. now) into the job's
-    /// served-time and the tenant service accumulators.
+    /// served-time and the tenant's service ledger.
     fn account_service(&mut self, job_id: JobId, now: f64) {
         let job = self.jobs.get_mut(&job_id).expect("service of unknown job");
         let cores = job.planned.spec.resources.cpu_milli as f64 / 1000.0;
         let elapsed = (now - job.start_time.expect("service of unstarted job")).max(0.0);
         let tenant = job.planned.spec.tenant;
         job.served_secs += elapsed;
-        *self.consumed_service.entry(tenant).or_insert(0.0) += elapsed * cores;
+        self.adjust_tenant_rate(tenant, now, -cores);
     }
 
     /// Release one bound/running pod's node resources, cpuset grant, and
@@ -274,11 +335,15 @@ impl ApiServer {
             debug_assert_eq!(pod.phase, PodPhase::Bound);
             pod.phase = PodPhase::Running;
         }
+        let job = self.jobs.get_mut(&job_id).unwrap();
         job.phase = JobPhase::Running;
         job.start_time = Some(now);
         if job.first_start_time.is_none() {
             job.first_start_time = Some(now);
         }
+        let tenant = job.planned.spec.tenant;
+        let cores = job.planned.spec.resources.cpu_milli as f64 / 1000.0;
+        self.adjust_tenant_rate(tenant, now, cores);
         self.pending.retain(|&id| id != job_id);
         self.events.push(Event::JobStarted { t: now, job: job_id });
         self.watch.publish(Event::JobStarted { t: now, job: job_id });
@@ -633,6 +698,75 @@ mod tests {
         assert_eq!(api.tenant_weight(crate::workload::TenantId(3)), 1.0);
         api.set_tenant_weight(crate::workload::TenantId(3), 2.5);
         assert_eq!(api.tenant_weight(crate::workload::TenantId(3)), 2.5);
+    }
+
+    /// Property: the maintained tenant-service ledgers equal the
+    /// full-job-map recompute at every step of a randomized multi-tenant
+    /// create → start → preempt/requeue → finish churn (missing entries
+    /// count as zero; tolerance covers the differing fp accumulation
+    /// order).
+    #[test]
+    fn prop_tenant_usage_matches_reference_under_churn() {
+        let close = |a: &BTreeMap<TenantId, f64>, b: &BTreeMap<TenantId, f64>| {
+            let tenants: std::collections::BTreeSet<TenantId> =
+                a.keys().chain(b.keys()).copied().collect();
+            tenants.into_iter().all(|t| {
+                let (x, y) = (
+                    a.get(&t).copied().unwrap_or(0.0),
+                    b.get(&t).copied().unwrap_or(0.0),
+                );
+                (x - y).abs() <= 1e-6 * y.abs().max(1.0)
+            })
+        };
+        for case in 0..10u64 {
+            let mut rng = crate::util::Rng::seed_from_u64(4300 + case);
+            let mut api = api();
+            let mut t = 0.0;
+            let mut next_id = 0u64;
+            for step in 0..120 {
+                t += rng.range_f64(0.0, 10.0);
+                let roll = rng.f64();
+                if roll < 0.4 {
+                    next_id += 1;
+                    let mut pj = planned(next_id);
+                    pj.spec.tenant = TenantId(rng.range_usize(0, 3) as u32);
+                    pj.spec.submit_time = t;
+                    let cores = 1 + rng.range_usize(0, 16) as u64;
+                    let w = make_worker(&mut api, JobId(next_id), 0, cores);
+                    let wid = w.id;
+                    api.create_job(pj, vec![w], vec![], t);
+                    // Start it right away if it fits somewhere.
+                    for node in api.spec.worker_ids() {
+                        if api.free_on(node).cpu_milli >= cores * 1000
+                            && api.bind_pod(wid, node, t)
+                        {
+                            api.start_job(JobId(next_id), t);
+                            break;
+                        }
+                    }
+                } else if roll < 0.6 {
+                    let running = api.running_jobs();
+                    if !running.is_empty() {
+                        let id = running[rng.range_usize(0, running.len())];
+                        api.preempt_job(id, t);
+                        api.requeue_job(id, t);
+                    }
+                } else {
+                    let running = api.running_jobs();
+                    if !running.is_empty() {
+                        let id = running[rng.range_usize(0, running.len())];
+                        api.finish_job(id, t);
+                    }
+                }
+                let probe = t + rng.range_f64(0.0, 50.0);
+                assert!(
+                    close(&api.tenant_usage(probe), &api.tenant_usage_reference(probe)),
+                    "case {case} step {step}: {:?} vs {:?}",
+                    api.tenant_usage(probe),
+                    api.tenant_usage_reference(probe)
+                );
+            }
+        }
     }
 
     #[test]

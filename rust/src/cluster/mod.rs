@@ -9,7 +9,7 @@ pub mod pod;
 pub mod resources;
 pub mod spec;
 
-pub use node::{NodeId, NodeRole, NodeSpec};
+pub use node::{NodeClass, NodeId, NodeRole, NodeSpec};
 pub use pod::{HostfileEntry, JobId, Pod, PodId, PodPhase, PodRole};
 pub use resources::{gib, CpuSet, Resources};
-pub use spec::ClusterSpec;
+pub use spec::{ClusterSpec, HeterogeneityMix, ALL_MIXES};

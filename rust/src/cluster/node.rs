@@ -4,6 +4,13 @@
 //! hyperthreading disabled), 256 GB RAM, 1-GbE. Four cores per node are
 //! reserved for system + Kubernetes components, leaving 32 allocatable
 //! (16 per socket). [`NodeSpec::paper_worker`] encodes exactly that.
+//!
+//! Heterogeneous clusters are described by [`NodeClass`]: a homogeneous
+//! group of worker nodes sharing one hardware shape (socket count, cores,
+//! memory, bandwidths). The scaling sweeps mix *fat* (4-socket, 10-GbE),
+//! *balanced* (the paper shape), and *thin* (1-socket) classes.
+
+use anyhow::{bail, Result};
 
 use super::resources::{gib, CpuSet, Resources};
 
@@ -101,6 +108,139 @@ impl NodeSpec {
     }
 }
 
+/// A homogeneous group of worker nodes sharing one hardware shape — the
+/// unit of cluster heterogeneity. Three presets cover the scaling sweeps:
+/// [`NodeClass::balanced`] (the paper's host), [`NodeClass::fat`]
+/// (4-socket, 512 GiB, 10-GbE), and [`NodeClass::thin`] (1-socket,
+/// 128 GiB, 1-GbE).
+#[derive(Debug, Clone)]
+pub struct NodeClass {
+    pub name: String,
+    /// Number of worker nodes of this class in the cluster.
+    pub count: usize,
+    pub sockets: u32,
+    pub cores_per_socket: u32,
+    /// Cores reserved for system + kube components; must spread evenly
+    /// over the sockets (mirrors `--reserved-cpus`).
+    pub reserved_cores: u32,
+    pub mem_bytes: u64,
+    pub membw_per_socket: f64,
+    pub nic_bw: f64,
+}
+
+impl NodeClass {
+    /// The paper's worker shape: 2 × 18 cores, 4 reserved, 256 GiB, 1-GbE.
+    pub fn balanced(count: usize) -> NodeClass {
+        NodeClass {
+            name: "balanced".to_string(),
+            count,
+            sockets: 2,
+            cores_per_socket: 18,
+            reserved_cores: 4,
+            mem_bytes: gib(256),
+            membw_per_socket: 76.8e9,
+            nic_bw: 125.0e6,
+        }
+    }
+
+    /// A fat node: 4 × 18 cores (64 allocatable), 512 GiB, 10-GbE.
+    pub fn fat(count: usize) -> NodeClass {
+        NodeClass {
+            name: "fat".to_string(),
+            count,
+            sockets: 4,
+            cores_per_socket: 18,
+            reserved_cores: 8,
+            mem_bytes: gib(512),
+            membw_per_socket: 76.8e9,
+            nic_bw: 1.25e9,
+        }
+    }
+
+    /// A thin node: 1 × 18 cores (16 allocatable), 128 GiB, 1-GbE.
+    pub fn thin(count: usize) -> NodeClass {
+        NodeClass {
+            name: "thin".to_string(),
+            count,
+            sockets: 1,
+            cores_per_socket: 18,
+            reserved_cores: 2,
+            mem_bytes: gib(128),
+            membw_per_socket: 76.8e9,
+            nic_bw: 125.0e6,
+        }
+    }
+
+    /// Look up a preset class by name (`balanced` | `fat` | `thin`,
+    /// case-insensitive) — the config-file `cluster.classes[].class` key.
+    pub fn parse(name: &str, count: usize) -> Option<NodeClass> {
+        match name.to_ascii_lowercase().as_str() {
+            "balanced" | "paper" => Some(NodeClass::balanced(count)),
+            "fat" => Some(NodeClass::fat(count)),
+            "thin" => Some(NodeClass::thin(count)),
+            _ => None,
+        }
+    }
+
+    pub fn total_cores(&self) -> u32 {
+        self.sockets * self.cores_per_socket
+    }
+
+    /// Allocatable cores of one node of this class.
+    pub fn allocatable_cores(&self) -> u32 {
+        self.total_cores().saturating_sub(self.reserved_cores)
+    }
+
+    /// Reject degenerate shapes: a class must contribute at least one node
+    /// with schedulable CPU and memory, and its reservation must split
+    /// evenly over the sockets (the CPU-manager free pools assume it).
+    pub fn validate(&self) -> Result<()> {
+        if self.count == 0 {
+            bail!("node class {:?}: count must be >= 1", self.name);
+        }
+        if self.sockets == 0 || self.cores_per_socket == 0 {
+            bail!("node class {:?}: zero-capacity topology", self.name);
+        }
+        if self.reserved_cores >= self.total_cores() {
+            bail!(
+                "node class {:?}: reservation ({}) leaves no allocatable cores",
+                self.name,
+                self.reserved_cores
+            );
+        }
+        if self.reserved_cores % self.sockets != 0 {
+            bail!(
+                "node class {:?}: reserved cores ({}) must split evenly over {} sockets",
+                self.name,
+                self.reserved_cores,
+                self.sockets
+            );
+        }
+        // NodeSpec::allocatable reserves 8 GiB for system/kube.
+        if self.mem_bytes <= gib(8) {
+            bail!("node class {:?}: memory must exceed the 8 GiB reservation", self.name);
+        }
+        if self.membw_per_socket <= 0.0 || self.nic_bw <= 0.0 {
+            bail!("node class {:?}: bandwidths must be positive", self.name);
+        }
+        Ok(())
+    }
+
+    /// Materialize one worker node of this class.
+    pub fn node_spec(&self, name: &str) -> NodeSpec {
+        NodeSpec {
+            name: name.to_string(),
+            role: NodeRole::Worker,
+            sockets: self.sockets,
+            cores_per_socket: self.cores_per_socket,
+            reserved_cores: self.reserved_cores,
+            mem_bytes: self.mem_bytes,
+            membw_per_socket: self.membw_per_socket,
+            nic_bw: self.nic_bw,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -133,6 +273,72 @@ mod tests {
         assert_eq!(n.socket_of(17), 0);
         assert_eq!(n.socket_of(18), 1);
         assert_eq!(n.socket_of(35), 1);
+    }
+
+    #[test]
+    fn node_class_presets_have_expected_capacity() {
+        let fat = NodeClass::fat(2);
+        assert_eq!(fat.allocatable_cores(), 64);
+        assert_eq!(fat.node_spec("f0").allocatable().cpu_milli, 64_000);
+        let thin = NodeClass::thin(2);
+        assert_eq!(thin.allocatable_cores(), 16);
+        assert_eq!(thin.node_spec("t0").sockets, 1);
+        let balanced = NodeClass::balanced(2);
+        assert_eq!(balanced.allocatable_cores(), 32);
+        // The balanced preset is exactly the paper worker.
+        let paper = NodeSpec::paper_worker("b0");
+        let from_class = balanced.node_spec("b0");
+        assert_eq!(from_class.sockets, paper.sockets);
+        assert_eq!(from_class.cores_per_socket, paper.cores_per_socket);
+        assert_eq!(from_class.reserved_cores, paper.reserved_cores);
+        assert_eq!(from_class.mem_bytes, paper.mem_bytes);
+    }
+
+    #[test]
+    fn node_class_parse_round_trips() {
+        for name in ["balanced", "fat", "thin"] {
+            let c = NodeClass::parse(name, 3).unwrap();
+            assert_eq!(c.name, name);
+            assert_eq!(c.count, 3);
+            assert!(c.validate().is_ok());
+        }
+        assert!(NodeClass::parse("FAT", 1).is_some());
+        assert!(NodeClass::parse("gpu", 1).is_none());
+    }
+
+    #[test]
+    fn node_class_validation_rejects_degenerate_shapes() {
+        assert!(NodeClass::fat(0).validate().is_err(), "zero count");
+        let mut zero_cores = NodeClass::thin(1);
+        zero_cores.cores_per_socket = 0;
+        assert!(zero_cores.validate().is_err(), "zero-capacity class");
+        let mut all_reserved = NodeClass::thin(1);
+        all_reserved.reserved_cores = all_reserved.total_cores();
+        assert!(all_reserved.validate().is_err(), "reservation eats everything");
+        let mut uneven = NodeClass::balanced(1);
+        uneven.reserved_cores = 3; // 3 % 2 sockets != 0
+        assert!(uneven.validate().is_err(), "uneven reservation split");
+        let mut tiny_mem = NodeClass::thin(1);
+        tiny_mem.mem_bytes = gib(4);
+        assert!(tiny_mem.validate().is_err(), "memory below the 8 GiB reserve");
+    }
+
+    #[test]
+    fn thin_and_fat_socket_topology_is_consistent() {
+        // 1-socket thin node: all allocatable CPUs in socket 0.
+        let thin = NodeClass::thin(1).node_spec("t");
+        assert_eq!(thin.allocatable_cores(), 16);
+        assert_eq!(thin.allocatable_cpus_of_socket(0).len(), 16);
+        assert_eq!(thin.allocatable_cpus().len(), 16);
+        // 4-socket fat node: 16 allocatable per socket, disjoint.
+        let fat = NodeClass::fat(1).node_spec("f");
+        assert_eq!(fat.allocatable_cores(), 64);
+        for s in 0..4 {
+            assert_eq!(fat.allocatable_cpus_of_socket(s).len(), 16);
+        }
+        assert_eq!(fat.allocatable_cpus().len(), 64);
+        assert_eq!(fat.socket_of(0), 0);
+        assert_eq!(fat.socket_of(71), 3);
     }
 
     #[test]

@@ -1,11 +1,109 @@
-//! Cluster specifications — the testbed builder.
+//! Cluster specifications — the testbed builder, homogeneous or
+//! heterogeneous.
+//!
+//! [`ClusterSpec::paper`] / [`ClusterSpec::with_workers`] build the
+//! paper's homogeneous testbed; [`ClusterSpec::heterogeneous`] builds a
+//! cluster from validated [`NodeClass`] groups, and [`HeterogeneityMix`]
+//! names the preset fat/thin/balanced mixes the scaling sweeps iterate
+//! over.
 
-use super::node::{NodeId, NodeRole, NodeSpec};
+use anyhow::{bail, Result};
+
+use super::node::{NodeClass, NodeId, NodeRole, NodeSpec};
 
 /// Static description of a cluster (the simulator's "hardware").
+///
+/// # Examples
+///
+/// ```
+/// use kube_fgs::cluster::{ClusterSpec, HeterogeneityMix, NodeClass};
+///
+/// // The paper's homogeneous testbed, scaled to 8 workers.
+/// let c = ClusterSpec::with_workers(8);
+/// assert_eq!(c.worker_count(), 8);
+/// assert!(!c.is_heterogeneous());
+///
+/// // A heterogeneous fat/thin mix of the same size: 2 fat (64-core) +
+/// // 6 thin (16-core) workers.
+/// let het = ClusterSpec::mixed(8, HeterogeneityMix::FatThin);
+/// assert_eq!(het.worker_count(), 8);
+/// assert!(het.is_heterogeneous());
+/// assert_eq!(het.min_worker_cores(), 16);
+/// assert_eq!(het.max_worker_cores(), 64);
+///
+/// // Explicit classes are validated: a zero-count class is rejected.
+/// assert!(ClusterSpec::heterogeneous(&[NodeClass::fat(0)]).is_err());
+/// ```
 #[derive(Debug, Clone)]
 pub struct ClusterSpec {
     pub nodes: Vec<NodeSpec>,
+}
+
+/// Preset heterogeneity mixes for the scaling sweeps (`kube-fgs scaling
+/// --mixes ...`, config key `cluster.mix`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum HeterogeneityMix {
+    /// All workers are the paper's balanced shape (the homogeneous
+    /// baseline every earlier experiment ran on).
+    Uniform,
+    /// ~25% fat (64-core, 10-GbE) + ~75% thin (16-core) workers.
+    FatThin,
+    /// ~25% fat + ~50% balanced + ~25% thin workers.
+    Tiered,
+}
+
+/// All mixes, in sweep order.
+pub const ALL_MIXES: [HeterogeneityMix; 3] =
+    [HeterogeneityMix::Uniform, HeterogeneityMix::FatThin, HeterogeneityMix::Tiered];
+
+impl HeterogeneityMix {
+    pub fn name(&self) -> &'static str {
+        match self {
+            HeterogeneityMix::Uniform => "uniform",
+            HeterogeneityMix::FatThin => "fat_thin",
+            HeterogeneityMix::Tiered => "tiered",
+        }
+    }
+
+    /// Parse a CLI/config spelling (case-insensitive, `-` tolerated).
+    pub fn parse(s: &str) -> Option<HeterogeneityMix> {
+        match s.to_ascii_lowercase().replace('-', "_").as_str() {
+            "uniform" | "homogeneous" => Some(HeterogeneityMix::Uniform),
+            "fat_thin" | "fatthin" => Some(HeterogeneityMix::FatThin),
+            "tiered" | "mixed" => Some(HeterogeneityMix::Tiered),
+            _ => None,
+        }
+    }
+
+    /// The node-class composition of this mix at `workers` total worker
+    /// nodes. Small clusters degrade gracefully: every named class gets at
+    /// least one node where the share would round to zero, and classes
+    /// whose share *is* zero are dropped.
+    pub fn classes(&self, workers: usize) -> Vec<NodeClass> {
+        let classes = match self {
+            HeterogeneityMix::Uniform => vec![NodeClass::balanced(workers)],
+            HeterogeneityMix::FatThin => {
+                let fat = (workers / 4).max(1).min(workers);
+                vec![NodeClass::fat(fat), NodeClass::thin(workers - fat)]
+            }
+            HeterogeneityMix::Tiered => {
+                let fat = (workers / 4).max(1).min(workers);
+                let thin = (workers / 4).max(1).min(workers - fat);
+                vec![
+                    NodeClass::fat(fat),
+                    NodeClass::balanced(workers - fat - thin),
+                    NodeClass::thin(thin),
+                ]
+            }
+        };
+        classes.into_iter().filter(|c| c.count > 0).collect()
+    }
+}
+
+impl std::fmt::Display for HeterogeneityMix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
 }
 
 impl ClusterSpec {
@@ -27,6 +125,31 @@ impl ClusterSpec {
             nodes.push(NodeSpec::paper_worker(&format!("node{}", i + 1)));
         }
         ClusterSpec { nodes }
+    }
+
+    /// A heterogeneous cluster: one control-plane node plus each class's
+    /// worker nodes, in class order. Every class is validated
+    /// ([`NodeClass::validate`]); an empty class list is rejected.
+    pub fn heterogeneous(classes: &[NodeClass]) -> Result<ClusterSpec> {
+        if classes.is_empty() {
+            bail!("heterogeneous cluster needs at least one node class");
+        }
+        let mut nodes = vec![NodeSpec::paper_control_plane("master")];
+        for class in classes {
+            class.validate()?;
+            for i in 0..class.count {
+                nodes.push(class.node_spec(&format!("{}-{}", class.name, i + 1)));
+            }
+        }
+        Ok(ClusterSpec { nodes })
+    }
+
+    /// A preset heterogeneity mix at `workers` total worker nodes (the
+    /// scaling-sweep axis). Panics on `workers == 0`; callers validate.
+    pub fn mixed(workers: usize, mix: HeterogeneityMix) -> ClusterSpec {
+        assert!(workers > 0, "cluster needs at least one worker");
+        ClusterSpec::heterogeneous(&mix.classes(workers))
+            .expect("preset mixes always validate")
     }
 
     pub fn node(&self, id: NodeId) -> &NodeSpec {
@@ -52,6 +175,50 @@ impl ClusterSpec {
     pub fn worker_count(&self) -> usize {
         self.worker_ids().len()
     }
+
+    /// True when the worker nodes are not all the same shape (the planner
+    /// and scheduler enable class-aware decisions on such clusters).
+    pub fn is_heterogeneous(&self) -> bool {
+        let mut cores = self
+            .nodes
+            .iter()
+            .filter(|n| n.role == NodeRole::Worker)
+            .map(NodeSpec::allocatable_cores);
+        match cores.next() {
+            Some(first) => cores.any(|c| c != first),
+            None => false,
+        }
+    }
+
+    /// Allocatable cores of the *smallest* worker class — the planner
+    /// sizes workers to fit it so thin nodes stay usable.
+    pub fn min_worker_cores(&self) -> u32 {
+        self.nodes
+            .iter()
+            .filter(|n| n.role == NodeRole::Worker)
+            .map(NodeSpec::allocatable_cores)
+            .min()
+            .unwrap_or(0)
+    }
+
+    /// Allocatable cores of the *largest* worker class.
+    pub fn max_worker_cores(&self) -> u32 {
+        self.nodes
+            .iter()
+            .filter(|n| n.role == NodeRole::Worker)
+            .map(NodeSpec::allocatable_cores)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Total allocatable worker cores (the utilization denominator).
+    pub fn total_worker_cores(&self) -> u64 {
+        self.nodes
+            .iter()
+            .filter(|n| n.role == NodeRole::Worker)
+            .map(|n| n.allocatable_cores() as u64)
+            .sum()
+    }
 }
 
 #[cfg(test)]
@@ -72,6 +239,8 @@ mod tests {
             .map(|&id| c.node(id).allocatable().cpu_milli)
             .sum();
         assert_eq!(total, 128_000);
+        assert!(!c.is_heterogeneous());
+        assert_eq!(c.total_worker_cores(), 128);
     }
 
     #[test]
@@ -79,5 +248,49 @@ mod tests {
         let c = ClusterSpec::with_workers(8);
         assert_eq!(c.worker_count(), 8);
         assert_eq!(c.nodes.len(), 9);
+    }
+
+    #[test]
+    fn heterogeneous_builds_and_validates() {
+        let c = ClusterSpec::heterogeneous(&[NodeClass::fat(2), NodeClass::thin(6)]).unwrap();
+        assert_eq!(c.worker_count(), 8);
+        assert!(c.is_heterogeneous());
+        assert_eq!(c.min_worker_cores(), 16);
+        assert_eq!(c.max_worker_cores(), 64);
+        assert_eq!(c.total_worker_cores(), 2 * 64 + 6 * 16);
+        // Node names carry their class.
+        assert!(c.node(NodeId(1)).name.starts_with("fat-"));
+        assert!(c.node(NodeId(3)).name.starts_with("thin-"));
+        // Rejections: empty list, zero-count class, zero-capacity class.
+        assert!(ClusterSpec::heterogeneous(&[]).is_err());
+        assert!(ClusterSpec::heterogeneous(&[NodeClass::thin(0)]).is_err());
+        let mut bad = NodeClass::balanced(2);
+        bad.reserved_cores = bad.total_cores();
+        assert!(ClusterSpec::heterogeneous(&[bad]).is_err());
+    }
+
+    #[test]
+    fn mixes_cover_requested_worker_count() {
+        for mix in ALL_MIXES {
+            for workers in [1usize, 2, 3, 4, 8, 16, 33, 128] {
+                let c = ClusterSpec::mixed(workers, mix);
+                assert_eq!(c.worker_count(), workers, "{mix} at {workers}");
+                let total: usize = mix.classes(workers).iter().map(|cl| cl.count).sum();
+                assert_eq!(total, workers, "{mix} at {workers}");
+            }
+        }
+        assert!(!ClusterSpec::mixed(8, HeterogeneityMix::Uniform).is_heterogeneous());
+        assert!(ClusterSpec::mixed(8, HeterogeneityMix::FatThin).is_heterogeneous());
+        assert!(ClusterSpec::mixed(8, HeterogeneityMix::Tiered).is_heterogeneous());
+    }
+
+    #[test]
+    fn mix_names_round_trip() {
+        for mix in ALL_MIXES {
+            assert_eq!(HeterogeneityMix::parse(mix.name()), Some(mix));
+        }
+        assert_eq!(HeterogeneityMix::parse("FAT-THIN"), Some(HeterogeneityMix::FatThin));
+        assert_eq!(HeterogeneityMix::parse("homogeneous"), Some(HeterogeneityMix::Uniform));
+        assert_eq!(HeterogeneityMix::parse("nope"), None);
     }
 }

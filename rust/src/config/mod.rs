@@ -15,10 +15,16 @@
 //!   "output": { "gantt": true, "csv": false }
 //! }
 //! ```
+//!
+//! Cluster shape: `cluster.mix` picks a preset heterogeneity mix
+//! (`uniform | fat_thin | tiered`) at `worker_nodes` size, or
+//! `cluster.classes` lists explicit `{"class": "fat"|"balanced"|"thin",
+//! "count": N}` groups (mutually exclusive with `mix`; when
+//! `worker_nodes` is also given it must equal the classes' total).
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::cluster::ClusterSpec;
+use crate::cluster::{ClusterSpec, HeterogeneityMix, NodeClass};
 use crate::perfmodel::Calibration;
 use crate::scenario::Scenario;
 use crate::scheduler::QueuePolicyKind;
@@ -43,6 +49,12 @@ pub struct ExperimentConfig {
     /// the run (unlisted tenants weigh 1.0).
     pub tenants: Vec<(TenantId, f64)>,
     pub worker_nodes: usize,
+    /// Preset heterogeneity mix (`cluster.mix`); `None` keeps the paper's
+    /// homogeneous workers. Mutually exclusive with `classes`.
+    pub mix: Option<HeterogeneityMix>,
+    /// Explicit node classes (`cluster.classes`: `[{"class": "fat",
+    /// "count": 2}, ...]`); empty keeps the mix/homogeneous shape.
+    pub classes: Vec<NodeClass>,
     pub trace: TraceConfig,
     pub gantt: bool,
     pub csv: bool,
@@ -119,13 +131,61 @@ impl ExperimentConfig {
             }
             other => bail!("config: \"tenants\" must be an array, got {other:?}"),
         }
-        let worker_nodes = json
-            .get("cluster")
-            .get("worker_nodes")
-            .as_u64()
-            .unwrap_or(4) as usize;
+        let explicit_workers = json.get("cluster").get("worker_nodes").as_u64();
+        let worker_nodes = explicit_workers.unwrap_or(4) as usize;
         if worker_nodes == 0 {
             bail!("config: cluster.worker_nodes must be >= 1");
+        }
+        let mix = match json.get("cluster").get("mix").as_str() {
+            Some(m) => Some(HeterogeneityMix::parse(m).ok_or_else(|| {
+                anyhow!("config: unknown cluster.mix {m:?} (uniform | fat_thin | tiered)")
+            })?),
+            None => None,
+        };
+        let mut classes = Vec::new();
+        match json.get("cluster").get("classes") {
+            Json::Null => {}
+            Json::Arr(entries) => {
+                for e in entries {
+                    let name = e.get("class").as_str().ok_or_else(|| {
+                        anyhow!("config: cluster.classes[].class must be a string")
+                    })?;
+                    let count = e.get("count").as_u64().ok_or_else(|| {
+                        anyhow!("config: cluster.classes[].count must be an integer")
+                    })? as usize;
+                    let class = NodeClass::parse(name, count).ok_or_else(|| {
+                        anyhow!(
+                            "config: unknown node class {name:?} (balanced | fat | thin)"
+                        )
+                    })?;
+                    classes.push(class);
+                }
+                // An explicit empty array means "no classes" — keep the
+                // mix/homogeneous shape, as the field docs promise.
+                if !classes.is_empty() {
+                    if mix.is_some() {
+                        bail!(
+                            "config: cluster.mix and cluster.classes are mutually exclusive"
+                        );
+                    }
+                    // Validate the shape now so `cluster()` cannot fail
+                    // later.
+                    let spec = ClusterSpec::heterogeneous(&classes)
+                        .map_err(|e| anyhow!("config: {e}"))?;
+                    // Class-count mismatch: an explicit worker_nodes must
+                    // agree with the classes' total.
+                    if let Some(expected) = explicit_workers {
+                        if spec.worker_count() != expected as usize {
+                            bail!(
+                                "config: cluster.classes total {} nodes but cluster.worker_nodes is {}",
+                                spec.worker_count(),
+                                expected
+                            );
+                        }
+                    }
+                }
+            }
+            other => bail!("config: \"cluster.classes\" must be an array, got {other:?}"),
         }
 
         let trace = match json.get("trace").get("kind").as_str().unwrap_or("exp2") {
@@ -157,6 +217,8 @@ impl ExperimentConfig {
             preemption,
             tenants,
             worker_nodes,
+            mix,
+            classes,
             trace,
             gantt: matches!(json.get("output").get("gantt"), crate::util::Json::Bool(true)),
             csv: matches!(json.get("output").get("csv"), crate::util::Json::Bool(true)),
@@ -170,7 +232,18 @@ impl ExperimentConfig {
     }
 
     pub fn cluster(&self) -> ClusterSpec {
-        ClusterSpec::with_workers(self.worker_nodes)
+        if !self.classes.is_empty() {
+            return ClusterSpec::heterogeneous(&self.classes)
+                .expect("classes validated at parse time");
+        }
+        match self.mix {
+            // `Uniform` goes through the same constructor as the paper
+            // clusters so homogeneous configs stay bit-identical.
+            Some(HeterogeneityMix::Uniform) | None => {
+                ClusterSpec::with_workers(self.worker_nodes)
+            }
+            Some(mix) => ClusterSpec::mixed(self.worker_nodes, mix),
+        }
     }
 
     pub fn build_trace(&self) -> Vec<JobSpec> {
@@ -277,6 +350,84 @@ mod tests {
             r#"{"scenario":"CM","cluster":{"worker_nodes":0}}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn cluster_shape_keys_parse_and_validate() {
+        // Preset mix at a size.
+        let c = ExperimentConfig::parse(
+            r#"{"scenario":"CM_G_TG","cluster":{"worker_nodes":8,"mix":"fat_thin"}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.mix, Some(HeterogeneityMix::FatThin));
+        let spec = c.cluster();
+        assert_eq!(spec.worker_count(), 8);
+        assert!(spec.is_heterogeneous());
+        // Uniform mix keeps the paper's homogeneous builder.
+        let u = ExperimentConfig::parse(
+            r#"{"scenario":"CM","cluster":{"worker_nodes":4,"mix":"uniform"}}"#,
+        )
+        .unwrap();
+        assert!(!u.cluster().is_heterogeneous());
+        assert_eq!(u.cluster().node(crate::cluster::NodeId(1)).name, "node1");
+        // Explicit classes.
+        let e = ExperimentConfig::parse(
+            r#"{"scenario":"CM","cluster":{"classes":[
+                {"class":"fat","count":1},{"class":"thin","count":3}]}}"#,
+        )
+        .unwrap();
+        assert_eq!(e.cluster().worker_count(), 4);
+        assert_eq!(e.cluster().max_worker_cores(), 64);
+        // worker_nodes must agree with the classes' total when given.
+        assert!(ExperimentConfig::parse(
+            r#"{"scenario":"CM","cluster":{"worker_nodes":8,"classes":[
+                {"class":"fat","count":1},{"class":"thin","count":3}]}}"#,
+        )
+        .is_err());
+        // mix and classes are mutually exclusive.
+        assert!(ExperimentConfig::parse(
+            r#"{"scenario":"CM","cluster":{"mix":"tiered","classes":[
+                {"class":"fat","count":1}]}}"#,
+        )
+        .is_err());
+        // Unknown names and degenerate shapes are rejected.
+        assert!(ExperimentConfig::parse(
+            r#"{"scenario":"CM","cluster":{"mix":"lopsided"}}"#
+        )
+        .is_err());
+        assert!(ExperimentConfig::parse(
+            r#"{"scenario":"CM","cluster":{"classes":[{"class":"gpu","count":2}]}}"#
+        )
+        .is_err());
+        assert!(ExperimentConfig::parse(
+            r#"{"scenario":"CM","cluster":{"classes":[{"class":"fat","count":0}]}}"#
+        )
+        .is_err());
+        // An explicit empty array means "no classes": the homogeneous (or
+        // mix) shape applies, even alongside a mix.
+        let empty = ExperimentConfig::parse(
+            r#"{"scenario":"CM","cluster":{"worker_nodes":4,"classes":[]}}"#,
+        )
+        .unwrap();
+        assert!(!empty.cluster().is_heterogeneous());
+        assert!(ExperimentConfig::parse(
+            r#"{"scenario":"CM","cluster":{"mix":"fat_thin","classes":[]}}"#
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn heterogeneous_config_runs_end_to_end() {
+        let c = ExperimentConfig::parse(
+            r#"{
+              "scenario": "CM_G_TG",
+              "cluster": { "worker_nodes": 6, "mix": "tiered" },
+              "trace": { "kind": "uniform", "jobs": 5, "mean_interval": 20 }
+            }"#,
+        )
+        .unwrap();
+        let out = c.build_simulation().run(&c.build_trace());
+        assert_eq!(out.records.len(), 5);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::cluster::ClusterSpec;
+use crate::cluster::{ClusterSpec, HeterogeneityMix};
 use crate::metrics::ExperimentMetrics;
 use crate::report;
 use crate::scenario::{Scenario, EXP3_SCENARIOS, TABLE2_SCENARIOS};
@@ -139,6 +139,190 @@ pub fn queue_json(seed: u64, jobs: usize, mean_interval: f64, results: &[(QueueP
             m.makespan,
             m.avg_wait,
             if i + 1 < results.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+// ---------------------------------------------------------------------
+// Scaling sweep — queue-policy matrix across cluster sizes and
+// heterogeneity mixes (the cluster-shape axis of the scenario matrix).
+// ---------------------------------------------------------------------
+
+/// Default sweep shape: per-worker job pressure is held constant (jobs
+/// scale with the cluster, arrivals speed up proportionally), so the
+/// curves isolate how each queue discipline *scales* rather than how the
+/// offered load changes.
+pub const SCALING_JOBS_PER_WORKER: usize = 4;
+pub const SCALING_BASE_INTERVAL: f64 = 60.0;
+/// Worker count at which the base interval applies (the queue ablation's
+/// 8-worker cluster).
+pub const SCALING_BASE_WORKERS: f64 = 8.0;
+/// Default cluster sizes of the sweep (8 → 32; pass `--sizes` up to 128).
+pub const SCALING_DEFAULT_SIZES: [usize; 3] = [8, 16, 32];
+/// Default heterogeneity mixes of the sweep.
+pub const SCALING_DEFAULT_MIXES: [HeterogeneityMix; 2] =
+    [HeterogeneityMix::Uniform, HeterogeneityMix::FatThin];
+
+/// One point of the scaling sweep: a queue policy on a cluster shape.
+#[derive(Debug, Clone)]
+pub struct ScalingPoint {
+    pub mix: HeterogeneityMix,
+    pub workers: usize,
+    pub queue: QueuePolicyKind,
+    pub jobs: usize,
+    pub metrics: ExperimentMetrics,
+    /// Core-seconds served over (makespan × total worker cores), in
+    /// `[0, 1]`.
+    pub utilization: f64,
+    pub unschedulable: usize,
+}
+
+/// Fraction of the cluster's worker-core capacity kept busy over the
+/// run's makespan (requested cores × in-service seconds, summed over the
+/// completed jobs).
+pub fn cluster_utilization(out: &SimOutput) -> f64 {
+    let total_cores = out.api.spec.total_worker_cores() as f64;
+    let makespan = out.makespan();
+    if out.records.is_empty() || total_cores <= 0.0 || makespan <= 0.0 {
+        return 0.0;
+    }
+    let core_secs: f64 = out
+        .records
+        .iter()
+        .map(|r| {
+            let cores = out.api.jobs[&r.id].planned.spec.resources.cpu_milli as f64 / 1000.0;
+            cores * r.running_secs
+        })
+        .sum();
+    (core_secs / (makespan * total_cores)).min(1.0)
+}
+
+/// Run the queue-policy matrix across cluster sizes and heterogeneity
+/// mixes on the CM_G_TG placement configuration. Per point: `workers ×
+/// jobs_per_worker` jobs with the mean inter-arrival shrunk by
+/// `workers / 8` so per-worker pressure is constant across sizes.
+pub fn scaling_sweep(
+    seed: u64,
+    sizes: &[usize],
+    mixes: &[HeterogeneityMix],
+    policies: &[QueuePolicyKind],
+    jobs_per_worker: usize,
+    base_interval: f64,
+) -> Vec<ScalingPoint> {
+    let mut points = Vec::new();
+    for &mix in mixes {
+        for &workers in sizes {
+            let jobs = jobs_per_worker * workers;
+            let interval = base_interval * SCALING_BASE_WORKERS / workers as f64;
+            let trace = uniform_trace(jobs, interval, seed);
+            for &queue in policies {
+                let cluster = ClusterSpec::mixed(workers, mix);
+                let out =
+                    Scenario::CmGTg.simulation_on_queue(cluster, seed, queue).run(&trace);
+                points.push(ScalingPoint {
+                    mix,
+                    workers,
+                    queue,
+                    jobs,
+                    utilization: cluster_utilization(&out),
+                    unschedulable: out.unschedulable.len(),
+                    metrics: ExperimentMetrics::from(&out),
+                });
+            }
+        }
+    }
+    points
+}
+
+/// Scaling-sweep text table.
+pub fn scaling_table(points: &[ScalingPoint]) -> String {
+    let rows = points
+        .iter()
+        .map(|p| {
+            vec![
+                p.mix.name().to_string(),
+                p.workers.to_string(),
+                p.queue.name().to_string(),
+                p.jobs.to_string(),
+                format!("{:.0}", p.metrics.overall_response),
+                format!("{:.0}", p.metrics.makespan),
+                format!("{:.0}", p.metrics.avg_wait),
+                format!("{:.3}", p.utilization),
+            ]
+        })
+        .collect::<Vec<_>>();
+    report::table(
+        &[
+            "mix",
+            "workers",
+            "queue policy",
+            "jobs",
+            "overall response (s)",
+            "makespan (s)",
+            "avg wait (s)",
+            "utilization",
+        ],
+        &rows,
+    )
+}
+
+/// Scaling-sweep CSV (the CI artifact next to the SVG curves).
+pub fn scaling_csv(points: &[ScalingPoint]) -> String {
+    let rows: Vec<Vec<String>> = points
+        .iter()
+        .map(|p| {
+            vec![
+                p.mix.name().to_string(),
+                p.workers.to_string(),
+                p.queue.name().to_string(),
+                p.jobs.to_string(),
+                format!("{:.3}", p.metrics.overall_response),
+                format!("{:.3}", p.metrics.makespan),
+                format!("{:.3}", p.metrics.avg_wait),
+                format!("{:.4}", p.utilization),
+                p.unschedulable.to_string(),
+            ]
+        })
+        .collect();
+    report::csv(
+        &[
+            "mix",
+            "workers",
+            "queue_policy",
+            "jobs",
+            "overall_response_s",
+            "makespan_s",
+            "avg_wait_s",
+            "utilization",
+            "unschedulable",
+        ],
+        &rows,
+    )
+}
+
+/// Scaling-sweep results as a JSON document (CI artifact; hand-rendered —
+/// the substrate has no serde).
+pub fn scaling_json(seed: u64, jobs_per_worker: usize, base_interval: f64, points: &[ScalingPoint]) -> String {
+    let mut out = String::from("{\n");
+    out.push_str(&format!(
+        "  \"ablation\": \"scaling\", \"seed\": {seed}, \"jobs_per_worker\": {jobs_per_worker}, \"base_interval_s\": {base_interval},\n"
+    ));
+    out.push_str("  \"points\": [\n");
+    for (i, p) in points.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"mix\": \"{}\", \"workers\": {}, \"policy\": \"{}\", \"jobs\": {}, \"overall_response_s\": {:.3}, \"makespan_s\": {:.3}, \"avg_wait_s\": {:.3}, \"utilization\": {:.4}, \"unschedulable\": {}}}{}\n",
+            p.mix.name(),
+            p.workers,
+            p.queue.name(),
+            p.jobs,
+            p.metrics.overall_response,
+            p.metrics.makespan,
+            p.metrics.avg_wait,
+            p.utilization,
+            p.unschedulable,
+            if i + 1 < points.len() { "," } else { "" },
         ));
     }
     out.push_str("  ]\n}\n");
@@ -570,6 +754,51 @@ mod tests {
         // Both documents must parse with the crate's own JSON substrate.
         assert!(crate::util::Json::parse(&json).is_ok(), "fairness json invalid");
         assert!(crate::util::Json::parse(&qjson).is_ok(), "queues json invalid");
+    }
+
+    #[test]
+    fn scaling_sweep_shape_and_renderers() {
+        // Small sweep: 3 sizes × 2 mixes × 2 policies — the acceptance
+        // matrix shape (the CLI defaults run it at 8→32 workers); pins
+        // point shape, utilization bounds, and that every renderer agrees.
+        let sizes = [2usize, 4, 8];
+        let mixes = [HeterogeneityMix::Uniform, HeterogeneityMix::FatThin];
+        let policies = [QueuePolicyKind::FifoSkip, QueuePolicyKind::EasyBackfill];
+        let points = scaling_sweep(DEFAULT_SEED, &sizes, &mixes, &policies, 2, 30.0);
+        assert_eq!(points.len(), sizes.len() * mixes.len() * policies.len());
+        for p in &points {
+            assert_eq!(p.jobs, 2 * p.workers);
+            assert_eq!(
+                p.metrics.per_job.len() + p.unschedulable,
+                p.jobs,
+                "{} {} {}: every job accounted for",
+                p.mix,
+                p.workers,
+                p.queue
+            );
+            assert!(
+                p.utilization > 0.0 && p.utilization <= 1.0,
+                "{} {} {}: utilization {}",
+                p.mix,
+                p.workers,
+                p.queue,
+                p.utilization
+            );
+        }
+        // Same policy, same mix, more workers at constant per-worker
+        // pressure: the sweep must produce a point for each size.
+        let uniform_fifo: Vec<&ScalingPoint> = points
+            .iter()
+            .filter(|p| p.mix == HeterogeneityMix::Uniform && p.queue == QueuePolicyKind::FifoSkip)
+            .collect();
+        assert_eq!(uniform_fifo.len(), sizes.len());
+        let table = scaling_table(&points);
+        assert!(table.contains("fat_thin") && table.contains("utilization"));
+        let csv = scaling_csv(&points);
+        assert!(csv.lines().count() == points.len() + 1, "csv rows");
+        let json = scaling_json(DEFAULT_SEED, 2, 30.0, &points);
+        assert!(json.contains("\"ablation\": \"scaling\""));
+        assert!(crate::util::Json::parse(&json).is_ok(), "scaling json invalid");
     }
 
     #[test]

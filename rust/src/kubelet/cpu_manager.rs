@@ -216,6 +216,38 @@ mod tests {
     }
 
     #[test]
+    fn thin_single_socket_class_never_spans_numa() {
+        // 1-socket thin nodes: every exclusive allocation is single-NUMA
+        // by construction, and capacity is the class's 16 cores.
+        let spec = crate::cluster::NodeClass::thin(1).node_spec("t");
+        let mut st = CpuManagerState::new(&spec, CpuManagerPolicy::Static, TopologyPolicy::BestEffort);
+        assert_eq!(st.free_total(), 16);
+        let a = st.allocate(10).unwrap();
+        assert!(!a.spans_numa());
+        let b = st.allocate(6).unwrap();
+        assert!(!b.spans_numa());
+        assert!(st.allocate(1).is_none(), "class capacity enforced");
+    }
+
+    #[test]
+    fn fat_four_socket_class_prefers_single_socket_and_spills() {
+        // 4-socket fat nodes: 16 allocatable per socket; a 16-core pod
+        // packs one socket, a 20-core pod must span.
+        let spec = crate::cluster::NodeClass::fat(1).node_spec("f");
+        let mut st = CpuManagerState::new(&spec, CpuManagerPolicy::Static, TopologyPolicy::BestEffort);
+        assert_eq!(st.free_total(), 64);
+        let a = st.allocate(16).unwrap();
+        assert!(!a.spans_numa());
+        let big = st.allocate(20).unwrap();
+        assert!(big.spans_numa());
+        assert_eq!(big.cpuset().unwrap().len(), 20);
+        // Remaining capacity still admits single-socket pods.
+        let c = st.allocate(12).unwrap();
+        assert!(!c.spans_numa());
+        assert_eq!(st.free_total(), 64 - 16 - 20 - 12);
+    }
+
+    #[test]
     fn allocate_fails_when_exhausted() {
         let (_, mut st) = state(CpuManagerPolicy::Static, TopologyPolicy::BestEffort);
         assert!(st.allocate(32).is_some());

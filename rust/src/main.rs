@@ -8,6 +8,8 @@
 //!   run --scenario S [--jobs N]  one scenario on a uniform trace
 //!   queues [--jobs N]            queue-policy ablation (FIFO / strict /
 //!                                SJF / EASY / conservative / fair-share)
+//!   scaling [--sizes ...]        queue-policy × cluster-size scaling
+//!                                curves across heterogeneity mixes
 //!   fairness [--jobs N]          multi-tenant fairness ablation on a
 //!                                two-tenant trace (priority + preemption)
 //!   e2e [--steps N]              end-to-end: PJRT payload execution feeds
@@ -28,6 +30,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
 
+use kube_fgs::cluster::HeterogeneityMix;
 use kube_fgs::experiments::{self, DEFAULT_SEED};
 use kube_fgs::metrics::ExperimentMetrics;
 use kube_fgs::report;
@@ -107,6 +110,14 @@ COMMANDS:
   queues [--jobs N] [--interval S] [--seed N] [--json PATH]
                         queue-policy ablation table on CM_G_TG placement
                         (default: 200 jobs, 60 s mean interval)
+  scaling [--sizes 8,16,32] [--mixes uniform,fat_thin] [--policies LIST]
+          [--jobs-per-worker N] [--interval S] [--seed N] [--out DIR]
+          [--json PATH]
+                        queue-policy x cluster-size scaling sweep across
+                        heterogeneity mixes (uniform | fat_thin | tiered);
+                        per-worker pressure is held constant across sizes.
+                        --out writes scaling_sweep.csv + per-mix SVG
+                        response/makespan/utilization curves
   fairness [--jobs N] [--interval S] [--seed N] [--json PATH]
                         multi-tenant fairness ablation: FIFO vs fair-share
                         (+preemption) vs conservative backfill on a
@@ -161,6 +172,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "exp3" => cmd_exp3(args),
         "run" => cmd_run(args),
         "queues" => cmd_queues(args),
+        "scaling" => cmd_scaling(args),
         "fairness" => cmd_fairness(args),
         "e2e" => cmd_e2e(args),
         "figures" => cmd_figures(args),
@@ -326,6 +338,90 @@ fn cmd_queues(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_scaling(args: &Args) -> Result<()> {
+    let seed = args.seed();
+    let sizes: Vec<usize> = match args.flags.get("sizes") {
+        Some(s) => s
+            .split(',')
+            .map(|x| {
+                x.trim()
+                    .parse::<usize>()
+                    .ok()
+                    .filter(|&n| n > 0)
+                    .ok_or_else(|| anyhow!("bad --sizes entry {x:?} (positive integers)"))
+            })
+            .collect::<Result<_>>()?,
+        None => kube_fgs::experiments::SCALING_DEFAULT_SIZES.to_vec(),
+    };
+    let mixes: Vec<HeterogeneityMix> = match args.flags.get("mixes") {
+        Some(s) => s
+            .split(',')
+            .map(|x| {
+                HeterogeneityMix::parse(x.trim()).ok_or_else(|| {
+                    anyhow!("unknown mix {x:?} (uniform | fat_thin | tiered)")
+                })
+            })
+            .collect::<Result<_>>()?,
+        None => kube_fgs::experiments::SCALING_DEFAULT_MIXES.to_vec(),
+    };
+    let policies: Vec<QueuePolicyKind> = match args.flags.get("policies") {
+        Some(s) => s
+            .split(',')
+            .map(|x| {
+                QueuePolicyKind::parse(x.trim())
+                    .ok_or_else(|| anyhow!("unknown queue policy {x:?}"))
+            })
+            .collect::<Result<_>>()?,
+        None => kube_fgs::scheduler::ALL_QUEUE_POLICIES.to_vec(),
+    };
+    // Unlike the older ablation commands, every flag of this subcommand
+    // fails loudly on a typo — a sweep silently run at defaults would be
+    // mislabeled data.
+    let jobs_per_worker = match args.flags.get("jobs-per-worker") {
+        Some(s) => s
+            .parse::<usize>()
+            .ok()
+            .filter(|&n| n > 0)
+            .ok_or_else(|| anyhow!("bad --jobs-per-worker {s:?} (positive integer)"))?,
+        None => kube_fgs::experiments::SCALING_JOBS_PER_WORKER,
+    };
+    let interval = match args.flags.get("interval") {
+        Some(s) => s
+            .parse::<f64>()
+            .ok()
+            .filter(|&x| x > 0.0)
+            .ok_or_else(|| anyhow!("bad --interval {s:?} (positive seconds)"))?,
+        None => kube_fgs::experiments::SCALING_BASE_INTERVAL,
+    };
+    println!(
+        "Scaling sweep — sizes {sizes:?}, mixes {}, {} policies, \
+         {jobs_per_worker} jobs/worker, base interval {interval} s at 8 workers (seed {seed})\n",
+        mixes.iter().map(|m| m.name()).collect::<Vec<_>>().join(","),
+        policies.len(),
+    );
+    let points = kube_fgs::experiments::scaling_sweep(
+        seed,
+        &sizes,
+        &mixes,
+        &policies,
+        jobs_per_worker,
+        interval,
+    );
+    print!("{}", kube_fgs::experiments::scaling_table(&points));
+    if let Some(path) = args.flags.get("json") {
+        std::fs::write(
+            path,
+            kube_fgs::experiments::scaling_json(seed, jobs_per_worker, interval, &points),
+        )
+        .map_err(|e| anyhow!("writing {path}: {e}"))?;
+        println!("\nwrote {path}");
+    }
+    if let Some(dir) = args.flags.get("out") {
+        kube_fgs::report::figures::write_scaling(std::path::Path::new(dir), &points)?;
+    }
+    Ok(())
+}
+
 fn cmd_fairness(args: &Args) -> Result<()> {
     let seed = args.seed();
     let jobs = args.get_usize("jobs", experiments::FAIRNESS_JOBS);
@@ -368,7 +464,14 @@ fn cmd_config(args: &Args) -> Result<()> {
     let cfg = kube_fgs::config::ExperimentConfig::load(std::path::Path::new(path))?;
     println!(
         "config: scenario {} queue {} preemption {} seed {} workers {} trace {:?}\n",
-        cfg.scenario, cfg.queue, cfg.preemption, cfg.seed, cfg.worker_nodes, cfg.trace
+        cfg.scenario,
+        cfg.queue,
+        cfg.preemption,
+        cfg.seed,
+        // The built cluster's own count — explicit `cluster.classes` may
+        // size the cluster independently of the `worker_nodes` default.
+        cfg.cluster().worker_count(),
+        cfg.trace
     );
     let sim = cfg.build_simulation();
     let out = sim.run(&cfg.build_trace());

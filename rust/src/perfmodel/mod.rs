@@ -1,6 +1,14 @@
 //! MPI workload performance model — maps a placement (plus co-location) to
 //! a per-job slowdown, the rate the discrete-event simulator integrates.
 //!
+//! In the paper's multi-layer design this is the physics layer: it is
+//! what makes the planner's granularity choices and the scheduler's
+//! placement decisions *matter*, by charging each mechanism the paper
+//! measures on the real testbed. The same model also feeds forward into
+//! scheduling itself: [`walltime_factor`] provides the pre-placement
+//! walltime estimates the SJF ordering and both backfill disciplines
+//! compare against.
+//!
 //! Mechanisms modelled (each anchored to a paper observation, DESIGN.md §1):
 //! 1. Shared-pool scheduling: migrations/context switches under
 //!    `cpu-manager-policy=none`, growing with node utilization, plus
@@ -22,7 +30,9 @@ pub mod calib;
 pub mod network;
 
 pub use calib::Calibration;
-pub use network::{nic_demands, nic_oversubscription, traffic_split, TrafficSplit};
+pub use network::{
+    job_nic_demands, nic_demands, nic_oversubscription, traffic_split, TrafficSplit,
+};
 
 use std::collections::BTreeMap;
 
@@ -77,6 +87,28 @@ impl ClusterLoads {
     }
 }
 
+/// One running job's per-socket memory-bandwidth demand, by node. The
+/// cluster-wide [`ClusterLoads`] snapshot is the sum of these over the
+/// running set; the simulator's incremental rate maintenance adds/removes
+/// exactly one job's contribution on placement events.
+pub fn job_socket_demands(api: &ApiServer, job_id: JobId) -> BTreeMap<NodeId, Vec<f64>> {
+    let mut demands: BTreeMap<NodeId, Vec<f64>> = BTreeMap::new();
+    let bench = api.jobs[&job_id].planned.spec.benchmark;
+    let per_task = bench.membw_demand_per_task();
+    for pod in api.worker_pods_of(job_id) {
+        let node = match pod.node {
+            Some(n) => n,
+            None => continue,
+        };
+        let spec = api.spec.node(node);
+        let entry = demands
+            .entry(node)
+            .or_insert_with(|| vec![0.0; spec.sockets as usize]);
+        distribute_demand(entry, pod, spec, per_task * pod.ntasks as f64);
+    }
+    demands
+}
+
 /// Per-socket memory-bandwidth demand on every node, derived from the
 /// current running placements. Index: node -> socket -> bytes/s.
 fn socket_demands(api: &ApiServer) -> BTreeMap<NodeId, Vec<f64>> {
@@ -85,18 +117,11 @@ fn socket_demands(api: &ApiServer) -> BTreeMap<NodeId, Vec<f64>> {
         if job.phase != crate::apiserver::JobPhase::Running {
             continue;
         }
-        let bench = job.planned.spec.benchmark;
-        let per_task = bench.membw_demand_per_task();
-        for pod in api.worker_pods_of(job_id) {
-            let node = match pod.node {
-                Some(n) => n,
-                None => continue,
-            };
-            let spec = api.spec.node(node);
-            let entry = demands
-                .entry(node)
-                .or_insert_with(|| vec![0.0; spec.sockets as usize]);
-            distribute_demand(entry, pod, spec, per_task * pod.ntasks as f64);
+        for (node, d) in job_socket_demands(api, job_id) {
+            let entry = demands.entry(node).or_insert_with(|| vec![0.0; d.len()]);
+            for (e, v) in entry.iter_mut().zip(&d) {
+                *e += v;
+            }
         }
     }
     demands

@@ -54,31 +54,43 @@ pub fn traffic_split(workers: &[&Pod]) -> TrafficSplit {
     }
 }
 
-/// Per-node NIC demand (bytes/s) from every *running* job's cross-node
-/// traffic: each node's share of a job's wire traffic is proportional to
+/// One running job's per-node NIC demand (bytes/s) from its cross-node
+/// traffic: each node's share of the job's wire traffic is proportional to
 /// the tasks it hosts, weighted by the job's communication fraction (a job
 /// that spends 65% of its time communicating loads the NIC 65% of the
-/// time).
+/// time). The cluster-wide [`nic_demands`] view sums these; the
+/// simulator's incremental rate maintenance adds/removes one job's
+/// contribution on placement events.
+pub fn job_nic_demands(api: &ApiServer, job_id: crate::cluster::JobId) -> BTreeMap<NodeId, f64> {
+    let mut demand: BTreeMap<NodeId, f64> = BTreeMap::new();
+    let bench = api.jobs[&job_id].planned.spec.benchmark;
+    let workers = api.worker_pods_of(job_id);
+    let split = traffic_split(&workers);
+    if split.cross_node <= 0.0 {
+        return demand;
+    }
+    let cf = bench.mpi_profile().comm_fraction;
+    for pod in &workers {
+        let node = pod.node.expect("unbound worker");
+        // Each task sends comm_bytes_per_task during comm phases; the
+        // cross-node share of it hits this node's NIC, duty-cycled by
+        // the communication fraction.
+        let bytes = pod.ntasks as f64 * bench.comm_bytes_per_task();
+        *demand.entry(node).or_insert(0.0) += bytes * split.cross_node * cf;
+    }
+    demand
+}
+
+/// Per-node NIC demand (bytes/s) from every *running* job's cross-node
+/// traffic.
 pub fn nic_demands(api: &ApiServer) -> BTreeMap<NodeId, f64> {
     let mut demand: BTreeMap<NodeId, f64> = BTreeMap::new();
     for (&job_id, job) in &api.jobs {
         if job.phase != JobPhase::Running {
             continue;
         }
-        let bench = job.planned.spec.benchmark;
-        let workers = api.worker_pods_of(job_id);
-        let split = traffic_split(&workers);
-        if split.cross_node <= 0.0 {
-            continue;
-        }
-        let cf = bench.mpi_profile().comm_fraction;
-        for pod in &workers {
-            let node = pod.node.expect("unbound worker");
-            // Each task sends comm_bytes_per_task during comm phases; the
-            // cross-node share of it hits this node's NIC, duty-cycled by
-            // the communication fraction.
-            let bytes = pod.ntasks as f64 * bench.comm_bytes_per_task();
-            *demand.entry(node).or_insert(0.0) += bytes * split.cross_node * cf;
+        for (node, d) in job_nic_demands(api, job_id) {
+            *demand.entry(node).or_insert(0.0) += d;
         }
     }
     demand

@@ -8,6 +8,7 @@
 //! and the actuator submits the updated job to the API server (done by the
 //! scenario driver, which couples the planner to the controller).
 
+use crate::cluster::ClusterSpec;
 use crate::workload::{Granularity, JobSpec, PlannedJob};
 
 /// Admin-set granularity policy (paper §IV-A).
@@ -26,6 +27,25 @@ pub enum GranularityPolicy {
 pub struct SystemInfo {
     /// Worker nodes available for MPI workloads.
     pub available_nodes: u32,
+    /// Allocatable cores of the *smallest* worker node class. On the
+    /// paper's homogeneous testbed this is 32; on heterogeneous clusters
+    /// the planner sizes workers to fit it so thin nodes stay usable.
+    pub min_node_cores: u32,
+}
+
+impl SystemInfo {
+    /// Homogeneous paper-shape cluster of `n` workers (32-core nodes).
+    pub const fn homogeneous(n: u32) -> SystemInfo {
+        SystemInfo { available_nodes: n, min_node_cores: 32 }
+    }
+
+    /// Sense a (possibly heterogeneous) cluster spec.
+    pub fn of(spec: &ClusterSpec) -> SystemInfo {
+        SystemInfo {
+            available_nodes: spec.worker_count() as u32,
+            min_node_cores: spec.min_worker_cores(),
+        }
+    }
 }
 
 /// Algorithm 1: Granularity Selection (Planner agent).
@@ -35,11 +55,18 @@ pub struct SystemInfo {
 /// - CPU/memory profile, "scale"       => `N_n = min(N_n, N_t), N_w = N_n, N_g = N_n`;
 /// - CPU/memory profile, "granularity" => `N_n = min(N_n, N_t), N_w = N_t, N_g = N_n`;
 /// - no policy => `N_n = 1`, keep the user's `N_w`, `N_g = N_n`.
+///
+/// Node-class awareness (heterogeneous clusters): under "scale" the worker
+/// count is raised above `N_n` when `N_t / N_n` tasks per worker would
+/// exceed the smallest worker class's allocatable cores, so every worker
+/// fits every class and thin nodes stay schedulable. On the homogeneous
+/// paper testbed (`min_node_cores = 32`, 16-task jobs) this never fires.
 pub fn plan(job: &JobSpec, policy: GranularityPolicy, info: SystemInfo) -> PlannedJob {
     // % Agent Sensor: get job specs and system information.
     let n_t = job.ntasks;
     let n_w_user = job.default_workers;
     let n_n_max = info.available_nodes.max(1);
+    let min_cores = info.min_node_cores.max(1);
     let profile = job.benchmark.profile();
 
     // % Agent Rule: set granularity according to job profile.
@@ -49,7 +76,17 @@ pub fn plan(job: &JobSpec, policy: GranularityPolicy, info: SystemInfo) -> Plann
                 Granularity { n_nodes: 1, n_workers: 1, n_groups: 1 }
             } else {
                 let n_n = n_n_max.min(n_t);
-                Granularity { n_nodes: n_n, n_workers: n_n, n_groups: n_n }
+                // Tasks per worker at N_w = N_n, rounded up (RoundRobin
+                // gives the first workers the remainder).
+                let per_worker = n_t.div_ceil(n_n);
+                let n_w = if per_worker > min_cores {
+                    // Split finer so the widest worker fits the smallest
+                    // node class (workers may share nodes).
+                    n_t.div_ceil(min_cores).max(n_n).min(n_t)
+                } else {
+                    n_n
+                };
+                Granularity { n_nodes: n_n, n_workers: n_w, n_groups: n_n }
             }
         }
         GranularityPolicy::Granularity => {
@@ -76,7 +113,7 @@ mod tests {
     use super::*;
     use crate::workload::Benchmark;
 
-    const INFO: SystemInfo = SystemInfo { available_nodes: 4 };
+    const INFO: SystemInfo = SystemInfo::homogeneous(4);
 
     fn job(bench: Benchmark) -> JobSpec {
         JobSpec::paper_job(1, bench, 0.0)
@@ -144,11 +181,39 @@ mod tests {
     }
 
     #[test]
+    fn scale_splits_finer_to_fit_the_smallest_node_class() {
+        // 16 tasks over 2 nodes would mean 8-task (8-core) workers; with a
+        // smallest class of 4 allocatable cores the planner splits into
+        // ceil(16/4) = 4 workers so every worker fits every class.
+        let info = SystemInfo { available_nodes: 2, min_node_cores: 4 };
+        let p = plan(&job(Benchmark::EpDgemm), GranularityPolicy::Scale, info);
+        assert_eq!(
+            p.granularity,
+            Granularity { n_nodes: 2, n_workers: 4, n_groups: 2 }
+        );
+        // Homogeneous paper shape: unchanged (8 tasks/worker fit 32 cores).
+        let wide = SystemInfo { available_nodes: 2, min_node_cores: 32 };
+        let q = plan(&job(Benchmark::EpDgemm), GranularityPolicy::Scale, wide);
+        assert_eq!(q.granularity.n_workers, 2);
+    }
+
+    #[test]
+    fn system_info_senses_heterogeneous_clusters() {
+        use crate::cluster::{ClusterSpec, HeterogeneityMix};
+        let hom = SystemInfo::of(&ClusterSpec::with_workers(8));
+        assert_eq!(hom.available_nodes, 8);
+        assert_eq!(hom.min_node_cores, 32);
+        let het = SystemInfo::of(&ClusterSpec::mixed(8, HeterogeneityMix::FatThin));
+        assert_eq!(het.available_nodes, 8);
+        assert_eq!(het.min_node_cores, 16, "thin class bounds the split");
+    }
+
+    #[test]
     fn zero_available_nodes_clamped_to_one() {
         let p = plan(
             &job(Benchmark::EpDgemm),
             GranularityPolicy::Scale,
-            SystemInfo { available_nodes: 0 },
+            SystemInfo { available_nodes: 0, min_node_cores: 32 },
         );
         assert_eq!(p.granularity.n_nodes, 1);
     }

@@ -11,7 +11,7 @@ use crate::metrics::ExperimentMetrics;
 use crate::simulator::JobRecord;
 use crate::workload::{exp2_trace, Benchmark, ALL_BENCHMARKS};
 
-use super::svg::{bar_chart, gantt_chart, GanttRow, Series};
+use super::svg::{bar_chart, gantt_chart, line_chart, GanttRow, Series};
 
 fn write(dir: &Path, name: &str, content: &str) -> Result<()> {
     let path = dir.join(name);
@@ -254,6 +254,70 @@ pub fn write_all(dir: &Path, seed: u64) -> Result<()> {
     Ok(())
 }
 
+/// Render the scaling sweep: per mix × metric, one line chart with a
+/// polyline per queue policy over the cluster sizes, plus the CSV record
+/// (`kube-fgs scaling --out <dir>`; CI uploads these on pushes to main).
+pub fn write_scaling(dir: &Path, points: &[experiments::ScalingPoint]) -> Result<()> {
+    use std::collections::BTreeSet;
+    std::fs::create_dir_all(dir)?;
+    write(dir, "scaling_sweep.csv", &experiments::scaling_csv(points))?;
+
+    let mixes: Vec<crate::cluster::HeterogeneityMix> = {
+        let mut seen = BTreeSet::new();
+        points.iter().filter(|p| seen.insert(p.mix.name())).map(|p| p.mix).collect()
+    };
+    let metrics: [(&str, &str, fn(&experiments::ScalingPoint) -> f64); 3] = [
+        ("response", "overall response (s)", |p| p.metrics.overall_response),
+        ("makespan", "makespan (s)", |p| p.metrics.makespan),
+        ("utilization", "utilization", |p| p.utilization),
+    ];
+    for mix in mixes {
+        let of_mix: Vec<&experiments::ScalingPoint> =
+            points.iter().filter(|p| p.mix == mix).collect();
+        let sizes: Vec<usize> = {
+            let mut s: Vec<usize> = of_mix.iter().map(|p| p.workers).collect();
+            s.sort_unstable();
+            s.dedup();
+            s
+        };
+        let policies: Vec<crate::scheduler::QueuePolicyKind> = {
+            let mut seen = BTreeSet::new();
+            of_mix.iter().filter(|p| seen.insert(p.queue.name())).map(|p| p.queue).collect()
+        };
+        let xs: Vec<f64> = sizes.iter().map(|&w| w as f64).collect();
+        for (slug, label, metric) in metrics {
+            let series: Vec<Series> = policies
+                .iter()
+                .map(|&q| Series {
+                    name: q.name().to_string(),
+                    values: sizes
+                        .iter()
+                        .map(|&w| {
+                            of_mix
+                                .iter()
+                                .find(|p| p.workers == w && p.queue == q)
+                                .map(|&p| metric(p))
+                                .unwrap_or(0.0)
+                        })
+                        .collect(),
+                })
+                .collect();
+            write(
+                dir,
+                &format!("scaling_{slug}_{}.svg", mix.name()),
+                &line_chart(
+                    &format!("Scaling sweep — {label}, {} mix (CM_G_TG placement)", mix.name()),
+                    &xs,
+                    &series,
+                    "worker nodes",
+                    label,
+                ),
+            )?;
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -285,6 +349,42 @@ mod tests {
             assert!(!content.is_empty());
             if f.ends_with(".svg") {
                 assert!(content.starts_with("<svg"), "{f}");
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn write_scaling_emits_csv_and_curves_per_mix() {
+        use crate::cluster::HeterogeneityMix;
+        use crate::scheduler::QueuePolicyKind;
+        let points = experiments::scaling_sweep(
+            2,
+            &[2, 4],
+            &[HeterogeneityMix::Uniform, HeterogeneityMix::FatThin],
+            &[QueuePolicyKind::FifoSkip, QueuePolicyKind::Sjf],
+            2,
+            30.0,
+        );
+        let dir =
+            std::env::temp_dir().join(format!("kube_fgs_scaling_{}", std::process::id()));
+        write_scaling(&dir, &points).unwrap();
+        for f in [
+            "scaling_sweep.csv",
+            "scaling_response_uniform.svg",
+            "scaling_makespan_uniform.svg",
+            "scaling_utilization_uniform.svg",
+            "scaling_response_fat_thin.svg",
+            "scaling_makespan_fat_thin.svg",
+            "scaling_utilization_fat_thin.svg",
+        ] {
+            let p = dir.join(f);
+            assert!(p.exists(), "{f} missing");
+            let content = std::fs::read_to_string(&p).unwrap();
+            assert!(!content.is_empty());
+            if f.ends_with(".svg") {
+                assert!(content.starts_with("<svg"), "{f}");
+                assert!(content.contains("<polyline"), "{f} has curves");
             }
         }
         std::fs::remove_dir_all(&dir).ok();

@@ -1,8 +1,10 @@
 //! SVG figure rendering — publication-style versions of the paper's
 //! figures (grouped bar charts for Figs. 4–6/8–9, Gantt panels for
-//! Fig. 7), written without external dependencies.
+//! Fig. 7, line charts for the scaling curves), written without external
+//! dependencies.
 //!
-//! `kube-fgs exp2 --svg out/` drops one .svg per figure.
+//! `kube-fgs figures --out DIR` drops one .svg per paper figure;
+//! `kube-fgs scaling --out DIR` adds the scaling curves.
 
 use std::fmt::Write as _;
 
@@ -155,6 +157,139 @@ pub fn bar_chart(
     svg
 }
 
+/// Multi-series line chart over a shared numeric x-axis (the scaling
+/// curves: x = cluster size, one polyline per queue policy). Returns a
+/// complete standalone SVG document.
+pub fn line_chart(
+    title: &str,
+    xs: &[f64],
+    series: &[Series],
+    x_label: &str,
+    y_label: &str,
+) -> String {
+    assert!(!xs.is_empty() && !series.is_empty());
+    for s in series {
+        assert_eq!(s.values.len(), xs.len(), "series {} length", s.name);
+    }
+    let (w, h) = (900.0, 420.0);
+    let (ml, mr, mt, mb) = (70.0, 20.0, 46.0, 88.0);
+    let plot_w = w - ml - mr;
+    let plot_h = h - mt - mb;
+    let x_min = xs.iter().copied().fold(f64::INFINITY, f64::min);
+    let x_max = xs.iter().copied().fold(f64::NEG_INFINITY, f64::max).max(x_min + 1e-9);
+    let y_max = series
+        .iter()
+        .flat_map(|s| s.values.iter().copied())
+        .fold(0.0_f64, f64::max)
+        .max(1e-9)
+        * 1.08;
+    let px = |x: f64| ml + plot_w * (x - x_min) / (x_max - x_min);
+    let py = |y: f64| mt + plot_h * (1.0 - y / y_max);
+
+    let mut svg = String::new();
+    let _ = write!(
+        svg,
+        r#"<svg xmlns="http://www.w3.org/2000/svg" width="{w}" height="{h}" viewBox="0 0 {w} {h}" font-family="Helvetica,Arial,sans-serif">"#
+    );
+    let _ = write!(svg, r#"<rect width="{w}" height="{h}" fill="white"/>"#);
+    let _ = write!(
+        svg,
+        r#"<text x="{}" y="24" font-size="16" text-anchor="middle" font-weight="bold">{}</text>"#,
+        w / 2.0,
+        esc(title)
+    );
+
+    // y axis + gridlines.
+    let step = axis_step(y_max);
+    let mut y = 0.0;
+    while y <= y_max {
+        let gy = py(y);
+        let _ = write!(
+            svg,
+            r##"<line x1="{ml}" y1="{gy}" x2="{}" y2="{gy}" stroke="#dddddd" stroke-width="1"/>"##,
+            ml + plot_w
+        );
+        let _ = write!(
+            svg,
+            r#"<text x="{}" y="{}" font-size="11" text-anchor="end">{}</text>"#,
+            ml - 6.0,
+            gy + 4.0,
+            if step >= 1.0 { format!("{y:.0}") } else { format!("{y:.2}") }
+        );
+        y += step;
+    }
+    let _ = write!(
+        svg,
+        r#"<text x="16" y="{}" font-size="12" text-anchor="middle" transform="rotate(-90 16 {})">{}</text>"#,
+        mt + plot_h / 2.0,
+        mt + plot_h / 2.0,
+        esc(y_label)
+    );
+
+    // x ticks at the sample points.
+    for &x in xs {
+        let gx = px(x);
+        let _ = write!(
+            svg,
+            r##"<line x1="{gx:.1}" y1="{mt}" x2="{gx:.1}" y2="{}" stroke="#eeeeee" stroke-width="1"/>"##,
+            mt + plot_h
+        );
+        let _ = write!(
+            svg,
+            r#"<text x="{gx:.1}" y="{}" font-size="11" text-anchor="middle">{x:.0}</text>"#,
+            mt + plot_h + 16.0
+        );
+    }
+    let _ = write!(
+        svg,
+        r#"<text x="{}" y="{}" font-size="12" text-anchor="middle">{}</text>"#,
+        ml + plot_w / 2.0,
+        mt + plot_h + 36.0,
+        esc(x_label)
+    );
+
+    // polylines + markers.
+    for (si, s) in series.iter().enumerate() {
+        let color = PALETTE[si % PALETTE.len()];
+        let pts: Vec<String> = xs
+            .iter()
+            .zip(&s.values)
+            .map(|(&x, &v)| format!("{:.1},{:.1}", px(x), py(v)))
+            .collect();
+        let _ = write!(
+            svg,
+            r#"<polyline fill="none" stroke="{color}" stroke-width="2" points="{}"/>"#,
+            pts.join(" ")
+        );
+        for (&x, &v) in xs.iter().zip(&s.values) {
+            let _ = write!(
+                svg,
+                r#"<circle cx="{:.1}" cy="{:.1}" r="3" fill="{color}"><title>{}: {v:.1}</title></circle>"#,
+                px(x),
+                py(v),
+                esc(&s.name)
+            );
+        }
+    }
+
+    // legend.
+    let mut lx = ml;
+    let ly = h - 14.0;
+    for (si, s) in series.iter().enumerate() {
+        let color = PALETTE[si % PALETTE.len()];
+        let _ = write!(svg, r#"<rect x="{lx}" y="{}" width="11" height="11" fill="{color}"/>"#, ly - 10.0);
+        let _ = write!(
+            svg,
+            r#"<text x="{}" y="{ly}" font-size="11">{}</text>"#,
+            lx + 15.0,
+            esc(&s.name)
+        );
+        lx += 15.0 + 8.0 * s.name.len() as f64 + 18.0;
+    }
+    svg.push_str("</svg>");
+    svg
+}
+
 /// Gantt chart (Fig. 7 scheduling-process panel): one row per job with a
 /// waiting span and a running span.
 pub struct GanttRow {
@@ -285,6 +420,36 @@ mod tests {
         assert!(svg.contains("wait 100s"));
         assert!(svg.contains("run 400s"));
         assert!(svg.contains("j2"));
+    }
+
+    #[test]
+    fn line_chart_renders_series_and_axes() {
+        let svg = line_chart(
+            "Scaling — overall response",
+            &[8.0, 16.0, 32.0],
+            &[
+                Series { name: "fifo".into(), values: vec![100.0, 150.0, 210.0] },
+                Series { name: "easy_backfill".into(), values: vec![90.0, 120.0, 160.0] },
+            ],
+            "workers",
+            "seconds",
+        );
+        assert!(svg.starts_with("<svg") && svg.ends_with("</svg>"));
+        assert_eq!(svg.matches("<polyline").count(), 2);
+        assert!(svg.matches("<circle").count() >= 6, "markers per point");
+        assert!(svg.contains("easy_backfill") && svg.contains("workers"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn line_chart_rejects_mismatched_series() {
+        line_chart(
+            "t",
+            &[1.0, 2.0],
+            &[Series { name: "s".into(), values: vec![1.0] }],
+            "x",
+            "y",
+        );
     }
 
     #[test]

@@ -1,7 +1,15 @@
 //! Scenario matrix — the paper's Table II plus the §V-E framework
 //! baselines and the queue-policy variants, each mapping to a fully
-//! configured [`Simulation`]. A scenario pins all five knobs of the
-//! experiment space: (kubelet, planner, controller, scheduler, queue).
+//! configured [`Simulation`].
+//!
+//! A scenario is the experiment space's coordinate system: one name pins
+//! all six knobs of the multi-layer design — (kubelet, planner,
+//! controller, scheduler, queue, preemption) — so every CLI surface,
+//! example, and bench reproduces identical numbers for a given seed. The
+//! cluster *shape* (size, heterogeneity mix) is deliberately orthogonal:
+//! any scenario runs on any [`ClusterSpec`] via
+//! [`Scenario::simulation_on`], which is what the scaling sweeps iterate
+//! over.
 
 use crate::cluster::ClusterSpec;
 use crate::controller::{

@@ -3,12 +3,21 @@
 //! (NodeOrderFn), hosting the paper's task-group plugin (Algorithms 3–4)
 //! next to the baseline policies (stock Volcano gang, Kubernetes default).
 //!
+//! This is the lower half of the paper's two-layer contribution: the
+//! application-layer planner ([`crate::planner`]) picks each job's
+//! granularity, a controller materializes the pods, and this layer
+//! decides *where* they run — under gang semantics, a queue discipline
+//! ([`queue`]), optional priority preemption, and node-class-aware
+//! scoring on heterogeneous clusters (best-fit across fat/thin/balanced
+//! classes, so wide pods keep fat nodes available).
+//!
 //! Each [`Scheduler::cycle`] is one Volcano session: snapshot free
 //! resources, walk the pending-job queue in the [`QueuePolicy`]'s order,
 //! and for each job place its pods (gang: all-or-nothing on a trial
 //! state; no-gang: individually). The queue policy decides what a gang
-//! failure means — skip (seed behaviour), block, or an EASY backfill
-//! reservation (see [`queue`]).
+//! failure means — skip (seed behaviour), block, an EASY shadow-time
+//! reservation, or a claim on the conservative per-resource
+//! [`ResourceTimeline`] (see [`queue`]).
 
 pub mod queue;
 pub mod score;
@@ -21,9 +30,9 @@ use crate::cluster::{JobId, NodeId, NodeRole, Pod, PodId, PodPhase, Resources};
 use crate::util::Rng;
 
 pub use queue::{
-    estimated_completions, estimated_runtime, job_fits, shadow_time, ConservativeBackfill,
-    EasyBackfill, FairShare, FifoSkip, FifoStrict, GangDecision, QueueContext, QueuePolicy,
-    QueuePolicyKind, Sjf, ALL_QUEUE_POLICIES,
+    estimated_completions, estimated_runtime, first_fit_assignment, job_fits, shadow_time,
+    ConservativeBackfill, EasyBackfill, FairShare, FifoSkip, FifoStrict, GangDecision,
+    QueueContext, QueuePolicy, QueuePolicyKind, ResourceTimeline, Sjf, ALL_QUEUE_POLICIES,
 };
 pub use score::{least_requested, taskgroup_score, GroupKey, GroupPlacement};
 pub use taskgroup::{build_groups, group_assignment, worker_order, TaskGroup};
@@ -111,9 +120,29 @@ struct SessionState {
     /// Undo log of (pod requests, node, group) applied since the last
     /// checkpoint; replayed backwards on gang failure.
     log: Vec<(Resources, NodeId, Option<GroupKey>)>,
+    /// Allocatable CPU (millicores) of the largest worker class — the
+    /// normalizer of the class-aware best-fit scoring term.
+    max_worker_cpu: u64,
 }
 
 impl SessionState {
+    fn new(api: &ApiServer, free: Vec<Resources>, placement: GroupPlacement) -> SessionState {
+        SessionState {
+            free,
+            placement,
+            log: Vec::new(),
+            max_worker_cpu: api.spec.max_worker_cores() as u64 * 1000,
+        }
+    }
+
+    fn snapshot(api: &ApiServer) -> SessionState {
+        SessionState::new(
+            api,
+            api.spec.node_ids().map(|n| api.free_on(n)).collect(),
+            api.group_placement().clone(),
+        )
+    }
+
     fn apply(&mut self, requests: Resources, node: NodeId, group: Option<GroupKey>) {
         self.free[node.0] -= requests;
         if let Some(key) = group {
@@ -210,6 +239,14 @@ impl Scheduler {
         // same job") — jitter dominates unless utilization differs a lot.
         let lr = least_requested(&state.free[node.0], &api.spec.node(node).allocatable());
         score += lr * 0.2;
+        // Class-aware best-fit on heterogeneous clusters: prefer the
+        // smallest node class that fits, preserving fat nodes for wide
+        // pods. On homogeneous clusters this subtracts the same constant
+        // from every feasible worker node and changes nothing.
+        if state.max_worker_cpu > 0 {
+            let alloc = api.spec.node(node).allocatable().cpu_milli as f64;
+            score -= 2.0 * alloc / state.max_worker_cpu as f64;
+        }
         score + self.rng.f64() * 3.0
     }
 
@@ -327,12 +364,33 @@ impl Scheduler {
         if candidates.is_empty() {
             return None;
         }
+        // Class-aware usefulness: a victim only helps if it frees capacity
+        // on a node class where the blocked gang's widest pending pod could
+        // ever fit. On homogeneous clusters every victim qualifies and the
+        // order is unchanged.
+        let widest = api.jobs[&job]
+            .pods
+            .iter()
+            .map(|pid| &api.pods[pid])
+            .filter(|p| p.phase == PodPhase::Pending)
+            .map(|p| p.requests)
+            .max_by_key(Resources::sort_key)
+            .unwrap_or(Resources::ZERO);
+        let useful = |id: &JobId| -> bool {
+            api.jobs[id].pods.iter().map(|pid| &api.pods[pid]).any(|p| {
+                matches!(p.phase, PodPhase::Bound | PodPhase::Running)
+                    && p.node
+                        .map(|n| widest.fits_within(&api.spec.node(n).allocatable()))
+                        .unwrap_or(false)
+            })
+        };
         candidates.sort_by(|a, b| {
             let (ja, jb) = (&api.jobs[a], &api.jobs[b]);
             ja.planned
                 .spec
                 .priority
                 .cmp(&jb.planned.spec.priority)
+                .then_with(|| useful(b).cmp(&useful(a)))
                 .then_with(|| {
                     jb.start_time
                         .unwrap_or(f64::NEG_INFINITY)
@@ -411,7 +469,7 @@ impl Scheduler {
                 }
             }
         }
-        let mut trial = SessionState { free, placement, log: Vec::new() };
+        let mut trial = SessionState::new(api, free, placement);
         let binds = self.plan_job(api, &mut trial, job)?;
         Some((victims, binds))
     }
@@ -453,11 +511,15 @@ impl Scheduler {
     /// One scheduling session. Walks the pending queue in the queue
     /// policy's order; on a gang failure the scheduler may first attempt
     /// priority preemption (`config.preemption`), then the policy decides
-    /// whether to skip the job (seed behaviour), end the session, or hold
-    /// a backfill reservation — one for the first blocked job (EASY) or
-    /// one per blocked job (conservative). Backfill candidates are gated
-    /// on the *earliest* held shadow time, so no reservation is delayed.
-    /// Returns the jobs started in this cycle.
+    /// what the failure means — skip the job (seed behaviour), end the
+    /// session, or hold a backfill reservation. EASY holds a single
+    /// shadow-time reservation for the first blocked job and gates later
+    /// candidates on it; conservative backfilling maintains a full
+    /// per-resource [`ResourceTimeline`]: every blocked job claims its
+    /// reservation window out of the profile, and later jobs are admitted
+    /// (and planned) against what is left, so backfills may use holes
+    /// behind reservations yet can never take resources a reservation
+    /// counted on. Returns the jobs started in this cycle.
     pub fn cycle_with_projections(
         &mut self,
         api: &mut ApiServer,
@@ -465,20 +527,44 @@ impl Scheduler {
         projected: &BTreeMap<JobId, f64>,
     ) -> Vec<JobId> {
         let mut started = Vec::new();
-        let mut state = SessionState {
-            free: api.spec.node_ids().map(|n| api.free_on(n)).collect(),
-            placement: api.group_placement().clone(),
-            log: Vec::new(),
-        };
+        let mut state = SessionState::snapshot(api);
 
         let mut pending = api.pending_jobs();
         self.queue_policy.order(api, now, &mut pending);
-        // Shadow times of the reservations held for blocked jobs: at most
-        // one under EASY, one per blocked job under conservative backfill.
+        // EASY: shadow time of the single reservation held for the first
+        // blocked job of the session.
         let mut reservations: Vec<f64> = Vec::new();
+        // Conservative: the per-resource availability profile, built at
+        // the session's first gang failure.
+        let conservative = self.queue_policy.reserves_every_job();
+        let mut timeline: Option<ResourceTimeline> = None;
 
         for job_id in pending {
-            if let Some(shadow) = reservations.iter().copied().reduce(f64::min) {
+            // Conservative sessions holding reservations: the job's whole
+            // window must first-fit what the claims left over; the passing
+            // (estimate, min-free window) pair is reused by the
+            // constrained planning below.
+            let mut admitted_window: Option<(f64, Vec<Resources>)> = None;
+            if conservative && timeline.is_some() {
+                let est = queue::estimated_runtime(api, job_id);
+                let tl = timeline.as_mut().unwrap();
+                let window = tl.min_free_over(now, now + est);
+                if !queue::job_fits(api, &window, job_id) {
+                    // Window-rejected: hold this job's own reservation at
+                    // its earliest profile fit, claiming the window so no
+                    // later backfill can push its start back. A fit at
+                    // `now` means only the scored-greedy planner can be
+                    // cornered — rely on the next session's retry instead
+                    // of claiming live resources.
+                    if let Some((t_s, placement)) = tl.earliest_fit(api, job_id, est) {
+                        if t_s > now + 1e-9 {
+                            tl.claim(t_s, t_s + est, &placement);
+                        }
+                    }
+                    continue;
+                }
+                admitted_window = Some((est, window));
+            } else if let Some(shadow) = reservations.iter().copied().reduce(f64::min) {
                 let ctx = QueueContext {
                     api: &*api,
                     now,
@@ -486,37 +572,55 @@ impl Scheduler {
                     free: &state.free,
                 };
                 if !self.queue_policy.may_backfill(&ctx, job_id, shadow) {
-                    // Conservative discipline: a window-rejected job that
-                    // is waiting on a genuine future release holds a
-                    // reservation of its own — later backfills may not
-                    // push *its* start back either. A job that fits right
-                    // now is held only by the window itself: reserving it
-                    // at `now` would collapse the session's backfill
-                    // window to zero, so it relies on the FIFO retry at
-                    // the next session instead.
-                    if self.queue_policy.reserves_every_job() {
-                        if let GangDecision::Reserve { shadow_time } =
-                            self.queue_policy.on_gang_failure(&ctx, job_id)
-                        {
-                            if shadow_time > now + 1e-9 {
-                                reservations.push(shadow_time);
-                            }
-                        }
-                    }
                     continue;
                 }
             }
             if self.config.gang {
-                // All-or-nothing: plan against the live state, roll back the
-                // undo log on failure.
-                let checkpoint = state.checkpoint();
-                match self.plan_job(api, &mut state, job_id) {
-                    Some(binds) => {
+                // All-or-nothing. A conservative session holding
+                // reservations plans against the window-constrained free
+                // view (a trial state), so the scored placement can never
+                // occupy resources a reservation counted on; otherwise
+                // plan against the live state and roll back the undo log
+                // on failure.
+                let planned: Option<(Vec<(PodId, NodeId, Option<usize>)>, Option<f64>)> =
+                    if let Some((est, constrained)) = admitted_window {
+                        let mut trial =
+                            SessionState::new(api, constrained, state.placement.clone());
+                        self.plan_job(api, &mut trial, job_id).map(|b| (b, Some(est)))
+                    } else {
+                        let checkpoint = state.checkpoint();
+                        match self.plan_job(api, &mut state, job_id) {
+                            Some(binds) => Some((binds, None)),
+                            None => {
+                                state.rollback_to(checkpoint);
+                                None
+                            }
+                        }
+                    };
+                match planned {
+                    Some((binds, window_est)) => {
+                        if let Some(est) = window_est {
+                            // Mirror the trial plan into the live session
+                            // state and claim the job's running window out
+                            // of the profile (its release past `now + est`
+                            // stays visible to later reservations).
+                            let placement: Vec<(NodeId, Resources)> = binds
+                                .iter()
+                                .map(|&(pid, node, _)| (node, api.pods[&pid].requests))
+                                .collect();
+                            for &(pid, node, g) in &binds {
+                                state.apply(
+                                    api.pods[&pid].requests,
+                                    node,
+                                    g.map(|gg| (job_id, gg)),
+                                );
+                            }
+                            timeline.as_mut().unwrap().claim(now, now + est, &placement);
+                        }
                         Self::commit_gang(api, binds, job_id, now);
                         started.push(job_id);
                     }
                     None => {
-                        state.rollback_to(checkpoint);
                         // Priority preemption: plan against a trial view
                         // with a minimal victim set released, and only
                         // evict once the plan is proven — a scored-greedy
@@ -532,24 +636,40 @@ impl Scheduler {
                                 Self::commit_gang(api, binds, job_id, now);
                                 started.push(job_id);
                                 // The eviction + commit invalidated the
-                                // session view: rebuild free + placement
-                                // (the undo log only covers this session's
-                                // own binds).
-                                state = SessionState {
-                                    free: api
-                                        .spec
-                                        .node_ids()
-                                        .map(|n| api.free_on(n))
-                                        .collect(),
-                                    placement: api.group_placement().clone(),
-                                    log: Vec::new(),
-                                };
+                                // session view and the release profile:
+                                // rebuild the state, drop the reservations
+                                // (they re-derive at the next failure).
+                                state = SessionState::snapshot(api);
+                                reservations.clear();
+                                timeline = None;
                                 continue;
                             }
                         }
-                        let decision = if reservations.is_empty()
-                            || self.queue_policy.reserves_every_job()
-                        {
+                        if conservative {
+                            // First failure builds the profile; every
+                            // blocked job claims its earliest-fit window.
+                            let tl = timeline.get_or_insert_with(|| {
+                                let ctx = QueueContext {
+                                    api: &*api,
+                                    now,
+                                    projected_completion: projected,
+                                    free: &state.free,
+                                };
+                                ResourceTimeline::new(&ctx)
+                            });
+                            let est = queue::estimated_runtime(api, job_id);
+                            if let Some((t_s, placement)) = tl.earliest_fit(api, job_id, est)
+                            {
+                                // A fit at `now` (gang first-fits, planner
+                                // cornered itself) claims nothing — the
+                                // job retries next session.
+                                if t_s > now + 1e-9 {
+                                    tl.claim(t_s, t_s + est, &placement);
+                                }
+                            }
+                            continue;
+                        }
+                        let decision = if reservations.is_empty() {
                             let ctx = QueueContext {
                                 api: &*api,
                                 now,
@@ -567,7 +687,7 @@ impl Scheduler {
                                 // A shadow at `now` (the gang first-fits
                                 // but scored-greedy cornered itself) would
                                 // zero the backfill window — same guard as
-                                // the window-rejection path above.
+                                // the conservative path above.
                                 if shadow_time > now + 1e-9 {
                                     reservations.push(shadow_time);
                                 }
@@ -622,7 +742,7 @@ mod tests {
         bench: Benchmark,
     ) -> JobId {
         let spec = JobSpec::paper_job(id, bench, 0.0);
-        let info = SystemInfo { available_nodes: api.spec.worker_count() as u32 };
+        let info = SystemInfo::of(&api.spec);
         let planned = plan(&spec, policy, info);
         let job_id = planned.spec.id;
         let (pods, hostfile) = controller.build(&planned, api);
@@ -769,7 +889,7 @@ mod tests {
         spec.ntasks = ntasks;
         spec.resources =
             Resources::new(ntasks as u64 * 1000, ntasks as u64 * crate::cluster::gib(2));
-        let info = SystemInfo { available_nodes: api.spec.worker_count() as u32 };
+        let info = SystemInfo::of(&api.spec);
         let planned = plan(&spec, GranularityPolicy::None, info);
         let job_id = planned.spec.id;
         let (pods, hostfile) = VolcanoMpiController.build(&planned, api);
@@ -777,12 +897,27 @@ mod tests {
         job_id
     }
 
+    /// Finish one running job whose (single) worker sits on the given
+    /// worker node, so tests control exactly which node gains free cores.
+    fn finish_one_on(api: &mut ApiServer, node: NodeId, now: f64) -> JobId {
+        let job = api
+            .running_jobs()
+            .into_iter()
+            .find(|&j| {
+                api.worker_pods_of(j).first().and_then(|p| p.node) == Some(node)
+            })
+            .expect("no running job on the requested node");
+        api.finish_job(job, now);
+        job
+    }
+
     /// Cluster with 7 running 16-core jobs + one finished, leaving exactly
-    /// one node with 16 free cores, then three queued jobs: a 32-core job
-    /// that cannot fit (the gang blocker), an 8-core ring job (short,
-    /// ~333 s walltime estimate), and an 8-core MiniFE job (long, ~791 s
-    /// estimate — past the ~688 s shadow time projected from the running
-    /// DGEMMs' walltime estimates).
+    /// one node (worker node 1 — the first-fit choice, so the conservative
+    /// timeline's claims land there deterministically) with 16 free cores,
+    /// then three queued jobs: a 32-core job that cannot fit (the gang
+    /// blocker), an 8-core ring job (short, ~333 s walltime estimate), and
+    /// an 8-core MiniFE job (long, ~791 s estimate — past the ~688 s
+    /// shadow time projected from the running DGEMMs' walltime estimates).
     fn congested_api_with_blocker(queue: QueuePolicyKind) -> (ApiServer, Scheduler, Vec<JobId>) {
         let mut api = api();
         let mut sched =
@@ -791,7 +926,7 @@ mod tests {
             submit(&mut api, &VolcanoMpiController, GranularityPolicy::None, i, Benchmark::EpDgemm);
         }
         assert_eq!(sched.cycle(&mut api, 0.0).len(), 8);
-        api.finish_job(JobId(1), 2.0);
+        finish_one_on(&mut api, NodeId(1), 2.0);
         let blocker = submit_sized(&mut api, 9, Benchmark::EpDgemm, 32);
         let short = submit_sized(&mut api, 10, Benchmark::GRandomRing, 8);
         let long = submit_sized(&mut api, 11, Benchmark::MiniFe, 8);
@@ -828,15 +963,71 @@ mod tests {
     #[test]
     fn conservative_backfill_guards_every_reservation() {
         // Same congested cluster under conservative backfilling: the
-        // blocker reserves at ~688 s, the ring job backfills inside the
-        // window, and MiniFE is rejected against the earliest reservation
-        // (it fits the leftover cores *now*, so it takes no reservation of
-        // its own — see the ConservativeBackfill docs).
+        // blocker claims the freed node's window from ~688 s, the ring job
+        // backfills inside the hole before it, and MiniFE — whose ~791 s
+        // window would run through the claim on the only node with free
+        // cores — is rejected (it holds a reservation of its own instead).
         let (mut api, mut sched, ids) =
             congested_api_with_blocker(QueuePolicyKind::ConservativeBackfill);
         let started = sched.cycle(&mut api, 2.0);
         assert_eq!(started, vec![ids[1]], "only the short job backfills");
         assert_eq!(api.pending_jobs(), vec![ids[0], ids[2]]);
+    }
+
+    #[test]
+    fn conservative_timeline_backfills_holes_behind_the_reservation() {
+        // Two nodes gain 16 free cores; a 32-core blocker claims the first
+        // of them (plus its release) from the shadow time on. A long
+        // 8-core MiniFE job whose estimate crosses the shadow — rejected
+        // outright by an earliest-shadow-only gate — fits the *second*
+        // free node through its whole window, taking nothing the
+        // reservation counted on, so the timeline admits it.
+        let mut api = api();
+        let mut sched = Scheduler::new(
+            SchedulerConfig::volcano_default(1)
+                .with_queue(QueuePolicyKind::ConservativeBackfill),
+        );
+        for i in 1..=8 {
+            submit(&mut api, &VolcanoMpiController, GranularityPolicy::None, i, Benchmark::EpDgemm);
+        }
+        assert_eq!(sched.cycle(&mut api, 0.0).len(), 8);
+        finish_one_on(&mut api, NodeId(1), 2.0);
+        finish_one_on(&mut api, NodeId(2), 2.0);
+        let blocker = submit_sized(&mut api, 9, Benchmark::EpDgemm, 32);
+        let long_narrow = submit_sized(&mut api, 10, Benchmark::MiniFe, 8);
+        let started = sched.cycle(&mut api, 2.0);
+        assert_eq!(started, vec![long_narrow], "hole behind the reservation is usable");
+        assert_eq!(api.pending_jobs(), vec![blocker]);
+        // And the backfill landed outside the blocker's claimed node.
+        let node = api.worker_pods_of(long_narrow)[0].node.unwrap();
+        assert_ne!(node, NodeId(1), "claimed node stays reserved");
+    }
+
+    #[test]
+    fn conservative_timeline_protects_later_reservations() {
+        // Same two free nodes, but now TWO 32-core blockers: the first
+        // claims node 1, the second (window-rejected) claims node 2 from
+        // the shadow on. The same long 8-core job now crosses *some* claim
+        // on every node, so admitting it would push a reservation back —
+        // the timeline rejects it (the earliest-shadow gate could not even
+        // see which resources the second reservation counted on).
+        let mut api = api();
+        let mut sched = Scheduler::new(
+            SchedulerConfig::volcano_default(1)
+                .with_queue(QueuePolicyKind::ConservativeBackfill),
+        );
+        for i in 1..=8 {
+            submit(&mut api, &VolcanoMpiController, GranularityPolicy::None, i, Benchmark::EpDgemm);
+        }
+        assert_eq!(sched.cycle(&mut api, 0.0).len(), 8);
+        finish_one_on(&mut api, NodeId(1), 2.0);
+        finish_one_on(&mut api, NodeId(2), 2.0);
+        let blocker_a = submit_sized(&mut api, 9, Benchmark::EpDgemm, 32);
+        let blocker_b = submit_sized(&mut api, 10, Benchmark::EpDgemm, 32);
+        let long_narrow = submit_sized(&mut api, 11, Benchmark::MiniFe, 8);
+        let started = sched.cycle(&mut api, 2.0);
+        assert!(started.is_empty(), "no job may delay the held reservations: {started:?}");
+        assert_eq!(api.pending_jobs(), vec![blocker_a, blocker_b, long_narrow]);
     }
 
     #[test]
@@ -864,6 +1055,98 @@ mod tests {
         let started = sched.cycle(&mut api, 2.0);
         assert_eq!(started, vec![short], "short job backfills under both reservations");
         assert_eq!(api.pending_jobs(), vec![blocker, second]);
+    }
+
+    #[test]
+    fn heterogeneous_scoring_prefers_smallest_fitting_class() {
+        use crate::cluster::HeterogeneityMix;
+        // An 8-core single-worker job on an idle fat/thin cluster fits
+        // both classes; the best-fit term biases placement onto thin
+        // nodes (preserving the fat nodes for wide pods). The jitter term
+        // keeps it stochastic, so assert a strong majority across seeds.
+        let mut thin_wins = 0;
+        for seed in 0..20u64 {
+            let mut api = ApiServer::new(
+                ClusterSpec::mixed(8, HeterogeneityMix::FatThin),
+                KubeletConfig::cpu_mem_affinity(),
+            );
+            let job = submit_sized(&mut api, 1, Benchmark::EpDgemm, 8);
+            let mut sched = Scheduler::new(SchedulerConfig::volcano_default(seed));
+            assert_eq!(sched.cycle(&mut api, 0.0), vec![job]);
+            let node = api.worker_pods_of(job)[0].node.unwrap();
+            if api.spec.node(node).allocatable_cores() == 16 {
+                thin_wins += 1;
+            }
+        }
+        assert!(thin_wins >= 15, "thin nodes won only {thin_wins}/20 placements");
+    }
+
+    #[test]
+    fn heterogeneous_wide_gang_only_fits_fat_nodes() {
+        use crate::cluster::HeterogeneityMix;
+        // A 32-core single worker exceeds the thin class (16 cores): the
+        // predicate must confine it to a fat node.
+        let mut api = ApiServer::new(
+            ClusterSpec::mixed(8, HeterogeneityMix::FatThin),
+            KubeletConfig::cpu_mem_affinity(),
+        );
+        let job = submit_sized(&mut api, 1, Benchmark::EpDgemm, 32);
+        let mut sched = Scheduler::new(SchedulerConfig::volcano_default(3));
+        assert_eq!(sched.cycle(&mut api, 0.0), vec![job]);
+        let node = api.worker_pods_of(job)[0].node.unwrap();
+        assert_eq!(api.spec.node(node).allocatable_cores(), 64, "must land on a fat node");
+    }
+
+    #[test]
+    fn heterogeneous_preemption_evicts_only_victims_on_useful_nodes() {
+        use crate::cluster::HeterogeneityMix;
+        // Cluster: 1 fat (64 cores) + 3 thin (16 cores). Fill every node
+        // with low-priority 16-core jobs (4 fit the fat node), then submit
+        // a high-priority 32-core job: only fat-node victims can help, and
+        // the minimal set holds exactly two of them.
+        let mut api = ApiServer::new(
+            ClusterSpec::heterogeneous(&[
+                crate::cluster::NodeClass::fat(1),
+                crate::cluster::NodeClass::thin(3),
+            ])
+            .unwrap(),
+            KubeletConfig::cpu_mem_affinity(),
+        );
+        let mut sched =
+            Scheduler::new(SchedulerConfig::volcano_default(1).with_preemption(true));
+        for i in 1..=7 {
+            submit_sized(&mut api, i, Benchmark::EpDgemm, 16);
+        }
+        assert_eq!(sched.cycle(&mut api, 0.0).len(), 7, "cluster fully packed");
+        let fat_node = api
+            .spec
+            .node_ids()
+            .find(|&n| api.spec.node(n).role == NodeRole::Worker
+                && api.spec.node(n).allocatable_cores() == 64)
+            .unwrap();
+        let mut spec = JobSpec::paper_job(8, Benchmark::EpDgemm, 1.0);
+        spec.ntasks = 32;
+        spec.resources = Resources::new(32_000, 32 * crate::cluster::gib(2));
+        spec.priority = 10;
+        let info = SystemInfo::of(&api.spec);
+        let planned = plan(&spec, GranularityPolicy::None, info);
+        let hi = planned.spec.id;
+        let (pods, hostfile) = VolcanoMpiController.build(&planned, &mut api);
+        api.create_job(planned, pods, hostfile, 1.0);
+        assert_eq!(sched.cycle(&mut api, 1.0), vec![hi]);
+        let victims = sched.take_preempted();
+        assert_eq!(victims.len(), 2, "minimal set: two fat-node victims: {victims:?}");
+        for v in &victims {
+            // Victims' (released) pods all lived on the fat node.
+            for pid in &api.jobs[v].pods {
+                let pod = &api.pods[pid];
+                if pod.is_worker() {
+                    assert_eq!(pod.phase, PodPhase::Pending, "victim released");
+                }
+            }
+        }
+        // And the high-priority worker landed on the fat node.
+        assert_eq!(api.worker_pods_of(hi)[0].node, Some(fat_node));
     }
 
     #[test]
@@ -910,7 +1193,7 @@ mod tests {
     ) -> JobId {
         let spec = JobSpec::paper_job(id, bench, now)
             .with_tenant(crate::workload::TenantId(priority.min(1)), priority);
-        let info = SystemInfo { available_nodes: api.spec.worker_count() as u32 };
+        let info = SystemInfo::of(&api.spec);
         let planned = plan(&spec, policy, info);
         let job_id = planned.spec.id;
         let (pods, hostfile) = VolcanoMpiController.build(&planned, api);
@@ -1102,11 +1385,11 @@ mod tests {
             // cluster; the rest stay pending.
             sched.cycle(&mut api, 0.0);
 
-            let mut state = SessionState {
-                free: api.spec.node_ids().map(|nd| api.free_on(nd)).collect(),
-                placement: Scheduler::rebuild_placement(&api),
-                log: Vec::new(),
-            };
+            let mut state = SessionState::new(
+                &api,
+                api.spec.node_ids().map(|nd| api.free_on(nd)).collect(),
+                Scheduler::rebuild_placement(&api),
+            );
             let mut frames = Vec::new();
             for &job in &api.pending_jobs() {
                 frames.push((state.checkpoint(), state.free.clone(), state.placement.clone()));

@@ -1,12 +1,17 @@
 //! Job-queue policy subsystem — *which job goes next* (the layer next to
 //! the placement plugins, which decide *where* its pods land).
 //!
-//! The paper's scheduler walks the pending queue FIFO and silently skips
-//! gang-blocked jobs, so a large job at the head can starve behind a
-//! stream of small ones. This module makes the queue discipline a plugin:
-//! a [`QueuePolicy`] orders the pending queue, decides skip-vs-block on a
-//! gang failure, and may hold an EASY-style backfill reservation for the
-//! first blocked job, computed from the projected completion times of the
+//! In the paper's multi-layer design this sits inside the
+//! infrastructure-layer scheduler: the application-layer planner has
+//! already chosen each job's granularity, the controller has built its
+//! pods, and the queue discipline decides the order in which the
+//! [`crate::scheduler::Scheduler`] session tries to place the resulting
+//! gangs. The paper's own scheduler walks the pending queue FIFO and
+//! silently skips gang-blocked jobs, so a large job at the head can
+//! starve behind a stream of small ones. This module makes the queue
+//! discipline a plugin: a [`QueuePolicy`] orders the pending queue,
+//! decides skip-vs-block on a gang failure, and may hold backfill
+//! reservations computed from the projected completion times of the
 //! running jobs.
 //!
 //! Six implementations:
@@ -20,10 +25,11 @@
 //!   reservation at its *shadow time* (the projected instant enough
 //!   resources free up for its gang), and later jobs are backfilled only
 //!   if their estimated completion does not cross the shadow time;
-//! - [`ConservativeBackfill`] — like EASY, but *every* blocked job holds a
-//!   reservation: a later job may start only if it is projected to finish
-//!   before the earliest held shadow time, so no queued job's start is
-//!   ever pushed back (up to estimate error);
+//! - [`ConservativeBackfill`] — *every* blocked job holds a reservation,
+//!   tracked on a per-resource availability profile
+//!   ([`ResourceTimeline`]): backfills may use holes behind reservations
+//!   but can never take resources a reservation counted on, so no queued
+//!   job's start is ever pushed back (up to estimate error);
 //! - [`FairShare`] — multi-tenant weighted deficit ordering: tenants with
 //!   the least weight-normalized service consumed go first, then priority,
 //!   then FIFO within a tenant.
@@ -31,7 +37,7 @@
 use std::collections::BTreeMap;
 
 use crate::apiserver::ApiServer;
-use crate::cluster::{ClusterSpec, JobId, NodeRole, Pod, PodPhase, PodRole, Resources};
+use crate::cluster::{ClusterSpec, JobId, NodeId, NodeRole, Pod, PodPhase, PodRole, Resources};
 use crate::perfmodel::{walltime_factor, Calibration};
 
 /// Selector for the queue discipline, carried by `SchedulerConfig`
@@ -151,6 +157,28 @@ pub enum GangDecision {
 /// backfill hooks only fire under gang all-or-nothing (`config.gang`), so
 /// the block/reserve disciplines are rejected for no-gang profiles at the
 /// CLI/config boundary rather than silently degrading to FIFO-skip.
+///
+/// # Examples
+///
+/// ```
+/// use kube_fgs::scheduler::{QueuePolicy, QueuePolicyKind};
+///
+/// // Parse a CLI/config spelling and build the discipline it names.
+/// let kind = QueuePolicyKind::parse("easy").unwrap();
+/// assert_eq!(kind, QueuePolicyKind::EasyBackfill);
+/// let policy: Box<dyn QueuePolicy> = kind.build();
+/// assert_eq!(policy.kind(), kind);
+///
+/// // EASY reads the running jobs' projected completions for its shadow
+/// // time, and its reserve semantics only exist under gang scheduling.
+/// assert!(policy.needs_projections());
+/// assert!(kind.requires_gang());
+///
+/// // Conservative backfilling reserves for every blocked job; EASY only
+/// // for the first.
+/// assert!(QueuePolicyKind::ConservativeBackfill.build().reserves_every_job());
+/// assert!(!policy.reserves_every_job());
+/// ```
 pub trait QueuePolicy {
     fn kind(&self) -> QueuePolicyKind;
 
@@ -221,17 +249,19 @@ pub fn estimated_completions(api: &ApiServer, now: f64) -> BTreeMap<JobId, f64> 
 }
 
 /// Greedy role-constrained first-fit of `pods` into the per-node `free`
-/// vector, mutating it as pods are placed. Returns false as soon as some
-/// pod cannot fit. A cheap stand-in for a full scored placement, shared
-/// by the EASY shadow-time search and the simulator's submit-time
-/// gang-feasibility check.
-pub fn first_fit_pods<'a>(
+/// vector, mutating it as pods are placed and returning the per-pod
+/// `(node, requests)` assignment in input order, or `None` as soon as
+/// some pod cannot fit. A cheap stand-in for a full scored placement,
+/// shared by the EASY shadow-time search, the conservative resource
+/// timeline, and the simulator's submit-time gang-feasibility check.
+pub fn first_fit_assignment<'a>(
     spec: &ClusterSpec,
     free: &mut [Resources],
     pods: impl Iterator<Item = &'a Pod>,
-) -> bool {
+) -> Option<Vec<(NodeId, Resources)>> {
+    let mut placed = Vec::new();
     for pod in pods {
-        let mut placed = false;
+        let mut chosen = None;
         for (n, f) in free.iter_mut().enumerate() {
             let role_ok = match pod.role {
                 PodRole::Launcher => spec.nodes[n].role == NodeRole::ControlPlane,
@@ -239,15 +269,26 @@ pub fn first_fit_pods<'a>(
             };
             if role_ok && pod.requests.fits_within(f) {
                 *f -= pod.requests;
-                placed = true;
+                chosen = Some(NodeId(n));
                 break;
             }
         }
-        if !placed {
-            return false;
+        match chosen {
+            Some(node) => placed.push((node, pod.requests)),
+            None => return None,
         }
     }
-    true
+    Some(placed)
+}
+
+/// Boolean form of [`first_fit_assignment`] for callers that only need
+/// feasibility.
+pub fn first_fit_pods<'a>(
+    spec: &ClusterSpec,
+    free: &mut [Resources],
+    pods: impl Iterator<Item = &'a Pod>,
+) -> bool {
+    first_fit_assignment(spec, free, pods).is_some()
 }
 
 /// Can `job`'s pending pods be first-fit placed into `free`? Shared by the
@@ -297,6 +338,147 @@ pub fn shadow_time(ctx: &QueueContext<'_>, job: JobId) -> Option<f64> {
         }
     }
     None
+}
+
+/// Per-resource availability profile for conservative backfilling: a step
+/// function `time -> per-node free resources`, seeded from the session's
+/// free view plus the projected completion of every running job. Blocked
+/// jobs *claim* their reservation window `[start, start + walltime)` out
+/// of the profile, so every later decision sees exactly what is left:
+///
+/// - a backfill may use holes *behind* reservations (the earlier
+///   earliest-shadow-only gate rejected any job whose estimate crossed the
+///   first shadow, even when it took nothing a reservation counted on);
+/// - a backfill can never occupy resources a reservation counted on (the
+///   earlier gate could not see *which* resources a shadow referred to, so
+///   a second blocked job's reservation could be silently violated).
+#[derive(Debug, Clone)]
+pub struct ResourceTimeline {
+    /// `(segment start, per-node free)` sorted by time. The first segment
+    /// starts at the session's `now`; each segment extends to the next
+    /// start, the last one to infinity.
+    points: Vec<(f64, Vec<Resources>)>,
+}
+
+impl ResourceTimeline {
+    /// Build the release profile at `ctx.now`: the session's free view,
+    /// growing at each running job's projected completion.
+    pub fn new(ctx: &QueueContext<'_>) -> ResourceTimeline {
+        let mut releases: Vec<(f64, JobId)> = ctx
+            .api
+            .running_jobs()
+            .into_iter()
+            .map(|id| {
+                let t = ctx
+                    .projected_completion
+                    .get(&id)
+                    .copied()
+                    .unwrap_or_else(|| ctx.now + estimated_runtime(ctx.api, id));
+                (t.max(ctx.now), id)
+            })
+            .collect();
+        releases.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let mut points = vec![(ctx.now, ctx.free.to_vec())];
+        for (t, id) in releases {
+            let mut free = points.last().unwrap().1.clone();
+            for pid in &ctx.api.jobs[&id].pods {
+                let pod = &ctx.api.pods[pid];
+                if let (Some(node), PodPhase::Bound | PodPhase::Running) =
+                    (pod.node, pod.phase)
+                {
+                    free[node.0] += pod.requests;
+                }
+            }
+            let last = points.last_mut().unwrap();
+            if (t - last.0).abs() < 1e-9 {
+                last.1 = free;
+            } else {
+                points.push((t, free));
+            }
+        }
+        ResourceTimeline { points }
+    }
+
+    /// Elementwise minimum free over the window `[from, until)` — the
+    /// capacity a job running through that window may rely on.
+    pub fn min_free_over(&self, from: f64, until: f64) -> Vec<Resources> {
+        let mut min: Option<Vec<Resources>> = None;
+        for (i, (start, free)) in self.points.iter().enumerate() {
+            let end = self.points.get(i + 1).map(|p| p.0).unwrap_or(f64::INFINITY);
+            if end <= from || *start >= until {
+                continue;
+            }
+            match &mut min {
+                None => min = Some(free.clone()),
+                Some(m) => {
+                    for (mm, f) in m.iter_mut().zip(free) {
+                        mm.cpu_milli = mm.cpu_milli.min(f.cpu_milli);
+                        mm.mem_bytes = mm.mem_bytes.min(f.mem_bytes);
+                    }
+                }
+            }
+        }
+        min.unwrap_or_else(|| self.points.last().unwrap().1.clone())
+    }
+
+    /// Ensure a segment boundary exists at `t` (cloning the covering
+    /// segment's free view) and return its index.
+    fn ensure_point(&mut self, t: f64) -> usize {
+        match self.points.iter().position(|(s, _)| *s >= t - 1e-9) {
+            Some(i) if (self.points[i].0 - t).abs() < 1e-9 => i,
+            Some(i) => {
+                debug_assert!(i >= 1, "claim before the profile start");
+                let free = self.points[i - 1].1.clone();
+                self.points.insert(i, (t, free));
+                i
+            }
+            None => {
+                let free = self.points.last().unwrap().1.clone();
+                self.points.push((t, free));
+                self.points.len() - 1
+            }
+        }
+    }
+
+    /// Subtract a placement from every segment overlapping
+    /// `[start, end)`. Callers verify the placement fits
+    /// [`ResourceTimeline::min_free_over`] of the same window first;
+    /// the subtraction saturates as a belt-and-braces guard against
+    /// floating-point boundary cases.
+    pub fn claim(&mut self, start: f64, end: f64, placement: &[(NodeId, Resources)]) {
+        let i0 = self.ensure_point(start);
+        let i1 = self.ensure_point(end);
+        for (_, free) in &mut self.points[i0..i1] {
+            for &(node, req) in placement {
+                free[node.0] = free[node.0].saturating_sub(&req);
+            }
+        }
+    }
+
+    /// Earliest start `t >= now` at which `job`'s pending gang first-fits
+    /// the profile for its whole window `[t, t + est)`, with the placement
+    /// found. `None` when no segment admits it (the job is infeasible
+    /// under the current claims even with everything released).
+    pub fn earliest_fit(
+        &self,
+        api: &ApiServer,
+        job: JobId,
+        est: f64,
+    ) -> Option<(f64, Vec<(NodeId, Resources)>)> {
+        for i in 0..self.points.len() {
+            let t = self.points[i].0;
+            let mut min = self.min_free_over(t, t + est);
+            let pending = api.jobs[&job]
+                .pods
+                .iter()
+                .map(|pid| &api.pods[pid])
+                .filter(|p| p.phase == PodPhase::Pending);
+            if let Some(placement) = first_fit_assignment(&api.spec, &mut min, pending) {
+                return Some((t, placement));
+            }
+        }
+        None
+    }
 }
 
 /// Seed behaviour: FIFO, blocked jobs skipped.
@@ -402,19 +584,22 @@ impl QueuePolicy for EasyBackfill {
 }
 
 /// Conservative backfilling (Mu'alem & Feitelson '01): FIFO, with a
-/// shadow-time reservation for *every* blocked job of the session. A later
-/// job may start only if its estimated completion stays before the
-/// earliest held shadow time, so no queued job's reservation is ever
-/// pushed back.
+/// resource reservation for *every* blocked job of the session.
 ///
-/// Approximation boundary: a full conservative scheduler maintains a
-/// resource-time profile and lets backfills use holes *behind* later
-/// reservations; this implementation reuses the EASY shadow-time machinery
-/// and gates every backfill on the earliest reservation — strictly safer
-/// (never delays anyone) at some utilization cost, and deterministic.
-/// Window-rejected jobs that are waiting on a future release reserve too;
-/// a job the window holds despite fitting *now* adds no reservation (it
-/// would zero the window) and relies on the next session's FIFO retry.
+/// The scheduler runs this discipline against a true per-resource
+/// availability profile ([`ResourceTimeline`]): each blocked job claims
+/// its `[start, start + walltime)` window out of the profile at the
+/// earliest instant its gang fits, and a later job may start only if its
+/// own window first-fits what is left. Backfills can therefore use holes
+/// *behind* reservations, and can never occupy resources a reservation
+/// counted on — the earlier earliest-shadow-only gate could do neither
+/// (it rejected any estimate crossing the first shadow, yet could still
+/// silently violate a *second* blocked job's reservation, whose shadow
+/// ignored the first reservation's future occupancy).
+///
+/// The trait's own `on_gang_failure`/`may_backfill` hooks keep the
+/// scalar-shadow semantics for standalone callers; `Scheduler` sessions
+/// use the timeline (see `cycle_with_projections`).
 pub struct ConservativeBackfill;
 
 impl QueuePolicy for ConservativeBackfill {
@@ -501,7 +686,7 @@ mod tests {
 
     fn api_with_jobs(benches: &[Benchmark]) -> ApiServer {
         let mut api = ApiServer::new(ClusterSpec::paper(), KubeletConfig::cpu_mem_affinity());
-        let info = SystemInfo { available_nodes: 4 };
+        let info = SystemInfo::homogeneous(4);
         for (i, &b) in benches.iter().enumerate() {
             let spec = JobSpec::paper_job(i as u64 + 1, b, i as f64);
             let planned = plan(&spec, GranularityPolicy::None, info);
@@ -578,7 +763,7 @@ mod tests {
         // Jobs 1..4: tenants A, A, B, B (equal shapes). Tenant A has
         // consumed service; B has not — B's jobs go first.
         let mut api = ApiServer::new(ClusterSpec::paper(), KubeletConfig::cpu_mem_affinity());
-        let info = SystemInfo { available_nodes: 4 };
+        let info = SystemInfo::homogeneous(4);
         for (i, (tenant, priority)) in
             [(TenantId(0), 0u32), (TenantId(0), 5), (TenantId(1), 0), (TenantId(1), 5)]
                 .into_iter()
@@ -655,7 +840,7 @@ mod tests {
         let mut spec = JobSpec::paper_job(7, Benchmark::EpDgemm, 0.0);
         spec.ntasks = 64;
         spec.resources = crate::cluster::Resources::new(64_000, crate::cluster::gib(128));
-        let planned = plan(&spec, GranularityPolicy::None, SystemInfo { available_nodes: 4 });
+        let planned = plan(&spec, GranularityPolicy::None, SystemInfo::homogeneous(4));
         let (pods, hostfile) = VolcanoMpiController.build(&planned, &mut api);
         api.create_job(planned, pods, hostfile, 0.0);
         let free: Vec<Resources> = api.spec.node_ids().map(|n| api.free_on(n)).collect();
@@ -667,6 +852,42 @@ mod tests {
             GangDecision::Skip,
             "infeasible jobs must not dam the queue"
         );
+    }
+
+    #[test]
+    fn resource_timeline_claims_shift_later_fits() {
+        // Full cluster (8 running 16-core DGEMMs), staggered projected
+        // completions at 100, 110, ... The profile's base equals the
+        // session free view, the far future equals the idle cluster, the
+        // blocked job first fits at the earliest release, and claiming
+        // that window pushes an identical job to the *next* release.
+        let mut api = api_with_jobs(&[Benchmark::EpDgemm; 9]);
+        let mut sched = crate::scheduler::Scheduler::new(
+            crate::scheduler::SchedulerConfig::volcano_default(1),
+        );
+        let started = sched.cycle(&mut api, 0.0);
+        assert_eq!(started.len(), 8);
+        let blocked = api.pending_jobs()[0];
+        let mut projected = BTreeMap::new();
+        for (i, &j) in started.iter().enumerate() {
+            projected.insert(j, 100.0 + i as f64 * 10.0);
+        }
+        let free: Vec<Resources> = api.spec.node_ids().map(|n| api.free_on(n)).collect();
+        let ctx =
+            QueueContext { api: &api, now: 9.0, projected_completion: &projected, free: &free };
+        let tl = ResourceTimeline::new(&ctx);
+        assert_eq!(tl.min_free_over(9.0, 9.5), free, "base segment = session free");
+        let idle = tl.min_free_over(1e6, 1e6 + 1.0);
+        for n in api.spec.node_ids() {
+            assert_eq!(idle[n.0], api.spec.node(n).allocatable(), "far future = idle");
+        }
+        let est = estimated_runtime(&api, blocked);
+        let (t_s, placement) = tl.earliest_fit(&api, blocked, est).unwrap();
+        assert_eq!(t_s, 100.0, "earliest release admits the gang");
+        let mut claimed = tl.clone();
+        claimed.claim(t_s, t_s + est, &placement);
+        let (t_s2, _) = claimed.earliest_fit(&api, blocked, est).unwrap();
+        assert!(t_s2 > t_s, "claimed window pushes the next fit later: {t_s2}");
     }
 
     #[test]

@@ -9,14 +9,26 @@
 //! Event loop: the next event is either the next job arrival or the
 //! earliest projected completion; between events every running job's
 //! remaining work decreases linearly at its current rate.
+//!
+//! In the paper's multi-layer design this module is the experiment
+//! driver: it couples the planner (granularity selection) to a controller
+//! (pod construction), the scheduler (placement + queues + preemption),
+//! the kubelets (cpuset admission) and the perf model, and integrates job
+//! progress over time. Rates are maintained *incrementally*: a placement
+//! event (start/finish/preempt) only recomputes the jobs whose contention
+//! set changed, against a load snapshot patched per-node from cached
+//! contributions — bit-identical to the full rescan (see
+//! [`Simulation::force_full_recompute`] and the property tests).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::apiserver::{ApiServer, JobPhase};
-use crate::cluster::{ClusterSpec, JobId, Pod, Resources};
+use crate::cluster::{ClusterSpec, JobId, NodeId, Pod, Resources};
 use crate::controller::JobController;
 use crate::kubelet::KubeletConfig;
-use crate::perfmodel::{job_slowdown_with, Calibration, ClusterLoads};
+use crate::perfmodel::{
+    job_nic_demands, job_slowdown_with, job_socket_demands, Calibration, ClusterLoads,
+};
 use crate::planner::{plan, GranularityPolicy, SystemInfo};
 use crate::scheduler::{Scheduler, SchedulerConfig};
 use crate::util::Rng;
@@ -119,6 +131,21 @@ impl SimOutput {
     }
 }
 
+/// One running job's cached contribution to the cluster-wide load
+/// snapshot, captured at placement time so release events can update the
+/// snapshot without re-reading (already released) pods.
+#[derive(Debug, Clone, Default)]
+struct JobContribution {
+    /// Distinct nodes hosting this job's workers — its contention set.
+    nodes: BTreeSet<NodeId>,
+    /// Per-node per-socket memory-bandwidth demand (bytes/s).
+    socket: BTreeMap<NodeId, Vec<f64>>,
+    /// Per-node NIC demand (bytes/s); empty for node-local traffic.
+    nic: BTreeMap<NodeId, f64>,
+    /// Per-node running MPI task counts.
+    tasks: BTreeMap<NodeId, u32>,
+}
+
 /// A fully configured simulation: cluster + kubelet setting + planner
 /// policy + controller + scheduler profile + perf model.
 pub struct Simulation {
@@ -134,6 +161,24 @@ pub struct Simulation {
     suspended: BTreeMap<JobId, JobProgress>,
     unschedulable: Vec<JobId>,
     now: f64,
+    /// Incrementally maintained cluster-wide load snapshot — equal (bit
+    /// for bit, in every value the perf model reads) to
+    /// `ClusterLoads::snapshot` at all times; a debug assertion re-derives
+    /// the full snapshot after every placement delta to pin this.
+    loads: ClusterLoads,
+    /// Cached per-job contributions backing `loads` (§Perf: release
+    /// events subtract a cached contribution instead of rescanning the
+    /// running set).
+    contrib: BTreeMap<JobId, JobContribution>,
+    /// node -> running jobs with at least one worker there (the
+    /// contention index: a placement change on a node only dirties the
+    /// rates of the jobs listed there).
+    jobs_on_node: BTreeMap<NodeId, BTreeSet<JobId>>,
+    /// Run every rate update as a full running-set rescan (the
+    /// pre-incremental behaviour). Benches compare the two modes; must be
+    /// set before `run` and left alone (the incremental caches go stale
+    /// in full mode).
+    pub force_full_recompute: bool,
     /// Per-benchmark ideal work override (seconds); defaults to
     /// `Benchmark::base_running_secs`. The e2e driver feeds PJRT-measured
     /// kernel times through this.
@@ -161,6 +206,14 @@ impl Simulation {
             suspended: BTreeMap::new(),
             unschedulable: Vec::new(),
             now: 0.0,
+            loads: ClusterLoads {
+                socket_demands: BTreeMap::new(),
+                nic_demands: BTreeMap::new(),
+                tasks_on_node: BTreeMap::new(),
+            },
+            contrib: BTreeMap::new(),
+            jobs_on_node: BTreeMap::new(),
+            force_full_recompute: false,
             base_work: BTreeMap::new(),
         }
     }
@@ -181,8 +234,10 @@ impl Simulation {
         self.now = t;
     }
 
-    /// Recompute every running job's rate from the current cluster state.
-    /// The cluster-wide load snapshot is computed once and shared (§Perf).
+    /// Recompute every running job's rate from a fresh cluster-wide load
+    /// snapshot — the full-rescan reference path, forced by
+    /// [`Simulation::force_full_recompute`]; the maintained snapshot is
+    /// replaced so the debug cross-check stays meaningful.
     fn recompute_rates(&mut self) {
         let ids: Vec<JobId> = self.progress.keys().copied().collect();
         let loads = ClusterLoads::snapshot(&self.api);
@@ -192,6 +247,151 @@ impl Simulation {
                 job_slowdown_with(&self.api, id, &self.calib, noise, &loads).total;
             debug_assert!(slowdown >= 1.0 - 1e-9, "slowdown {slowdown} < 1");
             self.progress.get_mut(&id).unwrap().rate = 1.0 / slowdown;
+        }
+        self.loads = loads;
+    }
+
+    /// Capture one just-started job's contribution to the load snapshot.
+    fn contribution_of(&self, job_id: JobId) -> JobContribution {
+        let socket = job_socket_demands(&self.api, job_id);
+        let nic = job_nic_demands(&self.api, job_id);
+        let mut tasks: BTreeMap<NodeId, u32> = BTreeMap::new();
+        let mut nodes: BTreeSet<NodeId> = BTreeSet::new();
+        for pod in self.api.worker_pods_of(job_id) {
+            if let Some(node) = pod.node {
+                *tasks.entry(node).or_insert(0) += pod.ntasks;
+                nodes.insert(node);
+            }
+        }
+        JobContribution { nodes, socket, nic, tasks }
+    }
+
+    /// Apply a placement delta (jobs started / jobs whose placement was
+    /// released by completion or preemption) to the maintained load
+    /// snapshot, then recompute rates for exactly the jobs whose
+    /// contention set changed: the started jobs plus every running job
+    /// sharing a node with any change (§Perf: the full rescan walked the
+    /// whole running set — and snapshotted the whole cluster — on every
+    /// event, which dominates 128-worker sweeps).
+    ///
+    /// The dirtied nodes' load entries are rebuilt from the cached
+    /// contributions in ascending job order — the same floating-point
+    /// accumulation sequence as `ClusterLoads::snapshot` — so the
+    /// maintained snapshot (and therefore every rate, and every simulated
+    /// timestamp) is *bit-identical* to the full-rescan path.
+    fn apply_placement_delta(&mut self, added: &[JobId], removed: &[JobId]) {
+        if self.force_full_recompute {
+            self.recompute_rates();
+            return;
+        }
+        let mut changed_nodes: BTreeSet<NodeId> = BTreeSet::new();
+        for id in removed {
+            if let Some(c) = self.contrib.remove(id) {
+                for &n in &c.nodes {
+                    changed_nodes.insert(n);
+                    if let Some(set) = self.jobs_on_node.get_mut(&n) {
+                        set.remove(id);
+                        if set.is_empty() {
+                            self.jobs_on_node.remove(&n);
+                        }
+                    }
+                }
+            }
+        }
+        for &id in added {
+            let c = self.contribution_of(id);
+            for &n in &c.nodes {
+                changed_nodes.insert(n);
+                self.jobs_on_node.entry(n).or_default().insert(id);
+            }
+            self.contrib.insert(id, c);
+        }
+
+        // Rebuild each dirtied node's entries from the cached
+        // contributions (ascending job order, matching the snapshot).
+        for &n in &changed_nodes {
+            let mut socket: Option<Vec<f64>> = None;
+            let mut nic: Option<f64> = None;
+            let mut tasks: Option<u32> = None;
+            if let Some(jobs) = self.jobs_on_node.get(&n) {
+                for id in jobs {
+                    let c = &self.contrib[id];
+                    if let Some(d) = c.socket.get(&n) {
+                        let s = socket.get_or_insert_with(|| vec![0.0; d.len()]);
+                        for (e, v) in s.iter_mut().zip(d) {
+                            *e += v;
+                        }
+                    }
+                    if let Some(d) = c.nic.get(&n) {
+                        *nic.get_or_insert(0.0) += d;
+                    }
+                    if let Some(t) = c.tasks.get(&n) {
+                        *tasks.get_or_insert(0) += t;
+                    }
+                }
+            }
+            match socket {
+                Some(s) => {
+                    self.loads.socket_demands.insert(n, s);
+                }
+                None => {
+                    self.loads.socket_demands.remove(&n);
+                }
+            }
+            match nic {
+                Some(v) => {
+                    self.loads.nic_demands.insert(n, v);
+                }
+                None => {
+                    self.loads.nic_demands.remove(&n);
+                }
+            }
+            match tasks {
+                Some(t) => {
+                    self.loads.tasks_on_node.insert(n, t);
+                }
+                None => {
+                    self.loads.tasks_on_node.remove(&n);
+                }
+            }
+        }
+
+        // Dirty set: the started jobs plus every running job touching a
+        // changed node.
+        let mut affected: BTreeSet<JobId> = added.iter().copied().collect();
+        for n in &changed_nodes {
+            if let Some(set) = self.jobs_on_node.get(n) {
+                affected.extend(set.iter().copied());
+            }
+        }
+        for id in affected {
+            if let Some(noise) = self.progress.get(&id).map(|p| p.noise) {
+                let slowdown =
+                    job_slowdown_with(&self.api, id, &self.calib, noise, &self.loads).total;
+                debug_assert!(slowdown >= 1.0 - 1e-9, "slowdown {slowdown} < 1");
+                self.progress.get_mut(&id).unwrap().rate = 1.0 / slowdown;
+            }
+        }
+        #[cfg(debug_assertions)]
+        self.assert_rates_match_full_recompute();
+    }
+
+    /// Debug-build property pin: every maintained rate must equal the rate
+    /// a full snapshot + rescan would produce, bit for bit. Runs after
+    /// every placement delta of every debug-mode simulation, so the whole
+    /// test suite exercises the equivalence on its traces.
+    #[cfg(debug_assertions)]
+    fn assert_rates_match_full_recompute(&self) {
+        let loads = ClusterLoads::snapshot(&self.api);
+        for (&id, p) in &self.progress {
+            let slowdown = job_slowdown_with(&self.api, id, &self.calib, p.noise, &loads).total;
+            let full = 1.0 / slowdown;
+            assert!(
+                p.rate.to_bits() == full.to_bits(),
+                "incremental rate drifted for {id:?}: {} vs full {}",
+                p.rate,
+                full
+            );
         }
     }
 
@@ -209,7 +409,7 @@ impl Simulation {
     /// total allocatable per role) are registered but immediately marked
     /// unschedulable instead of stalling the event loop forever.
     fn submit(&mut self, spec: &JobSpec) {
-        let info = SystemInfo { available_nodes: self.api.spec.worker_count() as u32 };
+        let info = SystemInfo::of(&self.api.spec);
         let planned = plan(spec, self.policy, info);
         let (pods, hostfile) = self.controller.build(&planned, &mut self.api);
         let job_id = planned.spec.id;
@@ -245,7 +445,7 @@ impl Simulation {
         if started.is_empty() && preempted.is_empty() {
             return;
         }
-        for job_id in started {
+        for &job_id in &started {
             let bench = self.api.jobs[&job_id].planned.spec.benchmark;
             match self.suspended.remove(&job_id) {
                 Some(mut p) => {
@@ -268,7 +468,7 @@ impl Simulation {
                 }
             }
         }
-        self.recompute_rates();
+        self.apply_placement_delta(&started, &preempted);
     }
 
     /// Run a trace to completion; returns per-job records + final state.
@@ -332,12 +532,12 @@ impl Simulation {
                     .map(|(&id, _)| id)
                     .collect();
                 debug_assert!(!done.is_empty(), "completion event with no finished job");
-                for id in done {
+                for &id in &done {
                     self.progress.remove(&id);
                     self.api.finish_job(id, self.now);
                     finished += 1;
                 }
-                self.recompute_rates();
+                self.apply_placement_delta(&[], &done);
             }
 
             // State changed: run a scheduling session (Volcano reacts to
@@ -642,6 +842,86 @@ mod tests {
             hi.response(),
             hi_base.response()
         );
+    }
+
+    /// Property: the incrementally maintained rate path produces
+    /// *bit-identical* simulations to the full-rescan reference, across
+    /// cluster shapes (homogeneous + two heterogeneity mixes), schedulers,
+    /// and preemption churn. (In debug builds every placement delta
+    /// additionally re-verifies each maintained rate against a fresh full
+    /// snapshot — see `assert_rates_match_full_recompute`.)
+    #[test]
+    fn prop_incremental_rates_match_full_recompute_bitwise() {
+        use crate::cluster::HeterogeneityMix;
+        use crate::workload::two_tenant_trace;
+        for case in 0..6u64 {
+            let cluster = || match case % 3 {
+                0 => ClusterSpec::paper(),
+                1 => ClusterSpec::mixed(6, HeterogeneityMix::FatThin),
+                _ => ClusterSpec::mixed(6, HeterogeneityMix::Tiered),
+            };
+            let kubelet = if case % 2 == 0 {
+                KubeletConfig::cpu_mem_affinity()
+            } else {
+                KubeletConfig::default_policy()
+            };
+            let mk = |force: bool| {
+                let mut s = Simulation::new(
+                    cluster(),
+                    kubelet,
+                    GranularityPolicy::Granularity,
+                    Box::new(VolcanoMpiController),
+                    SchedulerConfig::fine_grained(case).with_preemption(true),
+                    Calibration::default(),
+                    case,
+                );
+                s.force_full_recompute = force;
+                s
+            };
+            let trace = two_tenant_trace(12, 40.0, case);
+            let key = |o: &SimOutput| {
+                o.records
+                    .iter()
+                    .map(|r| (r.id, r.start_time.to_bits(), r.finish_time.to_bits()))
+                    .collect::<Vec<_>>()
+            };
+            let incremental = mk(false).run(&trace);
+            let full = mk(true).run(&trace);
+            assert_eq!(key(&incremental), key(&full), "case {case}");
+            assert_eq!(incremental.unschedulable, full.unschedulable, "case {case}");
+        }
+    }
+
+    #[test]
+    fn heterogeneous_cluster_completes_and_respects_class_capacity() {
+        use crate::cluster::{HeterogeneityMix, PodPhase};
+        let s = Simulation::new(
+            ClusterSpec::mixed(8, HeterogeneityMix::FatThin),
+            KubeletConfig::cpu_mem_affinity(),
+            GranularityPolicy::Granularity,
+            Box::new(VolcanoMpiController),
+            SchedulerConfig::fine_grained(7),
+            Calibration::default(),
+            7,
+        );
+        let trace: Vec<JobSpec> =
+            (1..=10).map(|i| JobSpec::paper_job(i, Benchmark::EpDgemm, (i as f64) * 30.0)).collect();
+        let out = s.run(&trace);
+        assert_eq!(out.records.len(), 10);
+        // Post-mortem: every pod's historical node had the class capacity
+        // for it, and all resources returned.
+        for pod in out.api.pods.values() {
+            assert_eq!(pod.phase, PodPhase::Succeeded);
+            let node = pod.node.expect("succeeded pod keeps its node");
+            assert!(
+                pod.requests.fits_within(&out.api.spec.node(node).allocatable()),
+                "pod {:?} exceeded its node class",
+                pod.id
+            );
+        }
+        for n in out.api.spec.node_ids() {
+            assert_eq!(out.api.free_on(n), out.api.spec.node(n).allocatable());
+        }
     }
 
     #[test]

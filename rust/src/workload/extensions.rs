@@ -142,7 +142,7 @@ mod tests {
         let job = ExtBenchmark::IorLike.job(1, 0.0);
         // Profile mapping: the planner sees "network" and keeps it whole.
         assert!(ExtBenchmark::IorLike.planner_profile().is_network());
-        let p = plan(&job, GranularityPolicy::Granularity, SystemInfo { available_nodes: 4 });
+        let p = plan(&job, GranularityPolicy::Granularity, SystemInfo::homogeneous(4));
         assert_eq!(p.granularity.n_workers, 1);
     }
 
@@ -150,7 +150,7 @@ mod tests {
     fn ai_training_splits_like_cpu_jobs() {
         assert_eq!(ExtBenchmark::AiTraining.planner_profile(), Profile::Cpu);
         let job = ExtBenchmark::AiTraining.job(1, 0.0);
-        let p = plan(&job, GranularityPolicy::Scale, SystemInfo { available_nodes: 4 });
+        let p = plan(&job, GranularityPolicy::Scale, SystemInfo::homogeneous(4));
         assert_eq!(p.granularity.n_workers, 4);
     }
 

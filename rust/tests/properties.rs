@@ -7,6 +7,7 @@
 
 use kube_fgs::cluster::{gib, ClusterSpec, JobId, NodeSpec, Pod, PodId, PodRole, Resources};
 use kube_fgs::controller::mpi_aware::allocate_tasks;
+use kube_fgs::controller::{JobController, VolcanoMpiController};
 use kube_fgs::kubelet::{CpuManagerPolicy, CpuManagerState, TopologyPolicy};
 use kube_fgs::perfmodel::{job_slowdown, Calibration};
 use kube_fgs::planner::{plan, GranularityPolicy, SystemInfo};
@@ -111,7 +112,7 @@ fn prop_planner_feasible_granularity() {
         let mut spec = JobSpec::paper_job(1, bench, 0.0);
         spec.ntasks = rng.range_usize(1, 65) as u32;
         spec.default_workers = rng.range_usize(1, 17) as u32;
-        let info = SystemInfo { available_nodes: rng.range_usize(0, 17) as u32 };
+        let info = SystemInfo::homogeneous(rng.range_usize(0, 17) as u32);
         let policy = policies[rng.range_usize(0, 3)];
         let g = plan(&spec, policy, info).granularity;
         assert!(g.n_workers >= 1 && g.n_workers <= spec.ntasks.max(spec.default_workers), "case {case}: {g:?}");
@@ -267,7 +268,7 @@ fn prop_perfmodel_slowdown_at_least_one() {
             scenario.kubelet(),
         );
         let controller = scenario.controller();
-        let info = SystemInfo { available_nodes: 4 };
+        let info = SystemInfo::homogeneous(4);
         for spec in &trace {
             let planned = plan(spec, scenario.policy(), info);
             let (pods, hostfile) = controller.build(&planned, &mut sim_api);
@@ -324,6 +325,75 @@ fn prop_best_effort_single_numa_when_possible() {
             }
             if st.free_total() == 0 {
                 break;
+            }
+        }
+    }
+}
+
+/// Property: scheduling on a heterogeneous cluster never places a pod
+/// exceeding its node class's capacity, and no node class is ever
+/// overcommitted — across random fat/thin/balanced mixes, job shapes
+/// (including 32-core single workers that only fit fat nodes), planner
+/// policies, and scheduling/finish churn.
+#[test]
+fn prop_heterogeneous_scheduling_respects_class_capacity() {
+    use kube_fgs::cluster::{HeterogeneityMix, PodPhase};
+    let mixes = [HeterogeneityMix::FatThin, HeterogeneityMix::Tiered];
+    let policies =
+        [GranularityPolicy::None, GranularityPolicy::Scale, GranularityPolicy::Granularity];
+    let mut rng = Rng::seed_from_u64(1111);
+    for case in 0..20u64 {
+        let workers = rng.range_usize(2, 12);
+        let mix = mixes[rng.range_usize(0, mixes.len())];
+        let cluster = ClusterSpec::mixed(workers, mix);
+        let mut api = kube_fgs::apiserver::ApiServer::new(
+            cluster,
+            kube_fgs::kubelet::KubeletConfig::cpu_mem_affinity(),
+        );
+        let info = SystemInfo::of(&api.spec);
+        let n = rng.range_usize(2, 10);
+        for i in 1..=n {
+            let bench = ALL_BENCHMARKS[rng.range_usize(0, 5)];
+            let mut spec = JobSpec::paper_job(i as u64, bench, 0.0);
+            spec.ntasks = [4u32, 8, 16, 32][rng.range_usize(0, 4)];
+            spec.resources =
+                Resources::new(spec.ntasks as u64 * 1000, spec.ntasks as u64 * gib(2));
+            let planned = plan(&spec, policies[rng.range_usize(0, 3)], info);
+            let (pods, hostfile) = VolcanoMpiController.build(&planned, &mut api);
+            api.create_job(planned, pods, hostfile, 0.0);
+        }
+        let mut sched = kube_fgs::scheduler::Scheduler::new(
+            kube_fgs::scheduler::SchedulerConfig::fine_grained(case),
+        );
+        for step in 0..4 {
+            let t = step as f64;
+            sched.cycle(&mut api, t);
+            // Every bound/running pod fits its node's class capacity, and
+            // the per-node sum of bound requests never overcommits.
+            let mut used: Vec<Resources> = vec![Resources::ZERO; api.spec.nodes.len()];
+            for pod in api.pods.values() {
+                if let (Some(node), PodPhase::Bound | PodPhase::Running) =
+                    (pod.node, pod.phase)
+                {
+                    assert!(
+                        pod.requests.fits_within(&api.spec.node(node).allocatable()),
+                        "case {case} step {step}: pod {:?} wider than node class {:?}",
+                        pod.id,
+                        api.spec.node(node).name
+                    );
+                    used[node.0] += pod.requests;
+                }
+            }
+            for node in api.spec.node_ids() {
+                assert!(
+                    used[node.0].fits_within(&api.spec.node(node).allocatable()),
+                    "case {case} step {step}: node {:?} overcommitted",
+                    api.spec.node(node).name
+                );
+            }
+            // Free capacity and retry the stragglers next session.
+            for id in api.running_jobs().into_iter().take(2) {
+                api.finish_job(id, t + 0.5);
             }
         }
     }
