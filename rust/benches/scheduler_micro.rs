@@ -13,7 +13,7 @@ use kube_fgs::controller::{JobController, VolcanoMpiController};
 use kube_fgs::kubelet::KubeletConfig;
 use kube_fgs::perfmodel::{job_slowdown, job_slowdown_with, Calibration, ClusterLoads};
 use kube_fgs::planner::{plan, GranularityPolicy, SystemInfo};
-use kube_fgs::scheduler::{Scheduler, SchedulerConfig};
+use kube_fgs::scheduler::{PlacementEngineKind, Scheduler, SchedulerConfig, ALL_PLACEMENT_ENGINES};
 use kube_fgs::util::BenchTimer;
 use kube_fgs::workload::{exp2_trace, uniform_trace, Benchmark, JobSpec};
 
@@ -33,8 +33,145 @@ fn pending_cluster(n: u64, workers: usize) -> ApiServer {
     api
 }
 
+/// Placement-engine and persistent-timeline before/after sections: the
+/// linear scan vs the indexed buckets, and the per-session rebuild vs the
+/// event-driven cache, at 32 and 128 workers. Returns (name, mean seconds)
+/// rows for the CI artifact (`--json PATH`).
+fn placement_sections() -> Vec<(String, f64)> {
+    let mut rows = Vec::new();
+
+    // Placement engine: scheduling sessions over a congested queue. Same
+    // seeds, same queue — selections are bit-identical (property-pinned);
+    // only the per-pod feasibility enumeration cost differs, and it is
+    // the O(nodes)-per-pod term that dominates 128-node sessions.
+    for workers in [32usize, 128] {
+        let jobs = 2 * workers as u64;
+        for engine in ALL_PLACEMENT_ENGINES {
+            let tag = match engine {
+                PlacementEngineKind::Linear => "(before)",
+                PlacementEngineKind::Indexed => "(after)",
+            };
+            let s = BenchTimer::new(&format!(
+                "placement-engine/session-{workers}w-{jobs}j-{engine} {tag}"
+            ))
+            .with_iters(1, 5)
+            .run(|| {
+                let mut api = pending_cluster(jobs, workers);
+                let mut sched =
+                    Scheduler::new(SchedulerConfig::fine_grained(1).with_engine(engine));
+                let started = sched.cycle(&mut api, 0.0);
+                assert!(!started.is_empty());
+            });
+            rows.push((format!("placement/session-{workers}w-{engine}"), s.mean));
+        }
+    }
+
+    // Persistent timeline: the cost of acquiring one conservative
+    // session's availability profile on a loaded cluster where one
+    // projection moved since the last session — the rebuild pays the full
+    // O(running x nodes) cumulative clone chain plus a pod walk per
+    // running job every session; the cache folds in the one delta and
+    // hands out a flat clone.
+    for workers in [32usize, 128] {
+        use std::collections::BTreeMap;
+        use kube_fgs::cluster::{JobId, Resources};
+        use kube_fgs::scheduler::{QueueContext, ResourceTimeline, TimelineCache};
+        // Cap at 240 running jobs: each launcher holds 1 GiB on the
+        // control plane (248 GiB allocatable), and the fill must start
+        // every job so the release profile covers the whole running set.
+        let jobs = (2 * workers as u64).min(240);
+        let mut api = pending_cluster(jobs, workers);
+        let mut sched = Scheduler::new(SchedulerConfig::fine_grained(1));
+        let started = sched.cycle(&mut api, 0.0);
+        assert_eq!(started.len(), jobs as usize, "fill session starts every job");
+        let mut projected: BTreeMap<JobId, f64> = started
+            .iter()
+            .enumerate()
+            .map(|(i, &j)| (j, 1000.0 + i as f64))
+            .collect();
+        let free: Vec<Resources> = api.spec.node_ids().map(|n| api.free_on(n)).collect();
+        let s = BenchTimer::new(&format!(
+            "timeline/session-profile-{workers}w-{jobs}j-rebuild (before)"
+        ))
+        .with_iters(2, 20)
+        .run(|| {
+            let ctx = QueueContext {
+                api: &api,
+                now: 1.0,
+                projected_completion: &projected,
+                free: &free,
+                walltime_factor: 1.0,
+            };
+            let tl = ResourceTimeline::new(&ctx);
+            std::hint::black_box(&tl);
+        });
+        rows.push((format!("timeline/session-profile-{workers}w-rebuild"), s.mean));
+        let ctx0 = QueueContext {
+            api: &api,
+            now: 1.0,
+            projected_completion: &projected,
+            free: &free,
+            walltime_factor: 1.0,
+        };
+        let mut cache = TimelineCache::new(&ctx0);
+        let mut step = 0u64;
+        let s = BenchTimer::new(&format!(
+            "timeline/session-profile-{workers}w-{jobs}j-cache (after)"
+        ))
+        .with_iters(2, 20)
+        .run(|| {
+            step += 1;
+            let moved = started[step as usize % started.len()];
+            projected.insert(moved, 1500.0 + step as f64 * 0.5);
+            let ctx = QueueContext {
+                api: &api,
+                now: 1.0,
+                projected_completion: &projected,
+                free: &free,
+                walltime_factor: 1.0,
+            };
+            cache.refresh(&ctx);
+            let tl = cache.session_profile();
+            std::hint::black_box(&tl);
+        });
+        rows.push((format!("timeline/session-profile-{workers}w-cache"), s.mean));
+    }
+    rows
+}
+
+/// Hand-rendered JSON artifact (the substrate has no serde): the CI
+/// perf-trajectory data point for the placement/timeline hot paths.
+fn placement_json(rows: &[(String, f64)]) -> String {
+    let mut out = String::from("{\n  \"bench\": \"placement\", \"entries\": [\n");
+    for (i, (name, mean)) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"name\": \"{name}\", \"mean_s\": {mean:.6}}}{}\n",
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let placement_only = args.iter().any(|a| a == "--placement-only");
+
     println!("=== L3 scheduler microbenchmarks ===\n");
+
+    if placement_only {
+        let rows = placement_sections();
+        if let Some(path) = json_path {
+            std::fs::write(&path, placement_json(&rows)).expect("writing bench json");
+            println!("\nwrote {path}");
+        }
+        return;
+    }
 
     // One full scheduling session over 8 pending fine-grained jobs
     // (8 jobs x 17 pods, task-group plugin on).
@@ -153,6 +290,10 @@ fn main() {
         });
     }
 
+    // Placement engine + persistent timeline before/after (32 and 128
+    // workers) — the CI placement_bench.json artifact rows.
+    let rows = placement_sections();
+
     // Full experiment-2 simulation, one scenario.
     BenchTimer::new("simulate/exp2-CM_G_TG").with_iters(1, 10).run(|| {
         let sim = kube_fgs::scenario::Scenario::CmGTg.simulation(2);
@@ -164,4 +305,9 @@ fn main() {
     BenchTimer::new("simulate/exp2-all-scenarios").with_iters(1, 5).run(|| {
         kube_fgs::experiments::exp2_all_scenarios(2);
     });
+
+    if let Some(path) = json_path {
+        std::fs::write(&path, placement_json(&rows)).expect("writing bench json");
+        println!("\nwrote {path}");
+    }
 }

@@ -9,9 +9,14 @@
 //!
 //! Views the hot paths read every session are maintained incrementally on
 //! the mutation events instead of recomputed from the object store: the
-//! pending queue, the task-group placement ([`ApiServer::group_placement`])
-//! and the per-tenant service ledgers behind [`ApiServer::tenant_usage`] —
-//! each pinned to its full-recompute reference by a property test.
+//! pending queue, the task-group placement ([`ApiServer::group_placement`]),
+//! the per-tenant service ledgers behind [`ApiServer::tenant_usage`], and
+//! the quota-admission ledger behind [`ApiServer::quota_admits`] — each
+//! pinned to its full-recompute reference by a property test. The
+//! allocation-touch log ([`ApiServer::alloc_touched_since`]) is the event
+//! hook external incremental structures (the scheduler's indexed placement
+//! engine, the persistent backfill timeline) replay from a cursor instead
+//! of rescanning every node.
 
 pub mod watch;
 
@@ -106,15 +111,39 @@ pub struct ApiServer {
     /// bind/finish/preempt (§Perf: `Scheduler::rebuild_placement` scanned
     /// every pod — including succeeded ones — once per scheduling session).
     placement: GroupPlacement,
-    /// Fair-share weight per tenant (PriorityClass/ResourceQuota stand-in);
-    /// unknown tenants default to weight 1.0.
+    /// Fair-share weight per tenant (PriorityClass stand-in); unknown
+    /// tenants default to weight 1.0.
     tenant_weights: BTreeMap<TenantId, f64>,
     /// Maintained per-tenant service accumulators, updated on job
     /// start/preempt/complete (§Perf: `tenant_usage` was a full job-map
     /// scan per fair-share ordering; it is now O(tenants)).
     tenant_service: BTreeMap<TenantId, TenantService>,
+    /// ResourceQuota per tenant (absent = unlimited): an aggregate cap on
+    /// the requested resources of the tenant's *running* jobs, enforced at
+    /// admission ([`ApiServer::quota_admits`]) — over-quota jobs are held
+    /// `Pending`, never `Unschedulable` (capacity frees when the tenant's
+    /// running jobs end).
+    tenant_quotas: BTreeMap<TenantId, Resources>,
+    /// Aggregate requested resources of each tenant's running jobs (the
+    /// quota-admission ledger, maintained on start/preempt/complete).
+    tenant_running: BTreeMap<TenantId, Resources>,
+    /// Nodes whose allocated-resource accounting changed, in mutation
+    /// order (bind/release — covering start, finish, preempt, requeue and
+    /// unschedulable cleanup). Incremental consumers (the scheduler's
+    /// indexed placement engine, the persistent backfill timeline) replay
+    /// this from a cursor instead of rescanning every node.
+    alloc_touched: Vec<NodeId>,
+    /// Process-unique instance id: stateful consumers holding a cursor
+    /// compare it to detect being re-pointed at a *different* API server
+    /// (log length and node count alone cannot distinguish same-shape
+    /// servers) and rebuild instead of replaying a wrong cursor.
+    instance_id: u64,
     next_pod_id: u64,
 }
+
+/// Source of [`ApiServer::instance_id`] values.
+static NEXT_API_INSTANCE_ID: std::sync::atomic::AtomicU64 =
+    std::sync::atomic::AtomicU64::new(1);
 
 /// One tenant's maintained service ledger: core-seconds consumed through
 /// `last_t`, plus the aggregate core rate of its currently running jobs —
@@ -166,8 +195,32 @@ impl ApiServer {
             placement: GroupPlacement::default(),
             tenant_weights: BTreeMap::new(),
             tenant_service: BTreeMap::new(),
+            tenant_quotas: BTreeMap::new(),
+            tenant_running: BTreeMap::new(),
+            alloc_touched: Vec::new(),
+            instance_id: NEXT_API_INSTANCE_ID
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed),
             next_pod_id: 0,
         }
+    }
+
+    /// Process-unique id of this API server instance (see the field docs).
+    pub fn instance_id(&self) -> u64 {
+        self.instance_id
+    }
+
+    /// Length of the allocation-touch log — the cursor value an
+    /// incremental consumer should store after catching up.
+    pub fn alloc_version(&self) -> usize {
+        self.alloc_touched.len()
+    }
+
+    /// Nodes whose allocated-resource accounting changed since `cursor`
+    /// (a prior [`ApiServer::alloc_version`] value). Nodes may repeat;
+    /// consumers re-read [`ApiServer::free_on`] per entry, so replay is
+    /// idempotent.
+    pub fn alloc_touched_since(&self, cursor: usize) -> &[NodeId] {
+        &self.alloc_touched[cursor.min(self.alloc_touched.len())..]
     }
 
     /// The incrementally maintained task-group placement view (equal, at
@@ -185,6 +238,37 @@ impl ApiServer {
 
     pub fn tenant_weight(&self, tenant: TenantId) -> f64 {
         self.tenant_weights.get(&tenant).copied().unwrap_or(1.0)
+    }
+
+    /// Register a tenant's ResourceQuota: an aggregate cap on the
+    /// requested resources of its running jobs.
+    pub fn set_tenant_quota(&mut self, tenant: TenantId, quota: Resources) {
+        self.tenant_quotas.insert(tenant, quota);
+    }
+
+    pub fn tenant_quota(&self, tenant: TenantId) -> Option<Resources> {
+        self.tenant_quotas.get(&tenant).copied()
+    }
+
+    /// Requested resources of a tenant's currently running jobs (the
+    /// quota-admission ledger).
+    pub fn tenant_running_requests(&self, tenant: TenantId) -> Resources {
+        self.tenant_running.get(&tenant).copied().unwrap_or(Resources::ZERO)
+    }
+
+    /// ResourceQuota admission: would starting `job` keep its tenant's
+    /// aggregate running requests within quota? The scheduler holds
+    /// over-quota jobs as `Pending` (not `Unschedulable`) — they retry as
+    /// the tenant's running jobs complete or are preempted.
+    pub fn quota_admits(&self, job: JobId) -> bool {
+        let spec = &self.jobs[&job].planned.spec;
+        match self.tenant_quotas.get(&spec.tenant) {
+            None => true,
+            Some(quota) => {
+                let used = self.tenant_running_requests(spec.tenant);
+                (used + spec.resources).fits_within(quota)
+            }
+        }
     }
 
     /// Core-seconds of service each tenant has received up to `now`
@@ -225,14 +309,21 @@ impl ApiServer {
     }
 
     /// Record a finished stint of `job` (started .. now) into the job's
-    /// served-time and the tenant's service ledger.
+    /// served-time, the tenant's service ledger, and the quota-admission
+    /// ledger (the stint's requests leave the tenant's running aggregate).
     fn account_service(&mut self, job_id: JobId, now: f64) {
         let job = self.jobs.get_mut(&job_id).expect("service of unknown job");
-        let cores = job.planned.spec.resources.cpu_milli as f64 / 1000.0;
+        let requests = job.planned.spec.resources;
+        let cores = requests.cpu_milli as f64 / 1000.0;
         let elapsed = (now - job.start_time.expect("service of unstarted job")).max(0.0);
         let tenant = job.planned.spec.tenant;
         job.served_secs += elapsed;
         self.adjust_tenant_rate(tenant, now, -cores);
+        let running = self
+            .tenant_running
+            .get_mut(&tenant)
+            .expect("quota ledger missing for a running tenant");
+        *running = running.saturating_sub(&requests);
     }
 
     /// Release one bound/running pod's node resources, cpuset grant, and
@@ -244,6 +335,7 @@ impl ApiServer {
         let node = pod.node.expect("release of unbound pod");
         let snapshot = pod.clone();
         self.allocated[node.0] -= snapshot.requests;
+        self.alloc_touched.push(node);
         self.kubelets[node.0].terminate(&snapshot);
         if let Some(g) = snapshot.group {
             self.placement.remove((job_id, g), node);
@@ -318,6 +410,7 @@ impl ApiServer {
         let requests = pod.requests;
         let group = pod.group.map(|g| (pod.job, g));
         self.allocated[node.0] += requests;
+        self.alloc_touched.push(node);
         if let Some(key) = group {
             self.placement.record(key, node);
         }
@@ -342,8 +435,10 @@ impl ApiServer {
             job.first_start_time = Some(now);
         }
         let tenant = job.planned.spec.tenant;
-        let cores = job.planned.spec.resources.cpu_milli as f64 / 1000.0;
+        let requests = job.planned.spec.resources;
+        let cores = requests.cpu_milli as f64 / 1000.0;
         self.adjust_tenant_rate(tenant, now, cores);
+        *self.tenant_running.entry(tenant).or_insert(Resources::ZERO) += requests;
         self.pending.retain(|&id| id != job_id);
         self.events.push(Event::JobStarted { t: now, job: job_id });
         self.watch.publish(Event::JobStarted { t: now, job: job_id });
@@ -767,6 +862,59 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn quota_ledger_tracks_running_requests_and_admission() {
+        use crate::workload::TenantId;
+        let tenant = TenantId(2);
+        let mut api = api();
+        // Two 16-core jobs for the tenant; quota admits exactly one.
+        for id in [1u64, 2] {
+            let mut pj = planned(id);
+            pj.spec.tenant = tenant;
+            pj.spec.resources = Resources::new(16_000, 16 * gib(2));
+            let w = make_worker(&mut api, JobId(id), 0, 16);
+            let wid = w.id;
+            api.create_job(pj, vec![w], vec![], 0.0);
+            assert!(api.bind_pod(wid, NodeId(id as usize), 0.0));
+        }
+        api.set_tenant_quota(tenant, Resources::new(20_000, gib(256)));
+        assert!(api.quota_admits(JobId(1)), "idle tenant is under quota");
+        api.start_job(JobId(1), 0.0);
+        assert_eq!(api.tenant_running_requests(tenant).cpu_milli, 16_000);
+        assert!(!api.quota_admits(JobId(2)), "16 + 16 cores exceed the 20-core quota");
+        // Completion returns the requests to the quota pool.
+        api.finish_job(JobId(1), 10.0);
+        assert_eq!(api.tenant_running_requests(tenant), Resources::ZERO);
+        assert!(api.quota_admits(JobId(2)));
+        // Preemption also returns them.
+        api.start_job(JobId(2), 11.0);
+        assert!(!api.quota_admits(JobId(2)));
+        api.preempt_job(JobId(2), 12.0);
+        assert_eq!(api.tenant_running_requests(tenant), Resources::ZERO);
+        // Tenants without a quota are unlimited.
+        assert_eq!(api.tenant_quota(TenantId(9)), None);
+    }
+
+    #[test]
+    fn alloc_touch_log_replays_to_the_live_free_view() {
+        let mut api = api();
+        let pj = planned(1);
+        let w = make_worker(&mut api, JobId(1), 0, 16);
+        let wid = w.id;
+        api.create_job(pj, vec![w], vec![], 0.0);
+        let cursor = api.alloc_version();
+        assert!(api.alloc_touched_since(cursor).is_empty());
+        api.bind_pod(wid, NodeId(2), 0.0);
+        api.start_job(JobId(1), 0.0);
+        assert_eq!(api.alloc_touched_since(cursor), &[NodeId(2)], "bind logged");
+        api.finish_job(JobId(1), 5.0);
+        assert_eq!(api.alloc_touched_since(cursor), &[NodeId(2), NodeId(2)], "release logged");
+        // A consumer that replays free_on per entry converges to the live
+        // view; a stale (too-large) cursor yields an empty slice, not a
+        // panic.
+        assert!(api.alloc_touched_since(api.alloc_version() + 10).is_empty());
     }
 
     #[test]

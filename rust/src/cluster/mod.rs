@@ -12,4 +12,4 @@ pub mod spec;
 pub use node::{NodeClass, NodeId, NodeRole, NodeSpec};
 pub use pod::{HostfileEntry, JobId, Pod, PodId, PodPhase, PodRole};
 pub use resources::{gib, CpuSet, Resources};
-pub use spec::{ClusterSpec, HeterogeneityMix, ALL_MIXES};
+pub use spec::{CapacityClass, ClusterSpec, HeterogeneityMix, ALL_MIXES};

@@ -10,6 +10,20 @@
 use anyhow::{bail, Result};
 
 use super::node::{NodeClass, NodeId, NodeRole, NodeSpec};
+use super::resources::Resources;
+
+/// A maximal group of nodes sharing one capacity shape (role +
+/// allocatable resources) — the bucket granularity of the scheduler's
+/// indexed placement engine ([`crate::scheduler::placement`]). Feasibility
+/// is identical for every node of a class, so the engine keeps one
+/// free-capacity bucket per class instead of scanning every node per pod.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CapacityClass {
+    pub role: NodeRole,
+    pub allocatable: Resources,
+    /// Member nodes, ascending by id.
+    pub nodes: Vec<NodeId>,
+}
 
 /// Static description of a cluster (the simulator's "hardware").
 ///
@@ -211,6 +225,26 @@ impl ClusterSpec {
             .unwrap_or(0)
     }
 
+    /// Partition the nodes into [`CapacityClass`]es: maximal groups
+    /// sharing (role, allocatable). On the paper's homogeneous clusters
+    /// this yields two classes (control plane + workers); heterogeneous
+    /// clusters get one class per distinct worker shape.
+    pub fn capacity_classes(&self) -> Vec<CapacityClass> {
+        let mut classes: Vec<CapacityClass> = Vec::new();
+        for id in self.node_ids() {
+            let node = self.node(id);
+            let (role, allocatable) = (node.role, node.allocatable());
+            match classes
+                .iter_mut()
+                .find(|c| c.role == role && c.allocatable == allocatable)
+            {
+                Some(c) => c.nodes.push(id),
+                None => classes.push(CapacityClass { role, allocatable, nodes: vec![id] }),
+            }
+        }
+        classes
+    }
+
     /// Total allocatable worker cores (the utilization denominator).
     pub fn total_worker_cores(&self) -> u64 {
         self.nodes
@@ -282,6 +316,33 @@ mod tests {
         assert!(!ClusterSpec::mixed(8, HeterogeneityMix::Uniform).is_heterogeneous());
         assert!(ClusterSpec::mixed(8, HeterogeneityMix::FatThin).is_heterogeneous());
         assert!(ClusterSpec::mixed(8, HeterogeneityMix::Tiered).is_heterogeneous());
+    }
+
+    #[test]
+    fn capacity_classes_partition_by_role_and_shape() {
+        // Homogeneous: control plane + one worker class covering all four.
+        let c = ClusterSpec::paper();
+        let classes = c.capacity_classes();
+        assert_eq!(classes.len(), 2);
+        assert_eq!(classes[0].role, NodeRole::ControlPlane);
+        assert_eq!(classes[1].role, NodeRole::Worker);
+        assert_eq!(classes[1].nodes.len(), 4);
+        // Heterogeneous fat/thin: three classes, nodes ascending, every
+        // node in exactly one class.
+        let het = ClusterSpec::heterogeneous(&[NodeClass::fat(2), NodeClass::thin(6)]).unwrap();
+        let classes = het.capacity_classes();
+        assert_eq!(classes.len(), 3);
+        let mut all: Vec<usize> =
+            classes.iter().flat_map(|cl| cl.nodes.iter().map(|n| n.0)).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..het.nodes.len()).collect::<Vec<_>>());
+        for cl in &classes {
+            assert!(cl.nodes.windows(2).all(|w| w[0] < w[1]), "nodes ascending");
+            for &n in &cl.nodes {
+                assert_eq!(het.node(n).allocatable(), cl.allocatable);
+                assert_eq!(het.node(n).role, cl.role);
+            }
+        }
     }
 
     #[test]

@@ -9,7 +9,13 @@
 //!   "seed": 2,
 //!   "queue": "fair_share",
 //!   "preemption": true,
-//!   "tenants": [ { "id": 0, "weight": 1.0 }, { "id": 1, "weight": 3.0 } ],
+//!   "preemption_policy": "least_work_lost",
+//!   "engine": "indexed",
+//!   "walltime_error_factor": 1.5,
+//!   "tenants": [
+//!     { "id": 0, "weight": 1.0, "quota": { "cores": 64 } },
+//!     { "id": 1, "weight": 3.0 }
+//!   ],
 //!   "cluster": { "worker_nodes": 4 },
 //!   "trace": { "kind": "two_tenant", "jobs": 200, "mean_interval": 60 },
 //!   "output": { "gantt": true, "csv": false }
@@ -24,10 +30,10 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::cluster::{ClusterSpec, HeterogeneityMix, NodeClass};
+use crate::cluster::{gib, ClusterSpec, HeterogeneityMix, NodeClass, Resources};
 use crate::perfmodel::Calibration;
 use crate::scenario::Scenario;
-use crate::scheduler::QueuePolicyKind;
+use crate::scheduler::{PlacementEngineKind, PreemptionPolicy, QueuePolicyKind};
 use crate::simulator::Simulation;
 use crate::util::Json;
 use crate::workload::{
@@ -45,9 +51,21 @@ pub struct ExperimentConfig {
     /// Priority preemption; defaults to the scenario's own (only
     /// CM_G_TG_PRE enables it).
     pub preemption: bool,
+    /// Victim-selection policy (`preemption_policy`); defaults to
+    /// minimal-victim.
+    pub preemption_policy: PreemptionPolicy,
+    /// Placement engine (`engine`); defaults to `indexed` (bit-identical
+    /// to `linear`, property-pinned).
+    pub engine: PlacementEngineKind,
+    /// Walltime-estimate error multiplier (`walltime_error_factor`);
+    /// applied to queue estimates only, defaults to 1.0.
+    pub walltime_error_factor: f64,
     /// Per-tenant fair-share weights, applied to the API server before
     /// the run (unlisted tenants weigh 1.0).
     pub tenants: Vec<(TenantId, f64)>,
+    /// Per-tenant ResourceQuota caps (`tenants[].quota`), enforced at
+    /// admission (over-quota jobs are held `Pending`).
+    pub quotas: Vec<(TenantId, Resources)>,
     pub worker_nodes: usize,
     /// Preset heterogeneity mix (`cluster.mix`); `None` keeps the paper's
     /// homogeneous workers. Mutually exclusive with `classes`.
@@ -108,7 +126,33 @@ impl ExperimentConfig {
                 scenario.name()
             );
         }
+        let preemption_policy = match json.get("preemption_policy").as_str() {
+            Some(p) => PreemptionPolicy::parse(p).ok_or_else(|| {
+                anyhow!(
+                    "config: unknown preemption_policy {p:?} (minimal_victim | least_work_lost)"
+                )
+            })?,
+            None => PreemptionPolicy::MinimalVictim,
+        };
+        let engine = match json.get("engine").as_str() {
+            Some(e) => PlacementEngineKind::parse(e)
+                .ok_or_else(|| anyhow!("config: unknown engine {e:?} (linear | indexed)"))?,
+            None => PlacementEngineKind::Indexed,
+        };
+        let walltime_error_factor = match json.get("walltime_error_factor") {
+            Json::Null => 1.0,
+            w => {
+                let f = w.as_f64().ok_or_else(|| {
+                    anyhow!("config: walltime_error_factor must be a number")
+                })?;
+                if f <= 0.0 || !f.is_finite() {
+                    bail!("config: walltime_error_factor must be positive");
+                }
+                f
+            }
+        };
         let mut tenants = Vec::new();
+        let mut quotas = Vec::new();
         match json.get("tenants") {
             Json::Null => {}
             Json::Arr(entries) => {
@@ -127,6 +171,54 @@ impl ExperimentConfig {
                         bail!("config: tenants[].weight must be positive");
                     }
                     tenants.push((TenantId(id as u32), weight));
+                    // ResourceQuota: {"cores": N, "mem_gib": M} — either
+                    // axis may be omitted (unlimited on that axis); an
+                    // empty object is rejected as a likely typo.
+                    match e.get("quota") {
+                        Json::Null => {}
+                        q if q.as_obj().is_some() => {
+                            let cores = match q.get("cores") {
+                                Json::Null => None,
+                                c => Some(c.as_u64().ok_or_else(|| {
+                                    anyhow!(
+                                        "config: tenants[].quota.cores must be an integer"
+                                    )
+                                })?),
+                            };
+                            let mem_gib = match q.get("mem_gib") {
+                                Json::Null => None,
+                                m => Some(m.as_u64().ok_or_else(|| {
+                                    anyhow!(
+                                        "config: tenants[].quota.mem_gib must be an integer"
+                                    )
+                                })?),
+                            };
+                            if cores.is_none() && mem_gib.is_none() {
+                                bail!(
+                                    "config: tenants[].quota needs \"cores\" and/or \"mem_gib\""
+                                );
+                            }
+                            let cores_milli = match cores {
+                                Some(c) => c.checked_mul(1000).ok_or_else(|| {
+                                    anyhow!("config: tenants[].quota.cores too large")
+                                })?,
+                                None => u64::MAX,
+                            };
+                            let mem_bytes = match mem_gib {
+                                Some(m) => m.checked_mul(gib(1)).ok_or_else(|| {
+                                    anyhow!("config: tenants[].quota.mem_gib too large")
+                                })?,
+                                None => u64::MAX,
+                            };
+                            quotas.push((
+                                TenantId(id as u32),
+                                Resources::new(cores_milli, mem_bytes),
+                            ));
+                        }
+                        other => bail!(
+                            "config: tenants[].quota must be an object, got {other:?}"
+                        ),
+                    }
                 }
             }
             other => bail!("config: \"tenants\" must be an array, got {other:?}"),
@@ -215,7 +307,11 @@ impl ExperimentConfig {
             seed,
             queue,
             preemption,
+            preemption_policy,
+            engine,
+            walltime_error_factor,
             tenants,
+            quotas,
             worker_nodes,
             mix,
             classes,
@@ -260,13 +356,17 @@ impl ExperimentConfig {
     }
 
     /// Build the fully configured simulation this config describes
-    /// (cluster size, queue, preemption, tenant weights).
+    /// (cluster size, queue, preemption policy, placement engine,
+    /// walltime error, tenant weights + quotas).
     pub fn build_simulation(&self) -> Simulation {
         let cfg = self
             .scenario
             .scheduler(self.seed)
             .with_queue(self.queue)
-            .with_preemption(self.preemption);
+            .with_preemption(self.preemption)
+            .with_preemption_policy(self.preemption_policy)
+            .with_engine(self.engine)
+            .with_walltime_error_factor(self.walltime_error_factor);
         let mut sim = Simulation::new(
             self.cluster(),
             self.scenario.kubelet(),
@@ -278,6 +378,9 @@ impl ExperimentConfig {
         );
         for &(tenant, weight) in &self.tenants {
             sim.api.set_tenant_weight(tenant, weight);
+        }
+        for &(tenant, quota) in &self.quotas {
+            sim.api.set_tenant_quota(tenant, quota);
         }
         sim
     }
@@ -414,6 +517,102 @@ mod tests {
             r#"{"scenario":"CM","cluster":{"mix":"fat_thin","classes":[]}}"#
         )
         .is_ok());
+    }
+
+    #[test]
+    fn placement_and_estimate_keys_parse_and_validate() {
+        // Defaults: indexed engine, minimal-victim, factor 1.0.
+        let d = ExperimentConfig::parse(r#"{"scenario":"CM"}"#).unwrap();
+        assert_eq!(d.engine, PlacementEngineKind::Indexed);
+        assert_eq!(d.preemption_policy, PreemptionPolicy::MinimalVictim);
+        assert_eq!(d.walltime_error_factor, 1.0);
+        // Explicit values.
+        let c = ExperimentConfig::parse(
+            r#"{
+              "scenario": "CM_G_TG_PRE",
+              "engine": "linear",
+              "preemption_policy": "least_work_lost",
+              "walltime_error_factor": 2.5
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(c.engine, PlacementEngineKind::Linear);
+        assert_eq!(c.preemption_policy, PreemptionPolicy::LeastWorkLost);
+        assert_eq!(c.walltime_error_factor, 2.5);
+        // Rejections.
+        assert!(ExperimentConfig::parse(r#"{"scenario":"CM","engine":"quantum"}"#).is_err());
+        assert!(
+            ExperimentConfig::parse(r#"{"scenario":"CM","preemption_policy":"greedy"}"#)
+                .is_err()
+        );
+        assert!(ExperimentConfig::parse(
+            r#"{"scenario":"CM","walltime_error_factor":0}"#
+        )
+        .is_err());
+        assert!(ExperimentConfig::parse(
+            r#"{"scenario":"CM","walltime_error_factor":-1.5}"#
+        )
+        .is_err());
+        assert!(ExperimentConfig::parse(
+            r#"{"scenario":"CM","walltime_error_factor":"fast"}"#
+        )
+        .is_err());
+        // And the knobs run end-to-end.
+        let run = ExperimentConfig::parse(
+            r#"{
+              "scenario": "CM_G_TG_CBF",
+              "engine": "linear",
+              "walltime_error_factor": 1.5,
+              "trace": { "kind": "uniform", "jobs": 5, "mean_interval": 20 }
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(run.build_simulation().run(&run.build_trace()).records.len(), 5);
+    }
+
+    #[test]
+    fn tenant_quota_keys_parse_and_validate() {
+        let c = ExperimentConfig::parse(
+            r#"{
+              "scenario": "CM_G_TG",
+              "tenants": [
+                { "id": 0, "quota": { "cores": 32 } },
+                { "id": 1, "weight": 2.0, "quota": { "cores": 64, "mem_gib": 128 } },
+                { "id": 2 }
+              ]
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(c.quotas.len(), 2, "tenant 2 has no quota");
+        assert_eq!(c.quotas[0], (TenantId(0), Resources::new(32_000, u64::MAX)));
+        assert_eq!(
+            c.quotas[1],
+            (TenantId(1), Resources::new(64_000, crate::cluster::gib(128)))
+        );
+        // An empty quota object and mistyped axes are rejected.
+        assert!(ExperimentConfig::parse(
+            r#"{"scenario":"CM","tenants":[{"id":0,"quota":{}}]}"#
+        )
+        .is_err());
+        assert!(ExperimentConfig::parse(
+            r#"{"scenario":"CM","tenants":[{"id":0,"quota":{"cores":"many"}}]}"#
+        )
+        .is_err());
+        assert!(ExperimentConfig::parse(
+            r#"{"scenario":"CM","tenants":[{"id":0,"quota":3}]}"#
+        )
+        .is_err());
+        // Quota'd config runs end-to-end (jobs held Pending still finish
+        // as the tenant's running jobs complete).
+        let run = ExperimentConfig::parse(
+            r#"{
+              "scenario": "CM_G_TG",
+              "tenants": [ { "id": 0, "quota": { "cores": 16 } } ],
+              "trace": { "kind": "uniform", "jobs": 6, "mean_interval": 10 }
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(run.build_simulation().run(&run.build_trace()).records.len(), 6);
     }
 
     #[test]

@@ -8,7 +8,7 @@ use crate::cluster::{ClusterSpec, HeterogeneityMix};
 use crate::metrics::ExperimentMetrics;
 use crate::report;
 use crate::scenario::{Scenario, EXP3_SCENARIOS, TABLE2_SCENARIOS};
-use crate::scheduler::{QueuePolicyKind, ALL_QUEUE_POLICIES};
+use crate::scheduler::{PlacementEngineKind, QueuePolicyKind, ALL_QUEUE_POLICIES};
 use crate::simulator::SimOutput;
 use crate::util::jain_index;
 use crate::workload::{
@@ -50,19 +50,21 @@ pub fn run_scenario_with_queue(
     scenario.simulation_with_queue(seed, queue).run(trace)
 }
 
-/// Run one scenario with queue discipline, preemption, and per-tenant
-/// fair-share weights all overridden (the fairness ablation and the CLI
-/// `run --preempt` path).
+/// Run one scenario with queue discipline, preemption, placement engine,
+/// and per-tenant fair-share weights all overridden (the fairness
+/// ablation and the CLI `run --preempt` / `run --engine` paths).
 pub fn run_scenario_configured(
     scenario: Scenario,
     queue: QueuePolicyKind,
     preemption: bool,
+    engine: PlacementEngineKind,
     tenant_weights: &[(TenantId, f64)],
     trace: &[JobSpec],
     seed: u64,
 ) -> SimOutput {
     let mut sim =
         scenario.simulation_configured(ClusterSpec::paper(), seed, queue, preemption);
+    sim.set_placement_engine(engine);
     for &(tenant, weight) in tenant_weights {
         sim.api.set_tenant_weight(tenant, weight);
     }
@@ -429,6 +431,7 @@ pub fn fairness_ablation(seed: u64, jobs: usize, mean_interval: f64) -> Vec<Fair
                 Scenario::CmGTg,
                 queue,
                 preemption,
+                PlacementEngineKind::Indexed,
                 &weights,
                 &trace,
                 seed,

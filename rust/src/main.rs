@@ -100,13 +100,15 @@ COMMANDS:
                         Figs. 6-7: 20 mixed jobs, 6 scenarios
   exp3 [--seed N]       Table III + Figs. 8-9: framework comparison
   run --scenario NAME [--jobs N] [--interval S] [--seed N] [--queue POLICY]
-      [--preempt] [--two-tenant]
+      [--preempt] [--two-tenant] [--engine linear|indexed]
                         one scenario on a uniform random trace; POLICY is
                         fifo | fifo_strict | sjf | easy_backfill |
                         cons_backfill | fair_share and overrides the
                         scenario's queue discipline; --preempt enables
                         priority preemption; --two-tenant swaps in the
-                        two-tenant trace (batch + high-priority prod)
+                        two-tenant trace (batch + high-priority prod);
+                        --engine picks the placement engine (default
+                        indexed — bit-identical to linear, just faster)
   queues [--jobs N] [--interval S] [--seed N] [--json PATH]
                         queue-policy ablation table on CM_G_TG placement
                         (default: 200 jobs, 60 s mean interval)
@@ -298,8 +300,14 @@ fn cmd_run(args: &Args) -> Result<()> {
     if preempt && !scenario.scheduler(seed).gang {
         bail!("--preempt requires a gang scheduler (scenario {} has gang=false)", scenario.name());
     }
-    let out =
-        experiments::run_scenario_configured(scenario, queue, preempt, &[], &trace, seed);
+    let engine = match args.flags.get("engine") {
+        Some(e) => kube_fgs::scheduler::PlacementEngineKind::parse(e)
+            .ok_or_else(|| anyhow!("unknown engine {e:?} (linear | indexed)"))?,
+        None => kube_fgs::scheduler::PlacementEngineKind::Indexed,
+    };
+    let out = experiments::run_scenario_configured(
+        scenario, queue, preempt, engine, &[], &trace, seed,
+    );
     let m = ExperimentMetrics::from(&out);
     print!("{}", report::scenario_summary(scenario.name(), &m));
     if !out.unschedulable.is_empty() {

@@ -18,7 +18,17 @@
 //! failure means — skip (seed behaviour), block, an EASY shadow-time
 //! reservation, or a claim on the conservative per-resource
 //! [`ResourceTimeline`] (see [`queue`]).
+//!
+//! Two session structures are maintained incrementally instead of rebuilt
+//! (§Perf), each pinned bit-identical to a from-scratch reference by
+//! property tests and debug asserts: the feasibility enumeration lives in
+//! the [`placement`] engine (per-class free-capacity buckets replayed
+//! from the API server's allocation-touch log vs. the linear scan), and
+//! the conservative backfill's [`ResourceTimeline`] persists across
+//! sessions in a [`TimelineCache`] (event-driven invalidation vs. the
+//! per-session rebuild).
 
+pub mod placement;
 pub mod queue;
 pub mod score;
 pub mod taskgroup;
@@ -26,19 +36,65 @@ pub mod taskgroup;
 use std::collections::BTreeMap;
 
 use crate::apiserver::ApiServer;
-use crate::cluster::{JobId, NodeId, NodeRole, Pod, PodId, PodPhase, Resources};
+use crate::cluster::{JobId, NodeId, Pod, PodId, PodPhase, Resources};
+use crate::perfmodel::Calibration;
 use crate::util::Rng;
 
+use placement::SessionState;
+
+pub use placement::{
+    CapacityIndex, IndexedEngine, LinearEngine, PlacementEngine, PlacementEngineKind,
+    ALL_PLACEMENT_ENGINES,
+};
 pub use queue::{
     estimated_completions, estimated_runtime, first_fit_assignment, job_fits, shadow_time,
     ConservativeBackfill, EasyBackfill, FairShare, FifoSkip, FifoStrict, GangDecision,
-    QueueContext, QueuePolicy, QueuePolicyKind, ResourceTimeline, Sjf, ALL_QUEUE_POLICIES,
+    QueueContext, QueuePolicy, QueuePolicyKind, ResourceTimeline, Sjf, TimelineCache,
+    ALL_QUEUE_POLICIES,
 };
 pub use score::{least_requested, taskgroup_score, GroupKey, GroupPlacement};
 pub use taskgroup::{build_groups, group_assignment, worker_order, TaskGroup};
 
+/// Victim-selection policy for priority preemption.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PreemptionPolicy {
+    /// Cheapest victims by (priority, usefulness, latest start): the
+    /// historical default.
+    MinimalVictim,
+    /// Cost-aware: prefer the victim losing the least work — score =
+    /// service invested so far (completed stints + the current one) plus
+    /// the calibrated checkpoint-restart cost of its memory image.
+    LeastWorkLost,
+}
+
+impl PreemptionPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PreemptionPolicy::MinimalVictim => "minimal_victim",
+            PreemptionPolicy::LeastWorkLost => "least_work_lost",
+        }
+    }
+
+    /// Parse a CLI/config spelling (case-insensitive, `-` tolerated).
+    pub fn parse(s: &str) -> Option<PreemptionPolicy> {
+        match s.to_ascii_lowercase().replace('-', "_").as_str() {
+            "minimal_victim" | "minimal" => Some(PreemptionPolicy::MinimalVictim),
+            "least_work_lost" | "work_lost" | "cost_aware" => {
+                Some(PreemptionPolicy::LeastWorkLost)
+            }
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for PreemptionPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// Scheduler profile (paper Table II "Volcano" column + §V-E frameworks).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SchedulerConfig {
     /// Volcano gang plugin: a job starts only when every pod is placeable.
     pub gang: bool,
@@ -49,6 +105,18 @@ pub struct SchedulerConfig {
     /// Priority preemption: a gang-blocked job may evict a minimal set of
     /// strictly-lower-priority running jobs (requires `gang`).
     pub preemption: bool,
+    /// Victim-selection policy when preemption is enabled.
+    pub preemption_policy: PreemptionPolicy,
+    /// Placement engine. The indexed default is bit-identical to the
+    /// linear reference scan (property-pinned); `linear` exists for
+    /// before/after benches and as the pinned reference.
+    pub engine: PlacementEngineKind,
+    /// Multiplier on the queue layer's walltime *estimates* only (the
+    /// misprediction model — user-supplied walltimes are rarely exact).
+    /// Actual runtimes are untouched; SJF/fair-share orderings are
+    /// scale-invariant, so the knob bites on backfill windows and
+    /// conservative reservations.
+    pub walltime_error_factor: f64,
     /// Seed for the default scheduler's random tie-breaking.
     pub seed: u64,
 }
@@ -61,30 +129,21 @@ impl SchedulerConfig {
             taskgroup: false,
             queue: QueuePolicyKind::FifoSkip,
             preemption: false,
+            preemption_policy: PreemptionPolicy::MinimalVictim,
+            engine: PlacementEngineKind::Indexed,
+            walltime_error_factor: 1.0,
             seed,
         }
     }
 
     /// The paper's fine-grained scheduler: gang + task-group.
     pub fn fine_grained(seed: u64) -> Self {
-        SchedulerConfig {
-            gang: true,
-            taskgroup: true,
-            queue: QueuePolicyKind::FifoSkip,
-            preemption: false,
-            seed,
-        }
+        SchedulerConfig { taskgroup: true, ..SchedulerConfig::volcano_default(seed) }
     }
 
     /// Kubernetes default scheduler (Kubeflow baseline): per-pod, no gang.
     pub fn kube_default(seed: u64) -> Self {
-        SchedulerConfig {
-            gang: false,
-            taskgroup: false,
-            queue: QueuePolicyKind::FifoSkip,
-            preemption: false,
-            seed,
-        }
+        SchedulerConfig { gang: false, ..SchedulerConfig::volcano_default(seed) }
     }
 
     /// Same profile under a different queue discipline.
@@ -98,72 +157,49 @@ impl SchedulerConfig {
         self.preemption = preemption;
         self
     }
+
+    /// Same profile under a different victim-selection policy.
+    pub fn with_preemption_policy(mut self, policy: PreemptionPolicy) -> Self {
+        self.preemption_policy = policy;
+        self
+    }
+
+    /// Same profile under a different placement engine.
+    pub fn with_engine(mut self, engine: PlacementEngineKind) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// Same profile under a different walltime-estimate error factor.
+    pub fn with_walltime_error_factor(mut self, factor: f64) -> Self {
+        assert!(factor > 0.0, "walltime_error_factor must be positive");
+        self.walltime_error_factor = factor;
+        self
+    }
 }
 
 pub struct Scheduler {
     pub config: SchedulerConfig,
     rng: Rng,
     queue_policy: Box<dyn QueuePolicy>,
+    /// Placement engine (feasibility enumeration): indexed by default,
+    /// linear reference on request — selections are bit-identical.
+    engine: Box<dyn PlacementEngine>,
+    /// Persistent conservative-backfill release profile, refreshed
+    /// event-driven at each conservative session's first gang failure
+    /// (None until one happens; non-conservative disciplines never pay).
+    timeline_cache: Option<TimelineCache>,
+    /// Rebuild the [`ResourceTimeline`] from scratch every session — the
+    /// pre-incremental reference path benches and property tests compare
+    /// against.
+    pub force_timeline_rebuild: bool,
     /// Jobs evicted by priority preemption since the last
     /// [`Scheduler::take_preempted`] call (the simulator drains this after
     /// every cycle and re-queues them with checkpoint-restart cost).
     preempted: Vec<JobId>,
-}
-
-/// Trial state for one scheduling session (mutated as binds are decided,
-/// committed to the API server only when the gang succeeds). Gang
-/// all-or-nothing is implemented with an undo log instead of cloning the
-/// whole state per job (§Perf: the clone dominated large sessions).
-struct SessionState {
-    free: Vec<Resources>,
-    placement: GroupPlacement,
-    /// Undo log of (pod requests, node, group) applied since the last
-    /// checkpoint; replayed backwards on gang failure.
-    log: Vec<(Resources, NodeId, Option<GroupKey>)>,
-    /// Allocatable CPU (millicores) of the largest worker class — the
-    /// normalizer of the class-aware best-fit scoring term.
-    max_worker_cpu: u64,
-}
-
-impl SessionState {
-    fn new(api: &ApiServer, free: Vec<Resources>, placement: GroupPlacement) -> SessionState {
-        SessionState {
-            free,
-            placement,
-            log: Vec::new(),
-            max_worker_cpu: api.spec.max_worker_cores() as u64 * 1000,
-        }
-    }
-
-    fn snapshot(api: &ApiServer) -> SessionState {
-        SessionState::new(
-            api,
-            api.spec.node_ids().map(|n| api.free_on(n)).collect(),
-            api.group_placement().clone(),
-        )
-    }
-
-    fn apply(&mut self, requests: Resources, node: NodeId, group: Option<GroupKey>) {
-        self.free[node.0] -= requests;
-        if let Some(key) = group {
-            self.placement.record(key, node);
-        }
-        self.log.push((requests, node, group));
-    }
-
-    fn checkpoint(&self) -> usize {
-        self.log.len()
-    }
-
-    fn rollback_to(&mut self, checkpoint: usize) {
-        while self.log.len() > checkpoint {
-            let (requests, node, group) = self.log.pop().unwrap();
-            self.free[node.0] += requests;
-            if let Some(key) = group {
-                self.placement.remove(key, node);
-            }
-        }
-    }
+    /// Scratch buffer for per-pod feasible candidates (reused across
+    /// `place_pod` calls so the hot loop stays allocation-free).
+    candidates: Vec<NodeId>,
 }
 
 impl Scheduler {
@@ -172,8 +208,19 @@ impl Scheduler {
             config,
             rng: Rng::seed_from_u64(config.seed),
             queue_policy: config.queue.build(),
+            engine: config.engine.build(),
+            timeline_cache: None,
+            force_timeline_rebuild: false,
             preempted: Vec::new(),
+            candidates: Vec::new(),
         }
+    }
+
+    /// Swap the placement engine (benches/tests toggle the linear
+    /// reference vs the indexed default; outputs are bit-identical).
+    pub fn set_engine(&mut self, kind: PlacementEngineKind) {
+        self.config.engine = kind;
+        self.engine = kind.build();
     }
 
     /// Drain the jobs preempted by the most recent cycle(s). The simulator
@@ -200,20 +247,6 @@ impl Scheduler {
             }
         }
         p
-    }
-
-    /// PredicateFn: feasibility filter for one pod on one node (role
-    /// constraint + resource fit against the session's free view).
-    fn predicate(api: &ApiServer, state: &SessionState, pod: &Pod, node: NodeId) -> bool {
-        let role_ok = match pod.role {
-            crate::cluster::PodRole::Launcher => {
-                api.spec.node(node).role == NodeRole::ControlPlane
-            }
-            crate::cluster::PodRole::Worker { .. } => {
-                api.spec.node(node).role == NodeRole::Worker
-            }
-        };
-        role_ok && pod.requests.fits_within(&state.free[node.0])
     }
 
     /// NodeOrderFn: composite score. The task-group term (Algorithm 4)
@@ -250,7 +283,11 @@ impl Scheduler {
         score + self.rng.f64() * 3.0
     }
 
-    /// Place one pod on the best feasible node in the session state.
+    /// Place one pod on the best feasible node in the session state. The
+    /// placement engine enumerates the feasible set (indexed: a per-class
+    /// range scan; linear: the reference predicate walk) in ascending node
+    /// order, so the RNG jitter stream — one draw per feasible node — is
+    /// identical across engines and so is the argmax.
     fn place_pod(
         &mut self,
         api: &ApiServer,
@@ -258,16 +295,16 @@ impl Scheduler {
         pod: &Pod,
         group: Option<(GroupKey, usize)>,
     ) -> Option<NodeId> {
+        let mut candidates = std::mem::take(&mut self.candidates);
+        state.feasible_into(api, pod, &mut candidates);
         let mut best: Option<(f64, NodeId)> = None;
-        for node in api.spec.node_ids() {
-            if !Self::predicate(api, state, pod, node) {
-                continue;
-            }
+        for &node in &candidates {
             let s = self.node_score(api, state, pod, group, node);
             if best.map(|(bs, _)| s > bs).unwrap_or(true) {
                 best = Some((s, node));
             }
         }
+        self.candidates = candidates;
         let (_, node) = best?;
         state.apply(pod.requests, node, group.map(|(key, _)| key));
         Some(node)
@@ -336,17 +373,21 @@ impl Scheduler {
     /// Select a minimal set of running jobs whose eviction would let
     /// `job`'s gang fit the session's free view. Candidates are running
     /// jobs of *strictly lower* priority (never jobs started this
-    /// session); cheapest victims first — lowest priority, then latest
-    /// start (least progress lost), then highest id. A backward pass drops
-    /// victims whose release turned out unnecessary, so the returned set
-    /// is minimal (no proper subset suffices). Returns `None` when no
-    /// candidate set makes the gang fit.
+    /// session); cheapest victims first — lowest priority, then usefulness
+    /// (victims on nodes the blocked gang can use), then the
+    /// [`PreemptionPolicy`] cost order: latest start under
+    /// `minimal_victim`, least work lost (service invested + calibrated
+    /// restart cost) under `least_work_lost` — then highest id. A
+    /// backward pass drops victims whose release turned out unnecessary,
+    /// so the returned set is minimal (no proper subset suffices).
+    /// Returns `None` when no candidate set makes the gang fit.
     fn select_victims(
         &self,
         api: &ApiServer,
         state: &SessionState,
         job: JobId,
         started: &[JobId],
+        now: f64,
     ) -> Option<Vec<JobId>> {
         // The scored-greedy planner can fail where first-fit succeeds; if
         // the gang already first-fits the session's free view, eviction
@@ -384,19 +425,39 @@ impl Scheduler {
                         .unwrap_or(false)
             })
         };
+        // Precompute each candidate's (priority, usefulness, cost) sort
+        // key once — `useful` walks pods and the cost term reads the job
+        // map, too much for a per-comparison closure (same convention as
+        // SJF's precomputed estimates). The cost term is ascending: under
+        // `minimal_victim` it is the negated start time (latest start
+        // first — least progress in the current stint); under
+        // `least_work_lost` it is the work evicting the victim throws
+        // away — service invested across all stints plus the calibrated
+        // checkpoint-restart cost of its memory image (the queue layer's
+        // default-calibration convention, see `estimated_runtime`).
+        let policy = self.config.preemption_policy;
+        let calib = Calibration::default();
+        let key: BTreeMap<JobId, (u32, bool, f64)> = candidates
+            .iter()
+            .map(|&id| {
+                let j = &api.jobs[&id];
+                let cost = match policy {
+                    PreemptionPolicy::MinimalVictim => {
+                        -j.start_time.unwrap_or(f64::NEG_INFINITY)
+                    }
+                    PreemptionPolicy::LeastWorkLost => {
+                        let stint = (now - j.start_time.unwrap_or(now)).max(0.0);
+                        j.served_secs
+                            + stint
+                            + calib.restart_cost_secs(j.planned.spec.resources.mem_bytes)
+                    }
+                };
+                (id, (j.planned.spec.priority, useful(&id), cost))
+            })
+            .collect();
         candidates.sort_by(|a, b| {
-            let (ja, jb) = (&api.jobs[a], &api.jobs[b]);
-            ja.planned
-                .spec
-                .priority
-                .cmp(&jb.planned.spec.priority)
-                .then_with(|| useful(b).cmp(&useful(a)))
-                .then_with(|| {
-                    jb.start_time
-                        .unwrap_or(f64::NEG_INFINITY)
-                        .total_cmp(&ja.start_time.unwrap_or(f64::NEG_INFINITY))
-                })
-                .then(b.cmp(a))
+            let ((pa, ua, ca), (pb, ub, cb)) = (key[a], key[b]);
+            pa.cmp(&pb).then(ub.cmp(&ua)).then(ca.total_cmp(&cb)).then(b.cmp(a))
         });
         let release = |free: &mut [Resources], id: JobId| {
             for pid in &api.jobs[&id].pods {
@@ -452,8 +513,9 @@ impl Scheduler {
         state: &SessionState,
         job: JobId,
         started: &[JobId],
+        now: f64,
     ) -> Option<(Vec<JobId>, Vec<(PodId, NodeId, Option<usize>)>)> {
-        let victims = self.select_victims(api, state, job, started)?;
+        let victims = self.select_victims(api, state, job, started, now)?;
         let mut free = state.free.clone();
         let mut placement = state.placement.clone();
         for &v in &victims {
@@ -501,11 +563,39 @@ impl Scheduler {
     /// default FIFO hot path stays allocation-free here.
     pub fn cycle(&mut self, api: &mut ApiServer, now: f64) -> Vec<JobId> {
         let projected = if self.queue_policy.needs_projections() {
-            estimated_completions(api, now)
+            estimated_completions(api, now, self.config.walltime_error_factor)
         } else {
             BTreeMap::new()
         };
         self.cycle_with_projections(api, now, &projected)
+    }
+
+    /// The session's conservative-backfill availability profile: a clone
+    /// of the persistently maintained release profile (claims stay on the
+    /// clone, so the cache keeps the pure profile), refreshed event-driven
+    /// from the API server's event log and the live free view. With
+    /// [`Scheduler::force_timeline_rebuild`] set, the from-scratch rebuild
+    /// ([`ResourceTimeline::new`]) runs instead — the pinned reference
+    /// path. Debug builds assert the refreshed cache equals the rebuild
+    /// after every refresh, so the whole test suite exercises the
+    /// equivalence on its traces.
+    fn session_timeline(&mut self, ctx: &QueueContext<'_>) -> ResourceTimeline {
+        if self.force_timeline_rebuild {
+            return ResourceTimeline::new(ctx);
+        }
+        if let Some(cache) = self.timeline_cache.as_mut() {
+            cache.refresh(ctx);
+        } else {
+            self.timeline_cache = Some(TimelineCache::new(ctx));
+        }
+        let cache = self.timeline_cache.as_ref().unwrap();
+        #[cfg(debug_assertions)]
+        debug_assert_eq!(
+            cache.profile(),
+            &ResourceTimeline::new(ctx),
+            "persistent timeline drifted from the per-session rebuild"
+        );
+        cache.session_profile()
     }
 
     /// One scheduling session. Walks the pending queue in the queue
@@ -527,26 +617,38 @@ impl Scheduler {
         projected: &BTreeMap<JobId, f64>,
     ) -> Vec<JobId> {
         let mut started = Vec::new();
+        let wf = self.config.walltime_error_factor;
+        // The queue layer's walltime estimate (the single place the
+        // misprediction factor is applied — same rule as
+        // `QueueContext::estimate`).
+        let estimate = |api: &ApiServer, job: JobId| queue::estimated_runtime(api, job) * wf;
         let mut state = SessionState::snapshot(api);
+        state.index = self.engine.session_index(api);
 
         let mut pending = api.pending_jobs();
         self.queue_policy.order(api, now, &mut pending);
         // EASY: shadow time of the single reservation held for the first
         // blocked job of the session.
         let mut reservations: Vec<f64> = Vec::new();
-        // Conservative: the per-resource availability profile, built at
-        // the session's first gang failure.
+        // Conservative: the per-resource availability profile, cloned from
+        // the persistent cache at the session's first gang failure.
         let conservative = self.queue_policy.reserves_every_job();
         let mut timeline: Option<ResourceTimeline> = None;
 
         for job_id in pending {
+            // ResourceQuota admission: a job whose tenant is over quota is
+            // held as Pending — it neither plans nor claims a reservation
+            // (capacity frees when the tenant's running jobs end).
+            if !api.quota_admits(job_id) {
+                continue;
+            }
             // Conservative sessions holding reservations: the job's whole
             // window must first-fit what the claims left over; the passing
             // (estimate, min-free window) pair is reused by the
             // constrained planning below.
             let mut admitted_window: Option<(f64, Vec<Resources>)> = None;
             if conservative && timeline.is_some() {
-                let est = queue::estimated_runtime(api, job_id);
+                let est = estimate(api, job_id);
                 let tl = timeline.as_mut().unwrap();
                 let window = tl.min_free_over(now, now + est);
                 if !queue::job_fits(api, &window, job_id) {
@@ -570,6 +672,7 @@ impl Scheduler {
                     now,
                     projected_completion: projected,
                     free: &state.free,
+                    walltime_factor: wf,
                 };
                 if !self.queue_policy.may_backfill(&ctx, job_id, shadow) {
                     continue;
@@ -627,7 +730,7 @@ impl Scheduler {
                         // corner case must never preempt for nothing.
                         if self.config.preemption {
                             if let Some((victims, binds)) =
-                                self.plan_with_preemption(api, &state, job_id, &started)
+                                self.plan_with_preemption(api, &state, job_id, &started, now)
                             {
                                 for &v in &victims {
                                     api.preempt_job(v, now);
@@ -638,26 +741,32 @@ impl Scheduler {
                                 // The eviction + commit invalidated the
                                 // session view and the release profile:
                                 // rebuild the state, drop the reservations
-                                // (they re-derive at the next failure).
+                                // (they re-derive at the next failure; the
+                                // engine index and the timeline cache both
+                                // catch up from their cursors).
                                 state = SessionState::snapshot(api);
+                                state.index = self.engine.session_index(api);
                                 reservations.clear();
                                 timeline = None;
                                 continue;
                             }
                         }
                         if conservative {
-                            // First failure builds the profile; every
-                            // blocked job claims its earliest-fit window.
-                            let tl = timeline.get_or_insert_with(|| {
+                            // First failure clones the persistent profile
+                            // (refreshed event-driven); every blocked job
+                            // claims its earliest-fit window.
+                            if timeline.is_none() {
                                 let ctx = QueueContext {
                                     api: &*api,
                                     now,
                                     projected_completion: projected,
                                     free: &state.free,
+                                    walltime_factor: wf,
                                 };
-                                ResourceTimeline::new(&ctx)
-                            });
-                            let est = queue::estimated_runtime(api, job_id);
+                                timeline = Some(self.session_timeline(&ctx));
+                            }
+                            let tl = timeline.as_mut().unwrap();
+                            let est = estimate(api, job_id);
                             if let Some((t_s, placement)) = tl.earliest_fit(api, job_id, est)
                             {
                                 // A fit at `now` (gang first-fits, planner
@@ -675,6 +784,7 @@ impl Scheduler {
                                 now,
                                 projected_completion: projected,
                                 free: &state.free,
+                                walltime_factor: wf,
                             };
                             self.queue_policy.on_gang_failure(&ctx, job_id)
                         } else {
@@ -728,7 +838,7 @@ impl Scheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::ClusterSpec;
+    use crate::cluster::{ClusterSpec, NodeRole};
     use crate::controller::{JobController, NativeVolcanoController, VolcanoMpiController};
     use crate::kubelet::KubeletConfig;
     use crate::planner::{plan, GranularityPolicy, SystemInfo};
@@ -919,9 +1029,16 @@ mod tests {
     /// an 8-core MiniFE job (long, ~791 s estimate — past the ~688 s
     /// shadow time projected from the running DGEMMs' walltime estimates).
     fn congested_api_with_blocker(queue: QueuePolicyKind) -> (ApiServer, Scheduler, Vec<JobId>) {
+        congested_api_with_blocker_cfg(SchedulerConfig::volcano_default(1).with_queue(queue))
+    }
+
+    /// [`congested_api_with_blocker`] with full control of the scheduler
+    /// profile (the walltime-misprediction tests tune the error factor).
+    fn congested_api_with_blocker_cfg(
+        cfg: SchedulerConfig,
+    ) -> (ApiServer, Scheduler, Vec<JobId>) {
         let mut api = api();
-        let mut sched =
-            Scheduler::new(SchedulerConfig::volcano_default(1).with_queue(queue));
+        let mut sched = Scheduler::new(cfg);
         for i in 1..=8 {
             submit(&mut api, &VolcanoMpiController, GranularityPolicy::None, i, Benchmark::EpDgemm);
         }
@@ -1410,6 +1527,193 @@ mod tests {
                 "case {case}: placement != rebuild"
             );
             assert!(state.log.is_empty(), "case {case}: log not fully unwound");
+        }
+    }
+
+    #[test]
+    fn indexed_engine_matches_linear_reference_placements() {
+        use crate::cluster::HeterogeneityMix;
+        // Same seed, same submissions, same finish churn on a
+        // heterogeneous cluster: the two engines must bind every pod to
+        // the same node (the RNG jitter stream is per-feasible-node, and
+        // both engines enumerate the identical feasible set in the same
+        // order). Debug builds additionally assert the sets per pod.
+        let run = |engine: PlacementEngineKind| {
+            let mut api = ApiServer::new(
+                ClusterSpec::mixed(6, HeterogeneityMix::FatThin),
+                KubeletConfig::cpu_mem_affinity(),
+            );
+            let mut sched =
+                Scheduler::new(SchedulerConfig::fine_grained(3).with_engine(engine));
+            for i in 1..=10 {
+                submit(
+                    &mut api,
+                    &VolcanoMpiController,
+                    GranularityPolicy::Granularity,
+                    i,
+                    Benchmark::EpDgemm,
+                );
+            }
+            let mut t = 0.0;
+            for _ in 0..6 {
+                t += 1.0;
+                sched.cycle(&mut api, t);
+                for id in api.running_jobs().into_iter().take(2) {
+                    api.finish_job(id, t + 0.5);
+                }
+            }
+            api.pods
+                .values()
+                .map(|p| (p.id, p.node.map(|n| n.0), p.group))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(
+            run(PlacementEngineKind::Linear),
+            run(PlacementEngineKind::Indexed),
+            "engines must place bit-identically"
+        );
+    }
+
+    #[test]
+    fn quota_holds_over_quota_jobs_pending_until_capacity_frees() {
+        use crate::workload::TenantId;
+        // Two-tenant regression: tenant 0 holds a 16-core quota; its
+        // second job is held Pending by admission even though the cluster
+        // has free capacity, while tenant 1 is unaffected. Completion of
+        // the first job frees the quota and the held job starts.
+        let mut api = api();
+        let mut sched = Scheduler::new(SchedulerConfig::volcano_default(1));
+        api.set_tenant_quota(TenantId(0), Resources::new(16_000, u64::MAX));
+        let a = submit_prio(&mut api, GranularityPolicy::None, 1, Benchmark::EpDgemm, 0, 0.0);
+        let b = submit_prio(&mut api, GranularityPolicy::None, 2, Benchmark::EpDgemm, 0, 0.0);
+        let c = submit_prio(&mut api, GranularityPolicy::None, 3, Benchmark::EpDgemm, 1, 0.0);
+        let started = sched.cycle(&mut api, 0.0);
+        assert_eq!(started, vec![a, c], "tenant 0's second job held by quota");
+        assert_eq!(api.pending_jobs(), vec![b]);
+        assert_eq!(api.jobs[&b].phase, crate::apiserver::JobPhase::Pending);
+        // The hold is quota, not capacity: the gang would first-fit.
+        let free: Vec<Resources> = api.spec.node_ids().map(|n| api.free_on(n)).collect();
+        assert!(queue::job_fits(&api, &free, b), "capacity exists; quota is the gate");
+        api.finish_job(a, 10.0);
+        assert_eq!(sched.cycle(&mut api, 10.0), vec![b], "completion frees the quota");
+    }
+
+    /// Drive a cluster into a state where the minimal-victim and
+    /// least-work-lost policies disagree: equal-priority victims where
+    /// the *latest-started* job (the default's pick) carries a long prior
+    /// stint, while a mid-aged job has barely run.
+    fn preemption_victim_under(policy: PreemptionPolicy) -> Vec<JobId> {
+        let mut api = api();
+        let mut sched = Scheduler::new(
+            SchedulerConfig::volcano_default(1)
+                .with_preemption(true)
+                .with_preemption_policy(policy),
+        );
+        for i in 1..=8 {
+            submit_prio(&mut api, GranularityPolicy::None, i, Benchmark::EpDgemm, 0, 0.0);
+        }
+        assert_eq!(sched.cycle(&mut api, 0.0).len(), 8, "cluster packed");
+        // Job 9 starts at t=400 in job 2's slot: 110 s of work by t=510.
+        api.finish_job(JobId(2), 400.0);
+        let b = submit_prio(&mut api, GranularityPolicy::None, 9, Benchmark::EpDgemm, 0, 400.0);
+        assert_eq!(sched.cycle(&mut api, 400.0), vec![b]);
+        // Job 1 is preempted at t=500 (500 s served) and restarts at
+        // t=505: latest start_time, but 505 s of invested work by t=510.
+        api.preempt_job(JobId(1), 500.0);
+        api.requeue_job(JobId(1), 500.0);
+        assert_eq!(sched.cycle(&mut api, 505.0), vec![JobId(1)]);
+        // A high-priority 16-core job needs exactly one victim at t=510.
+        let hi = submit_prio(&mut api, GranularityPolicy::None, 10, Benchmark::EpDgemm, 10, 510.0);
+        assert_eq!(sched.cycle(&mut api, 510.0), vec![hi]);
+        sched.take_preempted()
+    }
+
+    #[test]
+    fn least_work_lost_prefers_the_victim_with_least_invested_work() {
+        // Work lost at t=510 (equal restart costs cancel): job 9 = 110 s,
+        // job 1 = 500 prior + 5 current = 505 s, jobs 3..8 = 510 s.
+        assert_eq!(
+            preemption_victim_under(PreemptionPolicy::LeastWorkLost),
+            vec![JobId(9)],
+            "cost-aware policy evicts the young victim"
+        );
+        // The default prefers the latest start — job 1, despite its 505 s
+        // of invested work.
+        assert_eq!(
+            preemption_victim_under(PreemptionPolicy::MinimalVictim),
+            vec![JobId(1)],
+            "minimal-victim default is unchanged"
+        );
+    }
+
+    #[test]
+    fn walltime_error_factor_gates_backfill_admission() {
+        // Exact projections (the simulator path): the shadow stays at the
+        // true release (~688 s) while each backfill candidate's window
+        // scales with the error factor — estimates only, never runtimes.
+        let run = |factor: f64| {
+            let (mut api, mut sched, ids) = congested_api_with_blocker_cfg(
+                SchedulerConfig::volcano_default(1)
+                    .with_queue(QueuePolicyKind::EasyBackfill)
+                    .with_walltime_error_factor(factor),
+            );
+            let projected = queue::estimated_completions(&api, 2.0, 1.0);
+            (sched.cycle_with_projections(&mut api, 2.0, &projected), ids)
+        };
+        let (started, ids) = run(1.0);
+        assert_eq!(started, vec![ids[1]], "honest estimate: the ring job backfills");
+        let (started, _) = run(3.0);
+        assert!(
+            started.is_empty(),
+            "3x over-estimate pushes the ring job's window past the shadow: {started:?}"
+        );
+        let (started, ids) = run(0.3);
+        assert_eq!(
+            started,
+            vec![ids[1], ids[2]],
+            "under-estimation admits the long MiniFE job into the window too"
+        );
+    }
+
+    #[test]
+    fn conservative_protection_survives_walltime_misprediction() {
+        // The two-blocker-protection scenario under uniformly wrong
+        // estimates: reservations are claimed from the same mis-estimated
+        // profile, so no backfill whose (scaled) window crosses a claim is
+        // ever admitted — the no-reservation-violated guarantee holds
+        // under both under- and over-estimation.
+        for factor in [0.5, 2.0] {
+            let mut api = api();
+            let mut sched = Scheduler::new(
+                SchedulerConfig::volcano_default(1)
+                    .with_queue(QueuePolicyKind::ConservativeBackfill)
+                    .with_walltime_error_factor(factor),
+            );
+            for i in 1..=8 {
+                submit(
+                    &mut api,
+                    &VolcanoMpiController,
+                    GranularityPolicy::None,
+                    i,
+                    Benchmark::EpDgemm,
+                );
+            }
+            assert_eq!(sched.cycle(&mut api, 0.0).len(), 8);
+            finish_one_on(&mut api, NodeId(1), 2.0);
+            finish_one_on(&mut api, NodeId(2), 2.0);
+            let blocker_a = submit_sized(&mut api, 9, Benchmark::EpDgemm, 32);
+            let blocker_b = submit_sized(&mut api, 10, Benchmark::EpDgemm, 32);
+            let long_narrow = submit_sized(&mut api, 11, Benchmark::MiniFe, 8);
+            let started = sched.cycle(&mut api, 2.0);
+            assert!(
+                started.is_empty(),
+                "factor {factor}: a reservation would be violated: {started:?}"
+            );
+            assert_eq!(
+                api.pending_jobs(),
+                vec![blocker_a, blocker_b, long_narrow],
+                "factor {factor}"
+            );
         }
     }
 }

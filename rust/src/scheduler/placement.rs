@@ -1,0 +1,484 @@
+//! Placement engine — the feasibility layer of the scheduling session.
+//!
+//! [`crate::scheduler::Scheduler`] scores candidate nodes per pod
+//! (NodeOrderFn); *which* nodes are candidates is this module's job. The
+//! reference implementation ([`LinearEngine`]) is the seed's linear scan:
+//! every pod visits every node and runs the predicate (role + resource
+//! fit) — O(nodes) per pod, the hot path ROADMAP names for 128-node
+//! sessions. [`IndexedEngine`] replaces the scan with a [`CapacityIndex`]:
+//! one free-capacity bucket per [`crate::cluster::CapacityClass`]
+//! (nodes sharing role + allocatable shape), ordered by free CPU, so a
+//! pod's feasible set is enumerated by a range scan that never touches a
+//! node without enough free capacity. The index is maintained
+//! *incrementally*:
+//!
+//! - across sessions, from the API server's allocation-touch log
+//!   ([`crate::apiserver::ApiServer::alloc_touched_since`]) — bind,
+//!   release, preempt, requeue and unschedulable cleanup all land there —
+//!   consumed from a cursor instead of rescanning every node;
+//! - within a session, by the session state's undo log: every trial
+//!   apply/rollback patches the session's clone of the index.
+//!
+//! Selections are **bit-identical** to the linear reference: the score
+//! loop draws one RNG jitter per *feasible* node in ascending node order,
+//! so an engine that enumerates exactly the feasible set in the same
+//! order consumes the same RNG stream and picks the same argmax. A
+//! randomized churn property test pins whole simulations equal across
+//! engines, and debug builds assert the indexed feasible set equals the
+//! linear scan after every delta (every `place_pod` call).
+
+use std::collections::BTreeSet;
+
+use crate::apiserver::ApiServer;
+use crate::cluster::{ClusterSpec, NodeId, NodeRole, Pod, PodRole, Resources};
+
+use super::score::{GroupKey, GroupPlacement};
+
+/// Selector for the placement engine, carried by `SchedulerConfig`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PlacementEngineKind {
+    /// Reference: linear predicate scan over every node, per pod.
+    Linear,
+    /// Per-class free-capacity buckets, incrementally maintained.
+    Indexed,
+}
+
+/// All engines, reference first (ablation/bench order).
+pub const ALL_PLACEMENT_ENGINES: [PlacementEngineKind; 2] =
+    [PlacementEngineKind::Linear, PlacementEngineKind::Indexed];
+
+impl PlacementEngineKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementEngineKind::Linear => "linear",
+            PlacementEngineKind::Indexed => "indexed",
+        }
+    }
+
+    /// Parse a CLI/config spelling (case-insensitive).
+    pub fn parse(s: &str) -> Option<PlacementEngineKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "linear" | "scan" => Some(PlacementEngineKind::Linear),
+            "indexed" | "index" | "buckets" => Some(PlacementEngineKind::Indexed),
+            _ => None,
+        }
+    }
+
+    pub fn build(&self) -> Box<dyn PlacementEngine> {
+        match self {
+            PlacementEngineKind::Linear => Box::new(LinearEngine),
+            PlacementEngineKind::Indexed => Box::new(IndexedEngine::new()),
+        }
+    }
+}
+
+impl std::fmt::Display for PlacementEngineKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Node role a pod's predicate requires (launchers live on the control
+/// plane, workers on worker nodes — paper §V-B).
+pub fn required_role(pod: &Pod) -> NodeRole {
+    match pod.role {
+        PodRole::Launcher => NodeRole::ControlPlane,
+        PodRole::Worker { .. } => NodeRole::Worker,
+    }
+}
+
+/// PredicateFn: feasibility of one pod on one node (role constraint +
+/// resource fit against the given free view).
+pub fn predicate(api: &ApiServer, free: &[Resources], pod: &Pod, node: NodeId) -> bool {
+    api.spec.node(node).role == required_role(pod) && pod.requests.fits_within(&free[node.0])
+}
+
+/// Reference feasibility enumeration: the linear predicate scan, in
+/// ascending node order (the order the score loop consumes).
+pub fn linear_feasible_into(
+    api: &ApiServer,
+    free: &[Resources],
+    pod: &Pod,
+    out: &mut Vec<NodeId>,
+) {
+    out.clear();
+    for node in api.spec.node_ids() {
+        if predicate(api, free, pod, node) {
+            out.push(node);
+        }
+    }
+}
+
+/// Per-class free-capacity buckets over one free view. Each bucket holds
+/// `(free cpu, free mem, node)` tuples in a `BTreeSet`, so "every node of
+/// this class with at least `req` free CPU" is a range scan from
+/// `(req.cpu, 0, 0)` — nodes too full to matter are never visited.
+#[derive(Debug, Clone)]
+pub struct CapacityIndex {
+    /// Mirror of the tracked free view, indexed by node.
+    free: Vec<Resources>,
+    /// Bucket index of each node.
+    bucket_of: Vec<usize>,
+    buckets: Vec<Bucket>,
+}
+
+#[derive(Debug, Clone)]
+struct Bucket {
+    role: NodeRole,
+    /// `(free cpu millicores, free mem bytes, node index)`, ascending.
+    nodes: BTreeSet<(u64, u64, usize)>,
+}
+
+impl CapacityIndex {
+    /// Build the index for a free view from scratch (cold start; steady
+    /// state goes through [`CapacityIndex::set_free`] deltas).
+    pub fn build(spec: &ClusterSpec, free: &[Resources]) -> CapacityIndex {
+        debug_assert_eq!(spec.nodes.len(), free.len());
+        let classes = spec.capacity_classes();
+        let mut bucket_of = vec![0usize; spec.nodes.len()];
+        let mut buckets = Vec::with_capacity(classes.len());
+        for (i, class) in classes.iter().enumerate() {
+            let mut nodes = BTreeSet::new();
+            for &id in &class.nodes {
+                bucket_of[id.0] = i;
+                nodes.insert((free[id.0].cpu_milli, free[id.0].mem_bytes, id.0));
+            }
+            buckets.push(Bucket { role: class.role, nodes });
+        }
+        CapacityIndex { free: free.to_vec(), bucket_of, buckets }
+    }
+
+    /// Update one node's tracked free capacity (an incremental delta from
+    /// a bind, release, or session-trial apply/rollback).
+    pub fn set_free(&mut self, node: NodeId, free: Resources) {
+        let old = self.free[node.0];
+        if old == free {
+            return;
+        }
+        let bucket = &mut self.buckets[self.bucket_of[node.0]];
+        let removed = bucket.nodes.remove(&(old.cpu_milli, old.mem_bytes, node.0));
+        debug_assert!(removed, "index out of sync for node {node:?}");
+        bucket.nodes.insert((free.cpu_milli, free.mem_bytes, node.0));
+        self.free[node.0] = free;
+    }
+
+    /// Tracked free view (the mirror the consistency asserts compare).
+    pub fn free_view(&self) -> &[Resources] {
+        &self.free
+    }
+
+    /// Enumerate the feasible nodes for `pod`, ascending by node id —
+    /// exactly the set (and order) the linear reference scan yields.
+    pub fn feasible_into(&self, pod: &Pod, out: &mut Vec<NodeId>) {
+        out.clear();
+        let role = required_role(pod);
+        let req = pod.requests;
+        for bucket in &self.buckets {
+            if bucket.role != role {
+                continue;
+            }
+            for &(_, mem, node) in bucket.nodes.range((req.cpu_milli, 0, 0)..) {
+                if mem >= req.mem_bytes {
+                    out.push(NodeId(node));
+                }
+            }
+        }
+        out.sort_unstable();
+    }
+}
+
+/// Trial state for one scheduling session (mutated as binds are decided,
+/// committed to the API server only when the gang succeeds). Gang
+/// all-or-nothing is implemented with an undo log instead of cloning the
+/// whole state per job (§Perf: the clone dominated large sessions). The
+/// main session state carries the engine's [`CapacityIndex`] (patched by
+/// every apply/rollback); trial states built for preemption planning or
+/// window-constrained conservative backfills carry none and fall back to
+/// the linear scan.
+pub(crate) struct SessionState {
+    pub(crate) free: Vec<Resources>,
+    pub(crate) placement: GroupPlacement,
+    /// Undo log of (pod requests, node, group) applied since the last
+    /// checkpoint; replayed backwards on gang failure.
+    pub(crate) log: Vec<(Resources, NodeId, Option<GroupKey>)>,
+    /// Allocatable CPU (millicores) of the largest worker class — the
+    /// normalizer of the class-aware best-fit scoring term.
+    pub(crate) max_worker_cpu: u64,
+    /// Free-capacity index mirroring `free` (None = linear reference).
+    pub(crate) index: Option<CapacityIndex>,
+}
+
+impl SessionState {
+    pub(crate) fn new(
+        api: &ApiServer,
+        free: Vec<Resources>,
+        placement: GroupPlacement,
+    ) -> SessionState {
+        SessionState {
+            free,
+            placement,
+            log: Vec::new(),
+            max_worker_cpu: api.spec.max_worker_cores() as u64 * 1000,
+            index: None,
+        }
+    }
+
+    pub(crate) fn snapshot(api: &ApiServer) -> SessionState {
+        SessionState::new(
+            api,
+            api.spec.node_ids().map(|n| api.free_on(n)).collect(),
+            api.group_placement().clone(),
+        )
+    }
+
+    pub(crate) fn apply(&mut self, requests: Resources, node: NodeId, group: Option<GroupKey>) {
+        self.free[node.0] -= requests;
+        if let Some(index) = &mut self.index {
+            index.set_free(node, self.free[node.0]);
+        }
+        if let Some(key) = group {
+            self.placement.record(key, node);
+        }
+        self.log.push((requests, node, group));
+    }
+
+    pub(crate) fn checkpoint(&self) -> usize {
+        self.log.len()
+    }
+
+    pub(crate) fn rollback_to(&mut self, checkpoint: usize) {
+        while self.log.len() > checkpoint {
+            let (requests, node, group) = self.log.pop().unwrap();
+            self.free[node.0] += requests;
+            if let Some(index) = &mut self.index {
+                index.set_free(node, self.free[node.0]);
+            }
+            if let Some(key) = group {
+                self.placement.remove(key, node);
+            }
+        }
+    }
+
+    /// The feasible nodes for `pod` under this state's free view,
+    /// ascending by node id. Uses the capacity index when present; debug
+    /// builds assert the indexed set equals the linear reference after
+    /// every delta (this runs once per `place_pod`, so the whole test
+    /// suite exercises the equivalence on its traces).
+    pub(crate) fn feasible_into(&self, api: &ApiServer, pod: &Pod, out: &mut Vec<NodeId>) {
+        match &self.index {
+            Some(index) => {
+                index.feasible_into(pod, out);
+                #[cfg(debug_assertions)]
+                {
+                    let mut reference = Vec::new();
+                    linear_feasible_into(api, &self.free, pod, &mut reference);
+                    assert_eq!(
+                        *out, reference,
+                        "indexed feasible set drifted from the linear reference for {:?}",
+                        pod.id
+                    );
+                }
+            }
+            None => linear_feasible_into(api, &self.free, pod, out),
+        }
+    }
+}
+
+/// The placement-engine plugin: owns whatever persistent structure the
+/// feasibility enumeration needs and hands each session its view.
+pub trait PlacementEngine {
+    fn kind(&self) -> PlacementEngineKind;
+
+    /// Called at session start (and after a mid-session preemption
+    /// invalidates the session view): return the capacity index the
+    /// session should carry, or `None` for the linear reference scan.
+    fn session_index(&mut self, api: &ApiServer) -> Option<CapacityIndex>;
+}
+
+/// Reference engine: no index, every pod scans every node.
+pub struct LinearEngine;
+
+impl PlacementEngine for LinearEngine {
+    fn kind(&self) -> PlacementEngineKind {
+        PlacementEngineKind::Linear
+    }
+
+    fn session_index(&mut self, _api: &ApiServer) -> Option<CapacityIndex> {
+        None
+    }
+}
+
+/// Indexed engine: keeps a persistent base [`CapacityIndex`] in sync with
+/// the API server's allocation view by replaying the allocation-touch log
+/// from a cursor (bind/release/preempt/requeue events — never a full
+/// rescan), and clones it for each session's trial mutations.
+pub struct IndexedEngine {
+    base: Option<CapacityIndex>,
+    cursor: usize,
+    /// [`ApiServer::instance_id`] the cursor belongs to.
+    api_id: u64,
+}
+
+impl IndexedEngine {
+    pub fn new() -> IndexedEngine {
+        IndexedEngine { base: None, cursor: 0, api_id: 0 }
+    }
+}
+
+impl Default for IndexedEngine {
+    fn default() -> Self {
+        IndexedEngine::new()
+    }
+}
+
+impl PlacementEngine for IndexedEngine {
+    fn kind(&self) -> PlacementEngineKind {
+        PlacementEngineKind::Indexed
+    }
+
+    fn session_index(&mut self, api: &ApiServer) -> Option<CapacityIndex> {
+        // A different API server instance invalidates the cursor: rebuild
+        // cold (log length / node count alone cannot distinguish
+        // same-shape servers).
+        let stale = self.base.is_none() || self.api_id != api.instance_id();
+        if stale {
+            let free: Vec<Resources> = api.spec.node_ids().map(|n| api.free_on(n)).collect();
+            self.base = Some(CapacityIndex::build(&api.spec, &free));
+        } else {
+            let base = self.base.as_mut().unwrap();
+            for &node in api.alloc_touched_since(self.cursor) {
+                base.set_free(node, api.free_on(node));
+            }
+        }
+        self.api_id = api.instance_id();
+        self.cursor = api.alloc_version();
+        let base = self.base.as_ref().unwrap();
+        #[cfg(debug_assertions)]
+        for node in api.spec.node_ids() {
+            debug_assert_eq!(
+                base.free[node.0],
+                api.free_on(node),
+                "index free view drifted from the API server on {node:?}"
+            );
+        }
+        Some(base.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{gib, HeterogeneityMix, JobId, PodId};
+    use crate::kubelet::KubeletConfig;
+    use crate::util::Rng;
+
+    fn worker_pod(cores: u64) -> Pod {
+        let mut p = Pod::new(PodId(1), JobId(1), "w".into(), PodRole::Worker { index: 0 });
+        p.requests = Resources::new(cores * 1000, cores * gib(2));
+        p
+    }
+
+    fn launcher_pod() -> Pod {
+        let mut p = Pod::new(PodId(2), JobId(1), "l".into(), PodRole::Launcher);
+        p.requests = Resources::new(100, gib(1));
+        p
+    }
+
+    #[test]
+    fn engine_kind_names_round_trip() {
+        for kind in ALL_PLACEMENT_ENGINES {
+            assert_eq!(PlacementEngineKind::parse(kind.name()), Some(kind));
+            assert_eq!(kind.build().kind(), kind);
+        }
+        assert_eq!(PlacementEngineKind::parse("INDEXED"), Some(PlacementEngineKind::Indexed));
+        assert_eq!(PlacementEngineKind::parse("scan"), Some(PlacementEngineKind::Linear));
+        assert_eq!(PlacementEngineKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn index_enumerates_exactly_the_linear_feasible_set() {
+        let api = ApiServer::new(
+            ClusterSpec::mixed(8, HeterogeneityMix::Tiered),
+            KubeletConfig::cpu_mem_affinity(),
+        );
+        let free: Vec<Resources> = api.spec.node_ids().map(|n| api.free_on(n)).collect();
+        let index = CapacityIndex::build(&api.spec, &free);
+        let mut got = Vec::new();
+        let mut want = Vec::new();
+        for cores in [1u64, 8, 16, 32, 64, 128] {
+            let pod = worker_pod(cores);
+            index.feasible_into(&pod, &mut got);
+            linear_feasible_into(&api, &free, &pod, &mut want);
+            assert_eq!(got, want, "{cores} cores");
+        }
+        let pod = launcher_pod();
+        index.feasible_into(&pod, &mut got);
+        linear_feasible_into(&api, &free, &pod, &mut want);
+        assert_eq!(got, want, "launcher role-constrained to the control plane");
+    }
+
+    /// Property: under random set_free churn, the index stays equal to the
+    /// linear reference for random requests.
+    #[test]
+    fn prop_index_matches_linear_under_random_churn() {
+        let mut rng = Rng::seed_from_u64(77);
+        for case in 0..30u64 {
+            let mix = [
+                HeterogeneityMix::Uniform,
+                HeterogeneityMix::FatThin,
+                HeterogeneityMix::Tiered,
+            ][rng.range_usize(0, 3)];
+            let workers = rng.range_usize(1, 12);
+            let api = ApiServer::new(
+                ClusterSpec::mixed(workers, mix),
+                KubeletConfig::cpu_mem_affinity(),
+            );
+            let mut free: Vec<Resources> = api.spec.node_ids().map(|n| api.free_on(n)).collect();
+            let mut index = CapacityIndex::build(&api.spec, &free);
+            let mut got = Vec::new();
+            let mut want = Vec::new();
+            for _ in 0..60 {
+                // Mutate one node's free capacity within its allocatable.
+                let node = NodeId(rng.range_usize(0, free.len()));
+                let alloc = api.spec.node(node).allocatable();
+                let new = Resources::new(
+                    rng.range_usize(0, alloc.cpu_milli as usize + 1) as u64,
+                    rng.range_usize(0, alloc.mem_bytes as usize + 1) as u64,
+                );
+                free[node.0] = new;
+                index.set_free(node, new);
+                let pod = worker_pod(rng.range_usize(1, 65) as u64);
+                index.feasible_into(&pod, &mut got);
+                linear_feasible_into(&api, &free, &pod, &mut want);
+                assert_eq!(got, want, "case {case}");
+            }
+            assert_eq!(index.free_view(), free.as_slice(), "case {case}: mirror drift");
+        }
+    }
+
+    #[test]
+    fn indexed_engine_replays_the_alloc_log_incrementally() {
+        let mut api = ApiServer::new(ClusterSpec::paper(), KubeletConfig::cpu_mem_affinity());
+        let mut engine = IndexedEngine::new();
+        let idle = engine.session_index(&api).unwrap();
+        for n in api.spec.node_ids() {
+            assert_eq!(idle.free_view()[n.0], api.free_on(n));
+        }
+        // Bind a pod out-of-band; the next session must see it via the log.
+        use crate::workload::{Benchmark, Granularity, JobSpec, PlannedJob};
+        let planned = PlannedJob {
+            spec: JobSpec::paper_job(1, Benchmark::EpDgemm, 0.0),
+            granularity: Granularity { n_nodes: 1, n_workers: 1, n_groups: 1 },
+        };
+        let mut pod = worker_pod(16);
+        pod.id = api.fresh_pod_id();
+        pod.job = JobId(1);
+        let pid = pod.id;
+        api.create_job(planned, vec![pod], vec![], 0.0);
+        assert!(api.bind_pod(pid, NodeId(1), 0.0));
+        let loaded = engine.session_index(&api).unwrap();
+        for n in api.spec.node_ids() {
+            assert_eq!(loaded.free_view()[n.0], api.free_on(n), "replayed node {n:?}");
+        }
+    }
+}

@@ -34,9 +34,9 @@
 //!   the least weight-normalized service consumed go first, then priority,
 //!   then FIFO within a tenant.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
-use crate::apiserver::ApiServer;
+use crate::apiserver::{ApiServer, Event};
 use crate::cluster::{ClusterSpec, JobId, NodeId, NodeRole, Pod, PodPhase, PodRole, Resources};
 use crate::perfmodel::{walltime_factor, Calibration};
 
@@ -136,6 +136,18 @@ pub struct QueueContext<'a> {
     pub projected_completion: &'a BTreeMap<JobId, f64>,
     /// The session's current free-resource view, indexed by node.
     pub free: &'a [Resources],
+    /// Multiplier on the queue layer's walltime estimates — the
+    /// misprediction model (`SchedulerConfig::walltime_error_factor`);
+    /// 1.0 trusts the perf model's estimates.
+    pub walltime_factor: f64,
+}
+
+impl QueueContext<'_> {
+    /// The walltime estimate the queue layer plans with: the perf model's
+    /// [`estimated_runtime`] scaled by the session's error factor.
+    pub fn estimate(&self, job: JobId) -> f64 {
+        estimated_runtime(self.api, job) * self.walltime_factor
+    }
 }
 
 /// What a gang-placement failure means for the rest of the session.
@@ -234,16 +246,21 @@ pub fn estimated_runtime(api: &ApiServer, job: JobId) -> f64 {
     bench.base_running_secs() * walltime_factor(bench, &worker_tasks, &Calibration::default())
 }
 
-/// Base-time estimate of every running job's completion, for callers that
-/// schedule without a simulator (`Scheduler::cycle`): started + estimated
-/// base runtime, clamped to `now` for overrunning jobs.
-pub fn estimated_completions(api: &ApiServer, now: f64) -> BTreeMap<JobId, f64> {
+/// Estimate of every running job's completion, for callers that schedule
+/// without a simulator (`Scheduler::cycle`): started + estimated runtime
+/// (scaled by the misprediction factor — these are *queue* estimates, not
+/// actual runtimes), clamped to `now` for overrunning jobs.
+pub fn estimated_completions(
+    api: &ApiServer,
+    now: f64,
+    walltime_factor: f64,
+) -> BTreeMap<JobId, f64> {
     api.running_jobs()
         .into_iter()
         .map(|id| {
             let job = &api.jobs[&id];
             let start = job.start_time.unwrap_or(now);
-            (id, (start + estimated_runtime(api, id)).max(now))
+            (id, (start + estimated_runtime(api, id) * walltime_factor).max(now))
         })
         .collect()
 }
@@ -321,7 +338,7 @@ pub fn shadow_time(ctx: &QueueContext<'_>, job: JobId) -> Option<f64> {
                 .projected_completion
                 .get(&id)
                 .copied()
-                .unwrap_or_else(|| ctx.now + estimated_runtime(ctx.api, id));
+                .unwrap_or_else(|| ctx.now + ctx.estimate(id));
             (t.max(ctx.now), id)
         })
         .collect();
@@ -352,17 +369,21 @@ pub fn shadow_time(ctx: &QueueContext<'_>, job: JobId) -> Option<f64> {
 /// - a backfill can never occupy resources a reservation counted on (the
 ///   earlier gate could not see *which* resources a shadow referred to, so
 ///   a second blocked job's reservation could be silently violated).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ResourceTimeline {
     /// `(segment start, per-node free)` sorted by time. The first segment
     /// starts at the session's `now`; each segment extends to the next
-    /// start, the last one to infinity.
+    /// start, the last one to infinity. Segment starts are distinct
+    /// (releases at bit-equal times share one point — the rule the
+    /// incrementally maintained [`TimelineCache`] reproduces exactly).
     points: Vec<(f64, Vec<Resources>)>,
 }
 
 impl ResourceTimeline {
-    /// Build the release profile at `ctx.now`: the session's free view,
-    /// growing at each running job's projected completion.
+    /// Build the release profile at `ctx.now` from scratch: the session's
+    /// free view, growing at each running job's projected completion.
+    /// This is the pinned reference for the persistent [`TimelineCache`];
+    /// `Scheduler` sessions normally clone the cache instead.
     pub fn new(ctx: &QueueContext<'_>) -> ResourceTimeline {
         let mut releases: Vec<(f64, JobId)> = ctx
             .api
@@ -373,7 +394,7 @@ impl ResourceTimeline {
                     .projected_completion
                     .get(&id)
                     .copied()
-                    .unwrap_or_else(|| ctx.now + estimated_runtime(ctx.api, id));
+                    .unwrap_or_else(|| ctx.now + ctx.estimate(id));
                 (t.max(ctx.now), id)
             })
             .collect();
@@ -390,7 +411,7 @@ impl ResourceTimeline {
                 }
             }
             let last = points.last_mut().unwrap();
-            if (t - last.0).abs() < 1e-9 {
+            if t == last.0 {
                 last.1 = free;
             } else {
                 points.push((t, free));
@@ -479,6 +500,261 @@ impl ResourceTimeline {
         }
         None
     }
+}
+
+/// One running job's cached entry in the persistent release profile.
+#[derive(Debug, Clone)]
+struct JobRelease {
+    /// Effective release time (projection clamped to the session `now`).
+    t: f64,
+    /// Whether the release holds its own profile point (`t` was strictly
+    /// past `now` when added). Uncounted releases are merged into every
+    /// segment (the reference folds them into the base point).
+    counted: bool,
+    /// Per-pod `(node, requests)` released at `t`.
+    placement: Vec<(NodeId, Resources)>,
+}
+
+/// Persistent conservative-backfill release profile (§Perf): the
+/// [`ResourceTimeline`] used to be rebuilt from scratch at every
+/// conservative session's first gang failure — O(running jobs × nodes)
+/// per session in vector clones and pod walks. The cache keeps the
+/// profile across sessions and folds in only what changed, event-driven:
+///
+/// - job start / completion / preemption dirty exactly the windows of the
+///   jobs involved (the API server's event log, consumed from a cursor,
+///   flags restarts whose placement must be re-derived; the running-set
+///   diff handles arrivals and departures);
+/// - allocation changes re-anchor the base segment to the live free view
+///   (an exact per-node shift of every segment);
+/// - a moved projection relocates one job's release point.
+///
+/// Claims never touch the cache: sessions clone the profile
+/// ([`TimelineCache::session_profile`]) and claim on the clone. All
+/// resource arithmetic is integer-exact and release times are compared
+/// bit-for-bit, so the maintained profile equals the from-scratch rebuild
+/// *exactly*: debug builds assert it after every refresh, and a property
+/// test pins whole simulations bit-identical across the two paths.
+#[derive(Debug, Clone)]
+pub struct TimelineCache {
+    profile: ResourceTimeline,
+    releases: BTreeMap<JobId, JobRelease>,
+    /// Counted releases per release-time bit pattern; a profile point is
+    /// dropped when its count reaches zero.
+    point_jobs: BTreeMap<u64, usize>,
+    /// The free view the base segment is anchored to (the session free
+    /// view of the last refresh).
+    base_free: Vec<Resources>,
+    /// `ApiServer::events` consumed so far (restart detection).
+    event_cursor: usize,
+    /// [`ApiServer::instance_id`] the cursor belongs to.
+    api_id: u64,
+}
+
+impl TimelineCache {
+    /// Build the cache from scratch at a conservative session's first
+    /// gang failure (cold start; later sessions go through
+    /// [`TimelineCache::refresh`]).
+    pub fn new(ctx: &QueueContext<'_>) -> TimelineCache {
+        let profile = ResourceTimeline::new(ctx);
+        let mut releases = BTreeMap::new();
+        let mut point_jobs: BTreeMap<u64, usize> = BTreeMap::new();
+        for id in ctx.api.running_jobs() {
+            let t_raw = ctx
+                .projected_completion
+                .get(&id)
+                .copied()
+                .unwrap_or_else(|| ctx.now + ctx.estimate(id));
+            let t = t_raw.max(ctx.now);
+            let counted = t > ctx.now;
+            if counted {
+                *point_jobs.entry(t.to_bits()).or_insert(0) += 1;
+            }
+            releases.insert(id, JobRelease { t, counted, placement: placement_of(ctx.api, id) });
+        }
+        TimelineCache {
+            profile,
+            releases,
+            point_jobs,
+            base_free: ctx.free.to_vec(),
+            event_cursor: ctx.api.events.len(),
+            api_id: ctx.api.instance_id(),
+        }
+    }
+
+    /// The maintained release profile (claims-free).
+    pub fn profile(&self) -> &ResourceTimeline {
+        &self.profile
+    }
+
+    /// The profile clone a session claims reservations on.
+    pub fn session_profile(&self) -> ResourceTimeline {
+        self.profile.clone()
+    }
+
+    /// Fold everything that changed since the last refresh into the
+    /// profile. Equal, after this returns, to `ResourceTimeline::new(ctx)`
+    /// bit for bit.
+    pub fn refresh(&mut self, ctx: &QueueContext<'_>) {
+        // Staleness guard: a different API server instance invalidates
+        // the cursor and every cached placement — rebuild cold.
+        if self.api_id != ctx.api.instance_id() {
+            *self = TimelineCache::new(ctx);
+            return;
+        }
+        // 1. Restarts since the last refresh: a preempted job re-placed
+        //    while we were not looking is Running at both observations but
+        //    with a different placement — force a re-derive.
+        let mut restarted: BTreeSet<JobId> = BTreeSet::new();
+        for event in &ctx.api.events[self.event_cursor..] {
+            if let Event::JobStarted { job, .. } = event {
+                restarted.insert(*job);
+            }
+        }
+        self.event_cursor = ctx.api.events.len();
+        // 2. Re-anchor the base to the live free view: shift every segment
+        //    by the per-node delta (adds before subtracts — all segment
+        //    frees are >= the old base, so the arithmetic stays exact).
+        for (n, &new) in ctx.free.iter().enumerate() {
+            let old = self.base_free[n];
+            if old != new {
+                for (_, free) in &mut self.profile.points {
+                    free[n] = Resources::new(
+                        free[n].cpu_milli + new.cpu_milli - old.cpu_milli,
+                        free[n].mem_bytes + new.mem_bytes - old.mem_bytes,
+                    );
+                }
+                self.base_free[n] = new;
+            }
+        }
+        // 3. Reconcile the cached releases with the running set.
+        let mut desired: BTreeSet<JobId> = BTreeSet::new();
+        for id in ctx.api.running_jobs() {
+            desired.insert(id);
+            let t_raw = ctx
+                .projected_completion
+                .get(&id)
+                .copied()
+                .unwrap_or_else(|| ctx.now + ctx.estimate(id));
+            let t = t_raw.max(ctx.now);
+            let counted = t > ctx.now;
+            let unchanged = match self.releases.get(&id) {
+                Some(r) => {
+                    !restarted.contains(&id)
+                        && r.t.to_bits() == t.to_bits()
+                        && r.counted == counted
+                }
+                None => false,
+            };
+            if unchanged {
+                continue;
+            }
+            if let Some(old) = self.releases.remove(&id) {
+                self.remove_release(&old);
+                let placement = if restarted.contains(&id) {
+                    placement_of(ctx.api, id)
+                } else {
+                    old.placement
+                };
+                self.add_release(ctx.now, t, counted, &placement);
+                self.releases.insert(id, JobRelease { t, counted, placement });
+            } else {
+                let placement = placement_of(ctx.api, id);
+                self.add_release(ctx.now, t, counted, &placement);
+                self.releases.insert(id, JobRelease { t, counted, placement });
+            }
+        }
+        // 4. Drop releases of jobs that left the running set.
+        let gone: Vec<JobId> =
+            self.releases.keys().copied().filter(|id| !desired.contains(id)).collect();
+        for id in gone {
+            let old = self.releases.remove(&id).unwrap();
+            self.remove_release(&old);
+        }
+        // 5. Advance the base segment to the session time. Points at or
+        //    before `now` were all moved or removed above (their releases
+        //    re-clamped), so this only retimes the base.
+        debug_assert!(
+            self.profile.points.len() < 2 || self.profile.points[1].0 > ctx.now,
+            "stale profile point survived the refresh"
+        );
+        self.profile.points[0].0 = ctx.now;
+    }
+
+    /// Add a release to the profile: counted releases get (or share) a
+    /// point at `t` and enter every segment from it on; uncounted ones
+    /// (clamped to `now`) enter every segment.
+    fn add_release(&mut self, now: f64, t: f64, counted: bool, placement: &[(NodeId, Resources)]) {
+        if counted {
+            let count = self.point_jobs.entry(t.to_bits()).or_insert(0);
+            if *count == 0 {
+                let pos = self.profile.points.partition_point(|(s, _)| *s < t);
+                debug_assert!(pos >= 1, "release point before the base segment");
+                let free = self.profile.points[pos - 1].1.clone();
+                self.profile.points.insert(pos, (t, free));
+            }
+            *count += 1;
+            let pos = self.profile.points.partition_point(|(s, _)| *s < t);
+            for (_, free) in &mut self.profile.points[pos..] {
+                for &(node, req) in placement {
+                    free[node.0] += req;
+                }
+            }
+        } else {
+            debug_assert!(t <= now, "uncounted release past now");
+            for (_, free) in &mut self.profile.points {
+                for &(node, req) in placement {
+                    free[node.0] += req;
+                }
+            }
+        }
+    }
+
+    /// Exact inverse of [`TimelineCache::add_release`]; drops the point
+    /// when its last counted release leaves.
+    fn remove_release(&mut self, release: &JobRelease) {
+        if release.counted {
+            let t = release.t;
+            let pos = self.profile.points.partition_point(|(s, _)| *s < t);
+            for (_, free) in &mut self.profile.points[pos..] {
+                for &(node, req) in &release.placement {
+                    free[node.0] -= req;
+                }
+            }
+            let bits = t.to_bits();
+            let count = self
+                .point_jobs
+                .get_mut(&bits)
+                .expect("counted release without a point refcount");
+            *count -= 1;
+            if *count == 0 {
+                self.point_jobs.remove(&bits);
+                debug_assert!(self.profile.points[pos].0.to_bits() == bits);
+                self.profile.points.remove(pos);
+            }
+        } else {
+            for (_, free) in &mut self.profile.points {
+                for &(node, req) in &release.placement {
+                    free[node.0] -= req;
+                }
+            }
+        }
+    }
+}
+
+/// The per-pod `(node, requests)` a running job releases at completion
+/// (integer adds — accumulation order does not matter, so the cached form
+/// reproduces the reference's pod-walk exactly).
+fn placement_of(api: &ApiServer, job: JobId) -> Vec<(NodeId, Resources)> {
+    api.jobs[&job]
+        .pods
+        .iter()
+        .map(|pid| &api.pods[pid])
+        .filter_map(|pod| match (pod.node, pod.phase) {
+            (Some(node), PodPhase::Bound | PodPhase::Running) => Some((node, pod.requests)),
+            _ => None,
+        })
+        .collect()
 }
 
 /// Seed behaviour: FIFO, blocked jobs skipped.
@@ -575,7 +851,7 @@ impl QueuePolicy for EasyBackfill {
     }
 
     fn may_backfill(&self, ctx: &QueueContext<'_>, job: JobId, shadow: f64) -> bool {
-        ctx.now + estimated_runtime(ctx.api, job) <= shadow + 1e-9
+        ctx.now + ctx.estimate(job) <= shadow + 1e-9
     }
 
     fn needs_projections(&self) -> bool {
@@ -617,7 +893,7 @@ impl QueuePolicy for ConservativeBackfill {
     }
 
     fn may_backfill(&self, ctx: &QueueContext<'_>, job: JobId, shadow: f64) -> bool {
-        ctx.now + estimated_runtime(ctx.api, job) <= shadow + 1e-9
+        ctx.now + ctx.estimate(job) <= shadow + 1e-9
     }
 
     fn needs_projections(&self) -> bool {
@@ -828,7 +1104,13 @@ mod tests {
             projected.insert(j, 100.0 + i as f64 * 10.0);
         }
         let free: Vec<Resources> = api.spec.node_ids().map(|n| api.free_on(n)).collect();
-        let ctx = QueueContext { api: &api, now: 9.0, projected_completion: &projected, free: &free };
+        let ctx = QueueContext {
+            api: &api,
+            now: 9.0,
+            projected_completion: &projected,
+            free: &free,
+            walltime_factor: 1.0,
+        };
         assert_eq!(shadow_time(&ctx, blocked), Some(100.0));
     }
 
@@ -845,7 +1127,13 @@ mod tests {
         api.create_job(planned, pods, hostfile, 0.0);
         let free: Vec<Resources> = api.spec.node_ids().map(|n| api.free_on(n)).collect();
         let projected = BTreeMap::new();
-        let ctx = QueueContext { api: &api, now: 0.0, projected_completion: &projected, free: &free };
+        let ctx = QueueContext {
+            api: &api,
+            now: 0.0,
+            projected_completion: &projected,
+            free: &free,
+            walltime_factor: 1.0,
+        };
         assert_eq!(shadow_time(&ctx, JobId(7)), None);
         assert_eq!(
             EasyBackfill.on_gang_failure(&ctx, JobId(7)),
@@ -873,8 +1161,13 @@ mod tests {
             projected.insert(j, 100.0 + i as f64 * 10.0);
         }
         let free: Vec<Resources> = api.spec.node_ids().map(|n| api.free_on(n)).collect();
-        let ctx =
-            QueueContext { api: &api, now: 9.0, projected_completion: &projected, free: &free };
+        let ctx = QueueContext {
+            api: &api,
+            now: 9.0,
+            projected_completion: &projected,
+            free: &free,
+            walltime_factor: 1.0,
+        };
         let tl = ResourceTimeline::new(&ctx);
         assert_eq!(tl.min_free_over(9.0, 9.5), free, "base segment = session free");
         let idle = tl.min_free_over(1e6, 1e6 + 1.0);
@@ -891,11 +1184,86 @@ mod tests {
     }
 
     #[test]
+    fn timeline_cache_refresh_tracks_the_rebuild_exactly() {
+        // Loaded cluster, cache built at t=9; then one job finishes (its
+        // release leaves, the base grows), a queued job starts (new
+        // release, base shrinks on its node), one projection moves, and
+        // the clock advances past a release — after every refresh the
+        // cache must equal a from-scratch rebuild bit for bit.
+        let mut api = api_with_jobs(&[Benchmark::EpDgemm; 10]);
+        let mut sched = crate::scheduler::Scheduler::new(
+            crate::scheduler::SchedulerConfig::volcano_default(1),
+        );
+        let started = sched.cycle(&mut api, 0.0);
+        assert_eq!(started.len(), 8);
+        let mut projected = BTreeMap::new();
+        for (i, &j) in started.iter().enumerate() {
+            projected.insert(j, 100.0 + i as f64 * 10.0);
+        }
+        let free_of = |api: &ApiServer| -> Vec<Resources> {
+            api.spec.node_ids().map(|n| api.free_on(n)).collect()
+        };
+        let f0 = free_of(&api);
+        let ctx0 = QueueContext {
+            api: &api,
+            now: 9.0,
+            projected_completion: &projected,
+            free: &f0,
+            walltime_factor: 1.0,
+        };
+        let mut cache = TimelineCache::new(&ctx0);
+        assert_eq!(cache.profile(), &ResourceTimeline::new(&ctx0), "cold build");
+        // No-op refresh: nothing changed.
+        cache.refresh(&ctx0);
+        assert_eq!(cache.profile(), &ResourceTimeline::new(&ctx0), "no-op refresh");
+        // Churn: finish, start, move a projection, advance time.
+        api.finish_job(started[0], 100.0);
+        let second = sched.cycle(&mut api, 100.0);
+        assert_eq!(second.len(), 1, "one queued job takes the freed slot");
+        projected.remove(&started[0]);
+        projected.insert(second[0], 800.0);
+        projected.insert(started[3], 170.0);
+        let f1 = free_of(&api);
+        let ctx1 = QueueContext {
+            api: &api,
+            now: 105.0,
+            projected_completion: &projected,
+            free: &f1,
+            walltime_factor: 1.0,
+        };
+        cache.refresh(&ctx1);
+        assert_eq!(cache.profile(), &ResourceTimeline::new(&ctx1), "churn refresh");
+        // Advance past the 110/120/130 releases: they clamp to `now` and
+        // fold into the base segment, exactly as the rebuild does.
+        let ctx2 = QueueContext {
+            api: &api,
+            now: 131.0,
+            projected_completion: &projected,
+            free: &f1,
+            walltime_factor: 1.0,
+        };
+        cache.refresh(&ctx2);
+        assert_eq!(cache.profile(), &ResourceTimeline::new(&ctx2), "time advance");
+        // The session's claim surface is a clone: claiming on it never
+        // perturbs the cache.
+        let before = cache.profile().clone();
+        let mut session = cache.session_profile();
+        session.claim(200.0, 300.0, &[(NodeId(1), Resources::new(4_000, 0))]);
+        assert_eq!(cache.profile(), &before, "claims stay session-local");
+    }
+
+    #[test]
     fn backfill_window_admits_only_jobs_that_finish_before_shadow() {
         let api = api_with_jobs(&[Benchmark::GRandomRing, Benchmark::MiniFe]);
         let free: Vec<Resources> = api.spec.node_ids().map(|n| api.free_on(n)).collect();
         let projected = BTreeMap::new();
-        let ctx = QueueContext { api: &api, now: 0.0, projected_completion: &projected, free: &free };
+        let ctx = QueueContext {
+            api: &api,
+            now: 0.0,
+            projected_completion: &projected,
+            free: &free,
+            walltime_factor: 1.0,
+        };
         // Shadow at 350 s: the ring job (walltime estimate ~333 s) fits the
         // window, MiniFE (~791 s estimate) does not.
         assert!(EasyBackfill.may_backfill(&ctx, JobId(1), 350.0));
@@ -910,7 +1278,13 @@ mod tests {
         let api = api_with_jobs(&[Benchmark::EpDgemm]);
         let free: Vec<Resources> = api.spec.node_ids().map(|n| api.free_on(n)).collect();
         let projected = BTreeMap::new();
-        let ctx = QueueContext { api: &api, now: 0.0, projected_completion: &projected, free: &free };
+        let ctx = QueueContext {
+            api: &api,
+            now: 0.0,
+            projected_completion: &projected,
+            free: &free,
+            walltime_factor: 1.0,
+        };
         assert_eq!(FifoSkip.on_gang_failure(&ctx, JobId(1)), GangDecision::Skip);
         assert_eq!(FifoStrict.on_gang_failure(&ctx, JobId(1)), GangDecision::Block);
         assert_eq!(Sjf.on_gang_failure(&ctx, JobId(1)), GangDecision::Skip);

@@ -30,7 +30,7 @@ use crate::perfmodel::{
     job_nic_demands, job_slowdown_with, job_socket_demands, Calibration, ClusterLoads,
 };
 use crate::planner::{plan, GranularityPolicy, SystemInfo};
-use crate::scheduler::{Scheduler, SchedulerConfig};
+use crate::scheduler::{PlacementEngineKind, Scheduler, SchedulerConfig};
 use crate::util::Rng;
 use crate::workload::{JobSpec, TenantId};
 
@@ -216,6 +216,20 @@ impl Simulation {
             force_full_recompute: false,
             base_work: BTreeMap::new(),
         }
+    }
+
+    /// Swap the scheduler's placement engine — the `linear` reference vs
+    /// the `indexed` default. Outputs are bit-identical (property-pinned);
+    /// benches compare the bookkeeping cost.
+    pub fn set_placement_engine(&mut self, kind: PlacementEngineKind) {
+        self.scheduler.set_engine(kind);
+    }
+
+    /// Force the conservative backfill timeline to rebuild from scratch
+    /// every session (the pre-incremental reference path) instead of
+    /// refreshing the scheduler's persistent cache.
+    pub fn set_force_timeline_rebuild(&mut self, force: bool) {
+        self.scheduler.force_timeline_rebuild = force;
     }
 
     fn base_work_of(&self, bench: crate::workload::Benchmark) -> f64 {

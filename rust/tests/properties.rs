@@ -399,6 +399,95 @@ fn prop_heterogeneous_scheduling_respects_class_capacity() {
     }
 }
 
+/// Property: the indexed placement engine is bit-identical to the linear
+/// reference scan across cluster shapes (homogeneous + heterogeneity
+/// mixes), queue policies, and preemption churn — whole simulations, not
+/// just single sessions. (Debug builds additionally assert the feasible
+/// set per pod and the index's free view per session.)
+#[test]
+fn prop_indexed_engine_matches_linear_reference_bitwise() {
+    use kube_fgs::cluster::HeterogeneityMix;
+    use kube_fgs::scheduler::{PlacementEngineKind, QueuePolicyKind};
+    use kube_fgs::workload::two_tenant_trace;
+    let queues = [
+        QueuePolicyKind::FifoSkip,
+        QueuePolicyKind::Sjf,
+        QueuePolicyKind::EasyBackfill,
+        QueuePolicyKind::ConservativeBackfill,
+        QueuePolicyKind::FairShare,
+    ];
+    for case in 0..8u64 {
+        let cluster = || match case % 3 {
+            0 => ClusterSpec::paper(),
+            1 => ClusterSpec::mixed(6, HeterogeneityMix::FatThin),
+            _ => ClusterSpec::mixed(6, HeterogeneityMix::Tiered),
+        };
+        let queue = queues[case as usize % queues.len()];
+        let preempt = case % 2 == 1;
+        let mk = |engine: PlacementEngineKind| {
+            let mut sim = Scenario::CmGTg.simulation_configured(
+                cluster(),
+                case,
+                queue,
+                preempt,
+            );
+            sim.set_placement_engine(engine);
+            sim
+        };
+        let trace = two_tenant_trace(14, 35.0, case);
+        let key = |o: &kube_fgs::simulator::SimOutput| {
+            o.records
+                .iter()
+                .map(|r| (r.id, r.start_time.to_bits(), r.finish_time.to_bits()))
+                .collect::<Vec<_>>()
+        };
+        let linear = mk(PlacementEngineKind::Linear).run(&trace);
+        let indexed = mk(PlacementEngineKind::Indexed).run(&trace);
+        assert_eq!(key(&linear), key(&indexed), "case {case} ({queue}, preempt={preempt})");
+        assert_eq!(linear.unschedulable, indexed.unschedulable, "case {case}");
+    }
+}
+
+/// Property: the persistent conservative-backfill timeline (event-driven
+/// refresh) produces bit-identical simulations to the per-session rebuild
+/// reference, across cluster shapes and preemption churn. (Debug builds
+/// additionally assert cache == rebuild at every conservative session.)
+#[test]
+fn prop_persistent_timeline_matches_rebuild_bitwise() {
+    use kube_fgs::cluster::HeterogeneityMix;
+    use kube_fgs::scheduler::QueuePolicyKind;
+    use kube_fgs::workload::two_tenant_trace;
+    for case in 0..6u64 {
+        let cluster = || match case % 3 {
+            0 => ClusterSpec::paper(),
+            1 => ClusterSpec::mixed(6, HeterogeneityMix::FatThin),
+            _ => ClusterSpec::mixed(6, HeterogeneityMix::Tiered),
+        };
+        let preempt = case % 2 == 1;
+        let mk = |force_rebuild: bool| {
+            let mut sim = Scenario::CmGTg.simulation_configured(
+                cluster(),
+                case,
+                QueuePolicyKind::ConservativeBackfill,
+                preempt,
+            );
+            sim.set_force_timeline_rebuild(force_rebuild);
+            sim
+        };
+        let trace = two_tenant_trace(14, 30.0, case);
+        let key = |o: &kube_fgs::simulator::SimOutput| {
+            o.records
+                .iter()
+                .map(|r| (r.id, r.start_time.to_bits(), r.finish_time.to_bits()))
+                .collect::<Vec<_>>()
+        };
+        let persistent = mk(false).run(&trace);
+        let rebuilt = mk(true).run(&trace);
+        assert_eq!(key(&persistent), key(&rebuilt), "case {case} (preempt={preempt})");
+        assert_eq!(persistent.unschedulable, rebuilt.unschedulable, "case {case}");
+    }
+}
+
 /// Property: per-benchmark base work overrides scale running times
 /// proportionally for isolated jobs.
 #[test]
