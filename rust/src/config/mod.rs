@@ -12,6 +12,13 @@
 //!   "preemption_policy": "least_work_lost",
 //!   "engine": "indexed",
 //!   "walltime_error_factor": 1.5,
+//!   "pipeline": {
+//!     "actions": ["enqueue", "allocate", "preempt", "backfill"],
+//!     "plugins": [
+//!       { "name": "aging", "threshold_secs": 300 },
+//!       { "name": "preemption_budget", "window_secs": 600, "max_evictions": 2 }
+//!     ]
+//!   },
 //!   "tenants": [
 //!     { "id": 0, "weight": 1.0, "quota": { "cores": 64 } },
 //!     { "id": 1, "weight": 3.0 }
@@ -33,7 +40,10 @@ use anyhow::{anyhow, bail, Result};
 use crate::cluster::{gib, ClusterSpec, HeterogeneityMix, NodeClass, Resources};
 use crate::perfmodel::Calibration;
 use crate::scenario::Scenario;
-use crate::scheduler::{PlacementEngineKind, PreemptionPolicy, QueuePolicyKind};
+use crate::scheduler::{
+    ActionKind, ActionList, PipelineConfig, PlacementEngineKind, PreemptionPolicy,
+    QueuePolicyKind,
+};
 use crate::simulator::Simulation;
 use crate::util::Json;
 use crate::workload::{
@@ -60,6 +70,10 @@ pub struct ExperimentConfig {
     /// Walltime-estimate error multiplier (`walltime_error_factor`);
     /// applied to queue estimates only, defaults to 1.0.
     pub walltime_error_factor: f64,
+    /// Action/plugin pipeline (`pipeline`); defaults to the legacy-
+    /// equivalent five-action list with only the core quota plugin, which
+    /// is bit-identical to the pre-pipeline scheduler.
+    pub pipeline: PipelineConfig,
     /// Per-tenant fair-share weights, applied to the API server before
     /// the run (unlisted tenants weigh 1.0).
     pub tenants: Vec<(TenantId, f64)>,
@@ -150,6 +164,90 @@ impl ExperimentConfig {
                 }
                 f
             }
+        };
+        // Action/plugin pipeline: `{"actions": [...], "plugins": [{"name":
+        // "aging", "threshold_secs": N} | {"name": "preemption_budget",
+        // "window_secs": N, "max_evictions": N}]}`. Either key may be
+        // omitted; the defaults are the legacy-equivalent action list and
+        // no optional plugins.
+        let pipeline = match json.get("pipeline") {
+            Json::Null => PipelineConfig::legacy_equivalent(),
+            p if p.as_obj().is_some() => {
+                let mut cfg = PipelineConfig::legacy_equivalent();
+                match p.get("actions") {
+                    Json::Null => {}
+                    Json::Arr(entries) => {
+                        let mut kinds = Vec::new();
+                        for e in entries {
+                            let name = e.as_str().ok_or_else(|| {
+                                anyhow!("config: pipeline.actions[] must be strings")
+                            })?;
+                            kinds.push(ActionKind::parse(name).ok_or_else(|| {
+                                anyhow!(
+                                    "config: unknown pipeline action {name:?} \
+                                     (enqueue | allocate | preempt | reclaim | backfill)"
+                                )
+                            })?);
+                        }
+                        cfg = cfg.with_actions(
+                            ActionList::of(&kinds)
+                                .map_err(|e| anyhow!("config: pipeline.actions: {e}"))?,
+                        );
+                    }
+                    other => {
+                        bail!("config: \"pipeline.actions\" must be an array, got {other:?}")
+                    }
+                }
+                match p.get("plugins") {
+                    Json::Null => {}
+                    Json::Arr(entries) => {
+                        for e in entries {
+                            let name = e.get("name").as_str().ok_or_else(|| {
+                                anyhow!("config: pipeline.plugins[].name must be a string")
+                            })?;
+                            match name {
+                                "aging" => {
+                                    let threshold =
+                                        e.get("threshold_secs").as_f64().ok_or_else(|| {
+                                            anyhow!(
+                                                "config: aging plugin needs a numeric \
+                                                 \"threshold_secs\""
+                                            )
+                                        })?;
+                                    cfg = cfg.with_aging(threshold);
+                                }
+                                "preemption_budget" => {
+                                    let window =
+                                        e.get("window_secs").as_f64().ok_or_else(|| {
+                                            anyhow!(
+                                                "config: preemption_budget plugin needs a \
+                                                 numeric \"window_secs\""
+                                            )
+                                        })?;
+                                    let max =
+                                        e.get("max_evictions").as_u64().ok_or_else(|| {
+                                            anyhow!(
+                                                "config: preemption_budget plugin needs an \
+                                                 integer \"max_evictions\""
+                                            )
+                                        })?;
+                                    cfg = cfg.with_budget(window, max as u32);
+                                }
+                                other => bail!(
+                                    "config: unknown pipeline plugin {other:?} \
+                                     (aging | preemption_budget)"
+                                ),
+                            }
+                        }
+                    }
+                    other => {
+                        bail!("config: \"pipeline.plugins\" must be an array, got {other:?}")
+                    }
+                }
+                cfg.validate().map_err(|e| anyhow!("config: pipeline: {e}"))?;
+                cfg
+            }
+            other => bail!("config: \"pipeline\" must be an object, got {other:?}"),
         };
         let mut tenants = Vec::new();
         let mut quotas = Vec::new();
@@ -310,6 +408,7 @@ impl ExperimentConfig {
             preemption_policy,
             engine,
             walltime_error_factor,
+            pipeline,
             tenants,
             quotas,
             worker_nodes,
@@ -366,7 +465,8 @@ impl ExperimentConfig {
             .with_preemption(self.preemption)
             .with_preemption_policy(self.preemption_policy)
             .with_engine(self.engine)
-            .with_walltime_error_factor(self.walltime_error_factor);
+            .with_walltime_error_factor(self.walltime_error_factor)
+            .with_pipeline(self.pipeline);
         let mut sim = Simulation::new(
             self.cluster(),
             self.scenario.kubelet(),
@@ -568,6 +668,57 @@ mod tests {
         )
         .unwrap();
         assert_eq!(run.build_simulation().run(&run.build_trace()).records.len(), 5);
+    }
+
+    #[test]
+    fn pipeline_key_parses_and_validates() {
+        // Omitted: the legacy-equivalent default.
+        let d = ExperimentConfig::parse(r#"{"scenario":"CM"}"#).unwrap();
+        assert_eq!(d.pipeline, PipelineConfig::legacy_equivalent());
+        // Explicit actions + plugins.
+        let c = ExperimentConfig::parse(
+            r#"{
+              "scenario": "CM_G_TG_PRE",
+              "pipeline": {
+                "actions": ["enqueue", "allocate", "preempt", "backfill"],
+                "plugins": [
+                  { "name": "aging", "threshold_secs": 300 },
+                  { "name": "preemption_budget", "window_secs": 600, "max_evictions": 2 }
+                ]
+              }
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(c.pipeline.actions.len(), 4);
+        assert!(!c.pipeline.actions.contains(ActionKind::Reclaim));
+        assert_eq!(c.pipeline.aging.map(|a| a.threshold_secs), Some(300.0));
+        assert_eq!(c.pipeline.budget.map(|b| b.max_evictions), Some(2));
+        // Rejections: unknown action, duplicate action, missing required
+        // action, out-of-canonical-order list, unknown plugin, bad knobs.
+        for bad in [
+            r#"{"scenario":"CM","pipeline":{"actions":["enqueue","allocate","evict"]}}"#,
+            r#"{"scenario":"CM","pipeline":{"actions":["enqueue","allocate","allocate"]}}"#,
+            r#"{"scenario":"CM","pipeline":{"actions":["allocate","backfill"]}}"#,
+            r#"{"scenario":"CM","pipeline":{"actions":["allocate","enqueue"]}}"#,
+            r#"{"scenario":"CM","pipeline":{"plugins":[{"name":"gpu_packing"}]}}"#,
+            r#"{"scenario":"CM","pipeline":{"plugins":[{"name":"aging"}]}}"#,
+            r#"{"scenario":"CM","pipeline":{"plugins":[{"name":"aging","threshold_secs":-5}]}}"#,
+            r#"{"scenario":"CM","pipeline":{"plugins":[
+                {"name":"preemption_budget","window_secs":60,"max_evictions":0}]}}"#,
+            r#"{"scenario":"CM","pipeline":[]}"#,
+        ] {
+            assert!(ExperimentConfig::parse(bad).is_err(), "should reject: {bad}");
+        }
+        // A pipelined config runs end-to-end.
+        let run = ExperimentConfig::parse(
+            r#"{
+              "scenario": "CM_G_TG_PRE",
+              "pipeline": { "plugins": [ { "name": "aging", "threshold_secs": 600 } ] },
+              "trace": { "kind": "two_tenant", "jobs": 8, "mean_interval": 30 }
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(run.build_simulation().run(&run.build_trace()).records.len(), 8);
     }
 
     #[test]

@@ -62,9 +62,27 @@ pub fn run_scenario_configured(
     trace: &[JobSpec],
     seed: u64,
 ) -> SimOutput {
+    run_scenario_pinned(scenario, queue, preemption, engine, tenant_weights, trace, seed, false)
+}
+
+/// Same as [`run_scenario_configured`], with the scheduler optionally
+/// pinned to the pre-pipeline legacy cycle (the differential harness's
+/// reference path, surfaced on the CLI as `run --legacy-scheduler`).
+#[allow(clippy::too_many_arguments)]
+pub fn run_scenario_pinned(
+    scenario: Scenario,
+    queue: QueuePolicyKind,
+    preemption: bool,
+    engine: PlacementEngineKind,
+    tenant_weights: &[(TenantId, f64)],
+    trace: &[JobSpec],
+    seed: u64,
+    force_legacy: bool,
+) -> SimOutput {
     let mut sim =
         scenario.simulation_configured(ClusterSpec::paper(), seed, queue, preemption);
     sim.set_placement_engine(engine);
+    sim.set_force_legacy_scheduler(force_legacy);
     for &(tenant, weight) in tenant_weights {
         sim.api.set_tenant_weight(tenant, weight);
     }

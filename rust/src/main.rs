@@ -101,6 +101,7 @@ COMMANDS:
   exp3 [--seed N]       Table III + Figs. 8-9: framework comparison
   run --scenario NAME [--jobs N] [--interval S] [--seed N] [--queue POLICY]
       [--preempt] [--two-tenant] [--engine linear|indexed]
+      [--legacy-scheduler] [--digest]
                         one scenario on a uniform random trace; POLICY is
                         fifo | fifo_strict | sjf | easy_backfill |
                         cons_backfill | fair_share and overrides the
@@ -108,7 +109,10 @@ COMMANDS:
                         priority preemption; --two-tenant swaps in the
                         two-tenant trace (batch + high-priority prod);
                         --engine picks the placement engine (default
-                        indexed — bit-identical to linear, just faster)
+                        indexed — bit-identical to linear, just faster);
+                        --legacy-scheduler pins the pre-pipeline scheduler
+                        cycle (the differential harness's reference path);
+                        --digest prints the run's FNV-1a trace digest
   queues [--jobs N] [--interval S] [--seed N] [--json PATH]
                         queue-policy ablation table on CM_G_TG placement
                         (default: 200 jobs, 60 s mean interval)
@@ -131,8 +135,8 @@ COMMANDS:
   figures --out DIR [--seed N]
                         render every paper figure as SVG into DIR
   config PATH           run an experiment described by a JSON config file
-                        (keys: scenario, seed, queue, preemption, tenants,
-                        cluster, trace, output)
+                        (keys: scenario, seed, queue, preemption, pipeline,
+                        tenants, cluster, trace, output)
 
 SCENARIOS (each pins kubelet, planner, controller, scheduler, queue,
 preemption):
@@ -305,11 +309,21 @@ fn cmd_run(args: &Args) -> Result<()> {
             .ok_or_else(|| anyhow!("unknown engine {e:?} (linear | indexed)"))?,
         None => kube_fgs::scheduler::PlacementEngineKind::Indexed,
     };
-    let out = experiments::run_scenario_configured(
-        scenario, queue, preempt, engine, &[], &trace, seed,
+    let out = experiments::run_scenario_pinned(
+        scenario,
+        queue,
+        preempt,
+        engine,
+        &[],
+        &trace,
+        seed,
+        args.has("legacy-scheduler"),
     );
     let m = ExperimentMetrics::from(&out);
     print!("{}", report::scenario_summary(scenario.name(), &m));
+    if args.has("digest") {
+        println!("digest: {}", kube_fgs::simulator::SimDigest::of(&out).to_json());
+    }
     if !out.unschedulable.is_empty() {
         println!("unschedulable jobs: {:?}", out.unschedulable);
     }

@@ -62,6 +62,29 @@ pub enum Scenario {
     CmGTgPre,
 }
 
+/// Every scenario code, in declaration order — the full matrix axis the
+/// differential golden-trace harness iterates (× placement engines ×
+/// cluster mixes).
+pub const ALL_SCENARIOS: [Scenario; 17] = [
+    Scenario::None_,
+    Scenario::Cm,
+    Scenario::CmS,
+    Scenario::CmG,
+    Scenario::CmSTg,
+    Scenario::CmGTg,
+    Scenario::Kubeflow,
+    Scenario::VolcanoNative,
+    Scenario::CmSjf,
+    Scenario::CmBf,
+    Scenario::CmGTgSjf,
+    Scenario::CmGTgBf,
+    Scenario::CmFs,
+    Scenario::CmCbf,
+    Scenario::CmGTgFs,
+    Scenario::CmGTgCbf,
+    Scenario::CmGTgPre,
+];
+
 /// The six Table-II scenarios, in the paper's column order.
 pub const TABLE2_SCENARIOS: [Scenario; 6] = [
     Scenario::None_,
@@ -105,26 +128,7 @@ impl Scenario {
     }
 
     pub fn parse(s: &str) -> Option<Scenario> {
-        let all = [
-            Scenario::None_,
-            Scenario::Cm,
-            Scenario::CmS,
-            Scenario::CmG,
-            Scenario::CmSTg,
-            Scenario::CmGTg,
-            Scenario::Kubeflow,
-            Scenario::VolcanoNative,
-            Scenario::CmSjf,
-            Scenario::CmBf,
-            Scenario::CmGTgSjf,
-            Scenario::CmGTgBf,
-            Scenario::CmFs,
-            Scenario::CmCbf,
-            Scenario::CmGTgFs,
-            Scenario::CmGTgCbf,
-            Scenario::CmGTgPre,
-        ];
-        all.iter().copied().find(|sc| sc.name().eq_ignore_ascii_case(s))
+        ALL_SCENARIOS.iter().copied().find(|sc| sc.name().eq_ignore_ascii_case(s))
     }
 
     pub fn kubelet(&self) -> KubeletConfig {
@@ -260,6 +264,22 @@ mod tests {
         // Gang everywhere except Kubeflow.
         assert!(!Scenario::Kubeflow.scheduler(0).gang);
         assert!(Scenario::VolcanoNative.scheduler(0).gang);
+    }
+
+    #[test]
+    fn all_scenarios_is_complete_and_duplicate_free() {
+        // Every code round-trips through its own name, and no two share
+        // one — so the differential harness's matrix axis covers the enum.
+        for s in ALL_SCENARIOS {
+            assert_eq!(Scenario::parse(s.name()), Some(s));
+        }
+        let mut names: Vec<&str> = ALL_SCENARIOS.iter().map(|s| s.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), ALL_SCENARIOS.len());
+        for s in TABLE2_SCENARIOS.iter().chain(EXP3_SCENARIOS.iter()) {
+            assert!(ALL_SCENARIOS.contains(s), "{s}");
+        }
     }
 
     #[test]

@@ -28,6 +28,7 @@
 //! sessions in a [`TimelineCache`] (event-driven invalidation vs. the
 //! per-session rebuild).
 
+pub mod pipeline;
 pub mod placement;
 pub mod queue;
 pub mod score;
@@ -42,6 +43,10 @@ use crate::util::Rng;
 
 use placement::SessionState;
 
+pub use pipeline::{
+    ActionKind, ActionList, AgingConfig, AgingPlugin, BudgetConfig, BudgetPlugin,
+    PipelineConfig, Plugin, PluginSet, QuotaPlugin, ALL_ACTIONS,
+};
 pub use placement::{
     CapacityIndex, IndexedEngine, LinearEngine, PlacementEngine, PlacementEngineKind,
     ALL_PLACEMENT_ENGINES,
@@ -117,6 +122,12 @@ pub struct SchedulerConfig {
     /// scale-invariant, so the knob bites on backfill windows and
     /// conservative reservations.
     pub walltime_error_factor: f64,
+    /// The action/plugin pipeline a session runs (ordered actions plus
+    /// the optional tier-1 plugins). The default is legacy-equivalent:
+    /// all five actions in canonical order, no optional plugins —
+    /// pinned bit-identical to the retired monolithic loop by
+    /// `tests/differential.rs`.
+    pub pipeline: PipelineConfig,
     /// Seed for the default scheduler's random tie-breaking.
     pub seed: u64,
 }
@@ -132,6 +143,7 @@ impl SchedulerConfig {
             preemption_policy: PreemptionPolicy::MinimalVictim,
             engine: PlacementEngineKind::Indexed,
             walltime_error_factor: 1.0,
+            pipeline: PipelineConfig::legacy_equivalent(),
             seed,
         }
     }
@@ -176,6 +188,17 @@ impl SchedulerConfig {
         self.walltime_error_factor = factor;
         self
     }
+
+    /// Same profile under a different action/plugin pipeline. Panics on
+    /// a structurally invalid pipeline (config files surface the same
+    /// error through `PipelineConfig::validate` instead).
+    pub fn with_pipeline(mut self, pipeline: PipelineConfig) -> Self {
+        if let Err(e) = pipeline.validate() {
+            panic!("invalid pipeline config: {e}");
+        }
+        self.pipeline = pipeline;
+        self
+    }
 }
 
 pub struct Scheduler {
@@ -193,6 +216,13 @@ pub struct Scheduler {
     /// pre-incremental reference path benches and property tests compare
     /// against.
     pub force_timeline_rebuild: bool,
+    /// Run the retired monolithic session loop ([`Scheduler::cycle_legacy`])
+    /// instead of the action pipeline — the pinned reference path the
+    /// differential harness and the fuzz property compare against.
+    pub force_legacy_scheduler: bool,
+    /// The session's plugin registry (tiers consulted in order), built
+    /// from `config.pipeline`; [`Scheduler::register_plugin`] extends it.
+    plugins: PluginSet,
     /// Jobs evicted by priority preemption since the last
     /// [`Scheduler::take_preempted`] call (the simulator drains this after
     /// every cycle and re-queues them with checkpoint-restart cost).
@@ -211,9 +241,19 @@ impl Scheduler {
             engine: config.engine.build(),
             timeline_cache: None,
             force_timeline_rebuild: false,
+            force_legacy_scheduler: false,
+            plugins: PluginSet::from_config(&config.pipeline),
             preempted: Vec::new(),
             candidates: Vec::new(),
         }
+    }
+
+    /// Register an extra plugin at the given tier (tier 0 = core
+    /// admission, tier 1 = policy). The built-in registry from
+    /// `config.pipeline` is kept; callers extend it — the reclaim
+    /// action's nominations, for instance, only ever come from here.
+    pub fn register_plugin(&mut self, tier: usize, plugin: Box<dyn Plugin>) {
+        self.plugins.register(tier, plugin);
     }
 
     /// Swap the placement engine (benches/tests toggle the linear
@@ -388,6 +428,7 @@ impl Scheduler {
         job: JobId,
         started: &[JobId],
         now: f64,
+        plugins: Option<&mut PluginSet>,
     ) -> Option<Vec<JobId>> {
         // The scored-greedy planner can fail where first-fit succeeds; if
         // the gang already first-fits the session's free view, eviction
@@ -402,6 +443,14 @@ impl Scheduler {
             .filter(|id| api.jobs[id].planned.spec.priority < priority)
             .filter(|id| !started.contains(id))
             .collect();
+        // Pipeline victim predicates ([`Plugin::may_evict`]): a vetoed
+        // candidate (e.g. its tenant is at its preemption budget) is
+        // dropped before selection. The legacy reference path passes no
+        // plugins; the default pipeline registers no vetoing plugin, so
+        // the candidate set — and everything downstream — is unchanged.
+        if let Some(plugins) = plugins {
+            candidates.retain(|&id| plugins.may_evict(api, now, id));
+        }
         if candidates.is_empty() {
             return None;
         }
@@ -514,8 +563,9 @@ impl Scheduler {
         job: JobId,
         started: &[JobId],
         now: f64,
+        plugins: Option<&mut PluginSet>,
     ) -> Option<(Vec<JobId>, Vec<(PodId, NodeId, Option<usize>)>)> {
-        let victims = self.select_victims(api, state, job, started, now)?;
+        let victims = self.select_victims(api, state, job, started, now, plugins)?;
         let mut free = state.free.clone();
         let mut placement = state.placement.clone();
         for &v in &victims {
@@ -598,11 +648,9 @@ impl Scheduler {
         cache.session_profile()
     }
 
-    /// One scheduling session. Walks the pending queue in the queue
-    /// policy's order; on a gang failure the scheduler may first attempt
-    /// priority preemption (`config.preemption`), then the policy decides
-    /// what the failure means — skip the job (seed behaviour), end the
-    /// session, or hold a backfill reservation. EASY holds a single
+    /// One scheduling session: runs the configured action pipeline
+    /// ([`pipeline`] — enqueue, then per job allocate → preempt →
+    /// reclaim → backfill until one consumes it). EASY holds a single
     /// shadow-time reservation for the first blocked job and gates later
     /// candidates on it; conservative backfilling maintains a full
     /// per-resource [`ResourceTimeline`]: every blocked job claims its
@@ -610,7 +658,34 @@ impl Scheduler {
     /// (and planned) against what is left, so backfills may use holes
     /// behind reservations yet can never take resources a reservation
     /// counted on. Returns the jobs started in this cycle.
+    ///
+    /// With [`Scheduler::force_legacy_scheduler`] set, the retired
+    /// monolithic loop ([`Scheduler::cycle_legacy`]) runs instead — the
+    /// pinned reference the differential harness compares against.
     pub fn cycle_with_projections(
+        &mut self,
+        api: &mut ApiServer,
+        now: f64,
+        projected: &BTreeMap<JobId, f64>,
+    ) -> Vec<JobId> {
+        if self.force_legacy_scheduler {
+            self.cycle_legacy(api, now, projected)
+        } else {
+            self.run_pipeline(api, now, projected)
+        }
+    }
+
+    /// The retired monolithic session loop, kept verbatim as the pinned
+    /// reference for the action pipeline: `tests/differential.rs` and the
+    /// fuzz property in `tests/properties.rs` assert the default pipeline
+    /// produces bit-identical `SimOutput` (placements, event log, per-job
+    /// timings) on every scenario × placement engine × cluster mix. Walks
+    /// the pending queue in the queue policy's order; on a gang failure
+    /// the scheduler may first attempt priority preemption
+    /// (`config.preemption`), then the policy decides what the failure
+    /// means — skip the job (seed behaviour), end the session, or hold a
+    /// backfill reservation.
+    fn cycle_legacy(
         &mut self,
         api: &mut ApiServer,
         now: f64,
@@ -730,7 +805,7 @@ impl Scheduler {
                         // corner case must never preempt for nothing.
                         if self.config.preemption {
                             if let Some((victims, binds)) =
-                                self.plan_with_preemption(api, &state, job_id, &started, now)
+                                self.plan_with_preemption(api, &state, job_id, &started, now, None)
                             {
                                 for &v in &victims {
                                     api.preempt_job(v, now);

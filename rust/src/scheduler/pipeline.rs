@@ -1,0 +1,1263 @@
+//! The scheduling pipeline — Volcano-style **actions** driven by
+//! **plugins** registered in tiers.
+//!
+//! [`Scheduler::cycle_with_projections`](super::Scheduler::cycle_with_projections)
+//! runs one session as an ordered list of actions (enqueue → allocate →
+//! preempt → reclaim → backfill, [`ActionKind`]). `enqueue` runs once per
+//! session (build the pending queue, let ordering plugins refine it); the
+//! remaining actions are per-job *stages*: each pending job flows through
+//! them in the configured order until one consumes it (placed, held, or
+//! the session ends). Per-job staging — rather than Volcano's
+//! session-scoped loops per action — is what keeps the pipeline
+//! bit-identical to the monolithic legacy loop it replaced: the legacy
+//! code interleaved allocate/preempt/backfill per job, and the RNG jitter
+//! stream (one draw per feasible node) plus the post-preemption session
+//! rebuild both depend on that interleaving.
+//!
+//! Plugins hang off the session at three kinds of callback, mirroring
+//! Volcano's `Session` registration:
+//!
+//! - **order** (OrderFn): refine the pending-queue order after the queue
+//!   discipline's own sort;
+//! - **predicates** ([`Plugin::admit`], [`Plugin::may_evict`]): veto a
+//!   job's allocation this session, or a running job's eviction;
+//! - **victim/decision hooks** ([`Plugin::override_gang_failure`],
+//!   [`Plugin::reclaim`]): escalate a gang failure (aging turns Skip into
+//!   Block) or nominate running jobs to reclaim.
+//!
+//! The queue disciplines ([`QueuePolicy`](super::QueuePolicy)) are the
+//! pipeline's ordering/backfill plugin slot (order + gang-failure
+//! decision + backfill gate), and [`PreemptionPolicy`](super::PreemptionPolicy)
+//! is its victim-cost plugin slot — both predate this module and keep
+//! their specialized traits; the [`Plugin`] trait hosts the cross-cutting
+//! policies (quota admission, starvation aging, preemption budgets).
+//! Plugins are consulted tier by tier, registration order within a tier:
+//! tier 0 holds the core admission plugins (quota), tier 1 the optional
+//! policy plugins (aging, budgets).
+//!
+//! The default [`PipelineConfig`] (all five actions, no optional plugins)
+//! is **legacy-equivalent**: `rust/tests/differential.rs` pins the
+//! pipeline bit-identical to the retired monolithic loop (kept behind
+//! [`Scheduler::force_legacy_scheduler`](super::Scheduler::force_legacy_scheduler)
+//! as the reference) for every scenario × placement engine × cluster mix,
+//! and a 200-case fuzz property in `rust/tests/properties.rs` does the
+//! same over randomized traces, clusters, and configs.
+
+use std::collections::BTreeMap;
+
+use crate::apiserver::{ApiServer, JobPhase};
+use crate::cluster::{JobId, NodeId, PodId, PodPhase, Resources};
+use crate::workload::TenantId;
+
+use super::placement::SessionState;
+use super::queue::{self, GangDecision, QueueContext, ResourceTimeline};
+use super::Scheduler;
+
+/// One step of the scheduling pipeline. `Enqueue` is session-scoped
+/// (build + order the pending queue); the rest are per-job stages run in
+/// the configured order until one consumes the job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ActionKind {
+    /// Build the pending queue: discipline order, then plugin OrderFns.
+    Enqueue,
+    /// Admission predicates + backfill gates, then gang (or per-pod)
+    /// placement on the session state.
+    Allocate,
+    /// On gang failure: evict a minimal set of strictly-lower-priority
+    /// victims ([`super::PreemptionPolicy`] cost order, filtered by
+    /// [`Plugin::may_evict`]) and commit the proven plan.
+    Preempt,
+    /// On gang failure: plugins may nominate running jobs to reclaim
+    /// ([`Plugin::reclaim`]); no built-in plugin does, so the default
+    /// pipeline's reclaim is a no-op extension point.
+    Reclaim,
+    /// On gang failure: the discipline's reservation semantics — EASY
+    /// shadow time, conservative timeline claim, or skip/block.
+    Backfill,
+}
+
+/// Every action, in the default (legacy-equivalent) order.
+pub const ALL_ACTIONS: [ActionKind; 5] = [
+    ActionKind::Enqueue,
+    ActionKind::Allocate,
+    ActionKind::Preempt,
+    ActionKind::Reclaim,
+    ActionKind::Backfill,
+];
+
+impl ActionKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ActionKind::Enqueue => "enqueue",
+            ActionKind::Allocate => "allocate",
+            ActionKind::Preempt => "preempt",
+            ActionKind::Reclaim => "reclaim",
+            ActionKind::Backfill => "backfill",
+        }
+    }
+
+    /// Parse a config spelling (case-insensitive).
+    pub fn parse(s: &str) -> Option<ActionKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "enqueue" => Some(ActionKind::Enqueue),
+            "allocate" => Some(ActionKind::Allocate),
+            "preempt" => Some(ActionKind::Preempt),
+            "reclaim" => Some(ActionKind::Reclaim),
+            "backfill" => Some(ActionKind::Backfill),
+            _ => None,
+        }
+    }
+
+    /// Position in the canonical order (validation checks the configured
+    /// list is a subsequence of it).
+    fn rank(&self) -> usize {
+        ALL_ACTIONS.iter().position(|a| a == self).unwrap()
+    }
+}
+
+impl std::fmt::Display for ActionKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// An ordered, duplicate-free subset of the pipeline actions. Fixed-size
+/// so [`super::SchedulerConfig`] stays `Copy` (the whole config surface —
+/// scenario tables, ablation grids — relies on that).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ActionList {
+    kinds: [ActionKind; 5],
+    len: u8,
+}
+
+impl ActionList {
+    /// Build from a slice; rejects duplicates and more than 5 entries.
+    pub fn of(actions: &[ActionKind]) -> Result<ActionList, String> {
+        if actions.len() > ALL_ACTIONS.len() {
+            return Err(format!("pipeline lists {} actions (max 5)", actions.len()));
+        }
+        let mut list = ActionList { kinds: [ActionKind::Enqueue; 5], len: 0 };
+        for &a in actions {
+            if list.contains(a) {
+                return Err(format!("pipeline action {a:?} listed twice", a = a.name()));
+            }
+            list.kinds[list.len as usize] = a;
+            list.len += 1;
+        }
+        Ok(list)
+    }
+
+    pub fn as_slice(&self) -> &[ActionKind] {
+        &self.kinds[..self.len as usize]
+    }
+
+    pub fn contains(&self, action: ActionKind) -> bool {
+        self.as_slice().contains(&action)
+    }
+
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+/// Starvation-aging plugin knobs (`pipeline.plugins[] = {"name": "aging"}`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AgingConfig {
+    /// A pending job that has waited at least this long is *starved*: the
+    /// ordering hook moves it to the queue head and its gang failure
+    /// escalates from the discipline's decision to `Block`, so nothing
+    /// submitted later can overtake it (FIFO-skip's starvation fix,
+    /// carried in ROADMAP since PR 2).
+    pub threshold_secs: f64,
+}
+
+/// Preemption-budget plugin knobs
+/// (`pipeline.plugins[] = {"name": "preemption_budget"}`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BudgetConfig {
+    /// Sliding-window length the evictions are counted over.
+    pub window_secs: f64,
+    /// Maximum evictions charged to one victim tenant per window; a
+    /// tenant at its budget cannot lose another job until the window
+    /// slides past an earlier eviction.
+    pub max_evictions: u32,
+}
+
+/// The `pipeline` key of [`super::SchedulerConfig`]: the ordered action
+/// list plus the optional tier-1 plugins. The default is
+/// legacy-equivalent — all five actions in canonical order, no optional
+/// plugins — so every golden digest and ablation number is unchanged
+/// unless a config opts in.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PipelineConfig {
+    pub actions: ActionList,
+    /// Starvation aging (tier 1); `None` = not registered.
+    pub aging: Option<AgingConfig>,
+    /// Per-tenant preemption budget (tier 1); `None` = not registered.
+    pub budget: Option<BudgetConfig>,
+}
+
+impl PipelineConfig {
+    /// The default pipeline: every action in canonical order, no optional
+    /// plugins — bit-identical to the legacy monolithic scheduler.
+    pub fn legacy_equivalent() -> PipelineConfig {
+        PipelineConfig {
+            actions: ActionList::of(&ALL_ACTIONS).unwrap(),
+            aging: None,
+            budget: None,
+        }
+    }
+
+    /// Same pipeline with a different action list.
+    pub fn with_actions(mut self, actions: ActionList) -> Self {
+        self.actions = actions;
+        self
+    }
+
+    /// Same pipeline with starvation aging registered.
+    pub fn with_aging(mut self, threshold_secs: f64) -> Self {
+        self.aging = Some(AgingConfig { threshold_secs });
+        self
+    }
+
+    /// Same pipeline with a per-tenant preemption budget registered.
+    pub fn with_budget(mut self, window_secs: f64, max_evictions: u32) -> Self {
+        self.budget = Some(BudgetConfig { window_secs, max_evictions });
+        self
+    }
+
+    /// Structural validation (config files route parse errors through
+    /// this; the builders assert it).
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.actions.contains(ActionKind::Enqueue)
+            || !self.actions.contains(ActionKind::Allocate)
+        {
+            return Err("pipeline.actions must include \"enqueue\" and \"allocate\"".into());
+        }
+        let ranks: Vec<usize> = self.actions.as_slice().iter().map(ActionKind::rank).collect();
+        if ranks.windows(2).any(|w| w[0] >= w[1]) {
+            return Err(format!(
+                "pipeline.actions must follow the canonical order {:?}",
+                ALL_ACTIONS.map(|a| a.name())
+            ));
+        }
+        if let Some(aging) = self.aging {
+            if !(aging.threshold_secs > 0.0) {
+                return Err("pipeline aging threshold_secs must be positive".into());
+            }
+        }
+        if let Some(budget) = self.budget {
+            if !(budget.window_secs > 0.0) {
+                return Err("pipeline budget window_secs must be positive".into());
+            }
+            // A zero budget is "never preempt" — drop the preempt action
+            // instead of configuring a budget that can never be spent.
+            if budget.max_evictions == 0 {
+                return Err("pipeline budget max_evictions must be >= 1".into());
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig::legacy_equivalent()
+    }
+}
+
+/// A cross-cutting scheduling policy hanging off the session's callbacks.
+/// Every hook has a no-op default, so a plugin implements only the
+/// callbacks it cares about (Volcano's `OnSessionOpen` registration
+/// style). Hooks take `&mut self` so stateful plugins (budgets) can keep
+/// their ledgers without interior mutability.
+pub trait Plugin {
+    fn name(&self) -> &'static str;
+
+    /// OrderFn: refine the pending-queue order. Runs after the queue
+    /// discipline's sort; implementations must be stable with respect to
+    /// the order they are handed.
+    fn order(&mut self, _api: &ApiServer, _now: f64, _pending: &mut Vec<JobId>) {}
+
+    /// PredicateFn: may `job` be considered for allocation this session?
+    /// Any veto holds the job as `Pending` without planning or claiming a
+    /// reservation.
+    fn admit(&mut self, _api: &ApiServer, _now: f64, _job: JobId) -> bool {
+        true
+    }
+
+    /// VictimFn: may the preempt action evict `victim`? Vetoed candidates
+    /// are dropped before victim selection.
+    fn may_evict(&mut self, _api: &ApiServer, _now: f64, _victim: JobId) -> bool {
+        true
+    }
+
+    /// Escalate a gang failure: the first `Some` across tiers replaces
+    /// the queue discipline's [`GangDecision`]. Only consulted when the
+    /// session holds no reservation (same rule as the discipline itself).
+    fn override_gang_failure(
+        &mut self,
+        _api: &ApiServer,
+        _now: f64,
+        _job: JobId,
+    ) -> Option<GangDecision> {
+        None
+    }
+
+    /// Reclaim hook: nominate running jobs to evict-and-requeue so the
+    /// gang-blocked `job` can retry on the freed capacity. No built-in
+    /// plugin implements this — it is the extension point the reclaim
+    /// action exists for (cross-tenant quota reclamation, elastic
+    /// shrink).
+    fn reclaim(&mut self, _api: &ApiServer, _now: f64, _job: JobId) -> Vec<JobId> {
+        Vec::new()
+    }
+
+    /// Notification: `victims` were just evicted (preempt or reclaim).
+    fn on_evictions(&mut self, _api: &ApiServer, _now: f64, _victims: &[JobId]) {}
+
+    /// Notification: `job` just started.
+    fn on_job_started(&mut self, _api: &ApiServer, _now: f64, _job: JobId) {}
+}
+
+/// The session's plugin registry: tiers consulted in order, registration
+/// order within a tier. Tier 0 holds the core admission plugins, tier 1
+/// the optional policy plugins.
+#[derive(Default)]
+pub struct PluginSet {
+    tiers: Vec<Vec<Box<dyn Plugin>>>,
+}
+
+impl PluginSet {
+    /// The registry a [`PipelineConfig`] describes: quota admission at
+    /// tier 0; aging and budget (when configured) at tier 1.
+    pub fn from_config(config: &PipelineConfig) -> PluginSet {
+        let mut set = PluginSet::default();
+        set.register(0, Box::new(QuotaPlugin));
+        if let Some(aging) = config.aging {
+            set.register(1, Box::new(AgingPlugin::new(aging)));
+        }
+        if let Some(budget) = config.budget {
+            set.register(1, Box::new(BudgetPlugin::new(budget)));
+        }
+        set
+    }
+
+    /// Register a plugin at the given tier (tests and downstream callers
+    /// extend the pipeline without touching the config surface).
+    pub fn register(&mut self, tier: usize, plugin: Box<dyn Plugin>) {
+        while self.tiers.len() <= tier {
+            self.tiers.push(Vec::new());
+        }
+        self.tiers[tier].push(plugin);
+    }
+
+    /// Registered plugin names, tier by tier.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.tiers.iter().flatten().map(|p| p.name()).collect()
+    }
+
+    fn order(&mut self, api: &ApiServer, now: f64, pending: &mut Vec<JobId>) {
+        for plugin in self.tiers.iter_mut().flatten() {
+            plugin.order(api, now, pending);
+        }
+    }
+
+    fn admits(&mut self, api: &ApiServer, now: f64, job: JobId) -> bool {
+        self.tiers.iter_mut().flatten().all(|p| p.admit(api, now, job))
+    }
+
+    pub(super) fn may_evict(&mut self, api: &ApiServer, now: f64, victim: JobId) -> bool {
+        self.tiers.iter_mut().flatten().all(|p| p.may_evict(api, now, victim))
+    }
+
+    fn override_gang_failure(
+        &mut self,
+        api: &ApiServer,
+        now: f64,
+        job: JobId,
+    ) -> Option<GangDecision> {
+        self.tiers
+            .iter_mut()
+            .flatten()
+            .find_map(|p| p.override_gang_failure(api, now, job))
+    }
+
+    fn reclaim(&mut self, api: &ApiServer, now: f64, job: JobId) -> Vec<JobId> {
+        let mut victims: Vec<JobId> = Vec::new();
+        for plugin in self.tiers.iter_mut().flatten() {
+            for v in plugin.reclaim(api, now, job) {
+                if !victims.contains(&v) {
+                    victims.push(v);
+                }
+            }
+        }
+        victims
+    }
+
+    fn on_evictions(&mut self, api: &ApiServer, now: f64, victims: &[JobId]) {
+        for plugin in self.tiers.iter_mut().flatten() {
+            plugin.on_evictions(api, now, victims);
+        }
+    }
+
+    fn on_job_started(&mut self, api: &ApiServer, now: f64, job: JobId) {
+        for plugin in self.tiers.iter_mut().flatten() {
+            plugin.on_job_started(api, now, job);
+        }
+    }
+}
+
+/// ResourceQuota admission as a plugin: a job whose tenant is over quota
+/// is held `Pending` — it neither plans nor claims a reservation
+/// (capacity frees when the tenant's running jobs end).
+pub struct QuotaPlugin;
+
+impl Plugin for QuotaPlugin {
+    fn name(&self) -> &'static str {
+        "quota"
+    }
+
+    fn admit(&mut self, api: &ApiServer, _now: f64, job: JobId) -> bool {
+        api.quota_admits(job)
+    }
+}
+
+/// Starvation aging: a pending job that has waited past the threshold is
+/// moved to the queue head, and its gang failure escalates to `Block`, so
+/// no later submission can overtake it — under FIFO-skip a wide job
+/// behind a stream of narrow backfills is otherwise starved indefinitely.
+pub struct AgingPlugin {
+    config: AgingConfig,
+}
+
+impl AgingPlugin {
+    pub fn new(config: AgingConfig) -> AgingPlugin {
+        AgingPlugin { config }
+    }
+
+    fn starved(&self, api: &ApiServer, now: f64, job: JobId) -> bool {
+        now - api.jobs[&job].submit_time >= self.config.threshold_secs
+    }
+}
+
+impl Plugin for AgingPlugin {
+    fn name(&self) -> &'static str {
+        "aging"
+    }
+
+    /// Stable partition: starved jobs first, each half keeping the order
+    /// the discipline chose.
+    fn order(&mut self, api: &ApiServer, now: f64, pending: &mut Vec<JobId>) {
+        let (starved, fresh): (Vec<JobId>, Vec<JobId>) =
+            pending.iter().partition(|&&j| self.starved(api, now, j));
+        pending.clear();
+        pending.extend(starved);
+        pending.extend(fresh);
+    }
+
+    fn override_gang_failure(
+        &mut self,
+        api: &ApiServer,
+        now: f64,
+        job: JobId,
+    ) -> Option<GangDecision> {
+        if self.starved(api, now, job) {
+            Some(GangDecision::Block)
+        } else {
+            None
+        }
+    }
+}
+
+/// Per-tenant preemption budget: a sliding-window cap on how many jobs
+/// one tenant can lose to preemption. Victim candidates of a tenant at
+/// its budget are vetoed, so sustained high-priority arrivals cannot
+/// starve a low-priority tenant through endless evictions.
+pub struct BudgetPlugin {
+    config: BudgetConfig,
+    /// Eviction timestamps charged to each victim tenant (pruned as the
+    /// window slides).
+    evictions: BTreeMap<TenantId, Vec<f64>>,
+}
+
+impl BudgetPlugin {
+    pub fn new(config: BudgetConfig) -> BudgetPlugin {
+        BudgetPlugin { config, evictions: BTreeMap::new() }
+    }
+
+    fn charged(&mut self, tenant: TenantId, now: f64) -> u32 {
+        let window_start = now - self.config.window_secs;
+        match self.evictions.get_mut(&tenant) {
+            Some(times) => {
+                times.retain(|&t| t > window_start);
+                times.len() as u32
+            }
+            None => 0,
+        }
+    }
+}
+
+impl Plugin for BudgetPlugin {
+    fn name(&self) -> &'static str {
+        "preemption_budget"
+    }
+
+    fn may_evict(&mut self, api: &ApiServer, now: f64, victim: JobId) -> bool {
+        let tenant = api.jobs[&victim].planned.spec.tenant;
+        self.charged(tenant, now) < self.config.max_evictions
+    }
+
+    fn on_evictions(&mut self, api: &ApiServer, now: f64, victims: &[JobId]) {
+        for &v in victims {
+            let tenant = api.jobs[&v].planned.spec.tenant;
+            self.evictions.entry(tenant).or_default().push(now);
+        }
+    }
+}
+
+/// Per-session state the actions share — the `Session` object the plugins
+/// and actions hang off (trial placement state, EASY reservations, the
+/// conservative timeline, and the jobs started so far).
+pub(super) struct Session {
+    pub(super) now: f64,
+    /// Walltime-estimate misprediction factor (config knob).
+    pub(super) wf: f64,
+    /// Conservative discipline: every blocked job claims a reservation.
+    pub(super) conservative: bool,
+    pub(super) state: SessionState,
+    pub(super) started: Vec<JobId>,
+    /// EASY: shadow times of the reservations held this session.
+    pub(super) reservations: Vec<f64>,
+    /// Conservative: the availability profile, cloned from the persistent
+    /// cache at the session's first gang failure.
+    pub(super) timeline: Option<ResourceTimeline>,
+}
+
+/// What an action did with the job it was handed.
+enum Outcome {
+    /// Job consumed (placed, held, or reservation claimed) — next job.
+    Done,
+    /// Not handled here — fall through to the next action.
+    Next,
+    /// End the whole session (a `Block` decision).
+    Stop,
+}
+
+impl Scheduler {
+    /// Run one session through the configured action pipeline. The
+    /// default configuration is pinned bit-identical to
+    /// [`Scheduler::cycle_legacy`] (the retired monolithic loop) by
+    /// `tests/differential.rs` and the fuzz property.
+    pub(super) fn run_pipeline(
+        &mut self,
+        api: &mut ApiServer,
+        now: f64,
+        projected: &BTreeMap<JobId, f64>,
+    ) -> Vec<JobId> {
+        let actions = self.config.pipeline.actions;
+        let mut state = SessionState::snapshot(api);
+        state.index = self.engine.session_index(api);
+        let mut session = Session {
+            now,
+            wf: self.config.walltime_error_factor,
+            conservative: self.queue_policy.reserves_every_job(),
+            state,
+            started: Vec::new(),
+            reservations: Vec::new(),
+            timeline: None,
+        };
+        let mut plugins = std::mem::take(&mut self.plugins);
+
+        // Enqueue runs once per session (validation pins it first; the
+        // per-job loop below treats it as a no-op stage).
+        let pending = self.act_enqueue(api, now, &mut plugins);
+
+        'queue: for job_id in pending {
+            let mut gang_failed = false;
+            for &action in actions.as_slice() {
+                let outcome = match action {
+                    ActionKind::Enqueue => Outcome::Next,
+                    ActionKind::Allocate => self.act_allocate(
+                        api,
+                        &mut session,
+                        &mut plugins,
+                        projected,
+                        job_id,
+                        &mut gang_failed,
+                    ),
+                    ActionKind::Preempt => {
+                        self.act_preempt(api, &mut session, &mut plugins, job_id, gang_failed)
+                    }
+                    ActionKind::Reclaim => {
+                        self.act_reclaim(api, &mut session, &mut plugins, job_id, gang_failed)
+                    }
+                    ActionKind::Backfill => self.act_backfill(
+                        api,
+                        &mut session,
+                        &mut plugins,
+                        projected,
+                        job_id,
+                        gang_failed,
+                    ),
+                };
+                match outcome {
+                    Outcome::Done => continue 'queue,
+                    Outcome::Next => {}
+                    Outcome::Stop => break 'queue,
+                }
+            }
+        }
+        self.plugins = plugins;
+        // Session-consistency pin: commits were mirrored into the session
+        // state as they happened, so the trial free view must agree with
+        // the API server at session end.
+        #[cfg(debug_assertions)]
+        for node in api.spec.node_ids() {
+            debug_assert_eq!(
+                session.state.free[node.0],
+                api.free_on(node),
+                "pipeline session free view drifted from the API server on {node:?}"
+            );
+        }
+        session.started
+    }
+
+    /// Enqueue action: the pending queue in discipline order, refined by
+    /// the plugins' OrderFns.
+    fn act_enqueue(
+        &mut self,
+        api: &ApiServer,
+        now: f64,
+        plugins: &mut PluginSet,
+    ) -> Vec<JobId> {
+        let mut pending = api.pending_jobs();
+        self.queue_policy.order(api, now, &mut pending);
+        plugins.order(api, now, &mut pending);
+        pending
+    }
+
+    /// Allocate action: admission predicates, backfill gates, then gang
+    /// (or per-pod) placement. Mirrors the legacy loop's allocation arm
+    /// exactly — including when estimates are taken and in which order
+    /// the RNG jitter is drawn — so the default pipeline stays
+    /// bit-identical.
+    fn act_allocate(
+        &mut self,
+        api: &mut ApiServer,
+        session: &mut Session,
+        plugins: &mut PluginSet,
+        projected: &BTreeMap<JobId, f64>,
+        job_id: JobId,
+        gang_failed: &mut bool,
+    ) -> Outcome {
+        let now = session.now;
+        if !plugins.admits(api, now, job_id) {
+            return Outcome::Done;
+        }
+        // Conservative sessions holding reservations: the job's whole
+        // window must first-fit what the claims left over; the passing
+        // (estimate, min-free window) pair is reused by the constrained
+        // planning below.
+        let mut admitted_window: Option<(f64, Vec<Resources>)> = None;
+        if session.conservative && session.timeline.is_some() {
+            let est = queue::estimated_runtime(api, job_id) * session.wf;
+            let tl = session.timeline.as_mut().unwrap();
+            let window = tl.min_free_over(now, now + est);
+            if !queue::job_fits(api, &window, job_id) {
+                // Window-rejected: hold this job's own reservation at its
+                // earliest profile fit, claiming the window so no later
+                // backfill can push its start back. A fit at `now` means
+                // only the scored-greedy planner can be cornered — rely
+                // on the next session's retry instead of claiming live
+                // resources.
+                if let Some((t_s, placement)) = tl.earliest_fit(api, job_id, est) {
+                    if t_s > now + 1e-9 {
+                        tl.claim(t_s, t_s + est, &placement);
+                    }
+                }
+                return Outcome::Done;
+            }
+            admitted_window = Some((est, window));
+        } else if let Some(shadow) = session.reservations.iter().copied().reduce(f64::min) {
+            let ctx = QueueContext {
+                api: &*api,
+                now,
+                projected_completion: projected,
+                free: &session.state.free,
+                walltime_factor: session.wf,
+            };
+            if !self.queue_policy.may_backfill(&ctx, job_id, shadow) {
+                return Outcome::Done;
+            }
+        }
+        if self.config.gang {
+            // All-or-nothing. A conservative session holding reservations
+            // plans against the window-constrained free view (a trial
+            // state), so the scored placement can never occupy resources
+            // a reservation counted on; otherwise plan against the live
+            // state and roll back the undo log on failure.
+            let planned: Option<(Vec<(PodId, NodeId, Option<usize>)>, Option<f64>)> =
+                if let Some((est, constrained)) = admitted_window {
+                    let mut trial =
+                        SessionState::new(api, constrained, session.state.placement.clone());
+                    self.plan_job(api, &mut trial, job_id).map(|b| (b, Some(est)))
+                } else {
+                    let checkpoint = session.state.checkpoint();
+                    match self.plan_job(api, &mut session.state, job_id) {
+                        Some(binds) => Some((binds, None)),
+                        None => {
+                            session.state.rollback_to(checkpoint);
+                            None
+                        }
+                    }
+                };
+            match planned {
+                Some((binds, window_est)) => {
+                    if let Some(est) = window_est {
+                        // Mirror the trial plan into the live session
+                        // state and claim the job's running window out of
+                        // the profile (its release past `now + est` stays
+                        // visible to later reservations).
+                        let placement: Vec<(NodeId, Resources)> = binds
+                            .iter()
+                            .map(|&(pid, node, _)| (node, api.pods[&pid].requests))
+                            .collect();
+                        for &(pid, node, g) in &binds {
+                            session.state.apply(
+                                api.pods[&pid].requests,
+                                node,
+                                g.map(|gg| (job_id, gg)),
+                            );
+                        }
+                        session.timeline.as_mut().unwrap().claim(now, now + est, &placement);
+                    }
+                    Self::commit_gang(api, binds, job_id, now);
+                    session.started.push(job_id);
+                    plugins.on_job_started(api, now, job_id);
+                    Outcome::Done
+                }
+                None => {
+                    *gang_failed = true;
+                    Outcome::Next
+                }
+            }
+        } else {
+            // Kubernetes default: bind pods individually as they fit.
+            let pending: Vec<PodId> = api.jobs[&job_id]
+                .pods
+                .iter()
+                .filter(|pid| api.pods[pid].phase == PodPhase::Pending)
+                .copied()
+                .collect();
+            for pid in pending {
+                let pod = api.pods[&pid].clone();
+                if let Some(node) = self.place_pod(api, &mut session.state, &pod, None) {
+                    let ok = api.bind_pod(pid, node, now);
+                    assert!(ok, "kubelet admission failed after predicate pass");
+                }
+            }
+            let all_bound = api.jobs[&job_id]
+                .pods
+                .iter()
+                .all(|pid| api.pods[pid].phase == PodPhase::Bound);
+            if all_bound {
+                api.start_job(job_id, now);
+                session.started.push(job_id);
+                plugins.on_job_started(api, now, job_id);
+            }
+            Outcome::Done
+        }
+    }
+
+    /// Preempt action: plan against a trial view with a minimal victim
+    /// set released ([`Plugin::may_evict`] filters the candidates), and
+    /// only evict once the plan is proven — a scored-greedy corner case
+    /// must never preempt for nothing.
+    fn act_preempt(
+        &mut self,
+        api: &mut ApiServer,
+        session: &mut Session,
+        plugins: &mut PluginSet,
+        job_id: JobId,
+        gang_failed: bool,
+    ) -> Outcome {
+        if !gang_failed || !self.config.preemption {
+            return Outcome::Next;
+        }
+        let now = session.now;
+        let planned = self.plan_with_preemption(
+            api,
+            &session.state,
+            job_id,
+            &session.started,
+            now,
+            Some(&mut *plugins),
+        );
+        match planned {
+            Some((victims, binds)) => {
+                for &v in &victims {
+                    api.preempt_job(v, now);
+                }
+                self.preempted.extend_from_slice(&victims);
+                plugins.on_evictions(api, now, &victims);
+                Self::commit_gang(api, binds, job_id, now);
+                session.started.push(job_id);
+                plugins.on_job_started(api, now, job_id);
+                // The eviction + commit invalidated the session view and
+                // the release profile: rebuild the state, drop the
+                // reservations (they re-derive at the next failure; the
+                // engine index and the timeline cache both catch up from
+                // their cursors).
+                session.state = SessionState::snapshot(api);
+                session.state.index = self.engine.session_index(api);
+                session.reservations.clear();
+                session.timeline = None;
+                Outcome::Done
+            }
+            None => Outcome::Next,
+        }
+    }
+
+    /// Reclaim action: plugins may nominate running jobs to evict-and-
+    /// requeue for the gang-blocked job; the freed capacity is then
+    /// retried immediately. No built-in plugin nominates anything, so the
+    /// default pipeline's reclaim is a documented no-op.
+    fn act_reclaim(
+        &mut self,
+        api: &mut ApiServer,
+        session: &mut Session,
+        plugins: &mut PluginSet,
+        job_id: JobId,
+        gang_failed: bool,
+    ) -> Outcome {
+        if !gang_failed {
+            return Outcome::Next;
+        }
+        let now = session.now;
+        let victims: Vec<JobId> = plugins
+            .reclaim(api, now, job_id)
+            .into_iter()
+            .filter(|v| {
+                api.jobs.get(v).map(|j| j.phase == JobPhase::Running).unwrap_or(false)
+                    && !session.started.contains(v)
+            })
+            .collect();
+        if victims.is_empty() {
+            return Outcome::Next;
+        }
+        for &v in &victims {
+            api.preempt_job(v, now);
+        }
+        self.preempted.extend_from_slice(&victims);
+        plugins.on_evictions(api, now, &victims);
+        // The evictions invalidated the session view: rebuild, then retry
+        // the blocked job on the reclaimed capacity.
+        session.state = SessionState::snapshot(api);
+        session.state.index = self.engine.session_index(api);
+        session.reservations.clear();
+        session.timeline = None;
+        let checkpoint = session.state.checkpoint();
+        match self.plan_job(api, &mut session.state, job_id) {
+            Some(binds) => {
+                Self::commit_gang(api, binds, job_id, now);
+                session.started.push(job_id);
+                plugins.on_job_started(api, now, job_id);
+                Outcome::Done
+            }
+            None => {
+                session.state.rollback_to(checkpoint);
+                Outcome::Next
+            }
+        }
+    }
+
+    /// Backfill action: the discipline's reservation semantics for a job
+    /// that neither allocated nor preempted its way in — conservative
+    /// timeline claims, the EASY shadow reservation, or skip/block
+    /// (optionally escalated by a plugin's
+    /// [`Plugin::override_gang_failure`]).
+    fn act_backfill(
+        &mut self,
+        api: &mut ApiServer,
+        session: &mut Session,
+        plugins: &mut PluginSet,
+        projected: &BTreeMap<JobId, f64>,
+        job_id: JobId,
+        gang_failed: bool,
+    ) -> Outcome {
+        if !gang_failed {
+            return Outcome::Next;
+        }
+        let now = session.now;
+        if session.conservative {
+            // First failure clones the persistent profile (refreshed
+            // event-driven); every blocked job claims its earliest-fit
+            // window.
+            if session.timeline.is_none() {
+                let timeline = {
+                    let ctx = QueueContext {
+                        api: &*api,
+                        now,
+                        projected_completion: projected,
+                        free: &session.state.free,
+                        walltime_factor: session.wf,
+                    };
+                    self.session_timeline(&ctx)
+                };
+                session.timeline = Some(timeline);
+            }
+            let tl = session.timeline.as_mut().unwrap();
+            let est = queue::estimated_runtime(api, job_id) * session.wf;
+            if let Some((t_s, placement)) = tl.earliest_fit(api, job_id, est) {
+                // A fit at `now` (gang first-fits, planner cornered
+                // itself) claims nothing — the job retries next session.
+                if t_s > now + 1e-9 {
+                    tl.claim(t_s, t_s + est, &placement);
+                }
+            }
+            return Outcome::Done;
+        }
+        let decision = if session.reservations.is_empty() {
+            match plugins.override_gang_failure(api, now, job_id) {
+                Some(decision) => decision,
+                None => {
+                    let ctx = QueueContext {
+                        api: &*api,
+                        now,
+                        projected_completion: projected,
+                        free: &session.state.free,
+                        walltime_factor: session.wf,
+                    };
+                    self.queue_policy.on_gang_failure(&ctx, job_id)
+                }
+            }
+        } else {
+            GangDecision::Skip
+        };
+        match decision {
+            GangDecision::Skip => Outcome::Done,
+            GangDecision::Block => Outcome::Stop,
+            GangDecision::Reserve { shadow_time } => {
+                // A shadow at `now` (the gang first-fits but scored-greedy
+                // cornered itself) would zero the backfill window — same
+                // guard as the conservative path above.
+                if shadow_time > now + 1e-9 {
+                    session.reservations.push(shadow_time);
+                }
+                Outcome::Done
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterSpec, Resources};
+    use crate::controller::VolcanoMpiController;
+    use crate::controller::JobController;
+    use crate::kubelet::KubeletConfig;
+    use crate::perfmodel::Calibration;
+    use crate::planner::{plan, GranularityPolicy, SystemInfo};
+    use crate::scheduler::{Scheduler, SchedulerConfig};
+    use crate::simulator::Simulation;
+    use crate::workload::{Benchmark, JobSpec};
+
+    fn api() -> ApiServer {
+        ApiServer::new(ClusterSpec::paper(), KubeletConfig::cpu_mem_affinity())
+    }
+
+    /// Submit an `ntasks`-core single-worker job with a tenant/priority
+    /// (1000 milli-cores and 2 GiB per task, the paper-job shape).
+    fn submit_job(
+        api: &mut ApiServer,
+        id: u64,
+        ntasks: u32,
+        tenant: TenantId,
+        priority: u32,
+        now: f64,
+    ) -> JobId {
+        let mut spec =
+            JobSpec::paper_job(id, Benchmark::EpDgemm, now).with_tenant(tenant, priority);
+        spec.ntasks = ntasks;
+        spec.resources =
+            Resources::new(ntasks as u64 * 1000, ntasks as u64 * crate::cluster::gib(2));
+        let info = SystemInfo::of(&api.spec);
+        let planned = plan(&spec, GranularityPolicy::None, info);
+        let job_id = planned.spec.id;
+        let (pods, hostfile) = VolcanoMpiController.build(&planned, api);
+        api.create_job(planned, pods, hostfile, now);
+        job_id
+    }
+
+    /// Fill the paper cluster (4 × 32 cores) with eight 16-core jobs.
+    fn fill_cluster(api: &mut ApiServer, sched: &mut Scheduler, tenant: TenantId, priority: u32) {
+        for i in 1..=8 {
+            submit_job(api, i, 16, tenant, priority, 0.0);
+        }
+        assert_eq!(sched.cycle(api, 0.0).len(), 8, "cluster must pack full");
+    }
+
+    #[test]
+    fn action_list_rejects_duplicates_and_overflow() {
+        assert!(ActionList::of(&ALL_ACTIONS).is_ok());
+        assert!(ActionList::of(&[]).unwrap().is_empty());
+        let dup = [ActionKind::Enqueue, ActionKind::Allocate, ActionKind::Allocate];
+        assert!(ActionList::of(&dup).unwrap_err().contains("twice"));
+        let six = [ActionKind::Enqueue; 6];
+        assert!(ActionList::of(&six).is_err());
+        let list = ActionList::of(&[ActionKind::Enqueue, ActionKind::Allocate]).unwrap();
+        assert_eq!(list.as_slice(), &[ActionKind::Enqueue, ActionKind::Allocate]);
+        assert!(list.contains(ActionKind::Allocate));
+        assert!(!list.contains(ActionKind::Preempt));
+    }
+
+    #[test]
+    fn action_names_round_trip() {
+        for a in ALL_ACTIONS {
+            assert_eq!(ActionKind::parse(a.name()), Some(a));
+            assert_eq!(ActionKind::parse(&a.name().to_ascii_uppercase()), Some(a));
+        }
+        assert_eq!(ActionKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn pipeline_validation_pins_required_actions_and_order() {
+        assert!(PipelineConfig::legacy_equivalent().validate().is_ok());
+        assert_eq!(PipelineConfig::default(), PipelineConfig::legacy_equivalent());
+
+        // enqueue + allocate are mandatory.
+        let no_alloc = PipelineConfig::default()
+            .with_actions(ActionList::of(&[ActionKind::Enqueue, ActionKind::Backfill]).unwrap());
+        assert!(no_alloc.validate().unwrap_err().contains("allocate"));
+
+        // Present actions must follow the canonical relative order.
+        let reordered = PipelineConfig::default().with_actions(
+            ActionList::of(&[ActionKind::Allocate, ActionKind::Enqueue]).unwrap(),
+        );
+        assert!(reordered.validate().unwrap_err().contains("canonical order"));
+
+        // A canonical subsequence is fine.
+        let subset = PipelineConfig::default().with_actions(
+            ActionList::of(&[ActionKind::Enqueue, ActionKind::Allocate, ActionKind::Backfill])
+                .unwrap(),
+        );
+        assert!(subset.validate().is_ok());
+
+        // Plugin knobs must be positive.
+        assert!(PipelineConfig::default().with_aging(0.0).validate().is_err());
+        assert!(PipelineConfig::default().with_budget(-1.0, 1).validate().is_err());
+        assert!(PipelineConfig::default().with_aging(100.0).with_budget(60.0, 1).validate().is_ok());
+    }
+
+    #[test]
+    fn plugin_registry_reflects_the_config() {
+        let base = PluginSet::from_config(&PipelineConfig::legacy_equivalent());
+        assert_eq!(base.names(), vec!["quota"]);
+        let full = PluginSet::from_config(
+            &PipelineConfig::legacy_equivalent().with_aging(100.0).with_budget(60.0, 2),
+        );
+        assert_eq!(full.names(), vec!["quota", "aging", "preemption_budget"]);
+    }
+
+    #[test]
+    fn aging_blocks_overtaking_once_the_head_is_starved() {
+        // Congested cluster with 16 free cores, a pending 32-core blocker
+        // and an overtaking 8-core job. Under plain FIFO-skip the small
+        // job overtakes forever; with aging, once the blocker has waited
+        // past the threshold its gang failure escalates to Block and the
+        // session ends before the small job is considered.
+        let run = |aging: Option<f64>, now: f64| -> Vec<JobId> {
+            let mut cfg = SchedulerConfig::volcano_default(1);
+            if let Some(threshold) = aging {
+                cfg = cfg.with_pipeline(
+                    PipelineConfig::legacy_equivalent().with_aging(threshold),
+                );
+            }
+            let mut api = api();
+            let mut sched = Scheduler::new(cfg);
+            fill_cluster(&mut api, &mut sched, TenantId(0), 0);
+            api.finish_job(JobId(1), 2.0);
+            let _blocker = submit_job(&mut api, 9, 32, TenantId(0), 0, 2.0);
+            let small = submit_job(&mut api, 10, 8, TenantId(0), 0, now);
+            let started = sched.cycle(&mut api, now);
+            assert!(started.is_empty() || started == vec![small]);
+            started
+        };
+        // Below the threshold the skip stream still overtakes.
+        let started = run(Some(100.0), 50.0);
+        assert_eq!(started.len(), 1, "not yet starved: small job overtakes");
+        // Past it, the starved blocker dams the session.
+        let started = run(Some(100.0), 200.0);
+        assert!(started.is_empty(), "starved head must block: {started:?}");
+        // And without the plugin nothing ever dams.
+        let started = run(None, 200.0);
+        assert_eq!(started.len(), 1, "plain FIFO-skip never blocks");
+    }
+
+    #[test]
+    fn aging_lets_a_starved_wide_job_run_through_a_skip_stream() {
+        // End-to-end regression (ROADMAP item since PR 2): a
+        // cluster-wide job behind a steady stream of narrow jobs under
+        // FIFO-skip. Without aging every narrow job overtakes and the
+        // wide job starts only once the whole stream has drained; with
+        // aging it runs as soon as the jobs admitted before starvation
+        // finish.
+        let start_of_wide = |aging: Option<f64>| -> f64 {
+            let mut cfg = SchedulerConfig::volcano_default(7);
+            if let Some(threshold) = aging {
+                cfg = cfg.with_pipeline(
+                    PipelineConfig::legacy_equivalent().with_aging(threshold),
+                );
+            }
+            let sim = Simulation::new(
+                ClusterSpec::with_workers(2),
+                KubeletConfig::cpu_mem_affinity(),
+                GranularityPolicy::None,
+                Box::new(VolcanoMpiController),
+                cfg,
+                Calibration::default(),
+                7,
+            );
+            // The wide job needs both 32-core nodes; 16-core narrow jobs
+            // arrive every 30 s, far below their runtime, so the cluster
+            // is never naturally idle until the stream ends.
+            let mut wide = JobSpec::paper_job(100, Benchmark::EpDgemm, 5.0);
+            wide.ntasks = 64;
+            wide.resources = Resources::new(64_000, 64 * crate::cluster::gib(2));
+            wide.default_workers = 2;
+            let mut trace = vec![wide];
+            for i in 0..15u64 {
+                let mut narrow =
+                    JobSpec::paper_job(i + 1, Benchmark::EpDgemm, 10.0 + 30.0 * i as f64);
+                narrow.ntasks = 16;
+                narrow.resources = Resources::new(16_000, 16 * crate::cluster::gib(2));
+                trace.push(narrow);
+            }
+            let out = sim.run(&trace);
+            assert_eq!(out.records.len(), 16, "every job must finish");
+            out.records.iter().find(|r| r.id == JobId(100)).unwrap().start_time
+        };
+        let starved = start_of_wide(None);
+        let aged = start_of_wide(Some(120.0));
+        assert!(
+            aged + 30.0 < starved,
+            "aging must start the wide job earlier: aged {aged} vs starved {starved}"
+        );
+    }
+
+    #[test]
+    fn preemption_budget_caps_evictions_per_tenant_and_window() {
+        let run = |budget: Option<(f64, u32)>| -> (Vec<usize>, ApiServer, Scheduler) {
+            let mut cfg = SchedulerConfig::volcano_default(1).with_preemption(true);
+            if let Some((window, max)) = budget {
+                cfg = cfg.with_pipeline(
+                    PipelineConfig::legacy_equivalent().with_budget(window, max),
+                );
+            }
+            let mut api = api();
+            let mut sched = Scheduler::new(cfg);
+            fill_cluster(&mut api, &mut sched, TenantId(0), 0);
+            let mut evicted_per_cycle = Vec::new();
+            // Sustained high-priority arrivals: one 16-core tenant-1 job
+            // every 50 s, each needing one eviction from tenant 0.
+            for (i, t) in [(9u64, 50.0), (10, 100.0)] {
+                submit_job(&mut api, i, 16, TenantId(1), 10, t);
+                sched.cycle(&mut api, t);
+                let victims = sched.take_preempted();
+                for &v in &victims {
+                    api.requeue_job(v, t);
+                }
+                evicted_per_cycle.push(victims.len());
+            }
+            (evicted_per_cycle, api, sched)
+        };
+
+        // Unbudgeted: both arrivals evict a batch victim.
+        let (evicted, _, _) = run(None);
+        assert_eq!(evicted, vec![1, 1]);
+
+        // Budget of one eviction per 60 s window: the second arrival
+        // (50 s after the first eviction) finds tenant 0 at its budget
+        // and must queue instead.
+        let (evicted, mut api, mut sched) = run(Some((60.0, 1)));
+        assert_eq!(evicted, vec![1, 0], "second arrival is over budget");
+        assert!(api.pending_jobs().contains(&JobId(10)));
+
+        // The window slides: by t = 111 the t = 50 eviction has aged out
+        // of the 60 s window and the queued job preempts its way in.
+        let started = sched.cycle(&mut api, 111.0);
+        assert_eq!(started, vec![JobId(10)], "window slid");
+        assert_eq!(sched.take_preempted().len(), 1);
+    }
+
+    /// Test-only reclaim plugin: nominate a fixed victim for a fixed
+    /// blocked job.
+    struct ReclaimOne {
+        blocked: JobId,
+        victim: JobId,
+    }
+
+    impl Plugin for ReclaimOne {
+        fn name(&self) -> &'static str {
+            "test_reclaim_one"
+        }
+
+        fn reclaim(&mut self, _api: &ApiServer, _now: f64, job: JobId) -> Vec<JobId> {
+            if job == self.blocked {
+                vec![self.victim]
+            } else {
+                Vec::new()
+            }
+        }
+    }
+
+    #[test]
+    fn reclaim_action_evicts_plugin_nominated_victims() {
+        // Preemption is OFF: only the reclaim extension point can free
+        // capacity, by a registered plugin's nomination.
+        let mut api = api();
+        let mut sched = Scheduler::new(SchedulerConfig::volcano_default(1));
+        fill_cluster(&mut api, &mut sched, TenantId(0), 0);
+        let blocked = submit_job(&mut api, 9, 16, TenantId(0), 0, 1.0);
+        sched.register_plugin(1, Box::new(ReclaimOne { blocked, victim: JobId(1) }));
+        let started = sched.cycle(&mut api, 1.0);
+        assert_eq!(started, vec![blocked], "blocked job runs on reclaimed capacity");
+        assert_eq!(sched.take_preempted(), vec![JobId(1)]);
+        assert_eq!(api.jobs[&JobId(1)].phase, JobPhase::Preempted);
+    }
+
+    #[test]
+    fn pipeline_without_preempt_action_never_evicts() {
+        let run = |actions: &[ActionKind]| -> (Vec<JobId>, Vec<JobId>) {
+            let mut api = api();
+            let mut sched = Scheduler::new(
+                SchedulerConfig::volcano_default(1)
+                    .with_preemption(true)
+                    .with_pipeline(
+                        PipelineConfig::legacy_equivalent()
+                            .with_actions(ActionList::of(actions).unwrap()),
+                    ),
+            );
+            fill_cluster(&mut api, &mut sched, TenantId(0), 0);
+            let _hi = submit_job(&mut api, 9, 16, TenantId(1), 10, 1.0);
+            let started = sched.cycle(&mut api, 1.0);
+            (started, sched.take_preempted())
+        };
+        let (started, evicted) = run(&ALL_ACTIONS);
+        assert_eq!(started, vec![JobId(9)], "full pipeline preempts");
+        assert_eq!(evicted.len(), 1);
+        let (started, evicted) = run(&[
+            ActionKind::Enqueue,
+            ActionKind::Allocate,
+            ActionKind::Backfill,
+        ]);
+        assert!(started.is_empty(), "no preempt action, no eviction: {started:?}");
+        assert!(evicted.is_empty());
+    }
+}

@@ -129,6 +129,151 @@ impl SimOutput {
             xs.iter().sum::<f64>() / xs.len() as f64
         }
     }
+
+    /// Compact bit-exact fingerprint of the run — see [`SimDigest`].
+    pub fn digest(&self) -> SimDigest {
+        SimDigest::of(self)
+    }
+}
+
+/// 64-bit FNV-1a over a byte stream — platform-stable (the digest inputs
+/// are IEEE-754 bit patterns and ids, all iterated in deterministic
+/// order), no dependencies, and cheap enough to fingerprint every fuzz
+/// case.
+fn fnv1a(bytes: impl IntoIterator<Item = u8>) -> u64 {
+    let mut hash: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in bytes {
+        hash ^= b as u64;
+        hash = hash.wrapping_mul(0x100_0000_01b3);
+    }
+    hash
+}
+
+/// Compact, bit-exact fingerprint of one simulation: separate hashes over
+/// the placement decisions (every `PodBound` event), the full event
+/// sequence, and the per-job timing records, plus the headline stats as
+/// raw IEEE-754 bit patterns. Two runs have equal digests iff their
+/// observable outputs are bit-identical — the equality the differential
+/// harness, the golden snapshots under `tests/golden/`, and the fuzz
+/// property all pin.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SimDigest {
+    /// FNV-1a over the `(t, pod, node)` stream of every `PodBound` event.
+    pub placements: u64,
+    /// FNV-1a over the full event log (discriminant + timestamps + ids).
+    pub events: u64,
+    /// FNV-1a over the per-job records (id, tenant, priority, and the
+    /// submit/start/finish/running times as bit patterns).
+    pub records: u64,
+    pub n_records: usize,
+    pub n_unschedulable: usize,
+    /// `overall_response()` as IEEE-754 bits.
+    pub response_bits: u64,
+    /// `makespan()` as IEEE-754 bits.
+    pub makespan_bits: u64,
+}
+
+impl SimDigest {
+    pub fn of(out: &SimOutput) -> SimDigest {
+        use crate::apiserver::Event;
+        let mut placements: Vec<u8> = Vec::new();
+        let mut events: Vec<u8> = Vec::new();
+        let mut push = |buf: &mut Vec<u8>, words: &[u64]| {
+            for w in words {
+                buf.extend_from_slice(&w.to_le_bytes());
+            }
+        };
+        for e in &out.api.events {
+            match *e {
+                Event::JobSubmitted { t, job } => push(&mut events, &[1, t.to_bits(), job.0]),
+                Event::PodBound { t, pod, node } => {
+                    let words = [2, t.to_bits(), pod.0, node.0 as u64];
+                    push(&mut events, &words);
+                    push(&mut placements, &words);
+                }
+                Event::JobStarted { t, job } => push(&mut events, &[3, t.to_bits(), job.0]),
+                Event::JobFinished { t, job } => push(&mut events, &[4, t.to_bits(), job.0]),
+                Event::JobPreempted { t, job } => push(&mut events, &[5, t.to_bits(), job.0]),
+                Event::JobUnschedulable { t, job } => {
+                    push(&mut events, &[6, t.to_bits(), job.0])
+                }
+            }
+        }
+        let mut records: Vec<u8> = Vec::new();
+        for r in &out.records {
+            push(
+                &mut records,
+                &[
+                    r.id.0,
+                    r.tenant.0 as u64,
+                    r.priority as u64,
+                    r.submit_time.to_bits(),
+                    r.start_time.to_bits(),
+                    r.finish_time.to_bits(),
+                    r.running_secs.to_bits(),
+                ],
+            );
+        }
+        SimDigest {
+            placements: fnv1a(placements),
+            events: fnv1a(events),
+            records: fnv1a(records),
+            n_records: out.records.len(),
+            n_unschedulable: out.unschedulable.len(),
+            response_bits: out.overall_response().to_bits(),
+            makespan_bits: out.makespan().to_bits(),
+        }
+    }
+
+    /// Render as a small JSON object. The u64 hashes/bit-patterns are
+    /// serialized as fixed-width hex *strings*: the in-tree JSON value is
+    /// f64-backed, which would silently round integers above 2^53.
+    pub fn to_json(&self) -> String {
+        format!(
+            concat!(
+                "{{\n",
+                "  \"placements\": \"{:016x}\",\n",
+                "  \"events\": \"{:016x}\",\n",
+                "  \"records\": \"{:016x}\",\n",
+                "  \"n_records\": {},\n",
+                "  \"n_unschedulable\": {},\n",
+                "  \"response_bits\": \"{:016x}\",\n",
+                "  \"makespan_bits\": \"{:016x}\"\n",
+                "}}\n"
+            ),
+            self.placements,
+            self.events,
+            self.records,
+            self.n_records,
+            self.n_unschedulable,
+            self.response_bits,
+            self.makespan_bits,
+        )
+    }
+
+    /// Parse what [`SimDigest::to_json`] rendered.
+    pub fn from_json(text: &str) -> Result<SimDigest, String> {
+        let v = crate::util::Json::parse(text).map_err(|e| e.to_string())?;
+        let hex = |key: &str| -> Result<u64, String> {
+            let s = v.get(key).as_str().ok_or_else(|| format!("missing hex field {key:?}"))?;
+            u64::from_str_radix(s, 16).map_err(|e| format!("bad hex in {key:?}: {e}"))
+        };
+        let count = |key: &str| -> Result<usize, String> {
+            v.get(key)
+                .as_u64()
+                .map(|x| x as usize)
+                .ok_or_else(|| format!("missing count field {key:?}"))
+        };
+        Ok(SimDigest {
+            placements: hex("placements")?,
+            events: hex("events")?,
+            records: hex("records")?,
+            n_records: count("n_records")?,
+            n_unschedulable: count("n_unschedulable")?,
+            response_bits: hex("response_bits")?,
+            makespan_bits: hex("makespan_bits")?,
+        })
+    }
 }
 
 /// One running job's cached contribution to the cluster-wide load
@@ -230,6 +375,13 @@ impl Simulation {
     /// refreshing the scheduler's persistent cache.
     pub fn set_force_timeline_rebuild(&mut self, force: bool) {
         self.scheduler.force_timeline_rebuild = force;
+    }
+
+    /// Run every scheduling session through the retired monolithic loop
+    /// instead of the action pipeline — the pinned reference path the
+    /// differential golden-trace harness compares against.
+    pub fn set_force_legacy_scheduler(&mut self, force: bool) {
+        self.scheduler.force_legacy_scheduler = force;
     }
 
     fn base_work_of(&self, bench: crate::workload::Benchmark) -> f64 {

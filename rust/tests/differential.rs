@@ -1,0 +1,131 @@
+//! Differential golden-trace harness for the action/plugin pipeline.
+//!
+//! The scheduler's legacy monolithic cycle is kept verbatim behind
+//! `force_legacy_scheduler` as a pinned reference; these tests drive whole
+//! simulations through both paths over every scenario in the matrix ×
+//! both placement engines × homogeneous and fat/thin cluster mixes, and
+//! require bit-identical `SimOutput`s — record-for-record f64 bit
+//! equality plus FNV-1a digest equality over the full event trace. Any
+//! behavioural drift introduced while refactoring actions or plugins
+//! fails here with the first diverging job, not as a silent golden-digest
+//! change.
+
+use kube_fgs::cluster::{ClusterSpec, HeterogeneityMix};
+use kube_fgs::scenario::{Scenario, ALL_SCENARIOS};
+use kube_fgs::scheduler::PlacementEngineKind;
+use kube_fgs::simulator::{SimDigest, SimOutput};
+use kube_fgs::workload::two_tenant_trace;
+
+const SEED: u64 = 11;
+const JOBS: usize = 12;
+const MEAN_INTERVAL: f64 = 30.0;
+
+#[derive(Clone, Copy)]
+enum Mix {
+    Uniform,
+    FatThin,
+}
+
+impl Mix {
+    fn cluster(self) -> ClusterSpec {
+        match self {
+            // Same worker count both ways so only the node shapes differ.
+            Mix::Uniform => ClusterSpec::with_workers(4),
+            Mix::FatThin => ClusterSpec::mixed(4, HeterogeneityMix::FatThin),
+        }
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            Mix::Uniform => "uniform",
+            Mix::FatThin => "fat_thin",
+        }
+    }
+}
+
+fn run(
+    scenario: Scenario,
+    mix: Mix,
+    engine: PlacementEngineKind,
+    force_legacy: bool,
+) -> SimOutput {
+    let mut sim = scenario.simulation_on(mix.cluster(), SEED);
+    sim.set_placement_engine(engine);
+    sim.set_force_legacy_scheduler(force_legacy);
+    sim.run(&two_tenant_trace(JOBS, MEAN_INTERVAL, SEED))
+}
+
+/// The core differential assertion: pipeline vs legacy, bit-for-bit.
+fn assert_pipeline_matches_legacy(mix: Mix, engine: PlacementEngineKind) {
+    for scenario in ALL_SCENARIOS {
+        let ctx = format!("{scenario} / {} / {engine:?}", mix.name());
+        let pipeline = run(scenario, mix, engine, false);
+        let legacy = run(scenario, mix, engine, true);
+        // Record-level comparison first, so a divergence names the first
+        // differing job instead of two opaque hashes.
+        assert_eq!(pipeline.records.len(), legacy.records.len(), "{ctx}: record count");
+        for (p, l) in pipeline.records.iter().zip(legacy.records.iter()) {
+            assert_eq!(p.id, l.id, "{ctx}: record order");
+            assert_eq!(
+                p.start_time.to_bits(),
+                l.start_time.to_bits(),
+                "{ctx}: job {:?} start {} vs {}",
+                p.id,
+                p.start_time,
+                l.start_time
+            );
+            assert_eq!(
+                p.finish_time.to_bits(),
+                l.finish_time.to_bits(),
+                "{ctx}: job {:?} finish {} vs {}",
+                p.id,
+                p.finish_time,
+                l.finish_time
+            );
+        }
+        assert_eq!(pipeline.unschedulable, legacy.unschedulable, "{ctx}: unschedulable");
+        // Then the full trace digest (events, placements, all records).
+        assert_eq!(
+            SimDigest::of(&pipeline),
+            SimDigest::of(&legacy),
+            "{ctx}: event-trace digest"
+        );
+    }
+}
+
+#[test]
+fn pipeline_matches_legacy_uniform_linear() {
+    assert_pipeline_matches_legacy(Mix::Uniform, PlacementEngineKind::Linear);
+}
+
+#[test]
+fn pipeline_matches_legacy_uniform_indexed() {
+    assert_pipeline_matches_legacy(Mix::Uniform, PlacementEngineKind::Indexed);
+}
+
+#[test]
+fn pipeline_matches_legacy_fat_thin_linear() {
+    assert_pipeline_matches_legacy(Mix::FatThin, PlacementEngineKind::Linear);
+}
+
+#[test]
+fn pipeline_matches_legacy_fat_thin_indexed() {
+    assert_pipeline_matches_legacy(Mix::FatThin, PlacementEngineKind::Indexed);
+}
+
+/// The digest itself is a stable serialization surface: equal outputs hash
+/// equal, the JSON form round-trips losslessly, and perturbing the run
+/// (different seed) actually changes the hash — a digest that never
+/// changes would pin nothing.
+#[test]
+fn digest_round_trips_and_discriminates() {
+    let a = run(Scenario::CmGTg, Mix::Uniform, PlacementEngineKind::Indexed, false);
+    let d = SimDigest::of(&a);
+    let parsed = SimDigest::from_json(&d.to_json()).expect("round trip");
+    assert_eq!(d, parsed);
+
+    let mut sim = Scenario::CmGTg.simulation_on(Mix::Uniform.cluster(), SEED + 1);
+    sim.set_placement_engine(PlacementEngineKind::Indexed);
+    let b = sim.run(&two_tenant_trace(JOBS, MEAN_INTERVAL, SEED + 1));
+    assert_ne!(d, SimDigest::of(&b), "different seed must change the digest");
+}

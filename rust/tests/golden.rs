@@ -1,0 +1,88 @@
+//! Golden snapshot tests for the paper-figure scenarios.
+//!
+//! Each case runs a full simulation and compares its [`SimDigest`] — an
+//! FNV-1a hash over the complete event trace, placements, and job records
+//! — against a JSON snapshot under `tests/golden/`. The snapshots pin the
+//! exact schedules behind every paper figure: a refactor that perturbs so
+//! much as one f64 bit of one start time fails here.
+//!
+//! Blessing:
+//!   * `KUBE_FGS_BLESS=1 cargo test --test golden` rewrites every
+//!     snapshot from the current behaviour (inspect the diff before
+//!     committing!).
+//!   * A *missing* snapshot is blessed on first run rather than failing,
+//!     so a fresh checkout (or a deliberately deleted file) regenerates
+//!     itself; drift against an *existing* snapshot always fails.
+
+use std::path::PathBuf;
+
+use kube_fgs::experiments::{self, DEFAULT_SEED};
+use kube_fgs::scenario::{Scenario, EXP3_SCENARIOS, TABLE2_SCENARIOS};
+use kube_fgs::simulator::{SimDigest, SimOutput};
+use kube_fgs::workload::{exp2_trace, two_tenant_trace};
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden")
+}
+
+fn bless_requested() -> bool {
+    ["KUBE_FGS_BLESS", "BLESS"]
+        .iter()
+        .any(|k| std::env::var(k).map(|v| v == "1").unwrap_or(false))
+}
+
+/// Compare `out` against the named snapshot, blessing it when asked to
+/// (or when it does not exist yet).
+fn check_golden(name: &str, out: &SimOutput) {
+    let digest = SimDigest::of(out);
+    let path = golden_dir().join(format!("{name}.json"));
+    if bless_requested() || !path.exists() {
+        std::fs::create_dir_all(golden_dir()).expect("create tests/golden");
+        std::fs::write(&path, format!("{}\n", digest.to_json()))
+            .unwrap_or_else(|e| panic!("golden: writing {}: {e}", path.display()));
+        eprintln!("golden: blessed {}", path.display());
+        return;
+    }
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("golden: reading {}: {e}", path.display()));
+    let want = SimDigest::from_json(&text)
+        .unwrap_or_else(|e| panic!("golden: parsing {}: {e}", path.display()));
+    assert_eq!(
+        digest, want,
+        "golden digest drift for {name} ({}). If the behaviour change is \
+         intended, re-bless with KUBE_FGS_BLESS=1 and commit the diff.",
+        path.display()
+    );
+}
+
+/// Table II / Figs. 6-7: the six fine-grained scenarios on the exp2 trace.
+#[test]
+fn golden_exp2_table2_scenarios() {
+    let trace = exp2_trace(DEFAULT_SEED);
+    for s in TABLE2_SCENARIOS {
+        let out = experiments::run_scenario(s, &trace, DEFAULT_SEED, None);
+        check_golden(&format!("exp2_{}", s.name()), &out);
+    }
+}
+
+/// Table III / Figs. 8-9: the framework-comparison scenarios on the same
+/// trace (separate snapshots so the two experiments can drift — and be
+/// re-blessed — independently).
+#[test]
+fn golden_exp3_framework_scenarios() {
+    let trace = exp2_trace(DEFAULT_SEED);
+    for s in EXP3_SCENARIOS {
+        let out = experiments::run_scenario(s, &trace, DEFAULT_SEED, None);
+        check_golden(&format!("exp3_{}", s.name()), &out);
+    }
+}
+
+/// The multi-tenant preemptive schedule (fair-share + priority
+/// preemption) on the two-tenant trace — the schedule with the most
+/// internal churn (evict, requeue, re-place), so the most sensitive pin.
+#[test]
+fn golden_two_tenant_preemption() {
+    let trace = two_tenant_trace(30, 45.0, DEFAULT_SEED);
+    let out = experiments::run_scenario(Scenario::CmGTgPre, &trace, DEFAULT_SEED, None);
+    check_golden("two_tenant_CM_G_TG_PRE", &out);
+}

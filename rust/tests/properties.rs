@@ -488,6 +488,90 @@ fn prop_persistent_timeline_matches_rebuild_bitwise() {
     }
 }
 
+/// Property: the action/plugin pipeline is bit-identical to the pinned
+/// legacy scheduler cycle — same event-trace digest — and conserves its
+/// bookkeeping (every job accounted for, no pod left bound, all node
+/// resources returned, tenant ledgers equal to the now-empty running
+/// set), across 200 fuzzed (scenario, engine, cluster mix, trace shape,
+/// seed) tuples.
+#[test]
+fn prop_pipeline_differential_fuzz() {
+    use kube_fgs::cluster::{HeterogeneityMix, PodPhase};
+    use kube_fgs::scenario::ALL_SCENARIOS;
+    use kube_fgs::scheduler::PlacementEngineKind;
+    use kube_fgs::simulator::SimDigest;
+    use kube_fgs::workload::two_tenant_trace;
+
+    let mut rng = Rng::seed_from_u64(1212);
+    for case in 0..200 {
+        let scenario = ALL_SCENARIOS[rng.range_usize(0, ALL_SCENARIOS.len())];
+        let engine = if rng.f64() < 0.5 {
+            PlacementEngineKind::Linear
+        } else {
+            PlacementEngineKind::Indexed
+        };
+        let workers = rng.range_usize(2, 9);
+        let mix = rng.range_usize(0, 3);
+        let cluster = || match mix {
+            0 => ClusterSpec::with_workers(workers),
+            1 => ClusterSpec::mixed(workers, HeterogeneityMix::FatThin),
+            _ => ClusterSpec::mixed(workers, HeterogeneityMix::Tiered),
+        };
+        let n_jobs = rng.range_usize(3, 10);
+        let interval = rng.range_f64(15.0, 90.0);
+        let seed = rng.next_u64();
+        let trace = if rng.f64() < 0.5 {
+            uniform_trace(n_jobs, interval, seed)
+        } else {
+            two_tenant_trace(n_jobs, interval, seed)
+        };
+        let mk = |force_legacy: bool| {
+            let mut sim = scenario.simulation_on(cluster(), seed);
+            sim.set_placement_engine(engine);
+            sim.set_force_legacy_scheduler(force_legacy);
+            sim.run(&trace)
+        };
+        let pipeline = mk(false);
+        let legacy = mk(true);
+        assert_eq!(
+            SimDigest::of(&pipeline),
+            SimDigest::of(&legacy),
+            "case {case}: {scenario} {engine:?} mix {mix} x{workers} seed {seed} diverged"
+        );
+        // Bookkeeping conservation on the pipeline path.
+        assert_eq!(
+            pipeline.records.len() + pipeline.unschedulable.len(),
+            n_jobs,
+            "case {case}: job leaked"
+        );
+        for n in pipeline.api.spec.node_ids() {
+            assert_eq!(
+                pipeline.api.free_on(n),
+                pipeline.api.spec.node(n).allocatable(),
+                "case {case}: leaked resources"
+            );
+        }
+        for pod in pipeline.api.pods.values() {
+            assert!(
+                !matches!(pod.phase, PodPhase::Bound | PodPhase::Running),
+                "case {case}: pod {:?} leaked in {:?}",
+                pod.id,
+                pod.phase
+            );
+        }
+        // Tenant ledgers must sum to the running set, which is empty.
+        let tenants: std::collections::BTreeSet<_> =
+            pipeline.records.iter().map(|r| r.tenant).collect();
+        for t in tenants {
+            assert_eq!(
+                pipeline.api.tenant_running_requests(t),
+                Resources::ZERO,
+                "case {case}: tenant {t:?} ledger out of balance"
+            );
+        }
+    }
+}
+
 /// Property: per-benchmark base work overrides scale running times
 /// proportionally for isolated jobs.
 #[test]
