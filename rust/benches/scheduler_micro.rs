@@ -271,6 +271,36 @@ fn main() {
         });
     }
 
+    // Running-set view: the old full job-map scan (reference, kept as
+    // ApiServer::running_jobs_reference) vs the maintained index the
+    // preemption and elasticity passes now read on every cycle. The gap
+    // grows with schedule history — after a 300-job trace the scan walks
+    // every completed job in the map to find the handful still running.
+    {
+        let sim = kube_fgs::scenario::Scenario::CmGTg.simulation(2);
+        let out = sim.run(&uniform_trace(300, 30.0, 2));
+        let mut api = out.api;
+        let info = SystemInfo::homogeneous(4);
+        for i in 1..=8u64 {
+            let spec = JobSpec::paper_job(10_000 + i, Benchmark::EpDgemm, 0.0);
+            let planned = plan(&spec, GranularityPolicy::Granularity, info);
+            let (pods, hostfile) = VolcanoMpiController.build(&planned, &mut api);
+            api.create_job(planned, pods, hostfile, 0.0);
+        }
+        let mut sched = Scheduler::new(SchedulerConfig::fine_grained(1));
+        let started = sched.cycle(&mut api, 0.0);
+        assert!(!started.is_empty());
+        assert_eq!(api.running_jobs(), api.running_jobs_reference());
+        BenchTimer::new("running-set/full-scan-300j (before)").with_iters(5, 500).run(|| {
+            let r = api.running_jobs_reference();
+            std::hint::black_box(&r);
+        });
+        BenchTimer::new("running-set/index-300j (after)").with_iters(5, 500).run(|| {
+            let r = api.running_jobs();
+            std::hint::black_box(&r);
+        });
+    }
+
     // Group-placement session view: the old full pod scan (reference,
     // kept as Scheduler::rebuild_placement) vs the API server's
     // incrementally maintained view that sessions now clone. The gap grows

@@ -22,10 +22,10 @@ pub mod watch;
 
 pub use watch::{WatchBus, WatchFilter, WatchId};
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::cluster::{
-    ClusterSpec, HostfileEntry, JobId, NodeId, Pod, PodId, PodPhase, Resources,
+    ClusterSpec, HostfileEntry, JobId, NodeId, Pod, PodId, PodPhase, PodRole, Resources,
 };
 use crate::kubelet::{Kubelet, KubeletConfig};
 use crate::scheduler::score::GroupPlacement;
@@ -75,6 +75,11 @@ pub enum Event {
     JobFinished { t: f64, job: JobId },
     JobPreempted { t: f64, job: JobId },
     JobUnschedulable { t: f64, job: JobId },
+    /// An elastic job changed width (expand, shrink, or a pre-start mold):
+    /// `workers` is the job's worker count *after* the resize. Only ever
+    /// emitted for jobs carrying an `elasticity` spec — rigid traces never
+    /// see this event, which keeps their digests byte-identical.
+    JobResized { t: f64, job: JobId, workers: u32 },
 }
 
 impl Event {
@@ -85,7 +90,8 @@ impl Event {
             | Event::JobStarted { t, .. }
             | Event::JobFinished { t, .. }
             | Event::JobPreempted { t, .. }
-            | Event::JobUnschedulable { t, .. } => *t,
+            | Event::JobUnschedulable { t, .. }
+            | Event::JobResized { t, .. } => *t,
         }
     }
 }
@@ -107,6 +113,13 @@ pub struct ApiServer {
     /// scheduling session dominated large queues, and `partial_cmp`
     /// panicked on NaN submit times).
     pending: Vec<JobId>,
+    /// Running-job index, maintained on start/preempt/complete (§Perf:
+    /// `running_jobs` was a full job-map scan per preemption pass; a
+    /// `BTreeSet` iterates in the same ascending-`JobId` order the scan
+    /// produced, so consumers — and the RNG-sensitive victim ordering —
+    /// see an identical sequence). Pinned to
+    /// [`ApiServer::running_jobs_reference`] by a property test.
+    running: BTreeSet<JobId>,
     /// Cluster-wide task-group placement view, maintained incrementally on
     /// bind/finish/preempt (§Perf: `Scheduler::rebuild_placement` scanned
     /// every pod — including succeeded ones — once per scheduling session).
@@ -192,6 +205,7 @@ impl ApiServer {
             events: Vec::new(),
             watch: WatchBus::new(),
             pending: Vec::new(),
+            running: BTreeSet::new(),
             placement: GroupPlacement::default(),
             tenant_weights: BTreeMap::new(),
             tenant_service: BTreeMap::new(),
@@ -440,6 +454,7 @@ impl ApiServer {
         self.adjust_tenant_rate(tenant, now, cores);
         *self.tenant_running.entry(tenant).or_insert(Resources::ZERO) += requests;
         self.pending.retain(|&id| id != job_id);
+        self.running.insert(job_id);
         self.events.push(Event::JobStarted { t: now, job: job_id });
         self.watch.publish(Event::JobStarted { t: now, job: job_id });
     }
@@ -472,6 +487,7 @@ impl ApiServer {
     /// Complete a job: release every pod's resources and cpusets.
     pub fn finish_job(&mut self, job_id: JobId, now: f64) {
         self.account_service(job_id, now);
+        self.running.remove(&job_id);
         let job = self.jobs.get_mut(&job_id).expect("finish of unknown job");
         debug_assert_eq!(job.phase, JobPhase::Running);
         job.phase = JobPhase::Succeeded;
@@ -499,6 +515,7 @@ impl ApiServer {
             "preempt of non-running {job_id:?}"
         );
         self.account_service(job_id, now);
+        self.running.remove(&job_id);
         let job = self.jobs.get_mut(&job_id).expect("preempt of unknown job");
         job.phase = JobPhase::Preempted;
         let pods = job.pods.clone();
@@ -543,7 +560,18 @@ impl ApiServer {
         self.pending.clone()
     }
 
+    /// Running jobs in ascending-id order, from the maintained index
+    /// (§Perf: the old full job-map scan — kept as
+    /// [`ApiServer::running_jobs_reference`] — cost O(jobs) per preemption
+    /// pass; the set costs O(running) and iterates identically).
     pub fn running_jobs(&self) -> Vec<JobId> {
+        self.running.iter().copied().collect()
+    }
+
+    /// Reference implementation of [`ApiServer::running_jobs`]: filter the
+    /// whole job map (the pre-index behaviour, pinned equal by a property
+    /// test and benched against the index in `benches/scheduler_micro.rs`).
+    pub fn running_jobs_reference(&self) -> Vec<JobId> {
         self.jobs
             .iter()
             .filter(|(_, j)| j.phase == JobPhase::Running)
@@ -570,6 +598,178 @@ impl ApiServer {
                 p.is_worker() && p.phase == PodPhase::Running && p.node == Some(node)
             })
             .collect()
+    }
+
+    // --- Elastic resize verbs (Kub-style malleable jobs) ---------------
+    //
+    // Only jobs carrying an `elasticity` spec ever pass through these:
+    // every verb asserts it, so rigid traces cannot acquire `JobResized`
+    // events (or extra allocation touches) by accident. Resource release
+    // and binding go through the same `release_pod_resources`/`bind_pod`
+    // paths as the ordinary lifecycle, so the allocation-touch log — and
+    // with it the indexed placement engine and the persistent backfill
+    // timeline — see resizes exactly like any other (un)bind.
+
+    /// Current worker count of a job (its live width).
+    pub fn worker_width(&self, job_id: JobId) -> u32 {
+        self.jobs[&job_id]
+            .pods
+            .iter()
+            .filter(|pid| self.pods[*pid].is_worker())
+            .count() as u32
+    }
+
+    /// Sum of MPI tasks in the job's current worker pods: `spec.ntasks`
+    /// for rigid jobs; `w · ntasks / preferred` for an elastic job at
+    /// width `w` — the numerator of the simulator's progress-rate scale.
+    pub fn active_tasks_of(&self, job_id: JobId) -> u32 {
+        self.jobs[&job_id]
+            .pods
+            .iter()
+            .map(|pid| &self.pods[pid])
+            .filter(|p| p.is_worker())
+            .map(|p| p.ntasks)
+            .sum()
+    }
+
+    /// Mold a still-pending elastic job down to `new_workers`: drop its
+    /// unbound tail worker pods so the gang to place is smaller. Used by
+    /// the `resize` action when the preferred-width gang does not fit.
+    pub fn mold_job(&mut self, job_id: JobId, new_workers: u32, now: f64) {
+        let job = self.jobs.get(&job_id).expect("mold of unknown job");
+        assert_eq!(job.phase, JobPhase::Pending, "mold of non-pending {job_id:?}");
+        let e = job.planned.spec.elasticity.expect("mold of a rigid job");
+        assert!(
+            new_workers >= e.min && new_workers < job.planned.granularity.n_workers,
+            "mold of {job_id:?} to invalid width {new_workers}"
+        );
+        let dropped: Vec<PodId> = job
+            .pods
+            .iter()
+            .map(|pid| &self.pods[pid])
+            .filter(|p| matches!(p.worker_index(), Some(i) if i >= new_workers))
+            .map(|p| p.id)
+            .collect();
+        for pid in dropped {
+            let pod = self.pods.remove(&pid).expect("mold of unknown pod");
+            assert_eq!(pod.phase, PodPhase::Pending, "mold of a bound pod");
+            debug_assert!(pod.node.is_none());
+            let job = self.jobs.get_mut(&job_id).unwrap();
+            job.pods.retain(|p| *p != pid);
+            job.hostfile.retain(|h| h.hostname != pod.name);
+        }
+        let job = self.jobs.get_mut(&job_id).unwrap();
+        job.planned.granularity.n_workers = new_workers;
+        job.planned.granularity.n_nodes = job.planned.granularity.n_nodes.min(new_workers);
+        job.planned.granularity.n_groups = job.planned.granularity.n_groups.min(new_workers);
+        self.events.push(Event::JobResized { t: now, job: job_id, workers: new_workers });
+        self.watch.publish(Event::JobResized { t: now, job: job_id, workers: new_workers });
+    }
+
+    /// Shrink a *running* elastic job by `remove` tail workers, releasing
+    /// their resources and cpusets (shrink-before-preempt: cheaper than
+    /// evicting the whole gang). Returns the memory bytes of the dropped
+    /// workers — the image the resize cost is charged on.
+    pub fn shrink_job(&mut self, job_id: JobId, remove: u32, now: f64) -> u64 {
+        let job = self.jobs.get(&job_id).expect("shrink of unknown job");
+        assert_eq!(job.phase, JobPhase::Running, "shrink of non-running {job_id:?}");
+        job.planned.spec.elasticity.expect("shrink of a rigid job");
+        let mut workers: Vec<(u32, PodId)> = job
+            .pods
+            .iter()
+            .map(|pid| &self.pods[pid])
+            .filter_map(|p| p.worker_index().map(|i| (i, p.id)))
+            .collect();
+        workers.sort_unstable();
+        assert!(
+            remove >= 1 && (remove as usize) < workers.len(),
+            "shrink of {job_id:?} by {remove} of {} workers",
+            workers.len()
+        );
+        let width = workers.len() as u32 - remove;
+        let mut freed_mem = 0u64;
+        for &(_, pid) in &workers[width as usize..] {
+            assert_eq!(self.pods[&pid].phase, PodPhase::Running, "shrink of an idle pod");
+            self.release_pod_resources(pid, job_id);
+            let pod = self.pods.remove(&pid).unwrap();
+            freed_mem += pod.requests.mem_bytes;
+            let job = self.jobs.get_mut(&job_id).unwrap();
+            job.pods.retain(|p| *p != pid);
+            job.hostfile.retain(|h| h.hostname != pod.name);
+        }
+        let job = self.jobs.get_mut(&job_id).unwrap();
+        job.planned.granularity.n_workers = width;
+        self.events.push(Event::JobResized { t: now, job: job_id, workers: width });
+        self.watch.publish(Event::JobResized { t: now, job: job_id, workers: width });
+        freed_mem
+    }
+
+    /// Create one fresh (pending, unbound) tail worker pod for a running
+    /// elastic job — the expand half of a resize. The caller places and
+    /// binds it like any other pod, then seals the resize with
+    /// [`ApiServer::complete_expand`]; if no node fits, it must retract
+    /// the pod with [`ApiServer::cancel_expand`].
+    pub fn expand_job(&mut self, job_id: JobId) -> PodId {
+        let job = &self.jobs[&job_id];
+        assert_eq!(job.phase, JobPhase::Running, "expand of non-running {job_id:?}");
+        job.planned.spec.elasticity.expect("expand of a rigid job");
+        let template = job
+            .pods
+            .iter()
+            .map(|pid| &self.pods[pid])
+            .find(|p| p.is_worker())
+            .expect("expand of a job with no workers")
+            .clone();
+        let next_index = job
+            .pods
+            .iter()
+            .map(|pid| &self.pods[pid])
+            .filter_map(|p| p.worker_index())
+            .max()
+            .map_or(0, |i| i + 1);
+        let name = format!("{}-worker-{}", job.planned.spec.name, next_index);
+        let id = self.fresh_pod_id();
+        let mut pod = Pod::new(id, job_id, name.clone(), PodRole::Worker { index: next_index });
+        pod.ntasks = template.ntasks;
+        pod.requests = template.requests;
+        pod.limits = template.limits;
+        self.pods.insert(id, pod);
+        let job = self.jobs.get_mut(&job_id).unwrap();
+        job.pods.push(id);
+        job.hostfile.push(HostfileEntry { hostname: name, slots: template.ntasks });
+        id
+    }
+
+    /// Retract an expansion pod that found no node (inverse of
+    /// [`ApiServer::expand_job`]; the pod must still be pending/unbound).
+    pub fn cancel_expand(&mut self, job_id: JobId, pid: PodId) {
+        let pod = self.pods.remove(&pid).expect("cancel of unknown pod");
+        assert_eq!(pod.phase, PodPhase::Pending, "cancel of a bound expansion pod");
+        debug_assert!(pod.node.is_none());
+        let job = self.jobs.get_mut(&job_id).expect("cancel on unknown job");
+        job.pods.retain(|p| *p != pid);
+        job.hostfile.retain(|h| h.hostname != pod.name);
+    }
+
+    /// Seal an expand: flip the freshly bound pods to running, set the
+    /// job's new width, and log the `JobResized` event.
+    pub fn complete_expand(&mut self, job_id: JobId, now: f64) {
+        assert_eq!(self.jobs[&job_id].phase, JobPhase::Running);
+        let pods = self.jobs[&job_id].pods.clone();
+        let mut width = 0u32;
+        for pid in pods {
+            let pod = self.pods.get_mut(&pid).unwrap();
+            if pod.phase == PodPhase::Bound {
+                pod.phase = PodPhase::Running;
+            }
+            if pod.is_worker() {
+                width += 1;
+            }
+        }
+        let job = self.jobs.get_mut(&job_id).unwrap();
+        job.planned.granularity.n_workers = width;
+        self.events.push(Event::JobResized { t: now, job: job_id, workers: width });
+        self.watch.publish(Event::JobResized { t: now, job: job_id, workers: width });
     }
 }
 
@@ -917,6 +1117,201 @@ mod tests {
         assert!(api.alloc_touched_since(api.alloc_version() + 10).is_empty());
     }
 
+    fn elastic_planned(id: u64, workers: u32) -> PlannedJob {
+        use crate::workload::Elasticity;
+        PlannedJob {
+            spec: JobSpec::paper_job(id, Benchmark::EpDgemm, 0.0)
+                .with_elasticity(Elasticity { min: 2, max: 16, preferred: 8 }),
+            granularity: Granularity { n_nodes: 4, n_workers: workers, n_groups: 4 },
+        }
+    }
+
+    /// Create + bind + start an elastic job of `workers` 2-task workers.
+    fn start_elastic(api: &mut ApiServer, id: u64, workers: u32) -> JobId {
+        let pj = elastic_planned(id, workers);
+        let job_id = pj.spec.id;
+        let mut pods = Vec::new();
+        let mut hostfile = Vec::new();
+        for i in 0..workers {
+            let pid = api.fresh_pod_id();
+            let name = format!("{}-worker-{i}", pj.spec.name);
+            let mut p = Pod::new(pid, job_id, name.clone(), PodRole::Worker { index: i });
+            p.ntasks = 2;
+            p.requests = Resources::new(2000, 2 * gib(2));
+            p.limits = p.requests;
+            hostfile.push(HostfileEntry { hostname: name, slots: 2 });
+            pods.push(p);
+        }
+        let pod_ids: Vec<PodId> = pods.iter().map(|p| p.id).collect();
+        api.create_job(pj, pods, hostfile, 0.0);
+        for (i, pid) in pod_ids.iter().enumerate() {
+            let node = NodeId(1 + i % 4);
+            assert!(api.bind_pod(*pid, node, 0.0), "worker {i} admits");
+        }
+        api.start_job(job_id, 0.0);
+        job_id
+    }
+
+    #[test]
+    fn shrink_releases_tail_workers_and_logs_resize() {
+        let mut api = api();
+        let job_id = start_elastic(&mut api, 1, 8);
+        let before: Vec<Resources> = api.spec.node_ids().map(|n| api.free_on(n)).collect();
+        assert_eq!(api.worker_width(job_id), 8);
+        assert_eq!(api.active_tasks_of(job_id), 16);
+
+        let cursor = api.alloc_version();
+        let freed = api.shrink_job(job_id, 6, 10.0);
+        assert_eq!(freed, 6 * 2 * gib(2), "six 2-task workers' memory");
+        assert_eq!(api.worker_width(job_id), 2);
+        assert_eq!(api.active_tasks_of(job_id), 4);
+        assert_eq!(api.jobs[&job_id].hostfile.len(), 2);
+        assert_eq!(api.jobs[&job_id].planned.granularity.n_workers, 2);
+        assert_eq!(api.alloc_touched_since(cursor).len(), 6, "every release logged");
+        assert!(api
+            .events
+            .iter()
+            .any(|e| matches!(e, Event::JobResized { t, job, workers }
+                if *t == 10.0 && *job == job_id && *workers == 2)));
+        // The job still accounts and finishes cleanly at the new width.
+        api.finish_job(job_id, 20.0);
+        let after: Vec<Resources> = api.spec.node_ids().map(|n| api.free_on(n)).collect();
+        for (i, (b, a)) in before.iter().zip(after.iter()).enumerate() {
+            // `before` was sampled while the job ran, so after completion
+            // every node has at least that much free again.
+            assert!(a.cpu_milli >= b.cpu_milli, "node {i}");
+        }
+        for n in api.spec.node_ids() {
+            assert_eq!(api.free_on(n), api.spec.node(n).allocatable(), "node {n:?} leaked");
+        }
+    }
+
+    #[test]
+    fn expand_binds_a_fresh_tail_worker_and_logs_resize() {
+        let mut api = api();
+        let job_id = start_elastic(&mut api, 1, 2);
+        assert_eq!(api.active_tasks_of(job_id), 4);
+
+        let pid = api.expand_job(job_id);
+        assert_eq!(api.worker_width(job_id), 3);
+        let pod = &api.pods[&pid];
+        assert_eq!(pod.phase, PodPhase::Pending);
+        assert_eq!(pod.ntasks, 2, "clones the worker template");
+        assert_eq!(pod.worker_index(), Some(2), "indexes continue past the tail");
+        assert!(api.bind_pod(pid, NodeId(3), 5.0));
+        api.complete_expand(job_id, 5.0);
+        assert_eq!(api.pods[&pid].phase, PodPhase::Running);
+        assert_eq!(api.active_tasks_of(job_id), 6);
+        assert_eq!(api.jobs[&job_id].planned.granularity.n_workers, 3);
+        assert!(api
+            .events
+            .iter()
+            .any(|e| matches!(e, Event::JobResized { workers: 3, .. })));
+
+        // A retracted expansion leaves no trace.
+        let ghost = api.expand_job(job_id);
+        api.cancel_expand(job_id, ghost);
+        assert_eq!(api.worker_width(job_id), 3);
+        assert!(!api.pods.contains_key(&ghost));
+
+        api.finish_job(job_id, 30.0);
+        for n in api.spec.node_ids() {
+            assert_eq!(api.free_on(n), api.spec.node(n).allocatable());
+        }
+    }
+
+    #[test]
+    fn mold_drops_unbound_tail_workers_before_start() {
+        let mut api = api();
+        let pj = elastic_planned(1, 8);
+        let job_id = pj.spec.id;
+        let mut pods = Vec::new();
+        let mut hostfile = Vec::new();
+        for i in 0..8u32 {
+            let pid = api.fresh_pod_id();
+            let name = format!("{}-worker-{i}", pj.spec.name);
+            let mut p = Pod::new(pid, job_id, name.clone(), PodRole::Worker { index: i });
+            p.ntasks = 2;
+            p.requests = Resources::new(2000, 2 * gib(2));
+            p.limits = p.requests;
+            hostfile.push(HostfileEntry { hostname: name, slots: 2 });
+            pods.push(p);
+        }
+        api.create_job(pj, pods, hostfile, 0.0);
+        api.mold_job(job_id, 3, 1.0);
+        assert_eq!(api.worker_width(job_id), 3);
+        assert_eq!(api.jobs[&job_id].hostfile.len(), 3);
+        assert_eq!(api.jobs[&job_id].planned.granularity.n_workers, 3);
+        assert_eq!(api.jobs[&job_id].planned.granularity.n_groups, 3, "groups clamped");
+        assert!(api
+            .events
+            .iter()
+            .any(|e| matches!(e, Event::JobResized { workers: 3, .. })));
+        // Still pending — molding never touches node allocations.
+        assert_eq!(api.jobs[&job_id].phase, JobPhase::Pending);
+        for n in api.spec.node_ids() {
+            assert_eq!(api.free_on(n), api.spec.node(n).allocatable());
+        }
+    }
+
+    /// Property (perf satellite): the maintained running-set equals the
+    /// full job-map scan after every lifecycle mutation of a randomized
+    /// create → start → preempt/requeue → finish churn.
+    #[test]
+    fn prop_running_set_matches_reference_under_churn() {
+        for case in 0..8u64 {
+            let mut rng = crate::util::Rng::seed_from_u64(9100 + case);
+            let mut api = api();
+            let mut t = 0.0;
+            let mut next_id = 0u64;
+            for step in 0..150 {
+                t += rng.range_f64(0.0, 5.0);
+                let roll = rng.f64();
+                if roll < 0.4 {
+                    next_id += 1;
+                    let mut pj = planned(next_id);
+                    pj.spec.submit_time = t;
+                    let cores = 1 + rng.range_usize(0, 8) as u64;
+                    let w = make_worker(&mut api, JobId(next_id), 0, cores);
+                    let wid = w.id;
+                    api.create_job(pj, vec![w], vec![], t);
+                    for node in api.spec.worker_ids() {
+                        if api.free_on(node).cpu_milli >= cores * 1000
+                            && api.bind_pod(wid, node, t)
+                        {
+                            api.start_job(JobId(next_id), t);
+                            break;
+                        }
+                    }
+                } else if roll < 0.6 {
+                    let running = api.running_jobs();
+                    if !running.is_empty() {
+                        let id = running[rng.range_usize(0, running.len())];
+                        api.preempt_job(id, t);
+                        api.requeue_job(id, t);
+                    }
+                } else if roll < 0.8 {
+                    let running = api.running_jobs();
+                    if !running.is_empty() {
+                        let id = running[rng.range_usize(0, running.len())];
+                        api.finish_job(id, t);
+                    }
+                } else {
+                    let pending = api.pending_jobs();
+                    if !pending.is_empty() {
+                        let id = pending[rng.range_usize(0, pending.len())];
+                        api.mark_unschedulable(id, t);
+                    }
+                }
+                assert_eq!(
+                    api.running_jobs(),
+                    api.running_jobs_reference(),
+                    "case {case} step {step}"
+                );
+            }
+        }
+    }
+
     #[test]
     fn bind_fails_if_kubelet_cannot_admit() {
         let mut api = api();
@@ -952,6 +1347,7 @@ mod tests {
                 Event::JobFinished { .. } => "finish",
                 Event::JobPreempted { .. } => "preempt",
                 Event::JobUnschedulable { .. } => "unschedulable",
+                Event::JobResized { .. } => "resize",
             })
             .collect();
         assert_eq!(kinds, vec!["submit", "bind", "start", "finish"]);

@@ -41,13 +41,13 @@ use crate::cluster::{gib, ClusterSpec, HeterogeneityMix, NodeClass, Resources};
 use crate::perfmodel::Calibration;
 use crate::scenario::Scenario;
 use crate::scheduler::{
-    ActionKind, ActionList, PipelineConfig, PlacementEngineKind, PreemptionPolicy,
-    QueuePolicyKind,
+    ActionKind, ActionList, ElasticityMode, PipelineConfig, PlacementEngineKind,
+    PreemptionPolicy, QueuePolicyKind,
 };
 use crate::simulator::Simulation;
 use crate::util::Json;
 use crate::workload::{
-    exp1_trace, exp2_trace, two_tenant_trace, uniform_trace, JobSpec, TenantId,
+    elastic_trace, exp1_trace, exp2_trace, two_tenant_trace, uniform_trace, JobSpec, TenantId,
 };
 
 /// Parsed experiment configuration.
@@ -70,9 +70,10 @@ pub struct ExperimentConfig {
     /// Walltime-estimate error multiplier (`walltime_error_factor`);
     /// applied to queue estimates only, defaults to 1.0.
     pub walltime_error_factor: f64,
-    /// Action/plugin pipeline (`pipeline`); defaults to the legacy-
-    /// equivalent five-action list with only the core quota plugin, which
-    /// is bit-identical to the pre-pipeline scheduler.
+    /// Action/plugin pipeline (`pipeline`); defaults to the scenario's own
+    /// (the legacy-equivalent action list — bit-identical to the
+    /// pre-pipeline scheduler — everywhere except the EL_MOLD/EL_MALL
+    /// scenarios, which carry an elasticity plugin).
     pub pipeline: PipelineConfig,
     /// Per-tenant fair-share weights, applied to the API server before
     /// the run (unlisted tenants weigh 1.0).
@@ -98,6 +99,9 @@ pub enum TraceConfig {
     Exp2,
     Uniform { jobs: usize, mean_interval: f64 },
     TwoTenant { jobs: usize, mean_interval: f64 },
+    /// Two-tenant trace of uniformly elastic jobs (`min 2 / preferred 8 /
+    /// max 16` workers) — the elasticity ablation's workload.
+    Elastic { jobs: usize, mean_interval: f64 },
 }
 
 impl ExperimentConfig {
@@ -167,11 +171,13 @@ impl ExperimentConfig {
         };
         // Action/plugin pipeline: `{"actions": [...], "plugins": [{"name":
         // "aging", "threshold_secs": N} | {"name": "preemption_budget",
-        // "window_secs": N, "max_evictions": N}]}`. Either key may be
-        // omitted; the defaults are the legacy-equivalent action list and
-        // no optional plugins.
+        // "window_secs": N, "max_evictions": N} | {"name": "elasticity",
+        // "mode": "moldable"|"malleable"}]}`. Either key may be omitted; an
+        // omitted `pipeline` keeps the scenario's own (legacy-equivalent
+        // for every scenario except EL_MOLD/EL_MALL, which carry their
+        // elasticity plugin), while an explicit object fully replaces it.
         let pipeline = match json.get("pipeline") {
-            Json::Null => PipelineConfig::legacy_equivalent(),
+            Json::Null => scenario.scheduler(0).pipeline,
             p if p.as_obj().is_some() => {
                 let mut cfg = PipelineConfig::legacy_equivalent();
                 match p.get("actions") {
@@ -185,7 +191,8 @@ impl ExperimentConfig {
                             kinds.push(ActionKind::parse(name).ok_or_else(|| {
                                 anyhow!(
                                     "config: unknown pipeline action {name:?} \
-                                     (enqueue | allocate | preempt | reclaim | backfill)"
+                                     (enqueue | allocate | preempt | resize | reclaim | \
+                                     backfill)"
                                 )
                             })?);
                         }
@@ -233,9 +240,24 @@ impl ExperimentConfig {
                                         })?;
                                     cfg = cfg.with_budget(window, max as u32);
                                 }
+                                "elasticity" => {
+                                    let mode = e.get("mode").as_str().ok_or_else(|| {
+                                        anyhow!(
+                                            "config: elasticity plugin needs a \"mode\" \
+                                             (moldable | malleable)"
+                                        )
+                                    })?;
+                                    let mode = ElasticityMode::parse(mode).ok_or_else(|| {
+                                        anyhow!(
+                                            "config: unknown elasticity mode {mode:?} \
+                                             (moldable | malleable)"
+                                        )
+                                    })?;
+                                    cfg = cfg.with_elasticity(mode);
+                                }
                                 other => bail!(
                                     "config: unknown pipeline plugin {other:?} \
-                                     (aging | preemption_budget)"
+                                     (aging | preemption_budget | elasticity)"
                                 ),
                             }
                         }
@@ -249,6 +271,16 @@ impl ExperimentConfig {
             }
             other => bail!("config: \"pipeline\" must be an object, got {other:?}"),
         };
+        // Resize commits rebind gang members atomically; per-pod no-gang
+        // schedulers have no gang to mold or shrink, so elasticity there
+        // is a contradiction, not a degradation.
+        if pipeline.elasticity.is_some() && !scenario.scheduler(0).gang {
+            bail!(
+                "config: the elasticity plugin requires a gang scheduler (scenario {} has \
+                 gang=false)",
+                scenario.name()
+            );
+        }
         let mut tenants = Vec::new();
         let mut quotas = Vec::new();
         match json.get("tenants") {
@@ -397,6 +429,14 @@ impl ExperimentConfig {
                     .as_f64()
                     .unwrap_or(60.0),
             },
+            "elastic" => TraceConfig::Elastic {
+                jobs: json.get("trace").get("jobs").as_u64().unwrap_or(40) as usize,
+                mean_interval: json
+                    .get("trace")
+                    .get("mean_interval")
+                    .as_f64()
+                    .unwrap_or(30.0),
+            },
             other => bail!("config: unknown trace.kind {other:?}"),
         };
 
@@ -450,6 +490,9 @@ impl ExperimentConfig {
             }
             TraceConfig::TwoTenant { jobs, mean_interval } => {
                 two_tenant_trace(jobs, mean_interval, self.seed)
+            }
+            TraceConfig::Elastic { jobs, mean_interval } => {
+                elastic_trace(jobs, mean_interval, self.seed)
             }
         }
     }
@@ -715,6 +758,63 @@ mod tests {
               "scenario": "CM_G_TG_PRE",
               "pipeline": { "plugins": [ { "name": "aging", "threshold_secs": 600 } ] },
               "trace": { "kind": "two_tenant", "jobs": 8, "mean_interval": 30 }
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(run.build_simulation().run(&run.build_trace()).records.len(), 8);
+    }
+
+    #[test]
+    fn elasticity_keys_parse_and_validate() {
+        // Explicit plugin + the elastic trace kind.
+        let c = ExperimentConfig::parse(
+            r#"{
+              "scenario": "CM_G_TG_PRE",
+              "pipeline": { "plugins": [ { "name": "elasticity", "mode": "moldable" } ] },
+              "trace": { "kind": "elastic", "jobs": 6, "mean_interval": 20 }
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(c.pipeline.elasticity.map(|e| e.mode), Some(ElasticityMode::Moldable));
+        assert_eq!(c.trace, TraceConfig::Elastic { jobs: 6, mean_interval: 20.0 });
+        assert_eq!(c.build_trace().len(), 6);
+        assert!(c.build_trace().iter().all(|j| j.elasticity.is_some()));
+        // An omitted pipeline key keeps the scenario's own pipeline: the
+        // EL_* scenarios carry their elasticity plugin into the config.
+        let mall = ExperimentConfig::parse(r#"{"scenario":"EL_MALL"}"#).unwrap();
+        assert_eq!(
+            mall.pipeline.elasticity.map(|e| e.mode),
+            Some(ElasticityMode::Malleable)
+        );
+        assert!(mall.preemption, "EL_* scenarios default preemption on");
+        let rigid = ExperimentConfig::parse(r#"{"scenario":"EL_RIGID"}"#).unwrap();
+        assert_eq!(rigid.pipeline, PipelineConfig::legacy_equivalent());
+        // "resize" parses in the actions list.
+        let acts = ExperimentConfig::parse(
+            r#"{"scenario":"CM","pipeline":{"actions":["enqueue","allocate","resize"]}}"#,
+        )
+        .unwrap();
+        assert!(acts.pipeline.actions.contains(ActionKind::Resize));
+        // Rejections: missing mode, unknown mode, elasticity on a no-gang
+        // scheduler, and an elasticity plugin whose action list omits
+        // "resize". (Malformed min/max/preferred ranges are rejected at
+        // the workload layer — `Elasticity::validate`.)
+        for bad in [
+            r#"{"scenario":"CM","pipeline":{"plugins":[{"name":"elasticity"}]}}"#,
+            r#"{"scenario":"CM","pipeline":{"plugins":[
+                {"name":"elasticity","mode":"liquid"}]}}"#,
+            r#"{"scenario":"Kubeflow","pipeline":{"plugins":[
+                {"name":"elasticity","mode":"moldable"}]}}"#,
+            r#"{"scenario":"CM","pipeline":{"actions":["enqueue","allocate"],
+                "plugins":[{"name":"elasticity","mode":"moldable"}]}}"#,
+        ] {
+            assert!(ExperimentConfig::parse(bad).is_err(), "should reject: {bad}");
+        }
+        // A malleable elastic config runs end-to-end.
+        let run = ExperimentConfig::parse(
+            r#"{
+              "scenario": "EL_MALL",
+              "trace": { "kind": "elastic", "jobs": 8, "mean_interval": 20 }
             }"#,
         )
         .unwrap();

@@ -7,13 +7,15 @@ use std::collections::BTreeMap;
 use crate::cluster::{ClusterSpec, HeterogeneityMix};
 use crate::metrics::ExperimentMetrics;
 use crate::report;
-use crate::scenario::{Scenario, EXP3_SCENARIOS, TABLE2_SCENARIOS};
-use crate::scheduler::{PlacementEngineKind, QueuePolicyKind, ALL_QUEUE_POLICIES};
+use crate::scenario::{Scenario, ELASTIC_SCENARIOS, EXP3_SCENARIOS, TABLE2_SCENARIOS};
+use crate::scheduler::{
+    ElasticityMode, PlacementEngineKind, QueuePolicyKind, ALL_QUEUE_POLICIES,
+};
 use crate::simulator::SimOutput;
 use crate::util::jain_index;
 use crate::workload::{
-    exp1_trace, exp2_trace, two_tenant_trace, uniform_trace, Benchmark, JobSpec, TenantId,
-    ALL_BENCHMARKS, BATCH_TENANT, PROD_TENANT,
+    elastic_trace, exp1_trace, exp2_trace, two_tenant_trace, uniform_trace, Benchmark,
+    JobSpec, TenantId, ALL_BENCHMARKS, BATCH_TENANT, PROD_TENANT,
 };
 
 /// Default experiment seed (any seed reproduces the paper's *shape*; this
@@ -517,6 +519,141 @@ pub fn fairness_json(seed: u64, jobs: usize, mean_interval: f64, rows: &[Fairnes
 }
 
 // ---------------------------------------------------------------------
+// Elasticity ablation — rigid / moldable / malleable over the same
+// elastic two-tenant trace (the resize axis of the scheduler pipeline).
+// ---------------------------------------------------------------------
+
+/// The elasticity ablation's default trace shape: 40 uniformly elastic
+/// jobs at 25 s mean inter-arrival. On the paper's 4-node cluster each
+/// preferred-width gang (8 × 2-core workers) fills an eighth of the
+/// capacity, so arrivals outpace rigid departures and gangs queue —
+/// exactly the fragmentation pressure mold/shrink/expand exist to absorb.
+pub const ELASTICITY_JOBS: usize = 40;
+pub const ELASTICITY_INTERVAL: f64 = 25.0;
+
+/// One row of the elasticity ablation (one EL_* scenario on the trace).
+#[derive(Debug, Clone)]
+pub struct ElasticityRow {
+    pub scenario: Scenario,
+    /// Mode label: `rigid`, `moldable`, or `malleable`.
+    pub label: &'static str,
+    pub metrics: ExperimentMetrics,
+    /// Core-seconds served over (makespan × worker cores), in `[0, 1]`.
+    pub utilization: f64,
+    /// Whole-job evictions in the run.
+    pub preemptions: usize,
+    /// Resize commits (molds, shrinks, and expands) in the run.
+    pub resizes: usize,
+}
+
+impl ElasticityRow {
+    /// The standard report cells (mode, overall response, makespan, avg
+    /// wait, utilization, preemptions, resizes) — shared by the text
+    /// table and the figures CSV so the two can never drift.
+    pub fn report_cells(&self) -> Vec<String> {
+        vec![
+            self.label.to_string(),
+            format!("{:.0}", self.metrics.overall_response),
+            format!("{:.0}", self.metrics.makespan),
+            format!("{:.0}", self.metrics.avg_wait),
+            format!("{:.3}", self.utilization),
+            self.preemptions.to_string(),
+            self.resizes.to_string(),
+        ]
+    }
+}
+
+/// The elasticity ablation: the three EL_* scenarios (identical placement
+/// configuration, only the elasticity plugin differs) over the same
+/// elastic trace.
+pub fn elasticity_ablation(seed: u64, jobs: usize, mean_interval: f64) -> Vec<ElasticityRow> {
+    let trace = elastic_trace(jobs, mean_interval, seed);
+    ELASTIC_SCENARIOS
+        .into_iter()
+        .map(|scenario| {
+            let out = scenario.simulation(seed).run(&trace);
+            let label = match scenario.elasticity() {
+                None => "rigid",
+                Some(ElasticityMode::Moldable) => "moldable",
+                Some(ElasticityMode::Malleable) => "malleable",
+            };
+            ElasticityRow {
+                scenario,
+                label,
+                utilization: cluster_utilization(&out),
+                preemptions: out.preemption_count(),
+                resizes: out.resize_count(),
+                metrics: ExperimentMetrics::from(&out),
+            }
+        })
+        .collect()
+}
+
+/// Elasticity-ablation table (+ response delta vs the rigid baseline).
+pub fn elasticity_table(rows: &[ElasticityRow]) -> String {
+    let rigid = rows
+        .iter()
+        .find(|r| r.label == "rigid")
+        .map(|r| r.metrics.overall_response)
+        .unwrap_or(f64::NAN);
+    let table_rows = rows
+        .iter()
+        .map(|r| {
+            let mut cells = r.report_cells();
+            cells.insert(
+                2,
+                format!("{:+.0}%", (r.metrics.overall_response / rigid - 1.0) * 100.0),
+            );
+            cells
+        })
+        .collect::<Vec<_>>();
+    report::table(
+        &[
+            "mode",
+            "overall response (s)",
+            "vs rigid",
+            "makespan (s)",
+            "avg wait (s)",
+            "utilization",
+            "preemptions",
+            "resizes",
+        ],
+        &table_rows,
+    )
+}
+
+/// Elasticity-ablation results as a JSON document (CI artifact;
+/// hand-rendered — the substrate has no serde).
+pub fn elasticity_json(
+    seed: u64,
+    jobs: usize,
+    mean_interval: f64,
+    rows: &[ElasticityRow],
+) -> String {
+    let mut out = String::from("{\n");
+    out.push_str(&format!(
+        "  \"ablation\": \"elasticity\", \"seed\": {seed}, \"jobs\": {jobs}, \"mean_interval_s\": {mean_interval},\n"
+    ));
+    out.push_str("  \"modes\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"mode\": \"{}\", \"scenario\": \"{}\", \"overall_response_s\": {:.3}, \"makespan_s\": {:.3}, \"avg_wait_s\": {:.3}, \"utilization\": {:.4}, \"preemptions\": {}, \"resizes\": {}}}{}\n",
+            r.label,
+            r.scenario.name(),
+            r.metrics.overall_response,
+            r.metrics.makespan,
+            r.metrics.avg_wait,
+            r.utilization,
+            r.preemptions,
+            r.resizes,
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+// ---------------------------------------------------------------------
 // Fig. 3 — Benchmarks MPI profiling analysis.
 // ---------------------------------------------------------------------
 
@@ -775,6 +912,35 @@ mod tests {
         // Both documents must parse with the crate's own JSON substrate.
         assert!(crate::util::Json::parse(&json).is_ok(), "fairness json invalid");
         assert!(crate::util::Json::parse(&qjson).is_ok(), "queues json invalid");
+    }
+
+    #[test]
+    fn elasticity_ablation_shape_and_renderers() {
+        // Small trace: shape checks only (the dominance acceptance
+        // assertion at the default 40-job pressure lives in
+        // tests/integration.rs).
+        let rows = elasticity_ablation(DEFAULT_SEED, 12, 20.0);
+        assert_eq!(rows.len(), 3);
+        assert_eq!(
+            rows.iter().map(|r| r.label).collect::<Vec<_>>(),
+            ["rigid", "moldable", "malleable"]
+        );
+        for r in &rows {
+            assert_eq!(r.metrics.per_job.len(), 12, "{}: every job completes", r.label);
+            assert!(
+                r.utilization > 0.0 && r.utilization <= 1.0,
+                "{}: utilization {}",
+                r.label,
+                r.utilization
+            );
+        }
+        assert_eq!(rows[0].resizes, 0, "the rigid baseline never resizes");
+        let table = elasticity_table(&rows);
+        assert!(table.contains("malleable") && table.contains("vs rigid"));
+        let json = elasticity_json(DEFAULT_SEED, 12, 20.0, &rows);
+        assert!(json.contains("\"ablation\": \"elasticity\""));
+        assert!(json.contains("\"scenario\": \"EL_MALL\""));
+        assert!(crate::util::Json::parse(&json).is_ok(), "elasticity json invalid");
     }
 
     #[test]

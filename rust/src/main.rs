@@ -12,6 +12,8 @@
 //!                                curves across heterogeneity mixes
 //!   fairness [--jobs N]          multi-tenant fairness ablation on a
 //!                                two-tenant trace (priority + preemption)
+//!   elasticity [--jobs N]        rigid / moldable / malleable ablation on
+//!                                an elastic trace (the resize pipeline)
 //!   e2e [--steps N]              end-to-end: PJRT payload execution feeds
 //!                                the simulator's base rates
 //!
@@ -129,6 +131,13 @@ COMMANDS:
                         (+preemption) vs conservative backfill on a
                         two-tenant trace; reports per-tenant response and
                         Jain's fairness index
+  elasticity [--jobs N] [--interval S] [--seed N] [--json PATH] [--out DIR]
+                        elasticity ablation: the EL_RIGID / EL_MOLD /
+                        EL_MALL scenarios over one elastic trace (jobs that
+                        can run at 2..=16 workers, preferred 8); reports
+                        response, makespan, utilization, preemptions, and
+                        resize counts; --out writes elasticity.csv + SVG
+                        bar charts
   e2e [--steps N] [--seed N]
                         end-to-end: execute AOT payloads via PJRT and feed
                         measured step times into the simulator
@@ -145,6 +154,7 @@ preemption):
   CM_SJF CM_BF CM_G_TG_SJF CM_G_TG_BF       queue-policy variants
   CM_FS CM_CBF CM_G_TG_FS CM_G_TG_CBF       fair-share / conservative
   CM_G_TG_PRE                               fair-share + preemption
+  EL_RIGID EL_MOLD EL_MALL                  elasticity modes (preemption on)
 ";
 
 fn main() {
@@ -180,6 +190,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "queues" => cmd_queues(args),
         "scaling" => cmd_scaling(args),
         "fairness" => cmd_fairness(args),
+        "elasticity" => cmd_elasticity(args),
         "e2e" => cmd_e2e(args),
         "figures" => cmd_figures(args),
         "config" => cmd_config(args),
@@ -464,6 +475,31 @@ fn cmd_fairness(args: &Args) -> Result<()> {
         std::fs::write(path, experiments::fairness_json(seed, jobs, interval, &rows))
             .map_err(|e| anyhow!("writing {path}: {e}"))?;
         println!("\nwrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_elasticity(args: &Args) -> Result<()> {
+    let seed = args.seed();
+    let jobs = args.get_usize("jobs", experiments::ELASTICITY_JOBS);
+    let interval = args
+        .flags
+        .get("interval")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(experiments::ELASTICITY_INTERVAL);
+    println!(
+        "Elasticity ablation — {jobs} elastic jobs (2..=16 workers, preferred 8), \
+         {interval} s mean interval, fine-grained placement + preemption (seed {seed})\n"
+    );
+    let rows = experiments::elasticity_ablation(seed, jobs, interval);
+    print!("{}", experiments::elasticity_table(&rows));
+    if let Some(path) = args.flags.get("json") {
+        std::fs::write(path, experiments::elasticity_json(seed, jobs, interval, &rows))
+            .map_err(|e| anyhow!("writing {path}: {e}"))?;
+        println!("\nwrote {path}");
+    }
+    if let Some(dir) = args.flags.get("out") {
+        kube_fgs::report::figures::write_elasticity(std::path::Path::new(dir), &rows)?;
     }
     Ok(())
 }

@@ -69,6 +69,20 @@ pub fn plan(job: &JobSpec, policy: GranularityPolicy, info: SystemInfo) -> Plann
     let min_cores = info.min_node_cores.max(1);
     let profile = job.benchmark.profile();
 
+    // Elastic jobs carry their width in the spec: the profile-preferred
+    // worker count is the *moldable plan's* starting point (the scheduler
+    // may admit at any width down to `min` and resize between `min` and
+    // `max` at runtime). Workers are homogeneous — `preferred | ntasks` —
+    // so the controller's round-robin split is even by construction.
+    if let Some(e) = job.elasticity {
+        let n_w = e.preferred.max(1);
+        let n_n = n_n_max.min(n_w);
+        return PlannedJob {
+            spec: job.clone(),
+            granularity: Granularity { n_nodes: n_n, n_workers: n_w, n_groups: n_n },
+        };
+    }
+
     // % Agent Rule: set granularity according to job profile.
     let granularity = match policy {
         GranularityPolicy::Scale => {
@@ -206,6 +220,23 @@ mod tests {
         let het = SystemInfo::of(&ClusterSpec::mixed(8, HeterogeneityMix::FatThin));
         assert_eq!(het.available_nodes, 8);
         assert_eq!(het.min_node_cores, 16, "thin class bounds the split");
+    }
+
+    #[test]
+    fn elastic_jobs_plan_at_preferred_width_under_every_policy() {
+        use crate::workload::Elasticity;
+        let j = job(Benchmark::EpDgemm)
+            .with_elasticity(Elasticity { min: 2, max: 16, preferred: 8 });
+        for pol in
+            [GranularityPolicy::None, GranularityPolicy::Scale, GranularityPolicy::Granularity]
+        {
+            let p = plan(&j, pol, INFO);
+            assert_eq!(
+                p.granularity,
+                Granularity { n_nodes: 4, n_workers: 8, n_groups: 4 },
+                "{pol:?}"
+            );
+        }
     }
 
     #[test]

@@ -254,6 +254,66 @@ pub fn write_all(dir: &Path, seed: u64) -> Result<()> {
     Ok(())
 }
 
+/// Render the elasticity ablation: one bar chart per headline metric
+/// (response, makespan, utilization) over the rigid / moldable /
+/// malleable modes, plus the CSV record (`kube-fgs elasticity --out
+/// <dir>`; CI uploads these on pushes to main).
+pub fn write_elasticity(dir: &Path, rows: &[experiments::ElasticityRow]) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let erows: Vec<Vec<String>> =
+        rows.iter().map(experiments::ElasticityRow::report_cells).collect();
+    write(
+        dir,
+        "elasticity.csv",
+        &super::csv(
+            &[
+                "mode",
+                "overall_response_s",
+                "makespan_s",
+                "avg_wait_s",
+                "utilization",
+                "preemptions",
+                "resizes",
+            ],
+            &erows,
+        ),
+    )?;
+    let cats: Vec<&str> = rows.iter().map(|r| r.label).collect();
+    let metrics: [(&str, &str, &str, fn(&experiments::ElasticityRow) -> f64); 3] = [
+        (
+            "response",
+            "Elasticity ablation — overall response (elastic trace)",
+            "seconds",
+            |r| r.metrics.overall_response,
+        ),
+        (
+            "makespan",
+            "Elasticity ablation — makespan (elastic trace)",
+            "seconds",
+            |r| r.metrics.makespan,
+        ),
+        (
+            "utilization",
+            "Elasticity ablation — cluster utilization (elastic trace)",
+            "fraction of worker cores",
+            |r| r.utilization,
+        ),
+    ];
+    for (slug, title, unit, metric) in metrics {
+        write(
+            dir,
+            &format!("elasticity_{slug}.svg"),
+            &bar_chart(
+                title,
+                &cats,
+                &[Series { name: slug.into(), values: rows.iter().map(metric).collect() }],
+                unit,
+            ),
+        )?;
+    }
+    Ok(())
+}
+
 /// Render the scaling sweep: per mix × metric, one line chart with a
 /// polyline per queue policy over the cluster sizes, plus the CSV record
 /// (`kube-fgs scaling --out <dir>`; CI uploads these on pushes to main).
@@ -385,6 +445,33 @@ mod tests {
             if f.ends_with(".svg") {
                 assert!(content.starts_with("<svg"), "{f}");
                 assert!(content.contains("<polyline"), "{f} has curves");
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn write_elasticity_emits_csv_and_bar_charts() {
+        // Small trace: file-shape checks only (the ablation's dominance
+        // acceptance lives in tests/integration.rs).
+        let rows = experiments::elasticity_ablation(2, 10, 20.0);
+        let dir =
+            std::env::temp_dir().join(format!("kube_fgs_elastic_{}", std::process::id()));
+        write_elasticity(&dir, &rows).unwrap();
+        for f in [
+            "elasticity.csv",
+            "elasticity_response.svg",
+            "elasticity_makespan.svg",
+            "elasticity_utilization.svg",
+        ] {
+            let p = dir.join(f);
+            assert!(p.exists(), "{f} missing");
+            let content = std::fs::read_to_string(&p).unwrap();
+            assert!(!content.is_empty());
+            if f.ends_with(".svg") {
+                assert!(content.starts_with("<svg"), "{f}");
+            } else {
+                assert!(content.contains("malleable"), "{f} lists every mode");
             }
         }
         std::fs::remove_dir_all(&dir).ok();

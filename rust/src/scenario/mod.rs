@@ -18,7 +18,7 @@ use crate::controller::{
 use crate::kubelet::KubeletConfig;
 use crate::perfmodel::Calibration;
 use crate::planner::GranularityPolicy;
-use crate::scheduler::{QueuePolicyKind, SchedulerConfig};
+use crate::scheduler::{ElasticityMode, PipelineConfig, QueuePolicyKind, SchedulerConfig};
 use crate::simulator::Simulation;
 
 /// All evaluated scenarios: six from Table II + two framework baselines
@@ -60,12 +60,22 @@ pub enum Scenario {
     /// The paper's fine-grained scheduler with fair-share queues AND
     /// priority preemption (the full multi-tenant configuration).
     CmGTgPre,
+    /// Elasticity baseline: fine-grained scheduler + preemption, but no
+    /// elasticity plugin — elastic jobs are treated rigidly (their full
+    /// preferred-width gang must fit or they wait).
+    ElRigid,
+    /// Moldable admission: the `resize` action may narrow a gang-blocked
+    /// elastic job down to its minimum width at start; no runtime resizes.
+    ElMold,
+    /// Fully malleable: moldable admission plus shrink-before-preempt and
+    /// expand-into-drain at runtime.
+    ElMall,
 }
 
 /// Every scenario code, in declaration order — the full matrix axis the
 /// differential golden-trace harness iterates (× placement engines ×
 /// cluster mixes).
-pub const ALL_SCENARIOS: [Scenario; 17] = [
+pub const ALL_SCENARIOS: [Scenario; 20] = [
     Scenario::None_,
     Scenario::Cm,
     Scenario::CmS,
@@ -83,7 +93,16 @@ pub const ALL_SCENARIOS: [Scenario; 17] = [
     Scenario::CmGTgFs,
     Scenario::CmGTgCbf,
     Scenario::CmGTgPre,
+    Scenario::ElRigid,
+    Scenario::ElMold,
+    Scenario::ElMall,
 ];
+
+/// The elasticity ablation's axis, in dominance order (rigid is the
+/// baseline the malleable configuration must strictly beat on the
+/// elastic trace).
+pub const ELASTIC_SCENARIOS: [Scenario; 3] =
+    [Scenario::ElRigid, Scenario::ElMold, Scenario::ElMall];
 
 /// The six Table-II scenarios, in the paper's column order.
 pub const TABLE2_SCENARIOS: [Scenario; 6] = [
@@ -124,6 +143,9 @@ impl Scenario {
             Scenario::CmGTgFs => "CM_G_TG_FS",
             Scenario::CmGTgCbf => "CM_G_TG_CBF",
             Scenario::CmGTgPre => "CM_G_TG_PRE",
+            Scenario::ElRigid => "EL_RIGID",
+            Scenario::ElMold => "EL_MOLD",
+            Scenario::ElMall => "EL_MALL",
         }
     }
 
@@ -147,7 +169,10 @@ impl Scenario {
             | Scenario::CmGTgBf
             | Scenario::CmGTgFs
             | Scenario::CmGTgCbf
-            | Scenario::CmGTgPre => GranularityPolicy::Granularity,
+            | Scenario::CmGTgPre
+            | Scenario::ElRigid
+            | Scenario::ElMold
+            | Scenario::ElMall => GranularityPolicy::Granularity,
             _ => GranularityPolicy::None,
         }
     }
@@ -167,7 +192,20 @@ impl Scenario {
 
     /// Whether this scenario enables priority preemption (the sixth knob).
     pub fn preemption(&self) -> bool {
-        matches!(self, Scenario::CmGTgPre)
+        matches!(
+            self,
+            Scenario::CmGTgPre | Scenario::ElRigid | Scenario::ElMold | Scenario::ElMall
+        )
+    }
+
+    /// Elasticity mode of this scenario's pipeline (`None` = no
+    /// elasticity plugin; elastic job specs are scheduled rigidly).
+    pub fn elasticity(&self) -> Option<ElasticityMode> {
+        match self {
+            Scenario::ElMold => Some(ElasticityMode::Moldable),
+            Scenario::ElMall => Some(ElasticityMode::Malleable),
+            _ => None,
+        }
     }
 
     pub fn controller(&self) -> Box<dyn JobController> {
@@ -186,11 +224,19 @@ impl Scenario {
             | Scenario::CmGTgBf
             | Scenario::CmGTgFs
             | Scenario::CmGTgCbf
-            | Scenario::CmGTgPre => SchedulerConfig::fine_grained(seed),
+            | Scenario::CmGTgPre
+            | Scenario::ElRigid
+            | Scenario::ElMold
+            | Scenario::ElMall => SchedulerConfig::fine_grained(seed),
             Scenario::Kubeflow => SchedulerConfig::kube_default(seed),
             _ => SchedulerConfig::volcano_default(seed),
         };
-        base.with_queue(self.queue()).with_preemption(self.preemption())
+        let base = base.with_queue(self.queue()).with_preemption(self.preemption());
+        match self.elasticity() {
+            Some(mode) => base
+                .with_pipeline(PipelineConfig::legacy_equivalent().with_elasticity(mode)),
+            None => base,
+        }
     }
 
     /// Build a fully configured simulation for this scenario.
@@ -335,6 +381,25 @@ mod tests {
         assert_eq!(pre.policy(), Scenario::CmGTg.policy());
         // Preemption needs gang all-or-nothing.
         assert!(pre.scheduler(0).gang);
+    }
+
+    #[test]
+    fn elastic_variants_differ_only_in_the_elasticity_plugin() {
+        assert_eq!(Scenario::ElRigid.elasticity(), None);
+        assert_eq!(Scenario::ElMold.elasticity(), Some(ElasticityMode::Moldable));
+        assert_eq!(Scenario::ElMall.elasticity(), Some(ElasticityMode::Malleable));
+        for s in ELASTIC_SCENARIOS {
+            assert!(ALL_SCENARIOS.contains(&s), "{s}");
+            assert!(s.preemption(), "{s}: the ablation compares against eviction");
+            assert_eq!(s.policy(), GranularityPolicy::Granularity, "{s}");
+            assert_eq!(s.queue(), QueuePolicyKind::FifoSkip, "{s}");
+            let cfg = s.scheduler(0);
+            assert!(cfg.gang && cfg.taskgroup, "{s}: fine-grained base");
+            assert_eq!(cfg.pipeline.elasticity.map(|e| e.mode), s.elasticity(), "{s}");
+        }
+        // The rigid baseline runs the stock legacy-equivalent pipeline.
+        assert_eq!(Scenario::ElRigid.scheduler(0).pipeline, PipelineConfig::legacy_equivalent());
+        assert_eq!(Scenario::parse("el_mall"), Some(Scenario::ElMall));
     }
 
     #[test]

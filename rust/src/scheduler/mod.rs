@@ -45,7 +45,8 @@ use placement::SessionState;
 
 pub use pipeline::{
     ActionKind, ActionList, AgingConfig, AgingPlugin, BudgetConfig, BudgetPlugin,
-    PipelineConfig, Plugin, PluginSet, QuotaPlugin, ALL_ACTIONS,
+    ElasticityConfig, ElasticityMode, ElasticityPlugin, PipelineConfig, Plugin, PluginSet,
+    QuotaPlugin, ALL_ACTIONS,
 };
 pub use placement::{
     CapacityIndex, IndexedEngine, LinearEngine, PlacementEngine, PlacementEngineKind,
@@ -227,6 +228,11 @@ pub struct Scheduler {
     /// [`Scheduler::take_preempted`] call (the simulator drains this after
     /// every cycle and re-queues them with checkpoint-restart cost).
     preempted: Vec<JobId>,
+    /// Runtime resizes `(job, moved memory bytes)` committed since the last
+    /// [`Scheduler::take_resized`] call — the simulator drains this after
+    /// every cycle, charges the calibrated resize (checkpoint/restart) cost
+    /// and re-derives the jobs' interference rates at their new widths.
+    resized: Vec<(JobId, u64)>,
     /// Scratch buffer for per-pod feasible candidates (reused across
     /// `place_pod` calls so the hot loop stays allocation-free).
     candidates: Vec<NodeId>,
@@ -244,6 +250,7 @@ impl Scheduler {
             force_legacy_scheduler: false,
             plugins: PluginSet::from_config(&config.pipeline),
             preempted: Vec::new(),
+            resized: Vec::new(),
             candidates: Vec::new(),
         }
     }
@@ -269,6 +276,13 @@ impl Scheduler {
     /// (`ApiServer::requeue_job`).
     pub fn take_preempted(&mut self) -> Vec<JobId> {
         std::mem::take(&mut self.preempted)
+    }
+
+    /// Drain the `(job, moved memory bytes)` resize commits from the most
+    /// recent cycle(s). Always empty unless the pipeline runs with an
+    /// `elasticity` plugin — the rigid path never resizes.
+    pub fn take_resized(&mut self) -> Vec<(JobId, u64)> {
+        std::mem::take(&mut self.resized)
     }
 
     /// Reference implementation: rebuild the cluster-wide group-placement

@@ -46,7 +46,7 @@
 use std::collections::BTreeMap;
 
 use crate::apiserver::{ApiServer, JobPhase};
-use crate::cluster::{JobId, NodeId, PodId, PodPhase, Resources};
+use crate::cluster::{JobId, NodeId, Pod, PodId, PodPhase, Resources};
 use crate::workload::TenantId;
 
 use super::placement::SessionState;
@@ -65,8 +65,15 @@ pub enum ActionKind {
     Allocate,
     /// On gang failure: evict a minimal set of strictly-lower-priority
     /// victims ([`super::PreemptionPolicy`] cost order, filtered by
-    /// [`Plugin::may_evict`]) and commit the proven plan.
+    /// [`Plugin::may_evict`]) and commit the proven plan. With a
+    /// malleable [`ElasticityConfig`], shrink deltas from running elastic
+    /// jobs are offered before whole-job eviction.
     Preempt,
+    /// On gang failure of an *elastic* job: mold the pending plan
+    /// stepwise down toward its `min` width, retrying the gang at each
+    /// narrower width. A provable no-op without an [`ElasticityConfig`]
+    /// (the default), so the default pipeline stays legacy-equivalent.
+    Resize,
     /// On gang failure: plugins may nominate running jobs to reclaim
     /// ([`Plugin::reclaim`]); no built-in plugin does, so the default
     /// pipeline's reclaim is a no-op extension point.
@@ -77,10 +84,11 @@ pub enum ActionKind {
 }
 
 /// Every action, in the default (legacy-equivalent) order.
-pub const ALL_ACTIONS: [ActionKind; 5] = [
+pub const ALL_ACTIONS: [ActionKind; 6] = [
     ActionKind::Enqueue,
     ActionKind::Allocate,
     ActionKind::Preempt,
+    ActionKind::Resize,
     ActionKind::Reclaim,
     ActionKind::Backfill,
 ];
@@ -91,6 +99,7 @@ impl ActionKind {
             ActionKind::Enqueue => "enqueue",
             ActionKind::Allocate => "allocate",
             ActionKind::Preempt => "preempt",
+            ActionKind::Resize => "resize",
             ActionKind::Reclaim => "reclaim",
             ActionKind::Backfill => "backfill",
         }
@@ -102,6 +111,7 @@ impl ActionKind {
             "enqueue" => Some(ActionKind::Enqueue),
             "allocate" => Some(ActionKind::Allocate),
             "preempt" => Some(ActionKind::Preempt),
+            "resize" => Some(ActionKind::Resize),
             "reclaim" => Some(ActionKind::Reclaim),
             "backfill" => Some(ActionKind::Backfill),
             _ => None,
@@ -126,17 +136,17 @@ impl std::fmt::Display for ActionKind {
 /// scenario tables, ablation grids — relies on that).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ActionList {
-    kinds: [ActionKind; 5],
+    kinds: [ActionKind; 6],
     len: u8,
 }
 
 impl ActionList {
-    /// Build from a slice; rejects duplicates and more than 5 entries.
+    /// Build from a slice; rejects duplicates and more than 6 entries.
     pub fn of(actions: &[ActionKind]) -> Result<ActionList, String> {
         if actions.len() > ALL_ACTIONS.len() {
-            return Err(format!("pipeline lists {} actions (max 5)", actions.len()));
+            return Err(format!("pipeline lists {} actions (max 6)", actions.len()));
         }
-        let mut list = ActionList { kinds: [ActionKind::Enqueue; 5], len: 0 };
+        let mut list = ActionList { kinds: [ActionKind::Enqueue; 6], len: 0 };
         for &a in actions {
             if list.contains(a) {
                 return Err(format!("pipeline action {a:?} listed twice", a = a.name()));
@@ -175,6 +185,49 @@ pub struct AgingConfig {
     pub threshold_secs: f64,
 }
 
+/// How far the elasticity plugin may take a job's `elasticity` range
+/// (`pipeline.plugins[] = {"name": "elasticity", "mode": ...}`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElasticityMode {
+    /// Width is negotiated only *before* start: a gang-blocked elastic
+    /// job is molded stepwise down toward its `min` width until its gang
+    /// fits; once running, the width never changes.
+    Moldable,
+    /// Moldable, plus runtime resizes: expand-into-drain (grow running
+    /// elastic jobs toward `preferred` — or `max` on an empty queue —
+    /// when free capacity would otherwise idle) and shrink-before-preempt
+    /// (offer tail-worker shrink deltas from lower-priority elastic jobs
+    /// before evicting whole jobs).
+    Malleable,
+}
+
+impl ElasticityMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ElasticityMode::Moldable => "moldable",
+            ElasticityMode::Malleable => "malleable",
+        }
+    }
+
+    /// Parse a config spelling (case-insensitive).
+    pub fn parse(s: &str) -> Option<ElasticityMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "moldable" => Some(ElasticityMode::Moldable),
+            "malleable" => Some(ElasticityMode::Malleable),
+            _ => None,
+        }
+    }
+}
+
+/// Elasticity plugin knobs. Registering the plugin is what arms the
+/// `resize` action — without it (the default), jobs' `elasticity` ranges
+/// are carried but never acted on, and the pipeline stays bit-identical
+/// to the legacy scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ElasticityConfig {
+    pub mode: ElasticityMode,
+}
+
 /// Preemption-budget plugin knobs
 /// (`pipeline.plugins[] = {"name": "preemption_budget"}`).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -199,6 +252,9 @@ pub struct PipelineConfig {
     pub aging: Option<AgingConfig>,
     /// Per-tenant preemption budget (tier 1); `None` = not registered.
     pub budget: Option<BudgetConfig>,
+    /// Elastic resize policy (tier 1); `None` = not registered — the
+    /// `resize` action is then a provable no-op.
+    pub elasticity: Option<ElasticityConfig>,
 }
 
 impl PipelineConfig {
@@ -209,6 +265,7 @@ impl PipelineConfig {
             actions: ActionList::of(&ALL_ACTIONS).unwrap(),
             aging: None,
             budget: None,
+            elasticity: None,
         }
     }
 
@@ -227,6 +284,12 @@ impl PipelineConfig {
     /// Same pipeline with a per-tenant preemption budget registered.
     pub fn with_budget(mut self, window_secs: f64, max_evictions: u32) -> Self {
         self.budget = Some(BudgetConfig { window_secs, max_evictions });
+        self
+    }
+
+    /// Same pipeline with the elasticity plugin registered.
+    pub fn with_elasticity(mut self, mode: ElasticityMode) -> Self {
+        self.elasticity = Some(ElasticityConfig { mode });
         self
     }
 
@@ -259,6 +322,12 @@ impl PipelineConfig {
             if budget.max_evictions == 0 {
                 return Err("pipeline budget max_evictions must be >= 1".into());
             }
+        }
+        if self.elasticity.is_some() && !self.actions.contains(ActionKind::Resize) {
+            return Err(
+                "pipeline.plugins lists \"elasticity\" but pipeline.actions omits \"resize\""
+                    .into(),
+            );
         }
         Ok(())
     }
@@ -334,7 +403,7 @@ pub struct PluginSet {
 
 impl PluginSet {
     /// The registry a [`PipelineConfig`] describes: quota admission at
-    /// tier 0; aging and budget (when configured) at tier 1.
+    /// tier 0; aging, budget, and elasticity (when configured) at tier 1.
     pub fn from_config(config: &PipelineConfig) -> PluginSet {
         let mut set = PluginSet::default();
         set.register(0, Box::new(QuotaPlugin));
@@ -343,6 +412,9 @@ impl PluginSet {
         }
         if let Some(budget) = config.budget {
             set.register(1, Box::new(BudgetPlugin::new(budget)));
+        }
+        if let Some(elasticity) = config.elasticity {
+            set.register(1, Box::new(ElasticityPlugin::new(elasticity)));
         }
         set
     }
@@ -520,6 +592,48 @@ impl Plugin for BudgetPlugin {
     }
 }
 
+/// The elasticity plugin: registering it (tier 1) arms the pipeline's
+/// resize verbs. The mold/expand/shrink machinery itself lives in the
+/// scheduler's action stages — it rewrites pods and the session's trial
+/// placement state, which the [`Plugin`] callback surface deliberately
+/// cannot touch — gated on this plugin's [`ElasticityConfig`]:
+///
+/// - the `resize` action molds gang-blocked pending elastic jobs
+///   stepwise toward `min` (both modes);
+/// - the `preempt` action offers shrink deltas from running
+///   lower-priority elastic jobs before whole-job eviction
+///   ([`ElasticityMode::Malleable`] only);
+/// - after the queue drains, expand-into-drain grows running elastic
+///   jobs into capacity nothing pending could use (malleable only).
+pub struct ElasticityPlugin {
+    config: ElasticityConfig,
+}
+
+impl ElasticityPlugin {
+    pub fn new(config: ElasticityConfig) -> ElasticityPlugin {
+        ElasticityPlugin { config }
+    }
+}
+
+impl Plugin for ElasticityPlugin {
+    fn name(&self) -> &'static str {
+        "elasticity"
+    }
+
+    /// Malleable victim tier: a running elastic job that still has shrink
+    /// room is not evicted whole — the preempt stage has already taken
+    /// its shrink deltas, and what remains is its `min`-width core.
+    fn may_evict(&mut self, api: &ApiServer, _now: f64, victim: JobId) -> bool {
+        if self.config.mode != ElasticityMode::Malleable {
+            return true;
+        }
+        match api.jobs[&victim].planned.spec.elasticity {
+            Some(e) => api.worker_width(victim) <= e.min,
+            None => true,
+        }
+    }
+}
+
 /// Per-session state the actions share — the `Session` object the plugins
 /// and actions hang off (trial placement state, EASY reservations, the
 /// conservative timeline, and the jobs started so far).
@@ -593,6 +707,9 @@ impl Scheduler {
                     ActionKind::Preempt => {
                         self.act_preempt(api, &mut session, &mut plugins, job_id, gang_failed)
                     }
+                    ActionKind::Resize => {
+                        self.act_resize(api, &mut session, &mut plugins, job_id, gang_failed)
+                    }
                     ActionKind::Reclaim => {
                         self.act_reclaim(api, &mut session, &mut plugins, job_id, gang_failed)
                     }
@@ -611,6 +728,22 @@ impl Scheduler {
                     Outcome::Stop => break 'queue,
                 }
             }
+        }
+        // Expand-into-drain (malleable only): after the queue has had its
+        // pass, grow running elastic jobs into capacity nothing pending
+        // could claim this session. Guarded on an empty reservation set —
+        // expansion must never take resources a backfill reservation
+        // counted on.
+        if self
+            .config
+            .pipeline
+            .elasticity
+            .map(|e| e.mode == ElasticityMode::Malleable)
+            .unwrap_or(false)
+            && session.reservations.is_empty()
+            && session.timeline.is_none()
+        {
+            self.expand_into_drain(api, &mut session);
         }
         self.plugins = plugins;
         // Session-consistency pin: commits were mirrored into the session
@@ -789,6 +922,22 @@ impl Scheduler {
         if !gang_failed || !self.config.preemption {
             return Outcome::Next;
         }
+        // Shrink-before-preempt (malleable only): offer tail-worker
+        // shrink deltas from running lower-priority elastic jobs before
+        // evicting anything whole. A successful shrink either starts the
+        // blocked job right here or leaves the freed capacity for the
+        // fall-through eviction plan below.
+        if self
+            .config
+            .pipeline
+            .elasticity
+            .map(|e| e.mode == ElasticityMode::Malleable)
+            .unwrap_or(false)
+        {
+            if let Outcome::Done = self.shrink_before_preempt(api, session, plugins, job_id) {
+                return Outcome::Done;
+            }
+        }
         let now = session.now;
         let planned = self.plan_with_preemption(
             api,
@@ -820,6 +969,205 @@ impl Scheduler {
                 Outcome::Done
             }
             None => Outcome::Next,
+        }
+    }
+
+    /// Resize action (mold): a gang-blocked *elastic* job is molded
+    /// stepwise down toward its `min` worker count, retrying the gang
+    /// plan at each narrower width; the first width that plans commits
+    /// and starts. Without an [`ElasticityConfig`] — or for rigid jobs —
+    /// this is a provable no-op, so the default pipeline stays
+    /// bit-identical to the legacy scheduler.
+    fn act_resize(
+        &mut self,
+        api: &mut ApiServer,
+        session: &mut Session,
+        plugins: &mut PluginSet,
+        job_id: JobId,
+        gang_failed: bool,
+    ) -> Outcome {
+        if !gang_failed || self.config.pipeline.elasticity.is_none() || !self.config.gang {
+            return Outcome::Next;
+        }
+        // Molding behind live reservations would be an un-gated backfill:
+        // sessions holding claims keep the backfill action's semantics.
+        if !session.reservations.is_empty() || session.timeline.is_some() {
+            return Outcome::Next;
+        }
+        let Some(e) = api.jobs[&job_id].planned.spec.elasticity else {
+            return Outcome::Next;
+        };
+        let now = session.now;
+        let mut width = api.worker_width(job_id);
+        while width > e.min {
+            width -= 1;
+            api.mold_job(job_id, width, now);
+            let checkpoint = session.state.checkpoint();
+            match self.plan_job(api, &mut session.state, job_id) {
+                Some(binds) => {
+                    Self::commit_gang(api, binds, job_id, now);
+                    session.started.push(job_id);
+                    plugins.on_job_started(api, now, job_id);
+                    return Outcome::Done;
+                }
+                None => session.state.rollback_to(checkpoint),
+            }
+        }
+        Outcome::Next
+    }
+
+    /// Malleable shrink tier: before whole-job eviction, trial-release
+    /// the tail workers of running, strictly-lower-priority elastic jobs
+    /// (cheapest first: lowest priority, then lowest id; highest worker
+    /// index first within a job, matching the real shrink), one worker at
+    /// a time down to each job's `min`, until the blocked gang first-fits
+    /// the freed view. A fitting trial commits the shrinks — real
+    /// releases, logged `JobResized` events, and the moved-memory deltas
+    /// the simulator charges resize cost for — and re-plans the blocked
+    /// job live. A trial that never fits shrinks nothing.
+    fn shrink_before_preempt(
+        &mut self,
+        api: &mut ApiServer,
+        session: &mut Session,
+        plugins: &mut PluginSet,
+        job_id: JobId,
+    ) -> Outcome {
+        if !self.config.gang {
+            return Outcome::Next;
+        }
+        let now = session.now;
+        // Same never-for-nothing guard as victim selection: if the gang
+        // already first-fits, shrinking cannot be what unblocks it.
+        if queue::job_fits(api, &session.state.free, job_id) {
+            return Outcome::Next;
+        }
+        let priority = api.jobs[&job_id].planned.spec.priority;
+        let mut candidates: Vec<JobId> = api
+            .running_jobs()
+            .into_iter()
+            .filter(|id| {
+                let j = &api.jobs[id];
+                j.planned.spec.priority < priority
+                    && j.planned.spec.elasticity.is_some()
+                    && !session.started.contains(id)
+            })
+            .collect();
+        candidates.sort_by_key(|id| (api.jobs[id].planned.spec.priority, *id));
+        if candidates.is_empty() {
+            return Outcome::Next;
+        }
+        let mut free = session.state.free.clone();
+        let mut deltas: Vec<(JobId, u32)> = Vec::new();
+        let mut fits = false;
+        'trial: for &cand in &candidates {
+            let e = api.jobs[&cand].planned.spec.elasticity.unwrap();
+            let mut workers: Vec<&Pod> = api.jobs[&cand]
+                .pods
+                .iter()
+                .map(|pid| &api.pods[pid])
+                .filter(|p| p.is_worker())
+                .collect();
+            workers.sort_by_key(|p| (p.worker_index(), p.id));
+            let width = workers.len() as u32;
+            let mut removed = 0u32;
+            for pod in workers.iter().rev() {
+                if width - removed <= e.min {
+                    break;
+                }
+                if let Some(node) = pod.node {
+                    free[node.0] += pod.requests;
+                }
+                removed += 1;
+                if queue::job_fits(api, &free, job_id) {
+                    deltas.push((cand, removed));
+                    fits = true;
+                    break 'trial;
+                }
+            }
+            if removed > 0 {
+                deltas.push((cand, removed));
+            }
+        }
+        if !fits {
+            return Outcome::Next;
+        }
+        for &(cand, remove) in &deltas {
+            let freed_mem = api.shrink_job(cand, remove, now);
+            self.resized.push((cand, freed_mem));
+        }
+        // The releases invalidated the session view: rebuild and re-plan
+        // the blocked job live (reservations re-derive at the next
+        // failure, exactly as after an eviction).
+        session.state = SessionState::snapshot(api);
+        session.state.index = self.engine.session_index(api);
+        session.reservations.clear();
+        session.timeline = None;
+        let checkpoint = session.state.checkpoint();
+        match self.plan_job(api, &mut session.state, job_id) {
+            Some(binds) => {
+                Self::commit_gang(api, binds, job_id, now);
+                session.started.push(job_id);
+                plugins.on_job_started(api, now, job_id);
+                Outcome::Done
+            }
+            None => {
+                session.state.rollback_to(checkpoint);
+                Outcome::Next
+            }
+        }
+    }
+
+    /// Expand-into-drain (malleable): grow running elastic jobs one
+    /// worker at a time — round-robin in ascending job order — into free
+    /// capacity nothing pending claimed this session. The growth target
+    /// is `preferred`; with an empty pending queue the drain is real and
+    /// jobs may grow to `max`. Every committed expansion binds a fresh
+    /// tail worker through the ordinary kubelet admission path and logs a
+    /// `JobResized` event.
+    fn expand_into_drain(&mut self, api: &mut ApiServer, session: &mut Session) {
+        let now = session.now;
+        let queue_empty = api.pending_jobs().is_empty();
+        loop {
+            let mut grew = false;
+            let candidates: Vec<JobId> = api
+                .running_jobs()
+                .into_iter()
+                .filter(|id| {
+                    let j = &api.jobs[id];
+                    match j.planned.spec.elasticity {
+                        Some(e) => {
+                            let target = if queue_empty { e.max } else { e.preferred };
+                            api.worker_width(*id) < target
+                        }
+                        None => false,
+                    }
+                })
+                .collect();
+            if candidates.is_empty() {
+                break;
+            }
+            for job_id in candidates {
+                let pid = api.expand_job(job_id);
+                let pod = api.pods[&pid].clone();
+                match self.place_pod(api, &mut session.state, &pod, None) {
+                    Some(node) => {
+                        let ok = api.bind_pod(pid, node, now);
+                        assert!(ok, "kubelet admission failed after predicate pass");
+                        // Mirror the bind into the session's trial view
+                        // (free + capacity index), exactly as committed
+                        // allocations are — the session-end consistency
+                        // pin compares this view against the API server.
+                        session.state.apply(pod.requests, node, None);
+                        api.complete_expand(job_id, now);
+                        self.resized.push((job_id, pod.requests.mem_bytes));
+                        grew = true;
+                    }
+                    None => api.cancel_expand(job_id, pid),
+                }
+            }
+            if !grew {
+                break;
+            }
         }
     }
 
@@ -1009,8 +1357,8 @@ mod tests {
         assert!(ActionList::of(&[]).unwrap().is_empty());
         let dup = [ActionKind::Enqueue, ActionKind::Allocate, ActionKind::Allocate];
         assert!(ActionList::of(&dup).unwrap_err().contains("twice"));
-        let six = [ActionKind::Enqueue; 6];
-        assert!(ActionList::of(&six).is_err());
+        let seven = [ActionKind::Enqueue; 7];
+        assert!(ActionList::of(&seven).is_err());
         let list = ActionList::of(&[ActionKind::Enqueue, ActionKind::Allocate]).unwrap();
         assert_eq!(list.as_slice(), &[ActionKind::Enqueue, ActionKind::Allocate]);
         assert!(list.contains(ActionKind::Allocate));
@@ -1060,9 +1408,37 @@ mod tests {
         let base = PluginSet::from_config(&PipelineConfig::legacy_equivalent());
         assert_eq!(base.names(), vec!["quota"]);
         let full = PluginSet::from_config(
-            &PipelineConfig::legacy_equivalent().with_aging(100.0).with_budget(60.0, 2),
+            &PipelineConfig::legacy_equivalent()
+                .with_aging(100.0)
+                .with_budget(60.0, 2)
+                .with_elasticity(ElasticityMode::Malleable),
         );
-        assert_eq!(full.names(), vec!["quota", "aging", "preemption_budget"]);
+        assert_eq!(full.names(), vec!["quota", "aging", "preemption_budget", "elasticity"]);
+    }
+
+    #[test]
+    fn elasticity_config_requires_the_resize_action() {
+        let ok = PipelineConfig::legacy_equivalent()
+            .with_elasticity(ElasticityMode::Moldable);
+        assert!(ok.validate().is_ok());
+        let no_resize = ok.with_actions(
+            ActionList::of(&[
+                ActionKind::Enqueue,
+                ActionKind::Allocate,
+                ActionKind::Preempt,
+                ActionKind::Reclaim,
+                ActionKind::Backfill,
+            ])
+            .unwrap(),
+        );
+        assert!(no_resize.validate().unwrap_err().contains("resize"));
+        for (s, m) in [
+            ("moldable", ElasticityMode::Moldable),
+            ("MALLEABLE", ElasticityMode::Malleable),
+        ] {
+            assert_eq!(ElasticityMode::parse(s), Some(m));
+        }
+        assert_eq!(ElasticityMode::parse("rigid"), None);
     }
 
     #[test]

@@ -105,6 +105,16 @@ impl SimOutput {
             .count()
     }
 
+    /// Number of resize (mold/expand/shrink) events in the run's event
+    /// log. Zero on every rigid trace — pinned by the elasticity ablation.
+    pub fn resize_count(&self) -> usize {
+        self.api
+            .events
+            .iter()
+            .filter(|e| matches!(e, crate::apiserver::Event::JobResized { .. }))
+            .count()
+    }
+
     /// `T_makespan`: time for all jobs to terminate (0 for an empty run).
     pub fn makespan(&self) -> f64 {
         if self.records.is_empty() {
@@ -196,6 +206,9 @@ impl SimDigest {
                 Event::JobPreempted { t, job } => push(&mut events, &[5, t.to_bits(), job.0]),
                 Event::JobUnschedulable { t, job } => {
                     push(&mut events, &[6, t.to_bits(), job.0])
+                }
+                Event::JobResized { t, job, workers } => {
+                    push(&mut events, &[7, t.to_bits(), job.0, workers as u64])
                 }
             }
         }
@@ -400,6 +413,27 @@ impl Simulation {
         self.now = t;
     }
 
+    /// One job's current progress rate against the given load snapshot.
+    ///
+    /// Rigid jobs progress at exactly `1 / slowdown` — bit-identical to
+    /// the pre-elasticity engine. Elastic jobs additionally scale by
+    /// their *width factor* `active_tasks / ntasks`: a job shrunk to half
+    /// its preferred tasks does half the work per second (linear-speedup
+    /// model over the splittable kernels of the elastic catalogue). At
+    /// the preferred width the factor is exactly 1.0, so an
+    /// unresized elastic job rates identically to a rigid one.
+    fn rate_of(&self, id: JobId, noise: f64, loads: &ClusterLoads) -> f64 {
+        let slowdown = job_slowdown_with(&self.api, id, &self.calib, noise, loads).total;
+        debug_assert!(slowdown >= 1.0 - 1e-9, "slowdown {slowdown} < 1");
+        let spec = &self.api.jobs[&id].planned.spec;
+        if spec.elasticity.is_some() {
+            let width = self.api.active_tasks_of(id) as f64 / spec.ntasks as f64;
+            width / slowdown
+        } else {
+            1.0 / slowdown
+        }
+    }
+
     /// Recompute every running job's rate from a fresh cluster-wide load
     /// snapshot — the full-rescan reference path, forced by
     /// [`Simulation::force_full_recompute`]; the maintained snapshot is
@@ -409,10 +443,8 @@ impl Simulation {
         let loads = ClusterLoads::snapshot(&self.api);
         for id in ids {
             let noise = self.progress[&id].noise;
-            let slowdown =
-                job_slowdown_with(&self.api, id, &self.calib, noise, &loads).total;
-            debug_assert!(slowdown >= 1.0 - 1e-9, "slowdown {slowdown} < 1");
-            self.progress.get_mut(&id).unwrap().rate = 1.0 / slowdown;
+            let rate = self.rate_of(id, noise, &loads);
+            self.progress.get_mut(&id).unwrap().rate = rate;
         }
         self.loads = loads;
     }
@@ -532,10 +564,8 @@ impl Simulation {
         }
         for id in affected {
             if let Some(noise) = self.progress.get(&id).map(|p| p.noise) {
-                let slowdown =
-                    job_slowdown_with(&self.api, id, &self.calib, noise, &self.loads).total;
-                debug_assert!(slowdown >= 1.0 - 1e-9, "slowdown {slowdown} < 1");
-                self.progress.get_mut(&id).unwrap().rate = 1.0 / slowdown;
+                let rate = self.rate_of(id, noise, &self.loads);
+                self.progress.get_mut(&id).unwrap().rate = rate;
             }
         }
         #[cfg(debug_assertions)]
@@ -550,8 +580,7 @@ impl Simulation {
     fn assert_rates_match_full_recompute(&self) {
         let loads = ClusterLoads::snapshot(&self.api);
         for (&id, p) in &self.progress {
-            let slowdown = job_slowdown_with(&self.api, id, &self.calib, p.noise, &loads).total;
-            let full = 1.0 / slowdown;
+            let full = self.rate_of(id, p.noise, &loads);
             assert!(
                 p.rate.to_bits() == full.to_bits(),
                 "incremental rate drifted for {id:?}: {} vs full {}",
@@ -579,7 +608,20 @@ impl Simulation {
         let planned = plan(spec, self.policy, info);
         let (pods, hostfile) = self.controller.build(&planned, &mut self.api);
         let job_id = planned.spec.id;
-        let feasible = gang_feasible(&self.api.spec, &pods);
+        // Elastic jobs are feasible iff their *minimum*-width gang fits:
+        // the scheduler may mold the pending plan down to `min` workers,
+        // so only a job whose min gang can never fit is truly stuck.
+        let feasible = match planned.spec.elasticity {
+            Some(e) => {
+                let min_gang: Vec<Pod> = pods
+                    .iter()
+                    .filter(|p| p.worker_index().map_or(true, |i| i < e.min))
+                    .cloned()
+                    .collect();
+                gang_feasible(&self.api.spec, &min_gang)
+            }
+            None => gang_feasible(&self.api.spec, &pods),
+        };
         self.api.create_job(planned, pods, hostfile, self.now);
         if !feasible {
             self.api.mark_unschedulable(job_id, self.now);
@@ -602,14 +644,27 @@ impl Simulation {
             .collect();
         let started = self.scheduler.cycle_with_projections(&mut self.api, self.now, &projected);
         let preempted = self.scheduler.take_preempted();
+        let resized = self.scheduler.take_resized();
         for &id in &preempted {
             let checkpoint =
                 self.progress.remove(&id).expect("preempted job without progress");
             self.api.requeue_job(id, self.now);
             self.suspended.insert(id, checkpoint);
         }
-        if started.is_empty() && preempted.is_empty() {
+        if started.is_empty() && preempted.is_empty() && resized.is_empty() {
             return;
+        }
+        // Runtime resizes (expand/shrink of *running* jobs): charge the
+        // calibrated checkpoint-restart cost for the moved memory image
+        // (the delta workers' pages), then route the job through both
+        // sides of the placement delta so its cached contribution is
+        // rebuilt from the live post-resize pod set. Molds of pending
+        // jobs never appear here — they start through `started` and cost
+        // nothing.
+        for &(id, moved_bytes) in &resized {
+            if let Some(p) = self.progress.get_mut(&id) {
+                p.remaining += self.calib.restart_cost_secs(moved_bytes);
+            }
         }
         for &job_id in &started {
             let bench = self.api.jobs[&job_id].planned.spec.benchmark;
@@ -634,7 +689,17 @@ impl Simulation {
                 }
             }
         }
-        self.apply_placement_delta(&started, &preempted);
+        if resized.is_empty() {
+            self.apply_placement_delta(&started, &preempted);
+        } else {
+            let mut added = started;
+            let mut removed = preempted;
+            for &(id, _) in &resized {
+                added.push(id);
+                removed.push(id);
+            }
+            self.apply_placement_delta(&added, &removed);
+        }
     }
 
     /// Run a trace to completion; returns per-job records + final state.

@@ -108,6 +108,7 @@ impl ExtBenchmark {
             default_workers: 1,
             tenant: super::job::DEFAULT_TENANT,
             priority: 0,
+            elasticity: None,
         }
     }
 }

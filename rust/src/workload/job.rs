@@ -18,6 +18,64 @@ pub struct TenantId(pub u32);
 /// The default (single-submitter) tenant every paper trace uses.
 pub const DEFAULT_TENANT: TenantId = TenantId(0);
 
+/// Elastic worker-count range of a malleable job (Kub, arXiv 2410.10655):
+/// the job can run on any worker count in `[min, max]`, with `preferred`
+/// the width the application profile asks for. A rigid job (every paper
+/// trace) simply carries no `Elasticity` at all; `min == max == preferred`
+/// expresses the same thing explicitly.
+///
+/// Widths are in *workers*; each worker carries `ntasks / preferred` MPI
+/// tasks, so `preferred` must divide `ntasks` (enforced by
+/// [`Elasticity::validate`]) and a job at width `w` runs
+/// `w * ntasks / preferred` of its tasks concurrently — the simulator
+/// scales its progress rate by exactly that fraction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Elasticity {
+    /// Smallest worker count the job can make progress on (>= 1).
+    pub min: u32,
+    /// Largest worker count that still speeds the job up.
+    pub max: u32,
+    /// Profile-preferred worker count (the rigid plan's width).
+    pub preferred: u32,
+}
+
+impl Elasticity {
+    /// A rigid range: `min == max == preferred == workers`.
+    pub fn rigid(workers: u32) -> Elasticity {
+        Elasticity { min: workers, max: workers, preferred: workers }
+    }
+
+    /// Validate the range against a task count. Rejections mirror the
+    /// config layer: `min` must be >= 1, `min <= preferred <= max`, and
+    /// `preferred` must divide `ntasks` (workers are homogeneous).
+    pub fn validate(&self, ntasks: u32) -> Result<(), String> {
+        if self.min == 0 {
+            return Err("elasticity: min workers must be >= 1".into());
+        }
+        if self.min > self.max {
+            return Err(format!("elasticity: min {} > max {}", self.min, self.max));
+        }
+        if self.preferred < self.min || self.preferred > self.max {
+            return Err(format!(
+                "elasticity: preferred {} outside [min {}, max {}]",
+                self.preferred, self.min, self.max
+            ));
+        }
+        if ntasks % self.preferred != 0 {
+            return Err(format!(
+                "elasticity: preferred {} does not divide ntasks {}",
+                self.preferred, ntasks
+            ));
+        }
+        Ok(())
+    }
+
+    /// True when the range admits no resizing at all.
+    pub fn is_rigid(&self) -> bool {
+        self.min == self.max
+    }
+}
+
 /// User-facing job specification.
 #[derive(Debug, Clone)]
 pub struct JobSpec {
@@ -41,6 +99,11 @@ pub struct JobSpec {
     /// preemption-enabled scheduler, a gang-blocked job may evict running
     /// jobs of *strictly lower* priority.
     pub priority: u32,
+    /// Elastic worker-count range (`None` = rigid, the default for every
+    /// paper trace). Only consulted by elasticity-aware schedulers; with
+    /// no `elasticity` pipeline plugin the job is treated as rigid at its
+    /// planned width.
+    pub elasticity: Option<Elasticity>,
 }
 
 impl JobSpec {
@@ -58,6 +121,7 @@ impl JobSpec {
             default_workers: 1,
             tenant: DEFAULT_TENANT,
             priority: 0,
+            elasticity: None,
         }
     }
 
@@ -66,6 +130,23 @@ impl JobSpec {
         self.tenant = tenant;
         self.priority = priority;
         self
+    }
+
+    /// Same job with an elastic worker-count range (panics on an invalid
+    /// range — trace generators are the only callers and must be exact).
+    pub fn with_elasticity(mut self, e: Elasticity) -> JobSpec {
+        e.validate(self.ntasks).unwrap_or_else(|err| panic!("{}: {err}", self.name));
+        self.elasticity = Some(e);
+        self
+    }
+
+    /// Tasks carried by each worker of an elastic job (`ntasks` for a
+    /// rigid one — its single planning knob is `default_workers`).
+    pub fn tasks_per_worker(&self) -> u32 {
+        match self.elasticity {
+            Some(e) => self.ntasks / e.preferred,
+            None => self.ntasks,
+        }
     }
 
     /// Per-task resource share `R / N_t` (Algorithm 2 step 1).
@@ -121,5 +202,33 @@ mod tests {
         let a = JobSpec::paper_job(1, Benchmark::GFft, 0.0);
         let b = JobSpec::paper_job(2, Benchmark::GFft, 0.0);
         assert_ne!(a.name, b.name);
+    }
+
+    #[test]
+    fn paper_jobs_are_rigid_by_default() {
+        let j = JobSpec::paper_job(1, Benchmark::EpDgemm, 0.0);
+        assert!(j.elasticity.is_none());
+        assert_eq!(j.tasks_per_worker(), 16);
+    }
+
+    #[test]
+    fn elasticity_validation_rejects_malformed_ranges() {
+        let e = |min, max, preferred| Elasticity { min, max, preferred };
+        assert!(e(2, 8, 4).validate(16).is_ok());
+        assert!(e(0, 8, 4).validate(16).is_err(), "min 0");
+        assert!(e(8, 2, 4).validate(16).is_err(), "min > max");
+        assert!(e(2, 8, 1).validate(16).is_err(), "preferred below min");
+        assert!(e(2, 8, 16).validate(16).is_err(), "preferred above max");
+        assert!(e(2, 8, 5).validate(16).is_err(), "preferred !| ntasks");
+        assert!(Elasticity::rigid(4).is_rigid());
+        assert!(!e(2, 8, 4).is_rigid());
+    }
+
+    #[test]
+    fn with_elasticity_fixes_tasks_per_worker() {
+        let j = JobSpec::paper_job(1, Benchmark::EpDgemm, 0.0)
+            .with_elasticity(Elasticity { min: 2, max: 16, preferred: 8 });
+        assert_eq!(j.tasks_per_worker(), 2);
+        assert_eq!(j.elasticity.unwrap().preferred, 8);
     }
 }

@@ -8,8 +8,8 @@ pub mod trace;
 
 pub use benchmark::{Benchmark, MpiProfile, Profile, ALL_BENCHMARKS};
 pub use extensions::{mixed_hpc_ai_trace, ExtBenchmark};
-pub use job::{Granularity, JobSpec, PlannedJob, TenantId, DEFAULT_TENANT};
+pub use job::{Elasticity, Granularity, JobSpec, PlannedJob, TenantId, DEFAULT_TENANT};
 pub use trace::{
-    exp1_trace, exp2_trace, exp3_trace, two_tenant_trace, uniform_trace, BATCH_TENANT,
-    PROD_PRIORITY, PROD_SHARE, PROD_TENANT,
+    elastic_trace, exp1_trace, exp2_trace, exp3_trace, two_tenant_trace, uniform_trace,
+    BATCH_TENANT, ELASTIC_RANGE, PROD_PRIORITY, PROD_SHARE, PROD_TENANT,
 };

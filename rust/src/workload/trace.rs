@@ -3,7 +3,7 @@
 use crate::util::Rng;
 
 use super::benchmark::{Benchmark, ALL_BENCHMARKS};
-use super::job::{JobSpec, TenantId};
+use super::job::{Elasticity, JobSpec, TenantId};
 
 /// Experiment 1 (§V-C): 10 EP-DGEMM jobs, arrival interval 60 s.
 pub fn exp1_trace() -> Vec<JobSpec> {
@@ -92,6 +92,43 @@ pub fn two_tenant_trace(n: usize, mean_interval: f64, seed: u64) -> Vec<JobSpec>
         .collect()
 }
 
+/// Elastic worker range every job of [`elastic_trace`] carries: 16 tasks
+/// over `preferred` 8 workers (2 tasks each), shrinkable to 2 workers and
+/// expandable to 16. The wide preferred width is deliberate: a rigid run
+/// must find 8-worker gangs, so fragmentation leaves capacity idle that
+/// moldable/malleable runs use.
+pub const ELASTIC_RANGE: Elasticity = Elasticity { min: 2, max: 16, preferred: 8 };
+
+/// Splittable benchmarks for the elasticity ablation: compute- and
+/// memory-bound kernels whose granularity the paper already splits fully.
+/// (Network-bound jobs are kept out — the planner would keep them whole,
+/// making elasticity moot.)
+const ELASTIC_BENCHMARKS: [Benchmark; 3] =
+    [Benchmark::EpDgemm, Benchmark::EpStream, Benchmark::MiniFe];
+
+/// Elasticity-ablation trace: the two-tenant arrival shape (≈20% of jobs
+/// from the high-priority production tenant), but every job is *elastic*
+/// with [`ELASTIC_RANGE`]. The same trace is run rigid (elasticity
+/// ignored), moldable, and malleable — the modes differ only in the
+/// scheduler. Fully determined by `seed`.
+pub fn elastic_trace(n: usize, mean_interval: f64, seed: u64) -> Vec<JobSpec> {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut t = 0.0;
+    (0..n)
+        .map(|i| {
+            let bench = ELASTIC_BENCHMARKS[rng.range_usize(0, ELASTIC_BENCHMARKS.len())];
+            t += -mean_interval * (1.0 - rng.f64()).ln();
+            let spec = JobSpec::paper_job(i as u64 + 1, bench, t);
+            let spec = if rng.f64() < PROD_SHARE {
+                spec.with_tenant(PROD_TENANT, PROD_PRIORITY)
+            } else {
+                spec.with_tenant(BATCH_TENANT, 0)
+            };
+            spec.with_elasticity(ELASTIC_RANGE)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -174,6 +211,30 @@ mod tests {
         for w in t.windows(2) {
             assert!(w[0].submit_time <= w[1].submit_time);
         }
+    }
+
+    #[test]
+    fn elastic_trace_is_uniformly_elastic_and_two_tenant() {
+        let t = elastic_trace(60, 30.0, 7);
+        assert_eq!(t.len(), 60);
+        for j in &t {
+            let e = j.elasticity.expect("every elastic-trace job is elastic");
+            assert_eq!(e, ELASTIC_RANGE);
+            assert_eq!(j.ntasks % e.preferred, 0);
+            assert_eq!(j.tasks_per_worker(), 2);
+            assert!(!j.benchmark.profile().is_network(), "{}", j.benchmark);
+        }
+        assert!(t.iter().any(|j| j.tenant == PROD_TENANT));
+        assert!(t.iter().any(|j| j.tenant == BATCH_TENANT));
+        for w in t.windows(2) {
+            assert!(w[0].submit_time <= w[1].submit_time);
+        }
+        // Deterministic per seed.
+        let key = |t: &[JobSpec]| {
+            t.iter().map(|j| (j.benchmark, j.tenant, j.submit_time.to_bits())).collect::<Vec<_>>()
+        };
+        assert_eq!(key(&elastic_trace(60, 30.0, 7)), key(&t));
+        assert_ne!(key(&elastic_trace(60, 30.0, 8)), key(&t));
     }
 
     #[test]

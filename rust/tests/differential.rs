@@ -113,6 +113,35 @@ fn pipeline_matches_legacy_fat_thin_indexed() {
     assert_pipeline_matches_legacy(Mix::FatThin, PlacementEngineKind::Indexed);
 }
 
+/// Elastic traces without an elasticity plugin: the `resize` action in
+/// the default pipeline must stay a provable no-op even when every job
+/// carries an `elasticity` range — the verb only activates through the
+/// plugin, so these schedules are still bit-identical to the legacy
+/// cycle (which has no resize path at all). EL_RIGID is the ablation
+/// baseline; CM_G_TG and CM_G_TG_PRE cover the no-preemption and
+/// fair-share-preemption variants.
+#[test]
+fn pipeline_matches_legacy_on_elastic_traces_without_plugin() {
+    use kube_fgs::workload::elastic_trace;
+    let trace = elastic_trace(JOBS, MEAN_INTERVAL, SEED);
+    for scenario in [Scenario::ElRigid, Scenario::CmGTg, Scenario::CmGTgPre] {
+        assert!(scenario.elasticity().is_none());
+        let mk = |force_legacy: bool| {
+            let mut sim = scenario.simulation_on(Mix::Uniform.cluster(), SEED);
+            sim.set_force_legacy_scheduler(force_legacy);
+            sim.run(&trace)
+        };
+        let pipeline = mk(false);
+        let legacy = mk(true);
+        assert_eq!(pipeline.resize_count(), 0, "{scenario}: resize must not fire");
+        assert_eq!(
+            SimDigest::of(&pipeline),
+            SimDigest::of(&legacy),
+            "{scenario}: elastic trace without plugin must match legacy"
+        );
+    }
+}
+
 /// The digest itself is a stable serialization surface: equal outputs hash
 /// equal, the JSON form round-trips losslessly, and perturbing the run
 /// (different seed) actually changes the hash — a digest that never

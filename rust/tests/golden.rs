@@ -10,16 +10,22 @@
 //!   * `KUBE_FGS_BLESS=1 cargo test --test golden` rewrites every
 //!     snapshot from the current behaviour (inspect the diff before
 //!     committing!).
-//!   * A *missing* snapshot is blessed on first run rather than failing,
-//!     so a fresh checkout (or a deliberately deleted file) regenerates
-//!     itself; drift against an *existing* snapshot always fails.
+//!   * On a developer machine a *missing* snapshot is blessed on first
+//!     run rather than failing, so a fresh checkout (or a deliberately
+//!     deleted file) regenerates itself.
+//!   * In CI (the `CI` env var is set, as on every GitHub runner) a
+//!     missing snapshot FAILS: CI compares against the committed record,
+//!     it never manufactures one — a snapshot that self-blesses in CI
+//!     would pin whatever the broken build produced. Bless locally and
+//!     commit the file instead. Drift against an *existing* snapshot
+//!     always fails everywhere.
 
 use std::path::PathBuf;
 
 use kube_fgs::experiments::{self, DEFAULT_SEED};
-use kube_fgs::scenario::{Scenario, EXP3_SCENARIOS, TABLE2_SCENARIOS};
+use kube_fgs::scenario::{Scenario, ELASTIC_SCENARIOS, EXP3_SCENARIOS, TABLE2_SCENARIOS};
 use kube_fgs::simulator::{SimDigest, SimOutput};
-use kube_fgs::workload::{exp2_trace, two_tenant_trace};
+use kube_fgs::workload::{elastic_trace, exp2_trace, two_tenant_trace};
 
 fn golden_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden")
@@ -36,6 +42,16 @@ fn bless_requested() -> bool {
 fn check_golden(name: &str, out: &SimOutput) {
     let digest = SimDigest::of(out);
     let path = golden_dir().join(format!("{name}.json"));
+    let in_ci = std::env::var_os("CI").is_some();
+    if !bless_requested() && !path.exists() && in_ci {
+        panic!(
+            "golden: {} is missing and this is CI. CI never blesses snapshots — it would \
+             pin whatever this build produced instead of the committed record. Run \
+             `cargo test --test golden` locally (a missing file self-blesses there) and \
+             commit tests/golden/{name}.json.",
+            path.display()
+        );
+    }
     if bless_requested() || !path.exists() {
         std::fs::create_dir_all(golden_dir()).expect("create tests/golden");
         std::fs::write(&path, format!("{}\n", digest.to_json()))
@@ -85,4 +101,24 @@ fn golden_two_tenant_preemption() {
     let trace = two_tenant_trace(30, 45.0, DEFAULT_SEED);
     let out = experiments::run_scenario(Scenario::CmGTgPre, &trace, DEFAULT_SEED, None);
     check_golden("two_tenant_CM_G_TG_PRE", &out);
+}
+
+/// The elasticity modes on the elastic trace — rigid, moldable, and
+/// malleable each get their own snapshot (the resize verb's schedules:
+/// mold/shrink/expand events are part of the digest, so a change to any
+/// resize path fails the corresponding pin).
+#[test]
+fn golden_elastic_modes() {
+    let trace = elastic_trace(24, 25.0, DEFAULT_SEED);
+    for s in ELASTIC_SCENARIOS {
+        let out = experiments::run_scenario(s, &trace, DEFAULT_SEED, None);
+        if s.elasticity().is_none() {
+            assert_eq!(
+                out.resize_count(),
+                0,
+                "{s}: no elasticity plugin, so the resize action must be a no-op"
+            );
+        }
+        check_golden(&format!("elastic_{}", s.name()), &out);
+    }
 }

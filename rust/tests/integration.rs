@@ -144,6 +144,42 @@ fn fair_share_with_preemption_improves_high_priority_response() {
 }
 
 #[test]
+fn malleable_elasticity_dominates_rigid() {
+    // Acceptance (ISSUE 7): on the elastic trace, the malleable
+    // configuration — expand-into-drain + shrink-before-preempt — must
+    // strictly beat the rigid baseline on BOTH overall response time and
+    // makespan, at the default ablation size.
+    let rows = experiments::elasticity_ablation(
+        DEFAULT_SEED,
+        experiments::ELASTICITY_JOBS,
+        experiments::ELASTICITY_INTERVAL,
+    );
+    let get = |label: &str| rows.iter().find(|r| r.label == label).unwrap();
+    // Every mode completes the whole trace.
+    for r in &rows {
+        assert_eq!(r.metrics.per_job.len(), experiments::ELASTICITY_JOBS, "{}", r.label);
+    }
+    let rigid = get("rigid");
+    let malleable = get("malleable");
+    assert!(
+        malleable.metrics.overall_response < rigid.metrics.overall_response,
+        "malleable overall response {} must beat rigid {}",
+        malleable.metrics.overall_response,
+        rigid.metrics.overall_response
+    );
+    assert!(
+        malleable.metrics.makespan < rigid.metrics.makespan,
+        "malleable makespan {} must beat rigid {}",
+        malleable.metrics.makespan,
+        rigid.metrics.makespan
+    );
+    // The resize verb actually fired, and only where the plugin runs:
+    // rigid has no elasticity plugin, so its resize action is a no-op.
+    assert!(malleable.resizes > 0, "expected resizes under malleable");
+    assert_eq!(rigid.resizes, 0);
+}
+
+#[test]
 fn preemptive_runs_conserve_resources_and_complete() {
     // CM_G_TG_PRE over the two-tenant trace: every job completes despite
     // evictions + restarts, and all bookkeeping returns to zero.

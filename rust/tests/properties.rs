@@ -572,6 +572,71 @@ fn prop_pipeline_differential_fuzz() {
     }
 }
 
+/// Property: elastic resize churn conserves the bookkeeping — across
+/// random elastic traces under every elasticity mode (rigid baseline,
+/// moldable, malleable), the mold/shrink/expand churn returns every node
+/// to full allocatable capacity, leaks no Bound/Running pod, keeps the
+/// tenant ledgers exact, and reports truthful per-job metrics (start >=
+/// submit, finish > start, response = wait + running, service time
+/// positive).
+#[test]
+fn prop_elastic_resize_churn_conserves_bookkeeping() {
+    use kube_fgs::cluster::PodPhase;
+    use kube_fgs::scenario::ELASTIC_SCENARIOS;
+    use kube_fgs::workload::elastic_trace;
+    let mut rng = Rng::seed_from_u64(1313);
+    for case in 0..12 {
+        let n_jobs = rng.range_usize(6, 24);
+        let interval = rng.range_f64(15.0, 60.0);
+        let seed = rng.next_u64();
+        let trace = elastic_trace(n_jobs, interval, seed);
+        for scenario in ELASTIC_SCENARIOS {
+            let out = experiments_run(scenario, &trace, seed);
+            assert_eq!(
+                out.records.len() + out.unschedulable.len(),
+                n_jobs,
+                "case {case} {scenario}: job leaked"
+            );
+            let mut seen = std::collections::BTreeSet::new();
+            for r in &out.records {
+                assert!(seen.insert(r.id), "case {case} {scenario}: duplicate record");
+                assert!(r.start_time >= r.submit_time - 1e-9, "case {case} {scenario}");
+                assert!(r.finish_time > r.start_time, "case {case} {scenario}");
+                assert!(r.running() > 0.0, "case {case} {scenario}: empty service");
+                assert!(
+                    (r.response() - (r.wait() + r.running())).abs() < 1e-9,
+                    "case {case} {scenario}: response != wait + running"
+                );
+            }
+            for n in out.api.spec.node_ids() {
+                assert_eq!(
+                    out.api.free_on(n),
+                    out.api.spec.node(n).allocatable(),
+                    "case {case} {scenario}: node {n:?} leaked resources after resize churn"
+                );
+            }
+            for pod in out.api.pods.values() {
+                assert!(
+                    !matches!(pod.phase, PodPhase::Bound | PodPhase::Running),
+                    "case {case} {scenario}: pod {:?} leaked in {:?}",
+                    pod.id,
+                    pod.phase
+                );
+            }
+            // Tenant ledgers must sum to the running set, which is empty.
+            let tenants: std::collections::BTreeSet<_> =
+                out.records.iter().map(|r| r.tenant).collect();
+            for t in tenants {
+                assert_eq!(
+                    out.api.tenant_running_requests(t),
+                    Resources::ZERO,
+                    "case {case} {scenario}: tenant {t:?} ledger out of balance"
+                );
+            }
+        }
+    }
+}
+
 /// Property: per-benchmark base work overrides scale running times
 /// proportionally for isolated jobs.
 #[test]
