@@ -73,7 +73,8 @@ fn main() -> anyhow::Result<()> {
     let trace = exp2_trace(seed);
     let mut rows = Vec::new();
     for s in TABLE2_SCENARIOS {
-        let out = experiments::run_scenario(s, &trace, seed, Some(&base_work));
+        let out =
+            experiments::RunSpec::new(s).seed(seed).base_work(&base_work).run(&trace).single();
         // Live execution: one payload step per job, as the jobs finished.
         let mut live_steps = 0usize;
         for r in &out.records {
@@ -99,12 +100,11 @@ fn main() -> anyhow::Result<()> {
     // 5. Verdict: fine-grained scheduling must beat both baselines on the
     //    measured-kernel workload too.
     let get = |name: &str| {
-        let out = experiments::run_scenario(
-            Scenario::parse(name).unwrap(),
-            &trace,
-            seed,
-            Some(&base_work),
-        );
+        let out = experiments::RunSpec::new(Scenario::parse(name).unwrap())
+            .seed(seed)
+            .base_work(&base_work)
+            .run(&trace)
+            .single();
         ExperimentMetrics::from(&out).overall_response
     };
     let (none, cm, fg) = (get("NONE"), get("CM"), get("CM_G_TG"));

@@ -7,6 +7,7 @@
 //!
 //! Run: cargo run --release --example mixed_hpc_ai
 
+use kube_fgs::experiments::RunSpec;
 use kube_fgs::metrics::ExperimentMetrics;
 use kube_fgs::report;
 use kube_fgs::scenario::Scenario;
@@ -18,7 +19,7 @@ fn main() {
 
     let mut rows = Vec::new();
     for scenario in [Scenario::None_, Scenario::Cm, Scenario::CmSTg, Scenario::CmGTg] {
-        let out = scenario.simulation(11).run(&trace);
+        let out = RunSpec::new(scenario).seed(11).run(&trace).single();
         let m = ExperimentMetrics::from(&out);
         rows.push(vec![
             scenario.name().to_string(),

@@ -30,7 +30,7 @@ fn main() {
     // The scheduling-process panels of Fig. 7 for the two extremes.
     for name in ["CM", "CM_G_TG"] {
         let scenario = kube_fgs::scenario::Scenario::parse(name).unwrap();
-        let out = experiments::run_scenario(scenario, &trace, seed, None);
+        let out = experiments::RunSpec::new(scenario).seed(seed).run(&trace).single();
         println!("\nFig. 7 — scheduling process, {name}:");
         print!("{}", report::gantt(&out, 90));
     }

@@ -35,9 +35,9 @@ fn main() {
         planned.granularity.n_nodes, planned.granularity.n_workers, planned.granularity.n_groups
     );
 
-    // Run the full stack.
-    let sim = scenario.simulation(7);
-    let out = sim.run(&[job]);
+    // Run the full stack (RunSpec is the one run API; `.single()`
+    // unwraps the sole scheduler domain of an unsharded run).
+    let out = kube_fgs::experiments::RunSpec::new(scenario).seed(7).run(&[job]).single();
 
     // What the MPI-aware controller (Algorithm 2) + task-group plugin
     // (Algorithms 3-4) + kubelet produced:

@@ -33,11 +33,13 @@ fn pending_cluster(n: u64, workers: usize) -> ApiServer {
     api
 }
 
-/// Placement-engine and persistent-timeline before/after sections: the
-/// linear scan vs the indexed buckets, and the per-session rebuild vs the
-/// event-driven cache, at 32 and 128 workers. Returns (name, mean seconds)
-/// rows for the CI artifact (`--json PATH`).
-fn placement_sections() -> Vec<(String, f64)> {
+/// Placement-engine, persistent-timeline, and earliest-fit before/after
+/// sections: the linear scan vs the indexed buckets, the per-session
+/// rebuild vs the event-driven cache, and the linear hole search vs the
+/// range-minimum segment tree, at 32 and 128 workers. Returns (name,
+/// mean seconds) timing rows plus (name, per-second) scheduler
+/// throughput rows for the CI artifact (`--json PATH`).
+fn placement_sections() -> (Vec<(String, f64)>, Vec<(String, f64)>) {
     let mut rows = Vec::new();
 
     // Placement engine: scheduling sessions over a congested queue. Same
@@ -136,17 +138,117 @@ fn placement_sections() -> Vec<(String, f64)> {
         });
         rows.push((format!("timeline/session-profile-{workers}w-cache"), s.mean));
     }
-    rows
+
+    // Earliest-fit hole search: the retained linear scan vs the
+    // range-minimum segment tree, on synthetic release profiles at
+    // conservative-queue scale. Both return bit-identical placements
+    // (debug-asserted per window, property-pinned over whole sims); only
+    // the per-candidate window-minimum cost differs — O(points x nodes)
+    // against O(log points + nodes).
+    {
+        use kube_fgs::cluster::{JobId, Resources};
+        use kube_fgs::scheduler::ResourceTimeline;
+        let workers = 32usize;
+        let api = pending_cluster(1, workers);
+        let alloc: Vec<Resources> =
+            api.spec.node_ids().map(|n| api.spec.node(n).allocatable()).collect();
+        for n_points in [128usize, 1024] {
+            // Free capacity ramps from empty to the full cluster across
+            // the profile, so the search walks deep into the points.
+            let den = (n_points - 1) as u64;
+            let tl = ResourceTimeline::from_points(
+                (0..n_points)
+                    .map(|i| {
+                        let free = alloc
+                            .iter()
+                            .map(|a| {
+                                Resources::new(
+                                    a.cpu_milli * i as u64 / den,
+                                    a.mem_bytes * i as u64 / den,
+                                )
+                            })
+                            .collect();
+                        (i as f64 * 5.0, free)
+                    })
+                    .collect(),
+            );
+            let s = BenchTimer::new(&format!(
+                "earliest-fit/{n_points}p-{workers}w-linear (before)"
+            ))
+            .with_iters(1, 5)
+            .run(|| {
+                assert!(tl.earliest_fit_linear(&api, JobId(1), 10.0).is_some());
+            });
+            rows.push((format!("earliest_fit/{n_points}p-linear"), s.mean));
+            let s = BenchTimer::new(&format!(
+                "earliest-fit/{n_points}p-{workers}w-tree (after)"
+            ))
+            .with_iters(1, 20)
+            .run(|| {
+                assert!(tl.earliest_fit(&api, JobId(1), 10.0).is_some());
+            });
+            rows.push((format!("earliest_fit/{n_points}p-tree"), s.mean));
+        }
+    }
+
+    // Scheduler throughput counters: sessions/sec and decisions/sec over
+    // full simulated runs — the same SchedulerStats the sharded scale-out
+    // sums across domains (RunOutput::sched_stats). Rates rather than
+    // per-iteration means, so they land in their own JSON section.
+    let mut rates = Vec::new();
+    {
+        use kube_fgs::experiments::RunSpec;
+        use kube_fgs::scenario::Scenario;
+        for workers in [32usize, 128] {
+            let jobs = 2 * workers;
+            let interval = 60.0 * 8.0 / workers as f64;
+            let trace = uniform_trace(jobs, interval, 2);
+            let spec = RunSpec::new(Scenario::CmGTg)
+                .seed(2)
+                .cluster(ClusterSpec::with_workers(workers));
+            let wall = std::time::Instant::now();
+            let run = spec.run(&trace);
+            let secs = wall.elapsed().as_secs_f64().max(1e-9);
+            let stats = run.sched_stats();
+            assert_eq!(run.records().len(), jobs);
+            println!(
+                "throughput/sim-{workers}w-{jobs}j: {:.1} sessions/s, {:.1} decisions/s \
+                 ({} sessions, {} decisions in {:.3}s)",
+                stats.sessions as f64 / secs,
+                stats.decisions as f64 / secs,
+                stats.sessions,
+                stats.decisions,
+                secs
+            );
+            rates.push((
+                format!("throughput/sessions_per_sec-{workers}w"),
+                stats.sessions as f64 / secs,
+            ));
+            rates.push((
+                format!("throughput/decisions_per_sec-{workers}w"),
+                stats.decisions as f64 / secs,
+            ));
+        }
+    }
+    (rows, rates)
 }
 
 /// Hand-rendered JSON artifact (the substrate has no serde): the CI
-/// perf-trajectory data point for the placement/timeline hot paths.
-fn placement_json(rows: &[(String, f64)]) -> String {
+/// perf-trajectory data point for the placement/timeline/earliest-fit
+/// hot paths, plus the scheduler sessions/sec + decisions/sec rates.
+fn placement_json(rows: &[(String, f64)], rates: &[(String, f64)]) -> String {
     let mut out = String::from("{\n  \"bench\": \"placement\", \"entries\": [\n");
     for (i, (name, mean)) in rows.iter().enumerate() {
         out.push_str(&format!(
             "    {{\"name\": \"{name}\", \"mean_s\": {mean:.6}}}{}\n",
             if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ],\n  \"throughput\": [\n");
+    for (i, (name, per_sec)) in rates.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"name\": \"{name}\", \"per_sec\": {per_sec:.1}}}{}\n",
+            if i + 1 < rates.len() { "," } else { "" }
         ));
     }
     out.push_str("  ]\n}\n");
@@ -165,9 +267,9 @@ fn main() {
     println!("=== L3 scheduler microbenchmarks ===\n");
 
     if placement_only {
-        let rows = placement_sections();
+        let (rows, rates) = placement_sections();
         if let Some(path) = json_path {
-            std::fs::write(&path, placement_json(&rows)).expect("writing bench json");
+            std::fs::write(&path, placement_json(&rows, &rates)).expect("writing bench json");
             println!("\nwrote {path}");
         }
         return;
@@ -320,9 +422,9 @@ fn main() {
         });
     }
 
-    // Placement engine + persistent timeline before/after (32 and 128
-    // workers) — the CI placement_bench.json artifact rows.
-    let rows = placement_sections();
+    // Placement engine + persistent timeline + earliest-fit before/after
+    // (32 and 128 workers) — the CI placement_bench.json artifact rows.
+    let (rows, rates) = placement_sections();
 
     // Full experiment-2 simulation, one scenario.
     BenchTimer::new("simulate/exp2-CM_G_TG").with_iters(1, 10).run(|| {
@@ -337,7 +439,7 @@ fn main() {
     });
 
     if let Some(path) = json_path {
-        std::fs::write(&path, placement_json(&rows)).expect("writing bench json");
+        std::fs::write(&path, placement_json(&rows, &rates)).expect("writing bench json");
         println!("\nwrote {path}");
     }
 }

@@ -253,6 +253,45 @@ impl ClusterSpec {
             .map(|n| n.allocatable_cores() as u64)
             .sum()
     }
+
+    /// Partition the workers into at most `shards` scheduler domains for
+    /// the sharded multi-scheduler runner ([`crate::simulator::shard`]),
+    /// Volcano-style: a whole worker [`CapacityClass`] is never split
+    /// across domains, so the effective domain count is
+    /// `min(shards, worker classes)`. On a homogeneous cluster (one
+    /// worker class) any `shards` collapses to a single domain — the
+    /// whole cluster, returned as-is — which is exactly why uniform
+    /// configs are *shard-invariant*: the sharded runner delegates to the
+    /// plain single-scheduler path there, bit for bit. Heterogeneous
+    /// clusters deal their classes round-robin by class index; every
+    /// multi-domain entry is a self-contained [`ClusterSpec`] (its own
+    /// control-plane node plus its classes' workers, re-indexed in
+    /// original node order).
+    pub fn shard_domains(&self, shards: usize) -> Vec<ClusterSpec> {
+        let worker_classes: Vec<CapacityClass> = self
+            .capacity_classes()
+            .into_iter()
+            .filter(|c| c.role == NodeRole::Worker)
+            .collect();
+        let effective = shards.max(1).min(worker_classes.len().max(1));
+        if effective <= 1 {
+            return vec![self.clone()];
+        }
+        let control = self.node(self.control_plane_id()).clone();
+        let mut members: Vec<Vec<NodeId>> = vec![Vec::new(); effective];
+        for (i, class) in worker_classes.iter().enumerate() {
+            members[i % effective].extend(class.nodes.iter().copied());
+        }
+        members
+            .into_iter()
+            .map(|mut ids| {
+                ids.sort();
+                let mut nodes = vec![control.clone()];
+                nodes.extend(ids.into_iter().map(|id| self.node(id).clone()));
+                ClusterSpec { nodes }
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -343,6 +382,54 @@ mod tests {
                 assert_eq!(het.node(n).role, cl.role);
             }
         }
+    }
+
+    #[test]
+    fn shard_domains_collapse_on_homogeneous_clusters() {
+        // One worker class: any shard request yields the whole cluster,
+        // untouched — the invariant the sharded runner's delegation (and
+        // the shard-determinism property test) relies on.
+        let c = ClusterSpec::with_workers(8);
+        for shards in [1usize, 2, 4, 16] {
+            let domains = c.shard_domains(shards);
+            assert_eq!(domains.len(), 1, "shards={shards}");
+            assert_eq!(domains[0].nodes.len(), c.nodes.len());
+        }
+        assert_eq!(c.shard_domains(0).len(), 1, "shards=0 clamps to 1");
+    }
+
+    #[test]
+    fn shard_domains_partition_worker_classes() {
+        // Tiered = three worker classes; two domains must split them
+        // without ever splitting a class, covering every worker once.
+        let c = ClusterSpec::mixed(16, HeterogeneityMix::Tiered);
+        let domains = c.shard_domains(2);
+        assert_eq!(domains.len(), 2);
+        let mut total_workers = 0usize;
+        for d in &domains {
+            assert_eq!(d.control_plane_id(), NodeId(0), "own control plane first");
+            assert!(d.worker_count() > 0, "no empty domain");
+            total_workers += d.worker_count();
+        }
+        assert_eq!(total_workers, c.worker_count(), "every worker in exactly one domain");
+        // A class never straddles domains: each distinct worker shape
+        // appears in exactly one domain.
+        for d in &domains {
+            for other in &domains {
+                if std::ptr::eq(d, other) {
+                    continue;
+                }
+                for &w in &d.worker_ids() {
+                    let shape = d.node(w).allocatable();
+                    assert!(
+                        other.worker_ids().iter().all(|&o| other.node(o).allocatable() != shape),
+                        "worker class split across domains"
+                    );
+                }
+            }
+        }
+        // Requesting more shards than classes clamps to the class count.
+        assert_eq!(c.shard_domains(8).len(), 3);
     }
 
     #[test]

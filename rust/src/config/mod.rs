@@ -23,7 +23,7 @@
 //!     { "id": 0, "weight": 1.0, "quota": { "cores": 64 } },
 //!     { "id": 1, "weight": 3.0 }
 //!   ],
-//!   "cluster": { "worker_nodes": 4 },
+//!   "cluster": { "worker_nodes": 4, "shards": 1 },
 //!   "trace": { "kind": "two_tenant", "jobs": 200, "mean_interval": 60 },
 //!   "output": { "gantt": true, "csv": false }
 //! }
@@ -34,11 +34,14 @@
 //! `cluster.classes` lists explicit `{"class": "fat"|"balanced"|"thin",
 //! "count": N}` groups (mutually exclusive with `mix`; when
 //! `worker_nodes` is also given it must equal the classes' total).
+//! `cluster.shards` (default 1) partitions the cluster into per-class
+//! scheduler domains run in parallel — clamped to the worker-class
+//! count, so a homogeneous cluster always runs the single scheduler.
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::cluster::{gib, ClusterSpec, HeterogeneityMix, NodeClass, Resources};
-use crate::perfmodel::Calibration;
+use crate::experiments::RunSpec;
 use crate::scenario::Scenario;
 use crate::scheduler::{
     ActionKind, ActionList, ElasticityMode, PipelineConfig, PlacementEngineKind,
@@ -88,6 +91,12 @@ pub struct ExperimentConfig {
     /// Explicit node classes (`cluster.classes`: `[{"class": "fat",
     /// "count": 2}, ...]`); empty keeps the mix/homogeneous shape.
     pub classes: Vec<NodeClass>,
+    /// Scheduler-domain count (`cluster.shards`, default 1): the cluster
+    /// is partitioned by worker capacity class into up to this many
+    /// domains, each scheduled by its own simulation on its own thread.
+    /// Clamped to the worker-class count, so homogeneous clusters always
+    /// run the single scheduler bit-identically.
+    pub shards: usize,
     pub trace: TraceConfig,
     pub gantt: bool,
     pub csv: bool,
@@ -409,6 +418,18 @@ impl ExperimentConfig {
             }
             other => bail!("config: \"cluster.classes\" must be an array, got {other:?}"),
         }
+        let shards = match json.get("cluster").get("shards") {
+            Json::Null => 1,
+            s => {
+                let n = s
+                    .as_u64()
+                    .ok_or_else(|| anyhow!("config: cluster.shards must be an integer"))?;
+                if n == 0 {
+                    bail!("config: cluster.shards must be >= 1");
+                }
+                n as usize
+            }
+        };
 
         let trace = match json.get("trace").get("kind").as_str().unwrap_or("exp2") {
             "exp1" => TraceConfig::Exp1,
@@ -454,6 +475,7 @@ impl ExperimentConfig {
             worker_nodes,
             mix,
             classes,
+            shards,
             trace,
             gantt: matches!(json.get("output").get("gantt"), crate::util::Json::Bool(true)),
             csv: matches!(json.get("output").get("csv"), crate::util::Json::Bool(true)),
@@ -500,32 +522,31 @@ impl ExperimentConfig {
     /// Build the fully configured simulation this config describes
     /// (cluster size, queue, preemption policy, placement engine,
     /// walltime error, tenant weights + quotas).
-    pub fn build_simulation(&self) -> Simulation {
-        let cfg = self
-            .scenario
-            .scheduler(self.seed)
-            .with_queue(self.queue)
-            .with_preemption(self.preemption)
-            .with_preemption_policy(self.preemption_policy)
-            .with_engine(self.engine)
-            .with_walltime_error_factor(self.walltime_error_factor)
-            .with_pipeline(self.pipeline);
-        let mut sim = Simulation::new(
-            self.cluster(),
-            self.scenario.kubelet(),
-            self.scenario.policy(),
-            self.scenario.controller(),
-            cfg,
-            Calibration::default(),
-            self.seed,
-        );
-        for &(tenant, weight) in &self.tenants {
-            sim.api.set_tenant_weight(tenant, weight);
-        }
+    /// The [`RunSpec`] this config describes — the single run API the CLI
+    /// `config` command executes (sharded when `cluster.shards > 1`).
+    pub fn run_spec(&self) -> RunSpec {
+        let mut spec = RunSpec::new(self.scenario)
+            .seed(self.seed)
+            .cluster(self.cluster())
+            .queue(self.queue)
+            .preemption(self.preemption)
+            .preemption_policy(self.preemption_policy)
+            .engine(self.engine)
+            .walltime_error_factor(self.walltime_error_factor)
+            .pipeline(self.pipeline)
+            .tenant_weights(&self.tenants)
+            .shards(self.shards);
         for &(tenant, quota) in &self.quotas {
-            sim.api.set_tenant_quota(tenant, quota);
+            spec = spec.tenant_quota(tenant, quota);
         }
-        sim
+        spec
+    }
+
+    /// Build the fully configured single-domain simulation (delegates to
+    /// [`RunSpec::simulation`]; callers that want the sharded path go
+    /// through [`ExperimentConfig::run_spec`]).
+    pub fn build_simulation(&self) -> Simulation {
+        self.run_spec().simulation()
     }
 }
 
@@ -553,6 +574,32 @@ mod tests {
         assert!(c.gantt && !c.csv);
         assert_eq!(c.cluster().worker_count(), 8);
         assert_eq!(c.build_trace().len(), 10);
+        assert_eq!(c.shards, 1, "shards defaults to the single scheduler");
+    }
+
+    #[test]
+    fn parses_and_validates_cluster_shards() {
+        let c = ExperimentConfig::parse(
+            r#"{
+              "scenario": "CM_G_TG",
+              "cluster": { "worker_nodes": 8, "mix": "tiered", "shards": 2 }
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(c.shards, 2);
+        let run = c.run_spec().run(&c.build_trace());
+        assert!(run.is_sharded(), "tiered mix at shards=2 splits into domains");
+
+        let err = ExperimentConfig::parse(
+            r#"{"scenario": "CM_G_TG", "cluster": {"shards": 0}}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("shards must be >= 1"), "{err}");
+        let err = ExperimentConfig::parse(
+            r#"{"scenario": "CM_G_TG", "cluster": {"shards": "two"}}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("must be an integer"), "{err}");
     }
 
     #[test]

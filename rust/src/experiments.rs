@@ -3,15 +3,19 @@
 //! every surface reproduces identical numbers for a given seed.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
-use crate::cluster::{ClusterSpec, HeterogeneityMix};
+use crate::cluster::{ClusterSpec, HeterogeneityMix, JobId, Resources};
 use crate::metrics::ExperimentMetrics;
+use crate::perfmodel::Calibration;
 use crate::report;
 use crate::scenario::{Scenario, ELASTIC_SCENARIOS, EXP3_SCENARIOS, TABLE2_SCENARIOS};
 use crate::scheduler::{
-    ElasticityMode, PlacementEngineKind, QueuePolicyKind, ALL_QUEUE_POLICIES,
+    ElasticityMode, PipelineConfig, PlacementEngineKind, PreemptionPolicy, QueuePolicyKind,
+    SchedulerStats, ALL_QUEUE_POLICIES,
 };
-use crate::simulator::SimOutput;
+use crate::simulator::{shard, JobRecord, SimDigest, SimOutput, Simulation};
 use crate::util::jain_index;
 use crate::workload::{
     elastic_trace, exp1_trace, exp2_trace, two_tenant_trace, uniform_trace, Benchmark,
@@ -22,19 +26,347 @@ use crate::workload::{
 /// one is used for every number recorded in EXPERIMENTS.md).
 pub const DEFAULT_SEED: u64 = 2;
 
+// ---------------------------------------------------------------------
+// RunSpec — the unified run API. One builder covers what used to be a
+// sprawl of `run_scenario*` free functions plus post-construction
+// `Simulation::set_*` calls, and it is the only entry point that knows
+// about sharded multi-scheduler runs.
+// ---------------------------------------------------------------------
+
+/// Declarative description of one experiment run: scenario + every
+/// override knob + the sharding axis. Unset knobs (`None`) fall back to
+/// the scenario's own defaults, so `RunSpec::new(s).seed(k).run(trace)`
+/// is bit-identical to the historical `run_scenario(s, trace, k, None)`.
+///
+/// Sharding (`shards > 1`) partitions the cluster into per-class
+/// scheduler domains ([`ClusterSpec::shard_domains`]), dispatches the
+/// trace across them up-front ([`shard::dispatch`]), and runs one full
+/// simulation per domain on a std thread pool. Determinism is by
+/// construction (stable domain order, per-domain RNG streams derived
+/// from the domain *index*), so the per-shard digests are bit-identical
+/// for any thread count. On a homogeneous cluster — or with `shards =
+/// 1` — the partition collapses and the run delegates to the plain
+/// single-scheduler path on the base seed, provably unchanged.
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    scenario: Scenario,
+    cluster: Option<ClusterSpec>,
+    queue: Option<QueuePolicyKind>,
+    preemption: Option<bool>,
+    preemption_policy: Option<PreemptionPolicy>,
+    engine: Option<PlacementEngineKind>,
+    walltime_error_factor: Option<f64>,
+    pipeline: Option<PipelineConfig>,
+    tenant_weights: Vec<(TenantId, f64)>,
+    tenant_quotas: Vec<(TenantId, Resources)>,
+    force_legacy: bool,
+    force_linear_earliest_fit: bool,
+    shards: usize,
+    threads: Option<usize>,
+    seed: u64,
+    base_work: Option<BTreeMap<Benchmark, f64>>,
+}
+
+impl RunSpec {
+    pub fn new(scenario: Scenario) -> RunSpec {
+        RunSpec {
+            scenario,
+            cluster: None,
+            queue: None,
+            preemption: None,
+            preemption_policy: None,
+            engine: None,
+            walltime_error_factor: None,
+            pipeline: None,
+            tenant_weights: Vec::new(),
+            tenant_quotas: Vec::new(),
+            force_legacy: false,
+            force_linear_earliest_fit: false,
+            shards: 1,
+            threads: None,
+            seed: DEFAULT_SEED,
+            base_work: None,
+        }
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Cluster to run on (default: the paper's 4-worker cluster).
+    pub fn cluster(mut self, cluster: ClusterSpec) -> Self {
+        self.cluster = Some(cluster);
+        self
+    }
+
+    pub fn queue(mut self, queue: QueuePolicyKind) -> Self {
+        self.queue = Some(queue);
+        self
+    }
+
+    pub fn preemption(mut self, preemption: bool) -> Self {
+        self.preemption = Some(preemption);
+        self
+    }
+
+    pub fn preemption_policy(mut self, policy: PreemptionPolicy) -> Self {
+        self.preemption_policy = Some(policy);
+        self
+    }
+
+    pub fn engine(mut self, engine: PlacementEngineKind) -> Self {
+        self.engine = Some(engine);
+        self
+    }
+
+    pub fn walltime_error_factor(mut self, factor: f64) -> Self {
+        self.walltime_error_factor = Some(factor);
+        self
+    }
+
+    pub fn pipeline(mut self, pipeline: PipelineConfig) -> Self {
+        self.pipeline = Some(pipeline);
+        self
+    }
+
+    pub fn tenant_weight(mut self, tenant: TenantId, weight: f64) -> Self {
+        self.tenant_weights.push((tenant, weight));
+        self
+    }
+
+    pub fn tenant_weights(mut self, weights: &[(TenantId, f64)]) -> Self {
+        self.tenant_weights.extend_from_slice(weights);
+        self
+    }
+
+    pub fn tenant_quota(mut self, tenant: TenantId, quota: Resources) -> Self {
+        self.tenant_quotas.push((tenant, quota));
+        self
+    }
+
+    /// Pin the scheduler to the pre-pipeline legacy cycle (the
+    /// differential harness's reference path).
+    pub fn legacy_scheduler(mut self, force: bool) -> Self {
+        self.force_legacy = force;
+        self
+    }
+
+    /// Pin `earliest_fit` to the linear reference scan (the segment
+    /// tree's pinned reference — property tests compare whole runs).
+    pub fn linear_earliest_fit(mut self, force: bool) -> Self {
+        self.force_linear_earliest_fit = force;
+        self
+    }
+
+    /// Number of scheduler domains to shard the cluster into (clamped to
+    /// the number of worker capacity classes; default 1 = today's single
+    /// scheduler).
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.shards = shards.max(1);
+        self
+    }
+
+    /// Worker threads for a sharded run (default: one per domain). Has
+    /// no effect on the outputs — only on wall time.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads);
+        self
+    }
+
+    /// Per-benchmark base-work overrides (the e2e driver passes
+    /// PJRT-measured times).
+    pub fn base_work(mut self, base_work: &BTreeMap<Benchmark, f64>) -> Self {
+        self.base_work = Some(base_work.clone());
+        self
+    }
+
+    fn effective_cluster(&self) -> ClusterSpec {
+        self.cluster.clone().unwrap_or_else(ClusterSpec::paper)
+    }
+
+    /// Build the fully configured single-domain [`Simulation`] this spec
+    /// describes (the config file's `build_simulation` delegates here).
+    pub fn simulation(&self) -> Simulation {
+        self.simulation_on(self.effective_cluster(), self.seed)
+    }
+
+    fn simulation_on(&self, cluster: ClusterSpec, seed: u64) -> Simulation {
+        let queue = self.queue.unwrap_or_else(|| self.scenario.queue());
+        let preemption = self.preemption.unwrap_or_else(|| self.scenario.preemption());
+        let mut cfg =
+            self.scenario.scheduler(seed).with_queue(queue).with_preemption(preemption);
+        if let Some(policy) = self.preemption_policy {
+            cfg = cfg.with_preemption_policy(policy);
+        }
+        if let Some(engine) = self.engine {
+            cfg = cfg.with_engine(engine);
+        }
+        if let Some(factor) = self.walltime_error_factor {
+            cfg = cfg.with_walltime_error_factor(factor);
+        }
+        if let Some(pipeline) = self.pipeline {
+            cfg = cfg.with_pipeline(pipeline);
+        }
+        let mut sim = Simulation::new(
+            cluster,
+            self.scenario.kubelet(),
+            self.scenario.policy(),
+            self.scenario.controller(),
+            cfg,
+            Calibration::default(),
+            seed,
+        );
+        sim.set_force_legacy_scheduler(self.force_legacy);
+        sim.set_force_linear_earliest_fit(self.force_linear_earliest_fit);
+        for &(tenant, weight) in &self.tenant_weights {
+            sim.api.set_tenant_weight(tenant, weight);
+        }
+        for &(tenant, quota) in &self.tenant_quotas {
+            sim.api.set_tenant_quota(tenant, quota);
+        }
+        if let Some(bw) = &self.base_work {
+            sim.base_work = bw.clone();
+        }
+        sim
+    }
+
+    /// Run the experiment. Single-domain specs (the default) run exactly
+    /// the historical path; sharded specs fan the domains out over a
+    /// thread pool and collect per-domain outputs in stable domain order.
+    pub fn run(&self, trace: &[JobSpec]) -> RunOutput {
+        let cluster = self.effective_cluster();
+        let domains = cluster.shard_domains(self.shards);
+        if self.shards <= 1 || domains.len() <= 1 {
+            // Delegate to the plain path on the base seed and the
+            // *original* cluster — provably bit-identical to the
+            // pre-RunSpec runners (property-pinned).
+            let out = self.simulation_on(cluster, self.seed).run(trace);
+            return RunOutput { shards: vec![out] };
+        }
+        let assignments = shard::dispatch(&domains, trace);
+        let threads = self.threads.unwrap_or(domains.len()).clamp(1, domains.len());
+        let slots: Vec<Mutex<Option<SimOutput>>> =
+            domains.iter().map(|_| Mutex::new(None)).collect();
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= domains.len() {
+                        break;
+                    }
+                    // The Simulation (trait objects inside) is built and
+                    // consumed entirely on this thread; only the plain-data
+                    // SimOutput crosses back via its slot.
+                    let out = self
+                        .simulation_on(domains[i].clone(), shard::shard_seed(self.seed, i))
+                        .run(&assignments[i]);
+                    *slots[i].lock().unwrap() = Some(out);
+                });
+            }
+        });
+        RunOutput {
+            shards: slots
+                .into_iter()
+                .map(|slot| slot.into_inner().unwrap().expect("every shard slot is filled"))
+                .collect(),
+        }
+    }
+}
+
+/// Output of a [`RunSpec`] run: one [`SimOutput`] per scheduler domain,
+/// in stable domain order (exactly one for unsharded runs).
+pub struct RunOutput {
+    pub shards: Vec<SimOutput>,
+}
+
+impl RunOutput {
+    /// The sole output of an unsharded run (panics on a sharded one —
+    /// the legacy wrappers and all single-scheduler callers use this).
+    pub fn single(mut self) -> SimOutput {
+        assert_eq!(self.shards.len(), 1, "single() on a sharded RunOutput");
+        self.shards.pop().unwrap()
+    }
+
+    pub fn is_sharded(&self) -> bool {
+        self.shards.len() > 1
+    }
+
+    /// All per-job records across shards, sorted by job id.
+    pub fn records(&self) -> Vec<JobRecord> {
+        let mut records: Vec<JobRecord> =
+            self.shards.iter().flat_map(|s| s.records.iter().cloned()).collect();
+        records.sort_by_key(|r| r.id);
+        records
+    }
+
+    /// All unschedulable job ids across shards, sorted.
+    pub fn unschedulable(&self) -> Vec<JobId> {
+        let mut ids: Vec<JobId> =
+            self.shards.iter().flat_map(|s| s.unschedulable.iter().copied()).collect();
+        ids.sort();
+        ids
+    }
+
+    /// `T = Σ T_i` over every record of every shard (additive, so the
+    /// sharded sum equals the metric of the merged record set).
+    pub fn overall_response(&self) -> f64 {
+        self.shards.iter().map(SimOutput::overall_response).sum()
+    }
+
+    /// Makespan of the merged record set: last finish minus first submit
+    /// across all shards (0 for an empty run).
+    pub fn makespan(&self) -> f64 {
+        let records = self.records();
+        if records.is_empty() {
+            return 0.0;
+        }
+        let first = records.iter().map(|r| r.submit_time).fold(f64::INFINITY, f64::min);
+        let last = records.iter().map(|r| r.finish_time).fold(0.0, f64::max);
+        last - first
+    }
+
+    /// Per-shard digests in stable domain order.
+    pub fn digests(&self) -> Vec<SimDigest> {
+        self.shards.iter().map(SimOutput::digest).collect()
+    }
+
+    /// One fingerprint for the whole run ([`shard::combined_digest`]).
+    pub fn combined_digest(&self) -> u64 {
+        shard::combined_digest(&self.digests())
+    }
+
+    /// Scheduler-throughput counters summed over the shards.
+    pub fn sched_stats(&self) -> SchedulerStats {
+        let mut total = SchedulerStats::default();
+        for s in &self.shards {
+            total.sessions += s.sched_stats.sessions;
+            total.decisions += s.sched_stats.decisions;
+        }
+        total
+    }
+}
+
+// ---------------------------------------------------------------------
+// Legacy run helpers — thin wrappers over RunSpec, kept so existing
+// call sites (and muscle memory) continue to work unchanged.
+// ---------------------------------------------------------------------
+
 /// Run one scenario over a trace, with optional per-benchmark base-work
-/// overrides (the e2e driver passes PJRT-measured times).
+/// overrides (the e2e driver passes PJRT-measured times). Wrapper over
+/// [`RunSpec`].
 pub fn run_scenario(
     scenario: Scenario,
     trace: &[JobSpec],
     seed: u64,
     base_work: Option<&BTreeMap<Benchmark, f64>>,
 ) -> SimOutput {
-    let mut sim = scenario.simulation(seed);
+    let mut spec = RunSpec::new(scenario).seed(seed);
     if let Some(bw) = base_work {
-        sim.base_work = bw.clone();
+        spec = spec.base_work(bw);
     }
-    sim.run(trace)
+    spec.run(trace).single()
 }
 
 /// One scenario's aggregated metrics for a trace.
@@ -42,19 +374,21 @@ pub fn run_metrics(scenario: Scenario, trace: &[JobSpec], seed: u64) -> Experime
     ExperimentMetrics::from(&run_scenario(scenario, trace, seed, None))
 }
 
-/// Run one scenario with its queue discipline overridden.
+/// Run one scenario with its queue discipline overridden. Wrapper over
+/// [`RunSpec`].
 pub fn run_scenario_with_queue(
     scenario: Scenario,
     queue: QueuePolicyKind,
     trace: &[JobSpec],
     seed: u64,
 ) -> SimOutput {
-    scenario.simulation_with_queue(seed, queue).run(trace)
+    RunSpec::new(scenario).seed(seed).queue(queue).run(trace).single()
 }
 
 /// Run one scenario with queue discipline, preemption, placement engine,
 /// and per-tenant fair-share weights all overridden (the fairness
 /// ablation and the CLI `run --preempt` / `run --engine` paths).
+/// Wrapper over [`RunSpec`].
 pub fn run_scenario_configured(
     scenario: Scenario,
     queue: QueuePolicyKind,
@@ -70,6 +404,7 @@ pub fn run_scenario_configured(
 /// Same as [`run_scenario_configured`], with the scheduler optionally
 /// pinned to the pre-pipeline legacy cycle (the differential harness's
 /// reference path, surfaced on the CLI as `run --legacy-scheduler`).
+/// Wrapper over [`RunSpec`].
 #[allow(clippy::too_many_arguments)]
 pub fn run_scenario_pinned(
     scenario: Scenario,
@@ -81,14 +416,15 @@ pub fn run_scenario_pinned(
     seed: u64,
     force_legacy: bool,
 ) -> SimOutput {
-    let mut sim =
-        scenario.simulation_configured(ClusterSpec::paper(), seed, queue, preemption);
-    sim.set_placement_engine(engine);
-    sim.set_force_legacy_scheduler(force_legacy);
-    for &(tenant, weight) in tenant_weights {
-        sim.api.set_tenant_weight(tenant, weight);
-    }
-    sim.run(trace)
+    RunSpec::new(scenario)
+        .seed(seed)
+        .queue(queue)
+        .preemption(preemption)
+        .engine(engine)
+        .tenant_weights(tenant_weights)
+        .legacy_scheduler(force_legacy)
+        .run(trace)
+        .single()
 }
 
 // ---------------------------------------------------------------------
@@ -186,13 +522,21 @@ pub const SCALING_DEFAULT_SIZES: [usize; 3] = [8, 16, 32];
 /// Default heterogeneity mixes of the sweep.
 pub const SCALING_DEFAULT_MIXES: [HeterogeneityMix; 2] =
     [HeterogeneityMix::Uniform, HeterogeneityMix::FatThin];
+/// Default shard counts of the sweep (single scheduler only; pass
+/// `--shards 1,4` to exercise the sharded scale-out axis).
+pub const SCALING_DEFAULT_SHARDS: [usize; 1] = [1];
 
-/// One point of the scaling sweep: a queue policy on a cluster shape.
+/// One point of the scaling sweep: a queue policy on a cluster shape at
+/// a shard count.
 #[derive(Debug, Clone)]
 pub struct ScalingPoint {
     pub mix: HeterogeneityMix,
     pub workers: usize,
     pub queue: QueuePolicyKind,
+    /// Requested scheduler-domain count (the effective count is capped
+    /// by the mix's worker-class count — uniform mixes always collapse
+    /// to one domain, which is the shard-invariance property).
+    pub shards: usize,
     pub jobs: usize,
     pub metrics: ExperimentMetrics,
     /// Core-seconds served over (makespan × total worker cores), in
@@ -221,15 +565,44 @@ pub fn cluster_utilization(out: &SimOutput) -> f64 {
     (core_secs / (makespan * total_cores)).min(1.0)
 }
 
-/// Run the queue-policy matrix across cluster sizes and heterogeneity
-/// mixes on the CM_G_TG placement configuration. Per point: `workers ×
-/// jobs_per_worker` jobs with the mean inter-arrival shrunk by
-/// `workers / 8` so per-worker pressure is constant across sizes.
+/// [`cluster_utilization`] generalised to a (possibly sharded) run:
+/// core-seconds served across every shard over (merged makespan × the
+/// *whole* cluster's worker cores). Identical to `cluster_utilization`
+/// for a single-shard run.
+pub fn run_utilization(run: &RunOutput, cluster: &ClusterSpec) -> f64 {
+    let total_cores = cluster.total_worker_cores() as f64;
+    let makespan = run.makespan();
+    if total_cores <= 0.0 || makespan <= 0.0 {
+        return 0.0;
+    }
+    let core_secs: f64 = run
+        .shards
+        .iter()
+        .map(|out| {
+            out.records
+                .iter()
+                .map(|r| {
+                    let cores =
+                        out.api.jobs[&r.id].planned.spec.resources.cpu_milli as f64 / 1000.0;
+                    cores * r.running_secs
+                })
+                .sum::<f64>()
+        })
+        .sum();
+    (core_secs / (makespan * total_cores)).min(1.0)
+}
+
+/// Run the queue-policy matrix across cluster sizes, heterogeneity
+/// mixes, and shard counts on the CM_G_TG placement configuration. Per
+/// point: `workers × jobs_per_worker` jobs with the mean inter-arrival
+/// shrunk by `workers / 8` so per-worker pressure is constant across
+/// sizes.
 pub fn scaling_sweep(
     seed: u64,
     sizes: &[usize],
     mixes: &[HeterogeneityMix],
     policies: &[QueuePolicyKind],
+    shards_axis: &[usize],
     jobs_per_worker: usize,
     base_interval: f64,
 ) -> Vec<ScalingPoint> {
@@ -240,18 +613,30 @@ pub fn scaling_sweep(
             let interval = base_interval * SCALING_BASE_WORKERS / workers as f64;
             let trace = uniform_trace(jobs, interval, seed);
             for &queue in policies {
-                let cluster = ClusterSpec::mixed(workers, mix);
-                let out =
-                    Scenario::CmGTg.simulation_on_queue(cluster, seed, queue).run(&trace);
-                points.push(ScalingPoint {
-                    mix,
-                    workers,
-                    queue,
-                    jobs,
-                    utilization: cluster_utilization(&out),
-                    unschedulable: out.unschedulable.len(),
-                    metrics: ExperimentMetrics::from(&out),
-                });
+                for &shards in shards_axis {
+                    let cluster = ClusterSpec::mixed(workers, mix);
+                    let run = RunSpec::new(Scenario::CmGTg)
+                        .seed(seed)
+                        .cluster(cluster.clone())
+                        .queue(queue)
+                        .shards(shards)
+                        .run(&trace);
+                    let metrics = if run.is_sharded() {
+                        ExperimentMetrics::from_records(&run.records())
+                    } else {
+                        ExperimentMetrics::from(&run.shards[0])
+                    };
+                    points.push(ScalingPoint {
+                        mix,
+                        workers,
+                        queue,
+                        shards,
+                        jobs,
+                        utilization: run_utilization(&run, &cluster),
+                        unschedulable: run.unschedulable().len(),
+                        metrics,
+                    });
+                }
             }
         }
     }
@@ -267,6 +652,7 @@ pub fn scaling_table(points: &[ScalingPoint]) -> String {
                 p.mix.name().to_string(),
                 p.workers.to_string(),
                 p.queue.name().to_string(),
+                p.shards.to_string(),
                 p.jobs.to_string(),
                 format!("{:.0}", p.metrics.overall_response),
                 format!("{:.0}", p.metrics.makespan),
@@ -280,6 +666,7 @@ pub fn scaling_table(points: &[ScalingPoint]) -> String {
             "mix",
             "workers",
             "queue policy",
+            "shards",
             "jobs",
             "overall response (s)",
             "makespan (s)",
@@ -299,6 +686,7 @@ pub fn scaling_csv(points: &[ScalingPoint]) -> String {
                 p.mix.name().to_string(),
                 p.workers.to_string(),
                 p.queue.name().to_string(),
+                p.shards.to_string(),
                 p.jobs.to_string(),
                 format!("{:.3}", p.metrics.overall_response),
                 format!("{:.3}", p.metrics.makespan),
@@ -313,6 +701,7 @@ pub fn scaling_csv(points: &[ScalingPoint]) -> String {
             "mix",
             "workers",
             "queue_policy",
+            "shards",
             "jobs",
             "overall_response_s",
             "makespan_s",
@@ -334,10 +723,11 @@ pub fn scaling_json(seed: u64, jobs_per_worker: usize, base_interval: f64, point
     out.push_str("  \"points\": [\n");
     for (i, p) in points.iter().enumerate() {
         out.push_str(&format!(
-            "    {{\"mix\": \"{}\", \"workers\": {}, \"policy\": \"{}\", \"jobs\": {}, \"overall_response_s\": {:.3}, \"makespan_s\": {:.3}, \"avg_wait_s\": {:.3}, \"utilization\": {:.4}, \"unschedulable\": {}}}{}\n",
+            "    {{\"mix\": \"{}\", \"workers\": {}, \"policy\": \"{}\", \"shards\": {}, \"jobs\": {}, \"overall_response_s\": {:.3}, \"makespan_s\": {:.3}, \"avg_wait_s\": {:.3}, \"utilization\": {:.4}, \"unschedulable\": {}}}{}\n",
             p.mix.name(),
             p.workers,
             p.queue.name(),
+            p.shards,
             p.jobs,
             p.metrics.overall_response,
             p.metrics.makespan,
@@ -951,7 +1341,7 @@ mod tests {
         let sizes = [2usize, 4, 8];
         let mixes = [HeterogeneityMix::Uniform, HeterogeneityMix::FatThin];
         let policies = [QueuePolicyKind::FifoSkip, QueuePolicyKind::EasyBackfill];
-        let points = scaling_sweep(DEFAULT_SEED, &sizes, &mixes, &policies, 2, 30.0);
+        let points = scaling_sweep(DEFAULT_SEED, &sizes, &mixes, &policies, &[1], 2, 30.0);
         assert_eq!(points.len(), sizes.len() * mixes.len() * policies.len());
         for p in &points {
             assert_eq!(p.jobs, 2 * p.workers);
@@ -985,7 +1375,33 @@ mod tests {
         assert!(csv.lines().count() == points.len() + 1, "csv rows");
         let json = scaling_json(DEFAULT_SEED, 2, 30.0, &points);
         assert!(json.contains("\"ablation\": \"scaling\""));
+        assert!(json.contains("\"shards\": 1"));
         assert!(crate::util::Json::parse(&json).is_ok(), "scaling json invalid");
+    }
+
+    #[test]
+    fn scaling_sweep_shards_axis_is_invariant_on_uniform_mixes() {
+        // The shards axis multiplies the point count, and on a uniform
+        // mix (one worker class — the partition collapses) every shard
+        // count reproduces the single-scheduler numbers bit for bit.
+        let sizes = [4usize];
+        let mixes = [HeterogeneityMix::Uniform];
+        let policies = [QueuePolicyKind::FifoSkip];
+        let points =
+            scaling_sweep(DEFAULT_SEED, &sizes, &mixes, &policies, &[1, 4], 2, 30.0);
+        assert_eq!(points.len(), 2);
+        assert_eq!(points[0].shards, 1);
+        assert_eq!(points[1].shards, 4);
+        assert_eq!(
+            points[0].metrics.overall_response.to_bits(),
+            points[1].metrics.overall_response.to_bits(),
+            "uniform mixes are shard-invariant"
+        );
+        assert_eq!(
+            points[0].metrics.makespan.to_bits(),
+            points[1].metrics.makespan.to_bits()
+        );
+        assert_eq!(points[0].utilization.to_bits(), points[1].utilization.to_bits());
     }
 
     #[test]

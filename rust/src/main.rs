@@ -103,7 +103,8 @@ COMMANDS:
   exp3 [--seed N]       Table III + Figs. 8-9: framework comparison
   run --scenario NAME [--jobs N] [--interval S] [--seed N] [--queue POLICY]
       [--preempt] [--two-tenant] [--engine linear|indexed]
-      [--legacy-scheduler] [--digest]
+      [--legacy-scheduler] [--digest] [--workers N] [--mix NAME]
+      [--shards N] [--threads N]
                         one scenario on a uniform random trace; POLICY is
                         fifo | fifo_strict | sjf | easy_backfill |
                         cons_backfill | fair_share and overrides the
@@ -115,15 +116,25 @@ COMMANDS:
                         --legacy-scheduler pins the pre-pipeline scheduler
                         cycle (the differential harness's reference path);
                         --digest prints the run's FNV-1a trace digest
+                        (per-shard + combined on sharded runs);
+                        --workers/--mix size and shape the cluster
+                        (default: the paper's 4 uniform workers);
+                        --shards partitions it into per-class scheduler
+                        domains run in parallel (clamped to the worker-
+                        class count — uniform mixes always collapse to 1,
+                        bit-identical to the single scheduler); --threads
+                        caps the sharded thread pool (outputs are
+                        thread-count-invariant)
   queues [--jobs N] [--interval S] [--seed N] [--json PATH]
                         queue-policy ablation table on CM_G_TG placement
                         (default: 200 jobs, 60 s mean interval)
   scaling [--sizes 8,16,32] [--mixes uniform,fat_thin] [--policies LIST]
-          [--jobs-per-worker N] [--interval S] [--seed N] [--out DIR]
-          [--json PATH]
+          [--shards 1,4] [--jobs-per-worker N] [--interval S] [--seed N]
+          [--out DIR] [--json PATH]
                         queue-policy x cluster-size scaling sweep across
-                        heterogeneity mixes (uniform | fat_thin | tiered);
-                        per-worker pressure is held constant across sizes.
+                        heterogeneity mixes (uniform | fat_thin | tiered)
+                        and scheduler-shard counts; per-worker pressure is
+                        held constant across sizes.
                         --out writes scaling_sweep.csv + per-mix SVG
                         response/makespan/utilization curves
   fairness [--jobs N] [--interval S] [--seed N] [--json PATH]
@@ -145,7 +156,8 @@ COMMANDS:
                         render every paper figure as SVG into DIR
   config PATH           run an experiment described by a JSON config file
                         (keys: scenario, seed, queue, preemption, pipeline,
-                        tenants, cluster, trace, output)
+                        tenants, cluster (incl. cluster.shards), trace,
+                        output)
 
 SCENARIOS (each pins kubelet, planner, controller, scheduler, queue,
 preemption):
@@ -320,16 +332,79 @@ fn cmd_run(args: &Args) -> Result<()> {
             .ok_or_else(|| anyhow!("unknown engine {e:?} (linear | indexed)"))?,
         None => kube_fgs::scheduler::PlacementEngineKind::Indexed,
     };
-    let out = experiments::run_scenario_pinned(
-        scenario,
-        queue,
-        preempt,
-        engine,
-        &[],
-        &trace,
-        seed,
-        args.has("legacy-scheduler"),
-    );
+    let mix = match args.flags.get("mix") {
+        Some(m) => Some(
+            HeterogeneityMix::parse(m)
+                .ok_or_else(|| anyhow!("unknown mix {m:?} (uniform | fat_thin | tiered)"))?,
+        ),
+        None => None,
+    };
+    let workers = match args.flags.get("workers") {
+        Some(w) => Some(
+            w.parse::<usize>()
+                .ok()
+                .filter(|&n| n > 0)
+                .ok_or_else(|| anyhow!("bad --workers {w:?} (positive integer)"))?,
+        ),
+        None => None,
+    };
+    // No shape flags -> the paper's 4-worker cluster, bit-identical to
+    // the historical `run`. Uniform shapes go through `with_workers` so
+    // homogeneous runs stay on the same constructor as the seed.
+    let cluster = match (workers, mix) {
+        (None, None) => None,
+        (w, m) => {
+            let w = w.unwrap_or(4);
+            Some(match m {
+                Some(HeterogeneityMix::Uniform) | None => {
+                    kube_fgs::cluster::ClusterSpec::with_workers(w)
+                }
+                Some(m) => kube_fgs::cluster::ClusterSpec::mixed(w, m),
+            })
+        }
+    };
+    let mut spec = experiments::RunSpec::new(scenario)
+        .seed(seed)
+        .queue(queue)
+        .preemption(preempt)
+        .engine(engine)
+        .legacy_scheduler(args.has("legacy-scheduler"))
+        .shards(args.get_usize("shards", 1));
+    if let Some(cluster) = cluster {
+        spec = spec.cluster(cluster);
+    }
+    if let Some(threads) = args.flags.get("threads") {
+        let threads = threads
+            .parse::<usize>()
+            .ok()
+            .filter(|&n| n > 0)
+            .ok_or_else(|| anyhow!("bad --threads {threads:?} (positive integer)"))?;
+        spec = spec.threads(threads);
+    }
+    let run = spec.run(&trace);
+    if run.is_sharded() {
+        let m = ExperimentMetrics::from_records(&run.records());
+        print!("{}", report::scenario_summary(scenario.name(), &m));
+        let stats = run.sched_stats();
+        println!(
+            "shards: {} domains ({} sessions, {} decisions total)",
+            run.shards.len(),
+            stats.sessions,
+            stats.decisions
+        );
+        if args.has("digest") {
+            for (i, d) in run.digests().iter().enumerate() {
+                println!("digest[shard {i}]: {}", d.to_json());
+            }
+            println!("combined digest: {:#018x}", run.combined_digest());
+        }
+        let unschedulable = run.unschedulable();
+        if !unschedulable.is_empty() {
+            println!("unschedulable jobs: {unschedulable:?}");
+        }
+        return Ok(());
+    }
+    let out = run.single();
     let m = ExperimentMetrics::from(&out);
     print!("{}", report::scenario_summary(scenario.name(), &m));
     if args.has("digest") {
@@ -407,6 +482,19 @@ fn cmd_scaling(args: &Args) -> Result<()> {
             .collect::<Result<_>>()?,
         None => kube_fgs::scheduler::ALL_QUEUE_POLICIES.to_vec(),
     };
+    let shards_axis: Vec<usize> = match args.flags.get("shards") {
+        Some(s) => s
+            .split(',')
+            .map(|x| {
+                x.trim()
+                    .parse::<usize>()
+                    .ok()
+                    .filter(|&n| n > 0)
+                    .ok_or_else(|| anyhow!("bad --shards entry {x:?} (positive integers)"))
+            })
+            .collect::<Result<_>>()?,
+        None => kube_fgs::experiments::SCALING_DEFAULT_SHARDS.to_vec(),
+    };
     // Unlike the older ablation commands, every flag of this subcommand
     // fails loudly on a typo — a sweep silently run at defaults would be
     // mislabeled data.
@@ -427,7 +515,7 @@ fn cmd_scaling(args: &Args) -> Result<()> {
         None => kube_fgs::experiments::SCALING_BASE_INTERVAL,
     };
     println!(
-        "Scaling sweep — sizes {sizes:?}, mixes {}, {} policies, \
+        "Scaling sweep — sizes {sizes:?}, mixes {}, {} policies, shards {shards_axis:?}, \
          {jobs_per_worker} jobs/worker, base interval {interval} s at 8 workers (seed {seed})\n",
         mixes.iter().map(|m| m.name()).collect::<Vec<_>>().join(","),
         policies.len(),
@@ -437,6 +525,7 @@ fn cmd_scaling(args: &Args) -> Result<()> {
         &sizes,
         &mixes,
         &policies,
+        &shards_axis,
         jobs_per_worker,
         interval,
     );
@@ -521,7 +610,7 @@ fn cmd_config(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("usage: kube-fgs config <path.json>"))?;
     let cfg = kube_fgs::config::ExperimentConfig::load(std::path::Path::new(path))?;
     println!(
-        "config: scenario {} queue {} preemption {} seed {} workers {} trace {:?}\n",
+        "config: scenario {} queue {} preemption {} seed {} workers {} shards {} trace {:?}\n",
         cfg.scenario,
         cfg.queue,
         cfg.preemption,
@@ -529,10 +618,20 @@ fn cmd_config(args: &Args) -> Result<()> {
         // The built cluster's own count — explicit `cluster.classes` may
         // size the cluster independently of the `worker_nodes` default.
         cfg.cluster().worker_count(),
+        cfg.shards,
         cfg.trace
     );
-    let sim = cfg.build_simulation();
-    let out = sim.run(&cfg.build_trace());
+    let run = cfg.run_spec().run(&cfg.build_trace());
+    if run.is_sharded() {
+        let m = ExperimentMetrics::from_records(&run.records());
+        print!("{}", report::scenario_summary(cfg.scenario.name(), &m));
+        println!("shards: {} domains", run.shards.len());
+        if cfg.csv {
+            print_job_csv(&m);
+        }
+        return Ok(());
+    }
+    let out = run.single();
     let m = ExperimentMetrics::from(&out);
     print!("{}", report::scenario_summary(cfg.scenario.name(), &m));
     if cfg.gantt {
@@ -540,23 +639,27 @@ fn cmd_config(args: &Args) -> Result<()> {
         print!("{}", report::gantt(&out, 100));
     }
     if cfg.csv {
-        let headers = ["job", "benchmark", "submit", "start", "finish"];
-        let rows: Vec<Vec<String>> = m
-            .per_job
-            .iter()
-            .map(|r| {
-                vec![
-                    r.id.0.to_string(),
-                    r.benchmark.name().to_string(),
-                    format!("{:.1}", r.submit_time),
-                    format!("{:.1}", r.start_time),
-                    format!("{:.1}", r.finish_time),
-                ]
-            })
-            .collect();
-        print!("\n{}", report::csv(&headers, &rows));
+        print_job_csv(&m);
     }
     Ok(())
+}
+
+fn print_job_csv(m: &ExperimentMetrics) {
+    let headers = ["job", "benchmark", "submit", "start", "finish"];
+    let rows: Vec<Vec<String>> = m
+        .per_job
+        .iter()
+        .map(|r| {
+            vec![
+                r.id.0.to_string(),
+                r.benchmark.name().to_string(),
+                format!("{:.1}", r.submit_time),
+                format!("{:.1}", r.start_time),
+                format!("{:.1}", r.finish_time),
+            ]
+        })
+        .collect();
+    print!("\n{}", report::csv(&headers, &rows));
 }
 
 fn cmd_e2e(args: &Args) -> Result<()> {

@@ -43,6 +43,41 @@ impl ExperimentMetrics {
         }
     }
 
+    /// Aggregate a bare record set — a sharded run's merged records,
+    /// where there is no single `SimOutput` to read the metrics from.
+    /// Same definitions as [`ExperimentMetrics::from`], over the union.
+    pub fn from_records(records: &[JobRecord]) -> ExperimentMetrics {
+        let mut per_job = records.to_vec();
+        per_job.sort_by_key(|r| r.id);
+        let avg_running = ALL_BENCHMARKS
+            .iter()
+            .filter(|b| per_job.iter().any(|r| r.benchmark == **b))
+            .map(|&b| {
+                let xs: Vec<f64> = per_job
+                    .iter()
+                    .filter(|r| r.benchmark == b)
+                    .map(JobRecord::running)
+                    .collect();
+                (b, xs.iter().sum::<f64>() / xs.len() as f64)
+            })
+            .collect();
+        let avg_wait = if per_job.is_empty() {
+            0.0
+        } else {
+            per_job.iter().map(JobRecord::wait).sum::<f64>() / per_job.len() as f64
+        };
+        let overall_response = per_job.iter().map(JobRecord::response).sum();
+        let makespan = if per_job.is_empty() {
+            0.0
+        } else {
+            let first =
+                per_job.iter().map(|r| r.submit_time).fold(f64::INFINITY, f64::min);
+            let last = per_job.iter().map(|r| r.finish_time).fold(0.0, f64::max);
+            last - first
+        };
+        ExperimentMetrics { per_job, overall_response, makespan, avg_running, avg_wait }
+    }
+
     /// Relative improvement of `self` over `baseline` for a metric
     /// extractor (positive = this run is better/smaller).
     pub fn improvement_over(
@@ -132,6 +167,7 @@ mod tests {
             ],
             unschedulable: vec![],
             api: ApiServer::new(ClusterSpec::paper(), KubeletConfig::default_policy()),
+            sched_stats: Default::default(),
         }
     }
 

@@ -423,6 +423,7 @@ mod tests {
             &[2, 4],
             &[HeterogeneityMix::Uniform, HeterogeneityMix::FatThin],
             &[QueuePolicyKind::FifoSkip, QueuePolicyKind::Sjf],
+            &[1],
             2,
             30.0,
         );

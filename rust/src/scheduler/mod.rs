@@ -61,6 +61,21 @@ pub use queue::{
 pub use score::{least_requested, taskgroup_score, GroupKey, GroupPlacement};
 pub use taskgroup::{build_groups, group_assignment, worker_order, TaskGroup};
 
+/// Scheduler-throughput counters, accumulated across every session of a
+/// [`Scheduler`]'s lifetime: how many sessions ran and how many placement
+/// decisions (jobs started) they committed. The simulator copies them
+/// into [`crate::simulator::SimOutput`] so benches can report
+/// sessions/sec and decisions/sec (`placement_bench.json` in CI tracks
+/// the trajectory). Counters never feed back into scheduling, so they
+/// cannot perturb any pinned digest.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SchedulerStats {
+    /// Scheduling sessions run (one per `cycle`/`cycle_with_projections`).
+    pub sessions: u64,
+    /// Jobs started across all sessions (gang commits + per-pod starts).
+    pub decisions: u64,
+}
+
 /// Victim-selection policy for priority preemption.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum PreemptionPolicy {
@@ -221,6 +236,13 @@ pub struct Scheduler {
     /// instead of the action pipeline — the pinned reference path the
     /// differential harness and the fuzz property compare against.
     pub force_legacy_scheduler: bool,
+    /// Answer every conservative-backfill earliest-fit query through the
+    /// retained linear scan ([`ResourceTimeline::earliest_fit_linear`])
+    /// instead of the segment-tree default — the pinned reference path
+    /// benches and property tests compare against.
+    pub force_linear_earliest_fit: bool,
+    /// Session/decision throughput counters (see [`SchedulerStats`]).
+    pub stats: SchedulerStats,
     /// The session's plugin registry (tiers consulted in order), built
     /// from `config.pipeline`; [`Scheduler::register_plugin`] extends it.
     plugins: PluginSet,
@@ -248,6 +270,8 @@ impl Scheduler {
             timeline_cache: None,
             force_timeline_rebuild: false,
             force_legacy_scheduler: false,
+            force_linear_earliest_fit: false,
+            stats: SchedulerStats::default(),
             plugins: PluginSet::from_config(&config.pipeline),
             preempted: Vec::new(),
             resized: Vec::new(),
@@ -682,11 +706,14 @@ impl Scheduler {
         now: f64,
         projected: &BTreeMap<JobId, f64>,
     ) -> Vec<JobId> {
-        if self.force_legacy_scheduler {
+        self.stats.sessions += 1;
+        let started = if self.force_legacy_scheduler {
             self.cycle_legacy(api, now, projected)
         } else {
             self.run_pipeline(api, now, projected)
-        }
+        };
+        self.stats.decisions += started.len() as u64;
+        started
     }
 
     /// The retired monolithic session loop, kept verbatim as the pinned
@@ -747,7 +774,9 @@ impl Scheduler {
                     // `now` means only the scored-greedy planner can be
                     // cornered — rely on the next session's retry instead
                     // of claiming live resources.
-                    if let Some((t_s, placement)) = tl.earliest_fit(api, job_id, est) {
+                    if let Some((t_s, placement)) =
+                        tl.earliest_fit_forced(api, job_id, est, self.force_linear_earliest_fit)
+                    {
                         if t_s > now + 1e-9 {
                             tl.claim(t_s, t_s + est, &placement);
                         }
@@ -856,8 +885,12 @@ impl Scheduler {
                             }
                             let tl = timeline.as_mut().unwrap();
                             let est = estimate(api, job_id);
-                            if let Some((t_s, placement)) = tl.earliest_fit(api, job_id, est)
-                            {
+                            if let Some((t_s, placement)) = tl.earliest_fit_forced(
+                                api,
+                                job_id,
+                                est,
+                                self.force_linear_earliest_fit,
+                            ) {
                                 // A fit at `now` (gang first-fits, planner
                                 // cornered itself) claims nothing — the
                                 // job retries next session.

@@ -808,7 +808,9 @@ impl Scheduler {
                 // only the scored-greedy planner can be cornered — rely
                 // on the next session's retry instead of claiming live
                 // resources.
-                if let Some((t_s, placement)) = tl.earliest_fit(api, job_id, est) {
+                if let Some((t_s, placement)) =
+                    tl.earliest_fit_forced(api, job_id, est, self.force_linear_earliest_fit)
+                {
                     if t_s > now + 1e-9 {
                         tl.claim(t_s, t_s + est, &placement);
                     }
@@ -1261,7 +1263,9 @@ impl Scheduler {
             }
             let tl = session.timeline.as_mut().unwrap();
             let est = queue::estimated_runtime(api, job_id) * session.wf;
-            if let Some((t_s, placement)) = tl.earliest_fit(api, job_id, est) {
+            if let Some((t_s, placement)) =
+                tl.earliest_fit_forced(api, job_id, est, self.force_linear_earliest_fit)
+            {
                 // A fit at `now` (gang first-fits, planner cornered
                 // itself) claims nothing — the job retries next session.
                 if t_s > now + 1e-9 {

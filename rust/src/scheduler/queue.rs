@@ -480,7 +480,61 @@ impl ResourceTimeline {
     /// the profile for its whole window `[t, t + est)`, with the placement
     /// found. `None` when no segment admits it (the job is infeasible
     /// under the current claims even with everything released).
+    ///
+    /// Candidate windows are evaluated against a range-minimum segment
+    /// tree built once per call. The window starting at segment `i`
+    /// covers exactly the segments `[i, i1)` — starts are strictly
+    /// ascending, so segment `i` is the first one ending past `t_i`, and
+    /// `i1` is the first segment starting at or after the window end —
+    /// and the elementwise `u64` minimum is associative and commutative,
+    /// so the tree's answer is *bit-identical* to the linear scan under
+    /// any association: O(points × (log points + nodes)) against the
+    /// retained reference's O(points² × nodes) under heavy conservative
+    /// queues. Debug builds assert every window minimum against
+    /// [`ResourceTimeline::min_free_over`]; whole simulations are pinned
+    /// across the two paths by a property test.
     pub fn earliest_fit(
+        &self,
+        api: &ApiServer,
+        job: JobId,
+        est: f64,
+    ) -> Option<(f64, Vec<(NodeId, Resources)>)> {
+        let tree = MinTree::build(&self.points);
+        for i in 0..self.points.len() {
+            let t = self.points[i].0;
+            let until = t + est;
+            // First segment starting at or after the window end; the
+            // window is empty (est <= 0) when it does not reach past `i`.
+            let i1 = self.points.partition_point(|p| p.0 < until);
+            let mut min = match tree.query(i, i1) {
+                Some(m) => m,
+                None => self.points.last().unwrap().1.clone(),
+            };
+            #[cfg(debug_assertions)]
+            debug_assert_eq!(
+                min,
+                self.min_free_over(t, until),
+                "segment-tree window minimum drifted from the linear scan at {t}"
+            );
+            let pending = api.jobs[&job]
+                .pods
+                .iter()
+                .map(|pid| &api.pods[pid])
+                .filter(|p| p.phase == PodPhase::Pending);
+            if let Some(placement) = first_fit_assignment(&api.spec, &mut min, pending) {
+                return Some((t, placement));
+            }
+        }
+        None
+    }
+
+    /// The retained linear-scan reference for
+    /// [`ResourceTimeline::earliest_fit`]: every candidate start re-scans
+    /// the whole profile through [`ResourceTimeline::min_free_over`].
+    /// Kept verbatim as the pinned reference the segment-tree path is
+    /// debug-asserted and property-pinned against; forced through every
+    /// scheduler call site by `Scheduler::force_linear_earliest_fit`.
+    pub fn earliest_fit_linear(
         &self,
         api: &ApiServer,
         job: JobId,
@@ -499,6 +553,104 @@ impl ResourceTimeline {
             }
         }
         None
+    }
+
+    /// Dispatch between the segment-tree default and the pinned linear
+    /// reference — the `force_timeline_rebuild`-style forcing hook the
+    /// scheduler threads through every earliest-fit call site.
+    pub fn earliest_fit_forced(
+        &self,
+        api: &ApiServer,
+        job: JobId,
+        est: f64,
+        force_linear: bool,
+    ) -> Option<(f64, Vec<(NodeId, Resources)>)> {
+        if force_linear {
+            self.earliest_fit_linear(api, job, est)
+        } else {
+            self.earliest_fit(api, job, est)
+        }
+    }
+
+    /// Build a profile directly from `(segment start, per-node free)`
+    /// points — starts strictly ascending, every free vector the same
+    /// length. Benches and property tests use this to drive
+    /// [`ResourceTimeline::earliest_fit`] against synthetic profiles
+    /// without simulating the running set that would produce them.
+    pub fn from_points(points: Vec<(f64, Vec<Resources>)>) -> ResourceTimeline {
+        assert!(!points.is_empty(), "profile needs at least the base segment");
+        for w in points.windows(2) {
+            assert!(w[0].0 < w[1].0, "segment starts must be strictly ascending");
+            assert_eq!(w[0].1.len(), w[1].1.len(), "per-node free vectors must agree");
+        }
+        ResourceTimeline { points }
+    }
+}
+
+/// Range-minimum segment tree over the profile's per-segment free
+/// vectors, built once per [`ResourceTimeline::earliest_fit`] call. The
+/// combining operation — elementwise `u64` minimum over
+/// `(cpu_milli, mem_bytes)` — is associative and commutative, so any
+/// association over a segment range yields the same bits as the linear
+/// left fold; no floating point is involved.
+struct MinTree {
+    n: usize,
+    /// Heap layout: `tree[n + i]` holds segment `i`'s free vector,
+    /// `tree[k]` the elementwise minimum of its two children.
+    tree: Vec<Vec<Resources>>,
+}
+
+impl MinTree {
+    fn build(points: &[(f64, Vec<Resources>)]) -> MinTree {
+        let n = points.len();
+        let mut tree = vec![Vec::new(); 2 * n];
+        for (i, (_, free)) in points.iter().enumerate() {
+            tree[n + i] = free.clone();
+        }
+        for k in (1..n).rev() {
+            tree[k] = Self::merged(&tree[2 * k], &tree[2 * k + 1]);
+        }
+        MinTree { n, tree }
+    }
+
+    fn merged(a: &[Resources], b: &[Resources]) -> Vec<Resources> {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| {
+                Resources::new(x.cpu_milli.min(y.cpu_milli), x.mem_bytes.min(y.mem_bytes))
+            })
+            .collect()
+    }
+
+    fn min_into(acc: &mut Option<Vec<Resources>>, seg: &[Resources]) {
+        match acc {
+            None => *acc = Some(seg.to_vec()),
+            Some(m) => {
+                for (mm, f) in m.iter_mut().zip(seg) {
+                    mm.cpu_milli = mm.cpu_milli.min(f.cpu_milli);
+                    mm.mem_bytes = mm.mem_bytes.min(f.mem_bytes);
+                }
+            }
+        }
+    }
+
+    /// Elementwise minimum over segments `[l, r)`; `None` when empty.
+    fn query(&self, l: usize, r: usize) -> Option<Vec<Resources>> {
+        let mut acc: Option<Vec<Resources>> = None;
+        let (mut l, mut r) = (l + self.n, r.min(self.n) + self.n);
+        while l < r {
+            if l & 1 == 1 {
+                Self::min_into(&mut acc, &self.tree[l]);
+                l += 1;
+            }
+            if r & 1 == 1 {
+                r -= 1;
+                Self::min_into(&mut acc, &self.tree[r]);
+            }
+            l /= 2;
+            r /= 2;
+        }
+        acc
     }
 }
 

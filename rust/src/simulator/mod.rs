@@ -20,6 +20,8 @@
 //! contributions — bit-identical to the full rescan (see
 //! [`Simulation::force_full_recompute`] and the property tests).
 
+pub mod shard;
+
 use std::collections::{BTreeMap, BTreeSet};
 
 use crate::apiserver::{ApiServer, JobPhase};
@@ -88,6 +90,10 @@ pub struct SimOutput {
     /// instead of aborting the run (they have no JobRecord).
     pub unschedulable: Vec<JobId>,
     pub api: ApiServer,
+    /// Scheduler-throughput counters for the whole run (sessions run,
+    /// placement decisions committed) — benches divide by wall time for
+    /// sessions/sec and decisions/sec; never part of any digest.
+    pub sched_stats: crate::scheduler::SchedulerStats,
 }
 
 impl SimOutput {
@@ -150,7 +156,7 @@ impl SimOutput {
 /// are IEEE-754 bit patterns and ids, all iterated in deterministic
 /// order), no dependencies, and cheap enough to fingerprint every fuzz
 /// case.
-fn fnv1a(bytes: impl IntoIterator<Item = u8>) -> u64 {
+pub(crate) fn fnv1a(bytes: impl IntoIterator<Item = u8>) -> u64 {
     let mut hash: u64 = 0xcbf2_9ce4_8422_2325;
     for b in bytes {
         hash ^= b as u64;
@@ -395,6 +401,13 @@ impl Simulation {
     /// differential golden-trace harness compares against.
     pub fn set_force_legacy_scheduler(&mut self, force: bool) {
         self.scheduler.force_legacy_scheduler = force;
+    }
+
+    /// Answer every conservative-backfill earliest-fit query through the
+    /// retained linear scan instead of the segment-tree default — the
+    /// pinned reference path benches and property tests compare against.
+    pub fn set_force_linear_earliest_fit(&mut self, force: bool) {
+        self.scheduler.force_linear_earliest_fit = force;
     }
 
     fn base_work_of(&self, bench: crate::workload::Benchmark) -> f64 {
@@ -792,7 +805,12 @@ impl Simulation {
                 running_secs: j.served_secs,
             })
             .collect();
-        SimOutput { records, unschedulable: self.unschedulable, api: self.api }
+        SimOutput {
+            records,
+            unschedulable: self.unschedulable,
+            api: self.api,
+            sched_stats: self.scheduler.stats,
+        }
     }
 }
 

@@ -56,7 +56,10 @@ fn check_golden(name: &str, out: &SimOutput) {
         std::fs::create_dir_all(golden_dir()).expect("create tests/golden");
         std::fs::write(&path, format!("{}\n", digest.to_json()))
             .unwrap_or_else(|e| panic!("golden: writing {}: {e}", path.display()));
-        eprintln!("golden: blessed {}", path.display());
+        eprintln!(
+            "golden: blessed {}\ngolden: to commit it, run:\n    git add rust/tests/golden/{name}.json",
+            path.display()
+        );
         return;
     }
     let text = std::fs::read_to_string(&path)

@@ -650,3 +650,208 @@ fn prop_base_work_scales_runtime() {
     let r = out200.records[0].running() / out100.records[0].running();
     assert!((r - 2.0).abs() < 1e-6, "ratio {r}");
 }
+
+/// Property: the segment-tree `earliest_fit` is bit-identical to the
+/// retained linear scan over whole simulations — same event-trace digest
+/// with `linear_earliest_fit(true)` forced as with the tree (the
+/// default) — across fuzzed (queue policy, cluster mix, trace shape,
+/// seed) tuples. Backfill queues exercise the hole-finding path hardest,
+/// so they get half the draws.
+#[test]
+fn prop_segment_tree_earliest_fit_matches_linear() {
+    use kube_fgs::cluster::HeterogeneityMix;
+    use kube_fgs::experiments::RunSpec;
+    use kube_fgs::scheduler::{QueuePolicyKind, ALL_QUEUE_POLICIES};
+    use kube_fgs::simulator::SimDigest;
+    use kube_fgs::workload::two_tenant_trace;
+
+    let mut rng = Rng::seed_from_u64(1414);
+    for case in 0..60 {
+        let queue = if rng.f64() < 0.5 {
+            if rng.f64() < 0.5 {
+                QueuePolicyKind::ConservativeBackfill
+            } else {
+                QueuePolicyKind::EasyBackfill
+            }
+        } else {
+            ALL_QUEUE_POLICIES[rng.range_usize(0, ALL_QUEUE_POLICIES.len())]
+        };
+        let workers = rng.range_usize(2, 9);
+        let mix = rng.range_usize(0, 3);
+        let cluster = match mix {
+            0 => ClusterSpec::with_workers(workers),
+            1 => ClusterSpec::mixed(workers, HeterogeneityMix::FatThin),
+            _ => ClusterSpec::mixed(workers, HeterogeneityMix::Tiered),
+        };
+        let n_jobs = rng.range_usize(4, 13);
+        let interval = rng.range_f64(15.0, 60.0);
+        let seed = rng.next_u64();
+        let trace = if rng.f64() < 0.5 {
+            uniform_trace(n_jobs, interval, seed)
+        } else {
+            two_tenant_trace(n_jobs, interval, seed)
+        };
+        let mk = |linear: bool| {
+            RunSpec::new(Scenario::CmGTg)
+                .seed(seed)
+                .cluster(cluster.clone())
+                .queue(queue)
+                .linear_earliest_fit(linear)
+                .run(&trace)
+                .single()
+        };
+        let tree = mk(false);
+        let linear = mk(true);
+        assert_eq!(
+            SimDigest::of(&tree),
+            SimDigest::of(&linear),
+            "case {case}: {queue:?} mix {mix} x{workers} seed {seed}: segment tree diverged from linear scan"
+        );
+    }
+}
+
+/// Property: on shard-invariant configs — uniform clusters, whose single
+/// worker capacity class can never be split across domains — requesting
+/// any shard count is bit-identical to `shards = 1`: same digest, same
+/// merged metrics to the last f64 bit.
+#[test]
+fn prop_sharded_digest_matches_unsharded_on_uniform() {
+    use kube_fgs::experiments::RunSpec;
+    use kube_fgs::workload::two_tenant_trace;
+
+    let mut rng = Rng::seed_from_u64(1515);
+    for case in 0..40 {
+        let workers = rng.range_usize(2, 13);
+        let shards = rng.range_usize(2, 9);
+        let n_jobs = rng.range_usize(4, 16);
+        let interval = rng.range_f64(15.0, 60.0);
+        let seed = rng.next_u64();
+        let trace = if rng.f64() < 0.5 {
+            uniform_trace(n_jobs, interval, seed)
+        } else {
+            two_tenant_trace(n_jobs, interval, seed)
+        };
+        let mk = |shards: usize| {
+            RunSpec::new(Scenario::CmGTg)
+                .seed(seed)
+                .cluster(ClusterSpec::with_workers(workers))
+                .shards(shards)
+                .run(&trace)
+        };
+        let one = mk(1);
+        let many = mk(shards);
+        assert!(
+            !many.is_sharded(),
+            "case {case}: uniform cluster must collapse to a single domain"
+        );
+        assert_eq!(
+            one.digests(),
+            many.digests(),
+            "case {case}: x{workers} shards {shards} seed {seed} diverged"
+        );
+        assert_eq!(
+            one.overall_response().to_bits(),
+            many.overall_response().to_bits(),
+            "case {case}: overall response drifted"
+        );
+        assert_eq!(
+            one.makespan().to_bits(),
+            many.makespan().to_bits(),
+            "case {case}: makespan drifted"
+        );
+    }
+}
+
+/// Property: a sharded run's result is a pure function of (spec, seed) —
+/// independent of the worker thread count. The dispatcher assigns jobs
+/// before any thread starts and each domain owns a fixed RNG stream, so
+/// threads 1, 2, and 8 must produce identical per-shard digest vectors
+/// and the same combined digest.
+#[test]
+fn prop_sharded_thread_count_invariance() {
+    use kube_fgs::cluster::HeterogeneityMix;
+    use kube_fgs::experiments::RunSpec;
+    use kube_fgs::workload::two_tenant_trace;
+
+    let mut rng = Rng::seed_from_u64(1616);
+    for case in 0..20 {
+        let workers = rng.range_usize(4, 13);
+        let mix = if rng.f64() < 0.5 {
+            HeterogeneityMix::FatThin
+        } else {
+            HeterogeneityMix::Tiered
+        };
+        let shards = rng.range_usize(2, 5);
+        let n_jobs = rng.range_usize(6, 20);
+        let interval = rng.range_f64(15.0, 60.0);
+        let seed = rng.next_u64();
+        let trace = two_tenant_trace(n_jobs, interval, seed);
+        let mk = |threads: usize| {
+            RunSpec::new(Scenario::CmGTg)
+                .seed(seed)
+                .cluster(ClusterSpec::mixed(workers, mix))
+                .shards(shards)
+                .threads(threads)
+                .run(&trace)
+        };
+        let t1 = mk(1);
+        assert!(t1.is_sharded(), "case {case}: {mix:?} x{workers} must shard");
+        for threads in [2usize, 8] {
+            let tn = mk(threads);
+            assert_eq!(
+                t1.digests(),
+                tn.digests(),
+                "case {case}: {mix:?} x{workers} shards {shards} seed {seed}: \
+                 {threads} threads diverged from 1"
+            );
+            assert_eq!(
+                t1.combined_digest(),
+                tn.combined_digest(),
+                "case {case}: combined digest drifted at {threads} threads"
+            );
+        }
+    }
+}
+
+/// Property: sharded runs are deterministic — the same `RunSpec` run
+/// twice yields identical per-shard digests and an identically merged
+/// record stream (every job exactly once, ids strictly ascending).
+#[test]
+fn prop_sharded_run_is_deterministic_and_merges_completely() {
+    use kube_fgs::cluster::HeterogeneityMix;
+    use kube_fgs::experiments::RunSpec;
+    use kube_fgs::workload::two_tenant_trace;
+
+    let mut rng = Rng::seed_from_u64(1717);
+    for case in 0..20 {
+        let workers = rng.range_usize(4, 13);
+        let shards = rng.range_usize(2, 5);
+        let n_jobs = rng.range_usize(6, 20);
+        let interval = rng.range_f64(15.0, 60.0);
+        let seed = rng.next_u64();
+        let trace = two_tenant_trace(n_jobs, interval, seed);
+        let mk = || {
+            RunSpec::new(Scenario::CmGTg)
+                .seed(seed)
+                .cluster(ClusterSpec::mixed(workers, HeterogeneityMix::Tiered))
+                .shards(shards)
+                .run(&trace)
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a.digests(), b.digests(), "case {case}: rerun diverged (seed {seed})");
+        let records = a.records();
+        let unschedulable = a.unschedulable();
+        assert_eq!(
+            records.len() + unschedulable.len(),
+            n_jobs,
+            "case {case}: merged output lost a job"
+        );
+        for w in records.windows(2) {
+            assert!(
+                w[0].id < w[1].id,
+                "case {case}: merged records not strictly ascending by id"
+            );
+        }
+    }
+}
