@@ -11,17 +11,20 @@
 //! execution of its Pallas kernel on this machine; additionally, each
 //! running job executes its payload steps live while the schedule replays,
 //! and MiniFE's CG residual is checked to decrease (numerics sanity).
+//! A final section replays the open-loop production serving mix
+//! (workload::arrivals) under the same measured kernel times and scores
+//! it against each class's latency SLO.
 //!
 //! Run: make artifacts && cargo run --release --example e2e_serve
 
 use std::collections::BTreeMap;
 
 use kube_fgs::experiments;
-use kube_fgs::metrics::ExperimentMetrics;
+use kube_fgs::metrics::{ExperimentMetrics, SloReport};
 use kube_fgs::report;
 use kube_fgs::runtime::{default_artifacts_dir, Runtime};
 use kube_fgs::scenario::{Scenario, TABLE2_SCENARIOS};
-use kube_fgs::workload::{exp2_trace, Benchmark, ALL_BENCHMARKS};
+use kube_fgs::workload::{exp2_trace, serve_trace, Benchmark, ALL_BENCHMARKS};
 
 fn main() -> anyhow::Result<()> {
     let seed = experiments::DEFAULT_SEED;
@@ -114,6 +117,38 @@ fn main() -> anyhow::Result<()> {
         (1.0 - fg / cm) * 100.0
     );
     anyhow::ensure!(fg < cm && cm < none, "fine-grained scheduling must win e2e");
+
+    // 6. Production serving replay under the same measured kernel times:
+    //    the open-loop mix (diurnal HPC gangs + bursty AI inference +
+    //    microservices, workload::arrivals) at 2x nominal traffic, scored
+    //    against each class's latency SLO.
+    println!("\n== e2e: production serving mix under measured kernel times ==");
+    let serve = serve_trace(2.0 * 3600.0, 2.0, seed);
+    let out = experiments::RunSpec::new(Scenario::CmGTg)
+        .seed(seed)
+        .base_work(&base_work)
+        .run(&serve)
+        .single();
+    let slo = SloReport::from_records(&out.records);
+    for c in &slo.per_class {
+        println!(
+            "  {:<14} {:>4} jobs  p99 {:>8.0} s  SLO {:>5.0} s  violations {}",
+            c.class.name(),
+            c.jobs,
+            c.percentiles.p99,
+            c.slo_secs,
+            c.violations
+        );
+    }
+    println!(
+        "  overall: {} jobs, p99 {:.0} s, {} SLO violations",
+        slo.jobs, slo.overall.p99, slo.violations
+    );
+    anyhow::ensure!(
+        slo.jobs == out.records.len() && out.unschedulable.is_empty(),
+        "every serve job must finish and be scored against its class SLO"
+    );
+
     println!("e2e OK");
     Ok(())
 }

@@ -1,24 +1,35 @@
 //! Future-work demo (paper §VI): scheduling mixed HPC-AI workloads plus
 //! I/O-profile applications with the fine-grained policies.
 //!
-//! Uses the extended catalogue (workload::extensions): AI-training jobs
-//! split like CPU-intensive HPC jobs; IOR-like jobs map to the network/I-O
-//! profile and stay coarse-grained.
+//! Part 1 uses the extended catalogue (workload::extensions): AI-training
+//! jobs split like CPU-intensive HPC jobs; IOR-like jobs map to the
+//! network/I-O profile and stay coarse-grained.
+//!
+//! Part 2 grounds the mix in the open-loop production-traffic generator
+//! (workload::arrivals): diurnal HPC gangs, bursty MMPP AI-inference jobs,
+//! and steady microservices arrive over a six-hour horizon, and the
+//! policies are compared on tail latency and per-class SLO violations.
 //!
 //! Run: cargo run --release --example mixed_hpc_ai
 
 use kube_fgs::experiments::RunSpec;
-use kube_fgs::metrics::ExperimentMetrics;
+use kube_fgs::metrics::{ExperimentMetrics, SloReport};
 use kube_fgs::report;
 use kube_fgs::scenario::Scenario;
-use kube_fgs::workload::mixed_hpc_ai_trace;
+use kube_fgs::workload::{mixed_hpc_ai_trace, serve_trace, ALL_SERVE_CLASSES};
+
+const SCENARIOS: [Scenario; 4] =
+    [Scenario::None_, Scenario::Cm, Scenario::CmSTg, Scenario::CmGTg];
 
 fn main() {
     let trace = mixed_hpc_ai_trace(3, 400.0);
-    println!("mixed HPC-AI trace: {} jobs (3 waves of DGEMM / AI-training / STREAM / IOR)\n", trace.len());
+    println!(
+        "mixed HPC-AI trace: {} jobs (3 waves of DGEMM / AI-training / STREAM / IOR)\n",
+        trace.len()
+    );
 
     let mut rows = Vec::new();
-    for scenario in [Scenario::None_, Scenario::Cm, Scenario::CmSTg, Scenario::CmGTg] {
+    for scenario in SCENARIOS {
         let out = RunSpec::new(scenario).seed(11).run(&trace).single();
         let m = ExperimentMetrics::from(&out);
         rows.push(vec![
@@ -42,5 +53,41 @@ fn main() {
         "\nfine-grained scheduling carries over to the mixed HPC-AI workload: \
          CM_G_TG improves overall response by {:.0}% vs CM",
         (1.0 - fg / cm) * 100.0
+    );
+
+    // Part 2: the same HPC + AI + microservice blend, but arriving through
+    // the open-loop production-traffic generator at 2x nominal load.
+    let serve = serve_trace(6.0 * 3600.0, 2.0, 11);
+    println!(
+        "\nproduction serving mix: {} jobs over 6 h at 2x nominal traffic \
+         ({} tenant classes)\n",
+        serve.len(),
+        ALL_SERVE_CLASSES.len()
+    );
+    let mut slo_rows = Vec::new();
+    for scenario in SCENARIOS {
+        let out = RunSpec::new(scenario).seed(11).run(&serve).single();
+        let slo = SloReport::from_records(&out.records);
+        slo_rows.push(vec![
+            scenario.name().to_string(),
+            format!("{:.0}", slo.overall.p50),
+            format!("{:.0}", slo.overall.p95),
+            format!("{:.0}", slo.overall.p99),
+            slo.violations.to_string(),
+            format!("{:.1}", slo.violation_fraction() * 100.0),
+        ]);
+    }
+    print!(
+        "{}",
+        report::table(
+            &["scenario", "p50 (s)", "p95 (s)", "p99 (s)", "SLO viol", "viol %"],
+            &slo_rows
+        )
+    );
+    let cm_viol: usize = slo_rows[1][4].parse().unwrap();
+    let fg_viol: usize = slo_rows[3][4].parse().unwrap();
+    println!(
+        "\nunder open-loop production traffic, CM_G_TG violates {fg_viol} SLOs \
+         vs CM's {cm_viol}"
     );
 }

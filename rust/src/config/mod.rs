@@ -50,7 +50,8 @@ use crate::scheduler::{
 use crate::simulator::Simulation;
 use crate::util::Json;
 use crate::workload::{
-    elastic_trace, exp1_trace, exp2_trace, two_tenant_trace, uniform_trace, JobSpec, TenantId,
+    elastic_trace, exp1_trace, exp2_trace, serve_trace, serve_trace_elastic, two_tenant_trace,
+    uniform_trace, JobSpec, TenantId,
 };
 
 /// Parsed experiment configuration.
@@ -111,6 +112,11 @@ pub enum TraceConfig {
     /// Two-tenant trace of uniformly elastic jobs (`min 2 / preferred 8 /
     /// max 16` workers) — the elasticity ablation's workload.
     Elastic { jobs: usize, mean_interval: f64 },
+    /// Open-loop production-serving trace (`workload::arrivals`): diurnal
+    /// HPC gangs + bursty (MMPP) AI inference + steady microservices over
+    /// `horizon_hours`, scaled by the traffic `multiplier`; `elastic`
+    /// swaps the gangs for malleable ones.
+    Serve { horizon_hours: f64, multiplier: f64, elastic: bool },
 }
 
 impl ExperimentConfig {
@@ -458,6 +464,40 @@ impl ExperimentConfig {
                     .as_f64()
                     .unwrap_or(30.0),
             },
+            "serve" => {
+                let horizon_hours = match json.get("trace").get("horizon_hours") {
+                    Json::Null => crate::experiments::SERVE_HORIZON_HOURS,
+                    h => {
+                        let f = h.as_f64().ok_or_else(|| {
+                            anyhow!("config: trace.horizon_hours must be a number")
+                        })?;
+                        if f <= 0.0 || !f.is_finite() {
+                            bail!("config: trace.horizon_hours must be positive");
+                        }
+                        f
+                    }
+                };
+                let multiplier = match json.get("trace").get("multiplier") {
+                    Json::Null => 1.0,
+                    m => {
+                        let f = m.as_f64().ok_or_else(|| {
+                            anyhow!("config: trace.multiplier must be a number")
+                        })?;
+                        if f <= 0.0 || !f.is_finite() {
+                            bail!("config: trace.multiplier must be positive");
+                        }
+                        f
+                    }
+                };
+                let elastic = match json.get("trace").get("elastic") {
+                    Json::Null => false,
+                    Json::Bool(b) => *b,
+                    other => {
+                        bail!("config: trace.elastic must be a bool, got {other:?}")
+                    }
+                };
+                TraceConfig::Serve { horizon_hours, multiplier, elastic }
+            }
             other => bail!("config: unknown trace.kind {other:?}"),
         };
 
@@ -515,6 +555,13 @@ impl ExperimentConfig {
             }
             TraceConfig::Elastic { jobs, mean_interval } => {
                 elastic_trace(jobs, mean_interval, self.seed)
+            }
+            TraceConfig::Serve { horizon_hours, multiplier, elastic } => {
+                if elastic {
+                    serve_trace_elastic(horizon_hours * 3600.0, multiplier, self.seed)
+                } else {
+                    serve_trace(horizon_hours * 3600.0, multiplier, self.seed)
+                }
             }
         }
     }
@@ -866,6 +913,67 @@ mod tests {
         )
         .unwrap();
         assert_eq!(run.build_simulation().run(&run.build_trace()).records.len(), 8);
+    }
+
+    #[test]
+    fn serve_trace_keys_parse_and_validate() {
+        let c = ExperimentConfig::parse(
+            r#"{
+              "scenario": "CM_G_TG",
+              "trace": { "kind": "serve", "horizon_hours": 2, "multiplier": 4, "elastic": false }
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(
+            c.trace,
+            TraceConfig::Serve { horizon_hours: 2.0, multiplier: 4.0, elastic: false }
+        );
+        let trace = c.build_trace();
+        assert!(!trace.is_empty(), "a 2 h serve horizon at 4x produces jobs");
+        assert!(trace.iter().all(|j| j.elasticity.is_none()));
+        // Defaults: the full sweep horizon at 1x, rigid gangs.
+        let d = ExperimentConfig::parse(
+            r#"{"scenario":"CM","trace":{"kind":"serve"}}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            d.trace,
+            TraceConfig::Serve {
+                horizon_hours: crate::experiments::SERVE_HORIZON_HOURS,
+                multiplier: 1.0,
+                elastic: false
+            }
+        );
+        // The elastic mix marks its gangs malleable.
+        let e = ExperimentConfig::parse(
+            r#"{
+              "scenario": "EL_MALL",
+              "trace": { "kind": "serve", "horizon_hours": 2, "elastic": true }
+            }"#,
+        )
+        .unwrap();
+        assert!(e.build_trace().iter().any(|j| j.elasticity.is_some()));
+        // Rejections: non-positive / mistyped knobs.
+        for bad in [
+            r#"{"scenario":"CM","trace":{"kind":"serve","horizon_hours":0}}"#,
+            r#"{"scenario":"CM","trace":{"kind":"serve","horizon_hours":-4}}"#,
+            r#"{"scenario":"CM","trace":{"kind":"serve","horizon_hours":"long"}}"#,
+            r#"{"scenario":"CM","trace":{"kind":"serve","multiplier":0}}"#,
+            r#"{"scenario":"CM","trace":{"kind":"serve","multiplier":"heavy"}}"#,
+            r#"{"scenario":"CM","trace":{"kind":"serve","elastic":"yes"}}"#,
+        ] {
+            assert!(ExperimentConfig::parse(bad).is_err(), "should reject: {bad}");
+        }
+        // A serve config runs end-to-end.
+        let run = ExperimentConfig::parse(
+            r#"{
+              "scenario": "CM_G_TG",
+              "trace": { "kind": "serve", "horizon_hours": 1, "multiplier": 2 }
+            }"#,
+        )
+        .unwrap();
+        let out = run.build_simulation().run(&run.build_trace());
+        assert_eq!(out.records.len(), run.build_trace().len());
     }
 
     #[test]

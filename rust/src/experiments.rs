@@ -7,7 +7,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::cluster::{ClusterSpec, HeterogeneityMix, JobId, Resources};
-use crate::metrics::ExperimentMetrics;
+use crate::metrics::{ExperimentMetrics, SloReport};
 use crate::perfmodel::Calibration;
 use crate::report;
 use crate::scenario::{Scenario, ELASTIC_SCENARIOS, EXP3_SCENARIOS, TABLE2_SCENARIOS};
@@ -18,8 +18,8 @@ use crate::scheduler::{
 use crate::simulator::{shard, JobRecord, SimDigest, SimOutput, Simulation};
 use crate::util::jain_index;
 use crate::workload::{
-    elastic_trace, exp1_trace, exp2_trace, two_tenant_trace, uniform_trace, Benchmark,
-    JobSpec, TenantId, ALL_BENCHMARKS, BATCH_TENANT, PROD_TENANT,
+    elastic_trace, exp1_trace, exp2_trace, serve_trace, serve_trace_elastic, two_tenant_trace,
+    uniform_trace, Benchmark, JobSpec, TenantId, ALL_BENCHMARKS, BATCH_TENANT, PROD_TENANT,
 };
 
 /// Default experiment seed (any seed reproduces the paper's *shape*; this
@@ -1044,6 +1044,287 @@ pub fn elasticity_json(
 }
 
 // ---------------------------------------------------------------------
+// Serve saturation sweep — open-loop production traffic
+// (workload::arrivals) replayed at increasing rate multipliers to locate
+// each policy's saturation knee (the serving axis of the roadmap).
+// ---------------------------------------------------------------------
+
+/// Default replay horizon of the serve sweep (two simulated days, so the
+/// diurnal envelope completes whole periods).
+pub const SERVE_HORIZON_HOURS: f64 = 48.0;
+/// Default traffic multipliers of the sweep (pass `--multipliers` up to
+/// 100× to chase a knee the defaults don't reach).
+pub const SERVE_DEFAULT_MULTIPLIERS: [f64; 3] = [1.0, 4.0, 16.0];
+/// Default policies of the (rigid) serve sweep: the coarse baseline vs
+/// the paper's full fine-grained configuration.
+pub const SERVE_DEFAULT_SCENARIOS: [Scenario; 2] = [Scenario::Cm, Scenario::CmGTg];
+/// SLO-violation fraction at which a policy counts as saturated; the
+/// knee is the interpolated multiplier where its curve crosses this.
+pub const SERVE_KNEE_THRESHOLD: f64 = 0.5;
+
+/// One point of the serve sweep: a policy replaying the serving mix at
+/// one traffic multiplier.
+#[derive(Debug, Clone)]
+pub struct ServePoint {
+    pub scenario: Scenario,
+    pub multiplier: f64,
+    /// Jobs submitted by the generator over the horizon.
+    pub jobs: usize,
+    pub unschedulable: usize,
+    pub metrics: ExperimentMetrics,
+    /// Per-class + overall latency/SLO accounting of the run.
+    pub slo: SloReport,
+    /// Core-seconds served over (makespan × worker cores), in `[0, 1]`.
+    pub utilization: f64,
+    pub preemptions: usize,
+    pub resizes: usize,
+}
+
+/// Replay the serving mix at every `scenarios × multipliers` grid point
+/// over `horizon_secs` of open-loop traffic. `elastic` swaps in the
+/// malleable-gang mix ([`serve_trace_elastic`]); `shards`/`threads`
+/// compose with the scale-out axis exactly as `RunSpec` does (the trace
+/// and the per-point accounting are shard-invariant on the homogeneous
+/// paper cluster, which tests/properties.rs pins).
+pub fn serve_sweep(
+    seed: u64,
+    scenarios: &[Scenario],
+    multipliers: &[f64],
+    horizon_secs: f64,
+    shards: usize,
+    threads: Option<usize>,
+    elastic: bool,
+) -> Vec<ServePoint> {
+    let cluster = ClusterSpec::paper();
+    let mut points = Vec::new();
+    for &multiplier in multipliers {
+        let trace = if elastic {
+            serve_trace_elastic(horizon_secs, multiplier, seed)
+        } else {
+            serve_trace(horizon_secs, multiplier, seed)
+        };
+        for &scenario in scenarios {
+            let mut spec = RunSpec::new(scenario).seed(seed).shards(shards);
+            if let Some(t) = threads {
+                spec = spec.threads(t);
+            }
+            let run = spec.run(&trace);
+            let records = run.records();
+            let metrics = if run.is_sharded() {
+                ExperimentMetrics::from_records(&records)
+            } else {
+                ExperimentMetrics::from(&run.shards[0])
+            };
+            points.push(ServePoint {
+                scenario,
+                multiplier,
+                jobs: trace.len(),
+                unschedulable: run.unschedulable().len(),
+                slo: SloReport::from_records(&records),
+                utilization: run_utilization(&run, &cluster),
+                preemptions: run.shards.iter().map(SimOutput::preemption_count).sum(),
+                resizes: run.shards.iter().map(SimOutput::resize_count).sum(),
+                metrics,
+            });
+        }
+    }
+    points
+}
+
+/// A policy's saturation knee: the multiplier at which its SLO-violation
+/// fraction crosses [`SERVE_KNEE_THRESHOLD`], linearly interpolated
+/// between the surrounding sweep points. `None` means the policy never
+/// saturated over the swept multipliers (an unbounded knee — compare
+/// with `unwrap_or(f64::INFINITY)`).
+pub fn serve_knee(points: &[ServePoint], scenario: Scenario) -> Option<f64> {
+    let mut curve: Vec<(f64, f64)> = points
+        .iter()
+        .filter(|p| p.scenario == scenario)
+        .map(|p| (p.multiplier, p.slo.violation_fraction()))
+        .collect();
+    curve.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut prev: Option<(f64, f64)> = None;
+    for (m, v) in curve {
+        if v >= SERVE_KNEE_THRESHOLD {
+            return Some(match prev {
+                Some((pm, pv)) if v > pv => {
+                    pm + (SERVE_KNEE_THRESHOLD - pv) * (m - pm) / (v - pv)
+                }
+                _ => m,
+            });
+        }
+        prev = Some((m, v));
+    }
+    None
+}
+
+/// The swept scenarios in first-appearance order with their knees.
+pub fn serve_knees(points: &[ServePoint]) -> Vec<(Scenario, Option<f64>)> {
+    let mut scenarios: Vec<Scenario> = Vec::new();
+    for p in points {
+        if !scenarios.contains(&p.scenario) {
+            scenarios.push(p.scenario);
+        }
+    }
+    scenarios.into_iter().map(|s| (s, serve_knee(points, s))).collect()
+}
+
+/// Serve-sweep text table (one row per policy × multiplier), followed by
+/// the knee summary via [`serve_knees`] in the CLI.
+pub fn serve_table(points: &[ServePoint]) -> String {
+    let rows = points
+        .iter()
+        .map(|p| {
+            vec![
+                p.scenario.name().to_string(),
+                p.multiplier.to_string(),
+                p.jobs.to_string(),
+                format!("{:.0}", p.slo.overall.p50),
+                format!("{:.0}", p.slo.overall.p95),
+                format!("{:.0}", p.slo.overall.p99),
+                p.slo.violations.to_string(),
+                format!("{:.1}%", p.slo.violation_fraction() * 100.0),
+                format!("{:.3}", p.utilization),
+            ]
+        })
+        .collect::<Vec<_>>();
+    report::table(
+        &[
+            "scenario",
+            "multiplier",
+            "jobs",
+            "p50 (s)",
+            "p95 (s)",
+            "p99 (s)",
+            "SLO viol",
+            "viol %",
+            "utilization",
+        ],
+        &rows,
+    )
+}
+
+/// Serve-sweep CSV (overall percentiles + per-class breakdown per point).
+pub fn serve_csv(points: &[ServePoint]) -> String {
+    let mut headers = vec![
+        "scenario".to_string(),
+        "multiplier".to_string(),
+        "jobs".to_string(),
+        "unschedulable".to_string(),
+        "p50_s".to_string(),
+        "p95_s".to_string(),
+        "p99_s".to_string(),
+        "violations".to_string(),
+        "violation_fraction".to_string(),
+        "utilization".to_string(),
+        "preemptions".to_string(),
+        "resizes".to_string(),
+    ];
+    if let Some(first) = points.first() {
+        for c in &first.slo.per_class {
+            let name = c.class.name();
+            headers.push(format!("{name}_jobs"));
+            headers.push(format!("{name}_violations"));
+            headers.push(format!("{name}_p99_s"));
+        }
+    }
+    let headers_ref: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let rows: Vec<Vec<String>> = points
+        .iter()
+        .map(|p| {
+            let mut row = vec![
+                p.scenario.name().to_string(),
+                p.multiplier.to_string(),
+                p.jobs.to_string(),
+                p.unschedulable.to_string(),
+                format!("{:.3}", p.slo.overall.p50),
+                format!("{:.3}", p.slo.overall.p95),
+                format!("{:.3}", p.slo.overall.p99),
+                p.slo.violations.to_string(),
+                format!("{:.4}", p.slo.violation_fraction()),
+                format!("{:.4}", p.utilization),
+                p.preemptions.to_string(),
+                p.resizes.to_string(),
+            ];
+            for c in &p.slo.per_class {
+                row.push(c.jobs.to_string());
+                row.push(c.violations.to_string());
+                row.push(format!("{:.3}", c.percentiles.p99));
+            }
+            row
+        })
+        .collect();
+    report::csv(&headers_ref, &rows)
+}
+
+/// Serve-sweep results as a JSON document (CI artifact; hand-rendered —
+/// the substrate has no serde): per policy, the knee plus the full
+/// multiplier curve with per-class SLO accounting.
+pub fn serve_json(
+    seed: u64,
+    horizon_hours: f64,
+    elastic: bool,
+    points: &[ServePoint],
+) -> String {
+    let mut out = String::from("{\n");
+    out.push_str(&format!(
+        "  \"ablation\": \"serve\", \"seed\": {seed}, \"horizon_hours\": {horizon_hours}, \"elastic\": {elastic}, \"knee_threshold\": {SERVE_KNEE_THRESHOLD},\n"
+    ));
+    out.push_str("  \"policies\": [\n");
+    let knees = serve_knees(points);
+    for (si, (scenario, knee)) in knees.iter().enumerate() {
+        let knee_json =
+            knee.map(|k| format!("{k:.4}")).unwrap_or_else(|| "null".to_string());
+        out.push_str(&format!(
+            "    {{\"scenario\": \"{}\", \"knee_multiplier\": {knee_json}, \"points\": [\n",
+            scenario.name()
+        ));
+        let of_scenario: Vec<&ServePoint> =
+            points.iter().filter(|p| p.scenario == *scenario).collect();
+        for (i, p) in of_scenario.iter().enumerate() {
+            let classes = p
+                .slo
+                .per_class
+                .iter()
+                .map(|c| {
+                    format!(
+                        "{{\"class\": \"{}\", \"slo_s\": {}, \"jobs\": {}, \"violations\": {}, \"p50_s\": {:.3}, \"p99_s\": {:.3}}}",
+                        c.class.name(),
+                        c.slo_secs,
+                        c.jobs,
+                        c.violations,
+                        c.percentiles.p50,
+                        c.percentiles.p99,
+                    )
+                })
+                .collect::<Vec<_>>()
+                .join(", ");
+            out.push_str(&format!(
+                "      {{\"multiplier\": {}, \"jobs\": {}, \"unschedulable\": {}, \"p50_s\": {:.3}, \"p95_s\": {:.3}, \"p99_s\": {:.3}, \"violations\": {}, \"violation_fraction\": {:.4}, \"utilization\": {:.4}, \"preemptions\": {}, \"resizes\": {}, \"classes\": [{classes}]}}{}\n",
+                p.multiplier,
+                p.jobs,
+                p.unschedulable,
+                p.slo.overall.p50,
+                p.slo.overall.p95,
+                p.slo.overall.p99,
+                p.slo.violations,
+                p.slo.violation_fraction(),
+                p.utilization,
+                p.preemptions,
+                p.resizes,
+                if i + 1 < of_scenario.len() { "," } else { "" },
+            ));
+        }
+        out.push_str(&format!(
+            "    ]}}{}\n",
+            if si + 1 < knees.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+// ---------------------------------------------------------------------
 // Fig. 3 — Benchmarks MPI profiling analysis.
 // ---------------------------------------------------------------------
 
@@ -1402,6 +1683,110 @@ mod tests {
             points[1].metrics.makespan.to_bits()
         );
         assert_eq!(points[0].utilization.to_bits(), points[1].utilization.to_bits());
+    }
+
+    /// Synthetic point with `viol` of `jobs` microservice records
+    /// violating their SLO — for exercising the knee math in isolation.
+    fn synthetic_point(scenario: Scenario, multiplier: f64, viol: usize, jobs: usize) -> ServePoint {
+        use crate::workload::ServeClass;
+        let records: Vec<JobRecord> = (0..jobs)
+            .map(|i| {
+                let finish = if i < viol { 1000.0 } else { 100.0 };
+                JobRecord {
+                    id: JobId(i as u64 + 1),
+                    benchmark: Benchmark::GRandomRing,
+                    tenant: ServeClass::Microservice.tenant(),
+                    priority: ServeClass::Microservice.priority(),
+                    submit_time: 0.0,
+                    start_time: 0.0,
+                    finish_time: finish,
+                    running_secs: finish,
+                }
+            })
+            .collect();
+        ServePoint {
+            scenario,
+            multiplier,
+            jobs,
+            unschedulable: 0,
+            metrics: ExperimentMetrics::from_records(&records),
+            slo: SloReport::from_records(&records),
+            utilization: 0.5,
+            preemptions: 0,
+            resizes: 0,
+        }
+    }
+
+    #[test]
+    fn serve_knee_interpolates_threshold_crossing() {
+        let s = Scenario::CmGTg;
+        // Fractions 0/4, 1/4, 3/4 at multipliers 1, 2, 4: the 0.5
+        // crossing interpolates to 2 + (0.5-0.25)·(4-2)/(0.75-0.25) = 3.
+        let points = vec![
+            synthetic_point(s, 1.0, 0, 4),
+            synthetic_point(s, 2.0, 1, 4),
+            synthetic_point(s, 4.0, 3, 4),
+        ];
+        let knee = serve_knee(&points, s).unwrap();
+        assert!((knee - 3.0).abs() < 1e-9, "knee={knee}");
+        // Never saturating ⇒ None.
+        let calm = vec![synthetic_point(s, 1.0, 0, 4), synthetic_point(s, 8.0, 1, 4)];
+        assert_eq!(serve_knee(&calm, s), None);
+        // Saturated from the first point ⇒ that multiplier.
+        let hot = vec![synthetic_point(s, 2.0, 4, 4)];
+        assert_eq!(serve_knee(&hot, s), Some(2.0));
+        // Unknown scenario ⇒ no curve ⇒ None.
+        assert_eq!(serve_knee(&points, Scenario::Cm), None);
+        let knees = serve_knees(&points);
+        assert_eq!(knees.len(), 1);
+        assert_eq!(knees[0].0, s);
+    }
+
+    #[test]
+    fn serve_sweep_shape_and_renderers() {
+        // Tiny sweep: 1 h at 1× and 3× — shape checks only (the
+        // monotonicity/knee acceptance lives in tests/integration.rs).
+        let points =
+            serve_sweep(DEFAULT_SEED, &[Scenario::CmGTg], &[1.0, 3.0], 3600.0, 1, None, false);
+        assert_eq!(points.len(), 2);
+        for p in &points {
+            assert!(p.jobs > 0, "open-loop trace submits jobs");
+            assert_eq!(
+                p.metrics.per_job.len() + p.unschedulable,
+                p.jobs,
+                "every job accounted for"
+            );
+            assert!(p.utilization > 0.0 && p.utilization <= 1.0);
+            assert_eq!(p.slo.per_class.len(), 3, "all three serve classes reported");
+            assert!(p.slo.per_class.iter().any(|c| c.jobs > 0));
+        }
+        assert!(points[1].jobs > points[0].jobs, "multiplier raises volume");
+        let table = serve_table(&points);
+        assert!(table.contains("CM_G_TG") && table.contains("p99 (s)"));
+        let csv = serve_csv(&points);
+        assert_eq!(csv.lines().count(), points.len() + 1);
+        assert!(csv.lines().next().unwrap().contains("microservice_p99_s"));
+        let json = serve_json(DEFAULT_SEED, 1.0, false, &points);
+        assert!(json.contains("\"ablation\": \"serve\""));
+        assert!(json.contains("\"knee_multiplier\""));
+        assert!(json.contains("\"class\": \"hpc_gang\""));
+        assert!(crate::util::Json::parse(&json).is_ok(), "serve json invalid");
+    }
+
+    #[test]
+    fn serve_sweep_elastic_mix_runs_elastic_scenarios() {
+        let points =
+            serve_sweep(DEFAULT_SEED, &[Scenario::ElMall], &[2.0], 3600.0, 1, None, true);
+        assert_eq!(points.len(), 1);
+        let p = &points[0];
+        assert_eq!(p.metrics.per_job.len() + p.unschedulable, p.jobs);
+        let gang = p
+            .slo
+            .per_class
+            .iter()
+            .find(|c| c.class == crate::workload::ServeClass::HpcGang)
+            .unwrap();
+        assert!(gang.jobs > 0, "elastic mix still carries gangs");
     }
 
     #[test]

@@ -14,6 +14,9 @@
 //!                                two-tenant trace (priority + preemption)
 //!   elasticity [--jobs N]        rigid / moldable / malleable ablation on
 //!                                an elastic trace (the resize pipeline)
+//!   serve [--multipliers ...]    open-loop serving sweep: replay the mixed
+//!                                production trace at rising traffic
+//!                                multipliers to find each policy's knee
 //!   e2e [--steps N]              end-to-end: PJRT payload execution feeds
 //!                                the simulator's base rates
 //!
@@ -149,6 +152,21 @@ COMMANDS:
                         response, makespan, utilization, preemptions, and
                         resize counts; --out writes elasticity.csv + SVG
                         bar charts
+  serve [--multipliers 1,4,16] [--horizon-hours H] [--policies LIST]
+        [--elastic] [--shards N] [--threads N] [--seed N] [--json PATH]
+        [--out DIR]
+                        open-loop serving sweep: replay the mixed
+                        production-traffic trace (diurnal HPC gangs + bursty
+                        AI inference + steady microservices, workload::
+                        arrivals) at each traffic multiplier and report
+                        p50/p95/p99 response, per-class SLO violations, and
+                        each policy's saturation knee (the multiplier where
+                        its violation fraction crosses 0.5); --elastic swaps
+                        in malleable gangs and defaults --policies to
+                        EL_RIGID,EL_MOLD,EL_MALL (rigid default: CM,CM_G_TG);
+                        --shards/--threads compose with the scale-out axis;
+                        --out writes serve_sweep.csv + SVG latency/violation
+                        curves
   e2e [--steps N] [--seed N]
                         end-to-end: execute AOT payloads via PJRT and feed
                         measured step times into the simulator
@@ -203,6 +221,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "scaling" => cmd_scaling(args),
         "fairness" => cmd_fairness(args),
         "elasticity" => cmd_elasticity(args),
+        "serve" => cmd_serve(args),
         "e2e" => cmd_e2e(args),
         "figures" => cmd_figures(args),
         "config" => cmd_config(args),
@@ -589,6 +608,86 @@ fn cmd_elasticity(args: &Args) -> Result<()> {
     }
     if let Some(dir) = args.flags.get("out") {
         kube_fgs::report::figures::write_elasticity(std::path::Path::new(dir), &rows)?;
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let seed = args.seed();
+    let elastic = args.has("elastic");
+    let multipliers: Vec<f64> = match args.flags.get("multipliers") {
+        Some(s) => s
+            .split(',')
+            .map(|x| {
+                x.trim()
+                    .parse::<f64>()
+                    .ok()
+                    .filter(|&m| m.is_finite() && m > 0.0)
+                    .ok_or_else(|| {
+                        anyhow!("bad --multipliers entry {x:?} (positive traffic multipliers)")
+                    })
+            })
+            .collect::<Result<_>>()?,
+        None => experiments::SERVE_DEFAULT_MULTIPLIERS.to_vec(),
+    };
+    let horizon_hours = match args.flags.get("horizon-hours") {
+        Some(s) => s
+            .parse::<f64>()
+            .ok()
+            .filter(|&h| h.is_finite() && h > 0.0)
+            .ok_or_else(|| anyhow!("bad --horizon-hours {s:?} (positive hours)"))?,
+        None => experiments::SERVE_HORIZON_HOURS,
+    };
+    let policies: Vec<Scenario> = match args.flags.get("policies") {
+        Some(s) => s
+            .split(',')
+            .map(|x| {
+                Scenario::parse(x.trim()).ok_or_else(|| anyhow!("unknown scenario {x:?}"))
+            })
+            .collect::<Result<_>>()?,
+        None if elastic => kube_fgs::scenario::ELASTIC_SCENARIOS.to_vec(),
+        None => experiments::SERVE_DEFAULT_SCENARIOS.to_vec(),
+    };
+    let shards = args.get_usize("shards", 1);
+    let threads = match args.flags.get("threads") {
+        Some(s) => Some(
+            s.parse::<usize>()
+                .ok()
+                .filter(|&n| n > 0)
+                .ok_or_else(|| anyhow!("bad --threads {s:?} (positive integer)"))?,
+        ),
+        None => None,
+    };
+    println!(
+        "Serve saturation sweep — {horizon_hours} h open-loop horizon, multipliers \
+         {multipliers:?}, {} policies{} (seed {seed})\n",
+        policies.len(),
+        if elastic { ", elastic gang mix" } else { "" },
+    );
+    let points = experiments::serve_sweep(
+        seed,
+        &policies,
+        &multipliers,
+        horizon_hours * 3600.0,
+        shards,
+        threads,
+        elastic,
+    );
+    print!("{}", experiments::serve_table(&points));
+    println!("\nSaturation knees (violation fraction crosses {}):", experiments::SERVE_KNEE_THRESHOLD);
+    for (scenario, knee) in experiments::serve_knees(&points) {
+        match knee {
+            Some(k) => println!("  {:<12} {k:.2}x", scenario.name()),
+            None => println!("  {:<12} not reached over the swept multipliers", scenario.name()),
+        }
+    }
+    if let Some(path) = args.flags.get("json") {
+        std::fs::write(path, experiments::serve_json(seed, horizon_hours, elastic, &points))
+            .map_err(|e| anyhow!("writing {path}: {e}"))?;
+        println!("\nwrote {path}");
+    }
+    if let Some(dir) = args.flags.get("out") {
+        kube_fgs::report::figures::write_serve(std::path::Path::new(dir), &points)?;
     }
     Ok(())
 }

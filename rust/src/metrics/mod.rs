@@ -8,7 +8,8 @@
 use std::collections::BTreeMap;
 
 use crate::simulator::{JobRecord, SimOutput};
-use crate::workload::{Benchmark, ALL_BENCHMARKS};
+use crate::util::stats::percentile;
+use crate::workload::{Benchmark, ServeClass, ALL_BENCHMARKS, ALL_SERVE_CLASSES};
 
 /// Aggregated metrics of one experiment run.
 #[derive(Debug, Clone)]
@@ -103,6 +104,90 @@ pub fn makespan(m: &ExperimentMetrics) -> f64 {
     m.makespan
 }
 
+/// Response-time percentiles of a record set (submit → finish seconds).
+/// Empty record sets yield all-zero percentiles.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResponsePercentiles {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl ResponsePercentiles {
+    pub fn from_records(records: &[JobRecord]) -> ResponsePercentiles {
+        let mut responses: Vec<f64> = records.iter().map(JobRecord::response).collect();
+        responses.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ResponsePercentiles {
+            p50: percentile(&responses, 0.50),
+            p95: percentile(&responses, 0.95),
+            p99: percentile(&responses, 0.99),
+        }
+    }
+}
+
+/// Latency accounting for one serving class (`ServeClass`): response
+/// percentiles plus SLO-violation counts against the class target.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClassSlo {
+    pub class: ServeClass,
+    pub slo_secs: f64,
+    pub jobs: usize,
+    pub violations: usize,
+    pub percentiles: ResponsePercentiles,
+}
+
+/// Per-class + overall SLO report over a run's job records, keyed by the
+/// class↔tenant mapping of the serving mix ([`ServeClass::of_tenant`]).
+/// Records of tenants outside the serving mix are counted in the overall
+/// percentiles but belong to no class row.
+#[derive(Debug, Clone)]
+pub struct SloReport {
+    pub per_class: Vec<ClassSlo>,
+    pub overall: ResponsePercentiles,
+    pub jobs: usize,
+    pub violations: usize,
+}
+
+impl SloReport {
+    pub fn from_records(records: &[JobRecord]) -> SloReport {
+        let per_class: Vec<ClassSlo> = ALL_SERVE_CLASSES
+            .iter()
+            .map(|&class| {
+                let of_class: Vec<JobRecord> = records
+                    .iter()
+                    .filter(|r| ServeClass::of_tenant(r.tenant) == Some(class))
+                    .cloned()
+                    .collect();
+                let slo = class.slo_secs();
+                ClassSlo {
+                    class,
+                    slo_secs: slo,
+                    jobs: of_class.len(),
+                    violations: of_class.iter().filter(|r| r.response() > slo).count(),
+                    percentiles: ResponsePercentiles::from_records(&of_class),
+                }
+            })
+            .collect();
+        SloReport {
+            overall: ResponsePercentiles::from_records(records),
+            jobs: records.len(),
+            violations: per_class.iter().map(|c| c.violations).sum(),
+            per_class,
+        }
+    }
+
+    /// Fraction of serving-class jobs violating their SLO (0.0 when the
+    /// trace has no serving-class jobs at all).
+    pub fn violation_fraction(&self) -> f64 {
+        let class_jobs: usize = self.per_class.iter().map(|c| c.jobs).sum();
+        if class_jobs == 0 {
+            0.0
+        } else {
+            self.violations as f64 / class_jobs as f64
+        }
+    }
+}
+
 /// Minimal Prometheus-style metrics registry (gauge/counter with labels),
 /// standing in for the Prometheus deployment the planner agent queries.
 #[derive(Debug, Default, Clone)]
@@ -191,6 +276,56 @@ mod tests {
         better.overall_response = base.overall_response * 0.65;
         let imp = better.improvement_over(&base, overall_response);
         assert!((imp - 0.35).abs() < 1e-9);
+    }
+
+    #[test]
+    fn response_percentiles_interpolate_and_handle_empty() {
+        let records: Vec<JobRecord> =
+            (0..=100).map(|i| record(i, Benchmark::GFft, 0.0, 0.0, i as f64)).collect();
+        let p = ResponsePercentiles::from_records(&records);
+        assert!((p.p50 - 50.0).abs() < 1e-9);
+        assert!((p.p95 - 95.0).abs() < 1e-9);
+        assert!((p.p99 - 99.0).abs() < 1e-9);
+        let empty = ResponsePercentiles::from_records(&[]);
+        assert_eq!(empty, ResponsePercentiles { p50: 0.0, p95: 0.0, p99: 0.0 });
+    }
+
+    #[test]
+    fn slo_report_counts_violations_per_class() {
+        use crate::workload::{ServeClass, TenantId};
+        let mk = |id, tenant: TenantId, finish: f64| {
+            let mut r = record(id, Benchmark::MiniFe, 0.0, 0.0, finish);
+            r.tenant = tenant;
+            r
+        };
+        let gang = ServeClass::HpcGang.tenant();
+        let micro = ServeClass::Microservice.tenant();
+        let records = vec![
+            mk(1, gang, 1000.0),  // within the 3600 s gang SLO
+            mk(2, gang, 4000.0),  // violation
+            mk(3, micro, 100.0),  // within the 900 s microservice SLO
+            mk(4, micro, 1000.0), // violation
+            mk(5, micro, 200.0),
+        ];
+        let rep = SloReport::from_records(&records);
+        assert_eq!(rep.jobs, 5);
+        assert_eq!(rep.violations, 2);
+        assert!((rep.violation_fraction() - 0.4).abs() < 1e-12);
+        let of = |class: ServeClass| {
+            rep.per_class.iter().find(|c| c.class == class).copied().unwrap()
+        };
+        assert_eq!(of(ServeClass::HpcGang).jobs, 2);
+        assert_eq!(of(ServeClass::HpcGang).violations, 1);
+        assert_eq!(of(ServeClass::Microservice).violations, 1);
+        // Absent class: zero jobs, zero percentiles, no panic.
+        let ai = of(ServeClass::AiInference);
+        assert_eq!(ai.jobs, 0);
+        assert_eq!(ai.percentiles.p99, 0.0);
+        // No serving-class jobs at all ⇒ fraction 0.
+        assert_eq!(
+            SloReport::from_records(&[mk(9, TenantId(7), 1e6)]).violation_fraction(),
+            0.0
+        );
     }
 
     #[test]

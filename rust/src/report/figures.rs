@@ -378,6 +378,64 @@ pub fn write_scaling(dir: &Path, points: &[experiments::ScalingPoint]) -> Result
     Ok(())
 }
 
+/// Render the serve saturation sweep: one line chart per latency metric
+/// (p50/p95/p99 response, SLO-violation fraction) with a polyline per
+/// policy over the traffic multipliers, plus the CSV record
+/// (`kube-fgs serve --out <dir>`; CI uploads the JSON artifact on pushes
+/// to main).
+pub fn write_serve(dir: &Path, points: &[experiments::ServePoint]) -> Result<()> {
+    use std::collections::BTreeSet;
+    std::fs::create_dir_all(dir)?;
+    write(dir, "serve_sweep.csv", &experiments::serve_csv(points))?;
+
+    let scenarios: Vec<crate::scenario::Scenario> = {
+        let mut seen = BTreeSet::new();
+        points.iter().filter(|p| seen.insert(p.scenario.name())).map(|p| p.scenario).collect()
+    };
+    let multipliers: Vec<f64> = {
+        let mut m: Vec<f64> = points.iter().map(|p| p.multiplier).collect();
+        m.sort_by(|a, b| a.total_cmp(b));
+        m.dedup();
+        m
+    };
+    let metrics: [(&str, &str, fn(&experiments::ServePoint) -> f64); 4] = [
+        ("p50", "p50 response (s)", |p| p.slo.overall.p50),
+        ("p95", "p95 response (s)", |p| p.slo.overall.p95),
+        ("p99", "p99 response (s)", |p| p.slo.overall.p99),
+        ("violations", "SLO-violation fraction", |p| p.slo.violation_fraction()),
+    ];
+    for (slug, label, metric) in metrics {
+        let series: Vec<Series> = scenarios
+            .iter()
+            .map(|&sc| Series {
+                name: sc.name().to_string(),
+                values: multipliers
+                    .iter()
+                    .map(|&m| {
+                        points
+                            .iter()
+                            .find(|p| p.scenario == sc && p.multiplier == m)
+                            .map(metric)
+                            .unwrap_or(0.0)
+                    })
+                    .collect(),
+            })
+            .collect();
+        write(
+            dir,
+            &format!("serve_{slug}.svg"),
+            &line_chart(
+                &format!("Serve sweep — {label} vs traffic multiplier"),
+                &multipliers,
+                &series,
+                "traffic multiplier",
+                label,
+            ),
+        )?;
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -473,6 +531,42 @@ mod tests {
                 assert!(content.starts_with("<svg"), "{f}");
             } else {
                 assert!(content.contains("malleable"), "{f} lists every mode");
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn write_serve_emits_csv_and_curves() {
+        // Tiny sweep: file-shape checks only (the saturation acceptance
+        // lives in tests/integration.rs).
+        let points = experiments::serve_sweep(
+            2,
+            &[Scenario::CmGTg],
+            &[1.0, 2.0],
+            3600.0,
+            1,
+            None,
+            false,
+        );
+        let dir = std::env::temp_dir().join(format!("kube_fgs_serve_{}", std::process::id()));
+        write_serve(&dir, &points).unwrap();
+        for f in [
+            "serve_sweep.csv",
+            "serve_p50.svg",
+            "serve_p95.svg",
+            "serve_p99.svg",
+            "serve_violations.svg",
+        ] {
+            let p = dir.join(f);
+            assert!(p.exists(), "{f} missing");
+            let content = std::fs::read_to_string(&p).unwrap();
+            assert!(!content.is_empty());
+            if f.ends_with(".svg") {
+                assert!(content.starts_with("<svg"), "{f}");
+                assert!(content.contains("<polyline"), "{f} has curves");
+            } else {
+                assert!(content.contains("violation_fraction"), "{f} lists the SLO columns");
             }
         }
         std::fs::remove_dir_all(&dir).ok();

@@ -13,6 +13,7 @@ pub struct Summary {
     pub min: f64,
     pub p50: f64,
     pub p95: f64,
+    pub p99: f64,
     pub max: f64,
 }
 
@@ -31,6 +32,7 @@ impl Summary {
             min: sorted[0],
             p50: percentile(&sorted, 0.50),
             p95: percentile(&sorted, 0.95),
+            p99: percentile(&sorted, 0.99),
             max: sorted[n - 1],
         }
     }
@@ -53,9 +55,13 @@ pub fn jain_index(xs: &[f64]) -> f64 {
 }
 
 /// Linear-interpolated percentile over a pre-sorted slice, q in [0, 1].
+/// An empty slice yields 0.0 (a zero-sample tail has no latency), so SLO
+/// pipelines over filtered job classes never panic on an absent class.
 pub fn percentile(sorted: &[f64], q: f64) -> f64 {
-    assert!(!sorted.is_empty());
     assert!((0.0..=1.0).contains(&q));
+    if sorted.is_empty() {
+        return 0.0;
+    }
     if sorted.len() == 1 {
         return sorted[0];
     }
@@ -99,11 +105,12 @@ impl BenchTimer {
         }
         let s = Summary::from(&samples);
         println!(
-            "bench {:<40} mean {:>12} p50 {:>12} p95 {:>12} (n={})",
+            "bench {:<40} mean {:>12} p50 {:>12} p95 {:>12} p99 {:>12} (n={})",
             self.name,
             fmt_secs(s.mean),
             fmt_secs(s.p50),
             fmt_secs(s.p95),
+            fmt_secs(s.p99),
             s.n
         );
         s
@@ -149,6 +156,34 @@ mod tests {
     #[test]
     fn percentile_single_element() {
         assert_eq!(percentile(&[5.0], 0.95), 5.0);
+    }
+
+    #[test]
+    fn percentile_empty_is_zero() {
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[], 0.99), 0.0);
+    }
+
+    #[test]
+    fn tail_percentiles_closed_form_uniform() {
+        // Uniform grid 0..=100: percentile(q) = 100q exactly under linear
+        // interpolation (pos = q * 100 lands between integer samples).
+        let xs: Vec<f64> = (0..=100).map(|i| i as f64).collect();
+        let s = Summary::from(&xs);
+        assert!((s.p50 - 50.0).abs() < 1e-9);
+        assert!((s.p95 - 95.0).abs() < 1e-9);
+        assert!((s.p99 - 99.0).abs() < 1e-9);
+        assert!((percentile(&xs, 0.975) - 97.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tail_percentiles_closed_form_two_point() {
+        // Two-point distribution {0, 10}: pos = q, so percentile(q) = 10q.
+        let xs = [0.0, 10.0];
+        let s = Summary::from(&xs);
+        assert!((s.p50 - 5.0).abs() < 1e-12);
+        assert!((s.p95 - 9.5).abs() < 1e-12);
+        assert!((s.p99 - 9.9).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,553 @@
+//! Open-loop arrival generators for the production-traffic serving
+//! scenario (ROADMAP "production-traffic serving" item).
+//!
+//! The paper's traces are *closed* fixed lists of jobs; a serving cluster
+//! instead sees an open-loop arrival process that keeps submitting no
+//! matter how far behind the scheduler falls. This module provides three
+//! seed-deterministic generators —
+//!
+//!   * homogeneous Poisson (memoryless request traffic),
+//!   * a two-state MMPP (Markov-modulated Poisson process: calm/bursty
+//!     phases with exponential dwell times, the classic bursty-traffic
+//!     model), and
+//!   * a diurnal rate envelope (sinusoidal day/night cycle, sampled by
+//!     Lewis–Shedler thinning)
+//!
+//! — plus per-tenant composition ([`compose`]) and the mixed
+//! [`serve_trace`] blending HPC gangs, AI-inference-sized jobs, and
+//! microservice-sized jobs under per-class latency SLOs
+//! ([`ServeClass::slo_secs`]). Rates are in jobs *per second*; the
+//! serve-mix constants below are stated per hour and divided down.
+//!
+//! Determinism contract: every generator is a pure function of its
+//! parameters and the seed. [`compose`] derives one independent substream
+//! per tenant stream (`Rng::derive`), so a stream's arrivals are
+//! bit-identical no matter what it is composed with. The generators only
+//! *produce* traces — all fixed-trace paths (goldens, differential
+//! matrix, fuzz) are untouched by construction, which
+//! tests/properties.rs pins.
+
+use crate::cluster::{gib, Resources};
+use crate::util::Rng;
+
+use super::benchmark::Benchmark;
+use super::job::{JobSpec, TenantId};
+use super::trace::ELASTIC_RANGE;
+
+/// An open-loop arrival process over simulated seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Homogeneous Poisson process: exponential inter-arrivals at `rate`
+    /// jobs/second.
+    Poisson { rate: f64 },
+    /// Two-state Markov-modulated Poisson process: arrivals at
+    /// `rates[s]` while in state `s`, dwell times exponential with mean
+    /// `mean_dwell[s]` seconds, alternating states starting in state 0
+    /// (the calm state by convention).
+    Mmpp { rates: [f64; 2], mean_dwell: [f64; 2] },
+    /// Non-homogeneous Poisson with a sinusoidal (diurnal) envelope:
+    /// `rate(t) = base_rate * (1 + amplitude * sin(2πt / period_secs))`,
+    /// sampled by Lewis–Shedler thinning. `amplitude` must be in [0, 1)
+    /// so the rate stays positive.
+    Diurnal { base_rate: f64, amplitude: f64, period_secs: f64 },
+}
+
+impl ArrivalProcess {
+    /// Validate parameters; rejections mirror the config layer.
+    pub fn validate(&self) -> Result<(), String> {
+        let pos = |x: f64, what: &str| {
+            if x.is_finite() && x > 0.0 {
+                Ok(())
+            } else {
+                Err(format!("arrivals: {what} must be positive and finite (got {x})"))
+            }
+        };
+        match *self {
+            ArrivalProcess::Poisson { rate } => pos(rate, "poisson rate"),
+            ArrivalProcess::Mmpp { rates, mean_dwell } => {
+                pos(rates[0], "mmpp rate[0]")?;
+                pos(rates[1], "mmpp rate[1]")?;
+                pos(mean_dwell[0], "mmpp dwell[0]")?;
+                pos(mean_dwell[1], "mmpp dwell[1]")
+            }
+            ArrivalProcess::Diurnal { base_rate, amplitude, period_secs } => {
+                pos(base_rate, "diurnal base rate")?;
+                pos(period_secs, "diurnal period")?;
+                if (0.0..1.0).contains(&amplitude) {
+                    Ok(())
+                } else {
+                    Err(format!("arrivals: diurnal amplitude must be in [0, 1) (got {amplitude})"))
+                }
+            }
+        }
+    }
+
+    /// Generate all arrival times in `[0, horizon)`, strictly increasing,
+    /// consuming `rng` deterministically.
+    pub fn arrivals(&self, horizon: f64, rng: &mut Rng) -> Vec<f64> {
+        let mut times = Vec::new();
+        match *self {
+            ArrivalProcess::Poisson { rate } => {
+                let mut t = 0.0;
+                loop {
+                    // Exponential inter-arrival via inverse CDF.
+                    t += -(1.0 - rng.f64()).ln() / rate;
+                    if t >= horizon {
+                        break;
+                    }
+                    times.push(t);
+                }
+            }
+            ArrivalProcess::Mmpp { rates, mean_dwell } => {
+                for (state, start, end) in mmpp_segments(mean_dwell, horizon, rng) {
+                    let mut t = start;
+                    loop {
+                        t += -(1.0 - rng.f64()).ln() / rates[state];
+                        if t >= end {
+                            break;
+                        }
+                        times.push(t);
+                    }
+                }
+            }
+            ArrivalProcess::Diurnal { base_rate, amplitude, period_secs } => {
+                // Lewis–Shedler thinning at the envelope maximum.
+                let rate_max = base_rate * (1.0 + amplitude);
+                let mut t = 0.0;
+                loop {
+                    t += -(1.0 - rng.f64()).ln() / rate_max;
+                    if t >= horizon {
+                        break;
+                    }
+                    let rate_t = base_rate
+                        * (1.0 + amplitude * (2.0 * std::f64::consts::PI * t / period_secs).sin());
+                    if rng.f64() < rate_t / rate_max {
+                        times.push(t);
+                    }
+                }
+            }
+        }
+        times
+    }
+}
+
+/// The MMPP state path over `[0, horizon)`: `(state, start, end)` segments
+/// with exponential dwell times of mean `mean_dwell[state]`, alternating
+/// from state 0. Exposed so the dwell-time property test can check the
+/// generator against its own transition statistics.
+pub fn mmpp_segments(
+    mean_dwell: [f64; 2],
+    horizon: f64,
+    rng: &mut Rng,
+) -> Vec<(usize, f64, f64)> {
+    let mut segments = Vec::new();
+    let mut state = 0usize;
+    let mut t = 0.0;
+    while t < horizon {
+        let dwell = -mean_dwell[state] * (1.0 - rng.f64()).ln();
+        let end = (t + dwell).min(horizon);
+        segments.push((state, t, end));
+        t += dwell;
+        state = 1 - state;
+    }
+    segments
+}
+
+/// A job class of the serving mix. Class identity is carried on the
+/// tenant id (one tenant per class), so per-class SLO accounting can be
+/// recovered from any `JobRecord` via [`ServeClass::of_tenant`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ServeClass {
+    /// Full 16-task MPI gangs over the whole benchmark catalogue —
+    /// the paper's batch HPC traffic.
+    HpcGang,
+    /// 4-task AI-inference-sized jobs (MiniFE kernel, the AI-training
+    /// proxy of workload::extensions, at inference width).
+    AiInference,
+    /// Single-task microservice-sized jobs (network-profile ring kernel;
+    /// the planner keeps network-profile singletons in one container).
+    Microservice,
+}
+
+/// Every serving class, in tenant order.
+pub const ALL_SERVE_CLASSES: [ServeClass; 3] =
+    [ServeClass::HpcGang, ServeClass::AiInference, ServeClass::Microservice];
+
+impl ServeClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServeClass::HpcGang => "hpc_gang",
+            ServeClass::AiInference => "ai_inference",
+            ServeClass::Microservice => "microservice",
+        }
+    }
+
+    /// Submitting tenant of this class (one tenant per class).
+    pub fn tenant(&self) -> TenantId {
+        match self {
+            ServeClass::HpcGang => TenantId(0),
+            ServeClass::AiInference => TenantId(1),
+            ServeClass::Microservice => TenantId(2),
+        }
+    }
+
+    /// Inverse of [`ServeClass::tenant`].
+    pub fn of_tenant(tenant: TenantId) -> Option<ServeClass> {
+        ALL_SERVE_CLASSES.iter().copied().find(|c| c.tenant() == tenant)
+    }
+
+    /// Scheduling priority: latency-sensitive classes outrank batch.
+    pub fn priority(&self) -> u32 {
+        match self {
+            ServeClass::HpcGang => 0,
+            ServeClass::AiInference => 5,
+            ServeClass::Microservice => 10,
+        }
+    }
+
+    /// MPI task count (gang width) of this class's jobs.
+    pub fn ntasks(&self) -> u32 {
+        match self {
+            ServeClass::HpcGang => 16,
+            ServeClass::AiInference => 4,
+            ServeClass::Microservice => 1,
+        }
+    }
+
+    /// Response-time SLO (submit → finish, seconds). Batch gangs get a
+    /// relaxed target; inference and microservice traffic progressively
+    /// tighter ones.
+    pub fn slo_secs(&self) -> f64 {
+        match self {
+            ServeClass::HpcGang => 3600.0,
+            ServeClass::AiInference => 1500.0,
+            ServeClass::Microservice => 900.0,
+        }
+    }
+
+    /// Draw this class's benchmark for one job. HPC gangs sample the whole
+    /// catalogue (elastic gangs only the splittable compute kernels, as in
+    /// `elastic_trace`); the other classes are single-kernel.
+    fn benchmark(&self, elastic: bool, rng: &mut Rng) -> Benchmark {
+        match self {
+            ServeClass::HpcGang => {
+                if elastic {
+                    const SPLITTABLE: [Benchmark; 3] =
+                        [Benchmark::EpDgemm, Benchmark::EpStream, Benchmark::MiniFe];
+                    SPLITTABLE[rng.range_usize(0, SPLITTABLE.len())]
+                } else {
+                    use super::benchmark::ALL_BENCHMARKS;
+                    ALL_BENCHMARKS[rng.range_usize(0, ALL_BENCHMARKS.len())]
+                }
+            }
+            ServeClass::AiInference => Benchmark::MiniFe,
+            ServeClass::Microservice => Benchmark::GRandomRing,
+        }
+    }
+
+    /// Build one job of this class: exactly-subscribed like
+    /// `JobSpec::paper_job` (one core and 2 GiB per task) at the class's
+    /// gang width, tenant, and priority.
+    fn job(&self, id: u64, submit_time: f64, elastic: bool, rng: &mut Rng) -> JobSpec {
+        let mut spec = JobSpec::paper_job(id, self.benchmark(elastic, rng), submit_time);
+        let ntasks = self.ntasks();
+        spec.ntasks = ntasks;
+        spec.resources = Resources::new(ntasks as u64 * 1000, ntasks as u64 * gib(2));
+        let spec = spec.with_tenant(self.tenant(), self.priority());
+        if elastic && *self == ServeClass::HpcGang {
+            spec.with_elasticity(ELASTIC_RANGE)
+        } else {
+            spec
+        }
+    }
+}
+
+/// One tenant's open-loop stream: a job class fed by an arrival process.
+/// `elastic` marks HPC gangs as malleable (`ELASTIC_RANGE`); it is
+/// ignored for the narrow classes, whose widths the range cannot divide.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TenantStream {
+    pub class: ServeClass,
+    pub process: ArrivalProcess,
+    pub elastic: bool,
+}
+
+/// Compose per-tenant streams into one trace over `[0, horizon_secs)`.
+///
+/// Each stream draws from independent substreams of the seed keyed by its
+/// class's tenant id (`derive(1 + tenant)` for arrival times,
+/// `derive(0x100 + tenant)` for benchmark choices), so a stream's
+/// arrivals are bit-identical regardless of what it is composed with —
+/// one stream per class, which is the serving mix's shape. The merged
+/// trace is sorted by `(submit_time, stream index)` — ties break by
+/// stream order, keeping the merge fully deterministic — and jobs are
+/// numbered 1..=n in merged order.
+pub fn compose(streams: &[TenantStream], horizon_secs: f64, seed: u64) -> Vec<JobSpec> {
+    let root = Rng::seed_from_u64(seed);
+    let mut events: Vec<(f64, usize)> = Vec::new();
+    for (i, stream) in streams.iter().enumerate() {
+        stream
+            .process
+            .validate()
+            .unwrap_or_else(|e| panic!("compose: stream {i} ({}): {e}", stream.class.name()));
+        let mut rng = root.derive(1 + stream.class.tenant().0 as u64);
+        for t in stream.process.arrivals(horizon_secs, &mut rng) {
+            events.push((t, i));
+        }
+    }
+    events.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+
+    let mut job_rngs: Vec<Rng> =
+        streams.iter().map(|s| root.derive(0x100 + s.class.tenant().0 as u64)).collect();
+    events
+        .into_iter()
+        .enumerate()
+        .map(|(k, (t, i))| {
+            let stream = &streams[i];
+            stream.class.job(k as u64 + 1, t, stream.elastic, &mut job_rngs[i])
+        })
+        .collect()
+}
+
+/// Base arrival rate of the HPC-gang stream at multiplier 1× (jobs/hour,
+/// diurnal envelope).
+pub const SERVE_HPC_PER_HOUR: f64 = 4.0;
+/// Calm/bursty arrival rates of the AI-inference MMPP stream at 1×
+/// (jobs/hour).
+pub const SERVE_AI_PER_HOUR: [f64; 2] = [8.0, 32.0];
+/// Mean dwell times of the AI-inference MMPP states (seconds): two calm
+/// hours, half-hour bursts.
+pub const SERVE_AI_DWELL_SECS: [f64; 2] = [7200.0, 1800.0];
+/// Arrival rate of the microservice Poisson stream at 1× (jobs/hour).
+pub const SERVE_MICRO_PER_HOUR: f64 = 16.0;
+/// Day length of the diurnal HPC envelope (seconds).
+pub const SERVE_DIURNAL_PERIOD_SECS: f64 = 86_400.0;
+/// Amplitude of the diurnal HPC envelope (peak = 1.5× base).
+pub const SERVE_DIURNAL_AMPLITUDE: f64 = 0.5;
+
+fn serve_streams(multiplier: f64, elastic: bool) -> Vec<TenantStream> {
+    let per_hour = |r: f64| r * multiplier / 3600.0;
+    vec![
+        TenantStream {
+            class: ServeClass::HpcGang,
+            process: ArrivalProcess::Diurnal {
+                base_rate: per_hour(SERVE_HPC_PER_HOUR),
+                amplitude: SERVE_DIURNAL_AMPLITUDE,
+                period_secs: SERVE_DIURNAL_PERIOD_SECS,
+            },
+            elastic,
+        },
+        TenantStream {
+            class: ServeClass::AiInference,
+            process: ArrivalProcess::Mmpp {
+                rates: [per_hour(SERVE_AI_PER_HOUR[0]), per_hour(SERVE_AI_PER_HOUR[1])],
+                mean_dwell: SERVE_AI_DWELL_SECS,
+            },
+            elastic: false,
+        },
+        TenantStream {
+            class: ServeClass::Microservice,
+            process: ArrivalProcess::Poisson { rate: per_hour(SERVE_MICRO_PER_HOUR) },
+            elastic: false,
+        },
+    ]
+}
+
+/// The production serving mix: diurnal HPC gangs + bursty (MMPP)
+/// AI-inference traffic + steady microservice traffic, all rates scaled
+/// by `multiplier`. Fully determined by `(horizon_secs, multiplier,
+/// seed)`; `multiplier` sweeps 1×→100× to locate a policy's saturation
+/// knee (`kube-fgs serve`).
+pub fn serve_trace(horizon_secs: f64, multiplier: f64, seed: u64) -> Vec<JobSpec> {
+    compose(&serve_streams(multiplier, false), horizon_secs, seed)
+}
+
+/// The elastic serving mix: same streams, but every HPC gang is malleable
+/// (`ELASTIC_RANGE`, splittable kernels only) so elasticity-aware EL_*
+/// policies can shrink gangs under load. Rigid policies run the identical
+/// trace and simply ignore the range.
+pub fn serve_trace_elastic(horizon_secs: f64, multiplier: f64, seed: u64) -> Vec<JobSpec> {
+    compose(&serve_streams(multiplier, true), horizon_secs, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(t: &[JobSpec]) -> Vec<(Benchmark, TenantId, u32, u64)> {
+        t.iter().map(|j| (j.benchmark, j.tenant, j.ntasks, j.submit_time.to_bits())).collect()
+    }
+
+    #[test]
+    fn same_seed_bit_identical_different_seed_not() {
+        let a = serve_trace(48.0 * 3600.0, 1.0, 7);
+        let b = serve_trace(48.0 * 3600.0, 1.0, 7);
+        let c = serve_trace(48.0 * 3600.0, 1.0, 8);
+        assert_eq!(key(&a), key(&b));
+        assert_ne!(key(&a), key(&c));
+        assert!(!a.is_empty());
+    }
+
+    #[test]
+    fn poisson_empirical_rate_matches_lambda() {
+        // λ = 0.01/s over 10⁶ s ⇒ E[n] = 10 000, σ = 100; ±5σ bound.
+        let mut rng = Rng::seed_from_u64(42);
+        let n = ArrivalProcess::Poisson { rate: 0.01 }.arrivals(1e6, &mut rng).len() as f64;
+        assert!((n - 10_000.0).abs() < 500.0, "n={n}");
+    }
+
+    #[test]
+    fn diurnal_empirical_rate_matches_base_over_whole_periods() {
+        // Over whole periods the sinusoid integrates to zero, so the mean
+        // rate is the base rate: E[n] = 10 000 over 100 periods.
+        let p = ArrivalProcess::Diurnal { base_rate: 0.01, amplitude: 0.5, period_secs: 1e4 };
+        let mut rng = Rng::seed_from_u64(42);
+        let n = p.arrivals(1e6, &mut rng).len() as f64;
+        assert!((n - 10_000.0).abs() < 500.0, "n={n}");
+    }
+
+    #[test]
+    fn mmpp_dwell_times_respect_transition_means() {
+        let mean_dwell = [200.0, 50.0];
+        let mut rng = Rng::seed_from_u64(7);
+        let segs = mmpp_segments(mean_dwell, 2e5, &mut rng);
+        // Alternation from state 0 and full coverage of the horizon.
+        assert_eq!(segs[0].0, 0);
+        assert_eq!(segs[0].1, 0.0);
+        for w in segs.windows(2) {
+            assert_eq!(w[0].2, w[1].1, "segments tile the horizon");
+            assert_ne!(w[0].0, w[1].0, "states alternate");
+        }
+        // Empirical mean dwell per state within 20% of the configured
+        // mean (last segment excluded: it is truncated at the horizon).
+        for state in [0usize, 1] {
+            let dwells: Vec<f64> = segs[..segs.len() - 1]
+                .iter()
+                .filter(|s| s.0 == state)
+                .map(|s| s.2 - s.1)
+                .collect();
+            assert!(dwells.len() > 100, "state {state}: {} segments", dwells.len());
+            let mean = dwells.iter().sum::<f64>() / dwells.len() as f64;
+            let target = mean_dwell[state];
+            assert!((mean - target).abs() < 0.2 * target, "state {state}: mean={mean}");
+        }
+    }
+
+    #[test]
+    fn mmpp_arrivals_burstier_in_fast_state() {
+        // Sanity: overall arrivals land between the calm-only and
+        // burst-only Poisson counts.
+        let p = ArrivalProcess::Mmpp { rates: [0.002, 0.02], mean_dwell: [5_000.0, 5_000.0] };
+        let mut rng = Rng::seed_from_u64(3);
+        let n = p.arrivals(1e6, &mut rng).len() as f64;
+        // Equal dwell ⇒ mean rate ≈ 0.011/s ⇒ E[n] ≈ 11 000.
+        assert!((4_000.0..=18_000.0).contains(&n), "n={n}");
+    }
+
+    #[test]
+    fn serve_trace_submit_times_non_decreasing_and_in_horizon() {
+        let t = serve_trace(48.0 * 3600.0, 4.0, 2);
+        for w in t.windows(2) {
+            assert!(w[0].submit_time <= w[1].submit_time, "Simulator::run's sort is a no-op");
+        }
+        assert!(t.iter().all(|j| (0.0..48.0 * 3600.0).contains(&j.submit_time)));
+        for (i, j) in t.iter().enumerate() {
+            assert_eq!(j.id.0, i as u64 + 1);
+        }
+    }
+
+    #[test]
+    fn serve_trace_mixes_all_classes_with_class_shapes() {
+        let t = serve_trace(48.0 * 3600.0, 2.0, 2);
+        for class in ALL_SERVE_CLASSES {
+            let of_class: Vec<_> = t.iter().filter(|j| j.tenant == class.tenant()).collect();
+            assert!(!of_class.is_empty(), "{} missing", class.name());
+            for j in &of_class {
+                assert_eq!(j.ntasks, class.ntasks(), "{}", class.name());
+                assert_eq!(j.priority, class.priority());
+                assert_eq!(j.resources.cpu_milli, class.ntasks() as u64 * 1000);
+                assert!(j.elasticity.is_none());
+            }
+        }
+        // Microservice jobs stay on the network-profile kernel.
+        for j in t.iter().filter(|j| j.tenant == ServeClass::Microservice.tenant()) {
+            assert_eq!(j.benchmark, Benchmark::GRandomRing);
+        }
+    }
+
+    #[test]
+    fn elastic_serve_trace_marks_only_gangs_elastic() {
+        let t = serve_trace_elastic(48.0 * 3600.0, 2.0, 2);
+        let gang = ServeClass::HpcGang.tenant();
+        assert!(t.iter().any(|j| j.tenant == gang));
+        for j in &t {
+            if j.tenant == gang {
+                assert_eq!(j.elasticity, Some(ELASTIC_RANGE));
+                assert!(!j.benchmark.profile().is_network());
+            } else {
+                assert!(j.elasticity.is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn multiplier_scales_arrival_volume() {
+        let h = 48.0 * 3600.0;
+        let n1 = serve_trace(h, 1.0, 2).len() as f64;
+        let n8 = serve_trace(h, 8.0, 2).len() as f64;
+        assert!(n8 > 4.0 * n1, "n1={n1} n8={n8}");
+        // 1× mix volume: dwell-weighted AI rate is 0.8·8 + 0.2·32 =
+        // 12.8/h, so the mix means ≈32.8 jobs/h ⇒ ~1574 over 48 h; ±35%.
+        let ai = (SERVE_AI_PER_HOUR[0] * SERVE_AI_DWELL_SECS[0]
+            + SERVE_AI_PER_HOUR[1] * SERVE_AI_DWELL_SECS[1])
+            / (SERVE_AI_DWELL_SECS[0] + SERVE_AI_DWELL_SECS[1]);
+        let expect = (SERVE_HPC_PER_HOUR + ai + SERVE_MICRO_PER_HOUR) * 48.0;
+        assert!((n1 - expect).abs() < 0.35 * expect, "n1={n1} expect≈{expect}");
+    }
+
+    #[test]
+    fn streams_are_independent_substreams() {
+        // Dropping the other streams must not perturb a stream's arrival
+        // times or kernels (tenant-keyed derive isolation).
+        let all = serve_streams(1.0, false);
+        let solo = [all[2]];
+        let horizon = 48.0 * 3600.0;
+        let merged = compose(&all, horizon, 5);
+        let alone = compose(&solo, horizon, 5);
+        let micro: Vec<(u64, Benchmark)> = merged
+            .iter()
+            .filter(|j| j.tenant == ServeClass::Microservice.tenant())
+            .map(|j| (j.submit_time.to_bits(), j.benchmark))
+            .collect();
+        let alone_key: Vec<(u64, Benchmark)> =
+            alone.iter().map(|j| (j.submit_time.to_bits(), j.benchmark)).collect();
+        assert!(!micro.is_empty());
+        assert_eq!(micro, alone_key);
+    }
+
+    #[test]
+    fn validation_rejects_malformed_processes() {
+        for bad in [
+            ArrivalProcess::Poisson { rate: 0.0 },
+            ArrivalProcess::Poisson { rate: -1.0 },
+            ArrivalProcess::Poisson { rate: f64::NAN },
+            ArrivalProcess::Mmpp { rates: [0.0, 1.0], mean_dwell: [1.0, 1.0] },
+            ArrivalProcess::Mmpp { rates: [1.0, 1.0], mean_dwell: [1.0, 0.0] },
+            ArrivalProcess::Diurnal { base_rate: 1.0, amplitude: 1.0, period_secs: 10.0 },
+            ArrivalProcess::Diurnal { base_rate: 1.0, amplitude: -0.1, period_secs: 10.0 },
+            ArrivalProcess::Diurnal { base_rate: 1.0, amplitude: 0.5, period_secs: 0.0 },
+        ] {
+            assert!(bad.validate().is_err(), "should reject: {bad:?}");
+        }
+        assert!(ArrivalProcess::Poisson { rate: 0.1 }.validate().is_ok());
+    }
+
+    #[test]
+    fn slo_class_round_trips_through_tenant() {
+        for class in ALL_SERVE_CLASSES {
+            assert_eq!(ServeClass::of_tenant(class.tenant()), Some(class));
+            assert!(class.slo_secs() > 0.0);
+        }
+        assert_eq!(ServeClass::of_tenant(TenantId(9)), None);
+    }
+}

@@ -1,11 +1,17 @@
-//! Workload substrate: the paper's benchmark catalogue, MPI job specs, and
-//! the experiment trace generators (Exp 1–3).
+//! Workload substrate: the paper's benchmark catalogue, MPI job specs,
+//! the experiment trace generators (Exp 1–3), and the open-loop arrival
+//! generators of the production serving scenario.
 
+pub mod arrivals;
 pub mod benchmark;
 pub mod extensions;
 pub mod job;
 pub mod trace;
 
+pub use arrivals::{
+    compose, serve_trace, serve_trace_elastic, ArrivalProcess, ServeClass, TenantStream,
+    ALL_SERVE_CLASSES,
+};
 pub use benchmark::{Benchmark, MpiProfile, Profile, ALL_BENCHMARKS};
 pub use extensions::{mixed_hpc_ai_trace, ExtBenchmark};
 pub use job::{Elasticity, Granularity, JobSpec, PlannedJob, TenantId, DEFAULT_TENANT};

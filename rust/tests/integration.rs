@@ -180,6 +180,94 @@ fn malleable_elasticity_dominates_rigid() {
 }
 
 #[test]
+fn serve_slo_violations_and_p99_grow_with_traffic() {
+    // Acceptance (ISSUE 9): under the open-loop serving mix, pushing the
+    // traffic multiplier up can only hurt — the baseline policy's SLO
+    // violation count and p99 response must be monotonically
+    // non-decreasing in the multiplier.
+    let points = experiments::serve_sweep(
+        DEFAULT_SEED,
+        &[Scenario::Cm],
+        &[1.0, 4.0, 10.0],
+        2.0 * 3600.0,
+        1,
+        None,
+        false,
+    );
+    assert_eq!(points.len(), 3);
+    for p in &points {
+        assert!(p.jobs > 0, "multiplier {} produced an empty trace", p.multiplier);
+        assert_eq!(
+            p.slo.jobs + p.unschedulable,
+            p.jobs,
+            "multiplier {}: every job scored or reported unschedulable",
+            p.multiplier
+        );
+    }
+    for w in points.windows(2) {
+        assert!(
+            w[1].slo.violations >= w[0].slo.violations,
+            "violations fell from {} at {}x to {} at {}x",
+            w[0].slo.violations,
+            w[0].multiplier,
+            w[1].slo.violations,
+            w[1].multiplier
+        );
+        assert!(
+            w[1].slo.overall.p99 >= w[0].slo.overall.p99,
+            "p99 fell from {} at {}x to {} at {}x",
+            w[0].slo.overall.p99,
+            w[0].multiplier,
+            w[1].slo.overall.p99,
+            w[1].multiplier
+        );
+    }
+    // The sweep actually saturates the baseline within the swept range.
+    assert!(
+        points.last().unwrap().slo.violation_fraction()
+            >= experiments::SERVE_KNEE_THRESHOLD,
+        "10x traffic must push CM past the knee threshold"
+    );
+}
+
+#[test]
+fn malleable_knee_beats_rigid_on_elastic_serve_mix() {
+    // Acceptance (ISSUE 9): on the elastic serving mix, the malleable
+    // policy must sustain strictly more traffic before saturating — its
+    // knee (the multiplier where the violation fraction crosses 0.5) sits
+    // at a strictly higher multiplier than the rigid baseline's. A knee
+    // that is never reached counts as infinite.
+    let rigid = Scenario::parse("EL_RIGID").unwrap();
+    let mall = Scenario::parse("EL_MALL").unwrap();
+    let points = experiments::serve_sweep(
+        DEFAULT_SEED,
+        &[rigid, mall],
+        &[1.0, 2.0, 3.0, 4.0, 6.0, 9.0],
+        2.0 * 3600.0,
+        1,
+        None,
+        true,
+    );
+    let knee = |s| {
+        experiments::serve_knee(&points, s).unwrap_or(f64::INFINITY)
+    };
+    let (k_rigid, k_mall) = (knee(rigid), knee(mall));
+    assert!(
+        k_rigid.is_finite(),
+        "rigid must saturate within the swept multipliers (fractions: {:?})",
+        points
+            .iter()
+            .filter(|p| p.scenario == rigid)
+            .map(|p| (p.multiplier, p.slo.violation_fraction()))
+            .collect::<Vec<_>>()
+    );
+    assert!(
+        k_mall > k_rigid,
+        "malleable knee {k_mall} must sit strictly above rigid {k_rigid}"
+    );
+}
+
+#[test]
 fn preemptive_runs_conserve_resources_and_complete() {
     // CM_G_TG_PRE over the two-tenant trace: every job completes despite
     // evictions + restarts, and all bookkeeping returns to zero.

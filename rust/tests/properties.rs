@@ -813,6 +813,43 @@ fn prop_sharded_thread_count_invariance() {
     }
 }
 
+/// Property: the open-loop serve trace is shard-invariant on the paper
+/// cluster — replaying the production mix at nominal traffic through
+/// `RunSpec` with `shards = 4` is bit-identical to `shards = 1` (the
+/// homogeneous cluster collapses to a single domain), so the serving
+/// sweep composes with the scale-out axis without perturbing results.
+/// The fixed-trace paths (goldens, differential matrix, fuzz) never see
+/// the generator; this pins the generated path to the same guarantee.
+#[test]
+fn prop_serve_trace_shard_invariant_at_nominal_traffic() {
+    use kube_fgs::experiments::RunSpec;
+    use kube_fgs::workload::serve_trace;
+
+    let trace = serve_trace(2.0 * 3600.0, 1.0, 2024);
+    assert!(!trace.is_empty(), "a 2 h serve horizon produces jobs");
+    let mk = |shards: usize| {
+        RunSpec::new(Scenario::CmGTg)
+            .seed(2024)
+            .cluster(ClusterSpec::paper())
+            .shards(shards)
+            .run(&trace)
+    };
+    let one = mk(1);
+    let four = mk(4);
+    assert!(!four.is_sharded(), "the paper cluster must collapse to one domain");
+    assert_eq!(one.digests(), four.digests(), "serve trace diverged across shard counts");
+    assert_eq!(
+        one.combined_digest(),
+        four.combined_digest(),
+        "combined digest drifted for the serve trace"
+    );
+    assert_eq!(
+        one.overall_response().to_bits(),
+        four.overall_response().to_bits(),
+        "overall response drifted for the serve trace"
+    );
+}
+
 /// Property: sharded runs are deterministic — the same `RunSpec` run
 /// twice yields identical per-shard digests and an identically merged
 /// record stream (every job exactly once, ids strictly ascending).
