@@ -230,12 +230,70 @@ fn placement_sections() -> (Vec<(String, f64)>, Vec<(String, f64)>) {
             ));
         }
     }
+
+    // Simulator-core before/after: the retired per-event stepped clock
+    // (O(events x running)) vs the epoch-based progress ledger
+    // ((events + running) log running) on a dense serve-style trace.
+    // ns/event comes from SimCoreStats, which times only the clock
+    // sections (next_completion, advance, completion harvest), so the
+    // ratio isolates the sim core from scheduler cost.
+    {
+        use kube_fgs::experiments::RunSpec;
+        use kube_fgs::scenario::Scenario;
+        use kube_fgs::workload::serve_trace;
+        for workers in [128usize, 1024] {
+            // Traffic scales with the cluster so the running set stays
+            // dense; half-hour horizon bounds bench wall time.
+            let multiplier = workers as f64 / 4.0;
+            let trace = serve_trace(1800.0, multiplier, 2);
+            let mut ns_per_event = [0.0f64; 2];
+            for (slot, stepped) in [(0usize, true), (1usize, false)] {
+                let clock = if stepped { "stepped" } else { "epoch" };
+                let tag = if stepped { "(before)" } else { "(after)" };
+                let spec = RunSpec::new(Scenario::CmGTg)
+                    .seed(2)
+                    .cluster(ClusterSpec::with_workers(workers))
+                    .stepped_clock(stepped);
+                let wall = std::time::Instant::now();
+                let run = spec.run(&trace);
+                let secs = wall.elapsed().as_secs_f64().max(1e-9);
+                let stats = run.core_stats();
+                assert!(!run.records().is_empty(), "serve trace produced completions");
+                ns_per_event[slot] = stats.nanos_per_event();
+                println!(
+                    "sim_core/{workers}w-{clock} {tag}: {:.0} ns/event, {:.0} events/s \
+                     ({} events, {} resyncs, run {:.3}s)",
+                    stats.nanos_per_event(),
+                    stats.events as f64 / secs,
+                    stats.events,
+                    stats.resyncs,
+                    secs
+                );
+                rows.push((format!("sim_core/run-{workers}w-{clock}"), secs));
+                rates.push((
+                    format!("sim_core/ns_per_event-{workers}w-{clock}"),
+                    stats.nanos_per_event(),
+                ));
+                if !stepped {
+                    rates.push((
+                        format!("sim_core/events_per_sec-{workers}w"),
+                        stats.events as f64 / secs,
+                    ));
+                }
+            }
+            println!(
+                "sim_core/{workers}w: stepped/epoch ns-per-event ratio {:.1}x",
+                ns_per_event[0] / ns_per_event[1].max(1e-9)
+            );
+        }
+    }
     (rows, rates)
 }
 
 /// Hand-rendered JSON artifact (the substrate has no serde): the CI
 /// perf-trajectory data point for the placement/timeline/earliest-fit
-/// hot paths, plus the scheduler sessions/sec + decisions/sec rates.
+/// hot paths, plus the scheduler sessions/sec + decisions/sec rates and
+/// the sim-core ns/event + events/sec before/after counters.
 fn placement_json(rows: &[(String, f64)], rates: &[(String, f64)]) -> String {
     let mut out = String::from("{\n  \"bench\": \"placement\", \"entries\": [\n");
     for (i, (name, mean)) in rows.iter().enumerate() {

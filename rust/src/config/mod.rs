@@ -12,6 +12,7 @@
 //!   "preemption_policy": "least_work_lost",
 //!   "engine": "indexed",
 //!   "walltime_error_factor": 1.5,
+//!   "force_stepped_clock": false,
 //!   "pipeline": {
 //!     "actions": ["enqueue", "allocate", "preempt", "backfill"],
 //!     "plugins": [
@@ -74,6 +75,11 @@ pub struct ExperimentConfig {
     /// Walltime-estimate error multiplier (`walltime_error_factor`);
     /// applied to queue estimates only, defaults to 1.0.
     pub walltime_error_factor: f64,
+    /// Pin the simulator to the retired per-event stepped clock
+    /// (`force_stepped_clock`, default false) instead of the epoch-based
+    /// completion ledger — the pinned reference escape hatch; event
+    /// times agree to < 1e-6 s.
+    pub force_stepped_clock: bool,
     /// Action/plugin pipeline (`pipeline`); defaults to the scenario's own
     /// (the legacy-equivalent action list — bit-identical to the
     /// pre-pipeline scheduler — everywhere except the EL_MOLD/EL_MALL
@@ -183,6 +189,11 @@ impl ExperimentConfig {
                 }
                 f
             }
+        };
+        let force_stepped_clock = match json.get("force_stepped_clock") {
+            Json::Bool(b) => *b,
+            Json::Null => false,
+            other => bail!("config: \"force_stepped_clock\" must be a bool, got {other:?}"),
         };
         // Action/plugin pipeline: `{"actions": [...], "plugins": [{"name":
         // "aging", "threshold_secs": N} | {"name": "preemption_budget",
@@ -509,6 +520,7 @@ impl ExperimentConfig {
             preemption_policy,
             engine,
             walltime_error_factor,
+            force_stepped_clock,
             pipeline,
             tenants,
             quotas,
@@ -580,6 +592,7 @@ impl ExperimentConfig {
             .preemption_policy(self.preemption_policy)
             .engine(self.engine)
             .walltime_error_factor(self.walltime_error_factor)
+            .stepped_clock(self.force_stepped_clock)
             .pipeline(self.pipeline)
             .tenant_weights(&self.tenants)
             .shards(self.shards);
@@ -676,6 +689,22 @@ mod tests {
                 .is_err()
         );
         assert!(ExperimentConfig::parse(r#"{"scenario":"Kubeflow","queue":"sjf"}"#).is_ok());
+    }
+
+    #[test]
+    fn force_stepped_clock_parses_defaults_and_rejects_non_bool() {
+        let c = ExperimentConfig::parse(
+            r#"{"scenario":"CM_G_TG","force_stepped_clock":true}"#,
+        )
+        .unwrap();
+        assert!(c.force_stepped_clock);
+        let d = ExperimentConfig::parse(r#"{"scenario":"CM_G_TG"}"#).unwrap();
+        assert!(!d.force_stepped_clock, "epoch clock is the default");
+        let err = ExperimentConfig::parse(
+            r#"{"scenario":"CM_G_TG","force_stepped_clock":"yes"}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("force_stepped_clock"), "{err}");
     }
 
     #[test]

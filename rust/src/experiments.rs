@@ -15,7 +15,7 @@ use crate::scheduler::{
     ElasticityMode, PipelineConfig, PlacementEngineKind, PreemptionPolicy, QueuePolicyKind,
     SchedulerStats, ALL_QUEUE_POLICIES,
 };
-use crate::simulator::{shard, JobRecord, SimDigest, SimOutput, Simulation};
+use crate::simulator::{shard, JobRecord, SimCoreStats, SimDigest, SimOutput, Simulation};
 use crate::util::jain_index;
 use crate::workload::{
     elastic_trace, exp1_trace, exp2_trace, serve_trace, serve_trace_elastic, two_tenant_trace,
@@ -61,6 +61,7 @@ pub struct RunSpec {
     tenant_quotas: Vec<(TenantId, Resources)>,
     force_legacy: bool,
     force_linear_earliest_fit: bool,
+    force_stepped_clock: bool,
     shards: usize,
     threads: Option<usize>,
     seed: u64,
@@ -82,6 +83,7 @@ impl RunSpec {
             tenant_quotas: Vec::new(),
             force_legacy: false,
             force_linear_earliest_fit: false,
+            force_stepped_clock: false,
             shards: 1,
             threads: None,
             seed: DEFAULT_SEED,
@@ -159,6 +161,14 @@ impl RunSpec {
         self
     }
 
+    /// Pin the simulator to the retired stepped clock (the epoch
+    /// ledger's pinned reference — the bounded-divergence property and
+    /// the `sim_core` bench compare whole runs).
+    pub fn stepped_clock(mut self, force: bool) -> Self {
+        self.force_stepped_clock = force;
+        self
+    }
+
     /// Number of scheduler domains to shard the cluster into (clamped to
     /// the number of worker capacity classes; default 1 = today's single
     /// scheduler).
@@ -219,6 +229,7 @@ impl RunSpec {
         );
         sim.set_force_legacy_scheduler(self.force_legacy);
         sim.set_force_linear_earliest_fit(self.force_linear_earliest_fit);
+        sim.set_force_stepped_clock(self.force_stepped_clock);
         for &(tenant, weight) in &self.tenant_weights {
             sim.api.set_tenant_weight(tenant, weight);
         }
@@ -343,6 +354,15 @@ impl RunOutput {
         for s in &self.shards {
             total.sessions += s.sched_stats.sessions;
             total.decisions += s.sched_stats.decisions;
+        }
+        total
+    }
+
+    /// Simulator-core throughput counters summed over the shards.
+    pub fn core_stats(&self) -> SimCoreStats {
+        let mut total = SimCoreStats::default();
+        for s in &self.shards {
+            total.merge(&s.core_stats);
         }
         total
     }
@@ -1078,6 +1098,12 @@ pub struct ServePoint {
     pub utilization: f64,
     pub preemptions: usize,
     pub resizes: usize,
+    /// Simulator events processed for this point (summed over shards).
+    pub events: u64,
+    /// Simulator events per wall-clock second replaying this point —
+    /// the throughput counter CI tracks next to `placement_bench.json`.
+    /// Wall-clock derived, so never part of any digest or equality pin.
+    pub events_per_sec: f64,
 }
 
 /// Replay the serving mix at every `scenarios × multipliers` grid point
@@ -1108,7 +1134,10 @@ pub fn serve_sweep(
             if let Some(t) = threads {
                 spec = spec.threads(t);
             }
+            let wall = std::time::Instant::now();
             let run = spec.run(&trace);
+            let wall_secs = wall.elapsed().as_secs_f64();
+            let events = run.core_stats().events;
             let records = run.records();
             let metrics = if run.is_sharded() {
                 ExperimentMetrics::from_records(&records)
@@ -1124,6 +1153,8 @@ pub fn serve_sweep(
                 utilization: run_utilization(&run, &cluster),
                 preemptions: run.shards.iter().map(SimOutput::preemption_count).sum(),
                 resizes: run.shards.iter().map(SimOutput::resize_count).sum(),
+                events,
+                events_per_sec: if wall_secs > 0.0 { events as f64 / wall_secs } else { 0.0 },
                 metrics,
             });
         }
@@ -1219,6 +1250,8 @@ pub fn serve_csv(points: &[ServePoint]) -> String {
         "utilization".to_string(),
         "preemptions".to_string(),
         "resizes".to_string(),
+        "events".to_string(),
+        "events_per_sec".to_string(),
     ];
     if let Some(first) = points.first() {
         for c in &first.slo.per_class {
@@ -1245,6 +1278,8 @@ pub fn serve_csv(points: &[ServePoint]) -> String {
                 format!("{:.4}", p.utilization),
                 p.preemptions.to_string(),
                 p.resizes.to_string(),
+                p.events.to_string(),
+                format!("{:.0}", p.events_per_sec),
             ];
             for c in &p.slo.per_class {
                 row.push(c.jobs.to_string());
@@ -1300,7 +1335,7 @@ pub fn serve_json(
                 .collect::<Vec<_>>()
                 .join(", ");
             out.push_str(&format!(
-                "      {{\"multiplier\": {}, \"jobs\": {}, \"unschedulable\": {}, \"p50_s\": {:.3}, \"p95_s\": {:.3}, \"p99_s\": {:.3}, \"violations\": {}, \"violation_fraction\": {:.4}, \"utilization\": {:.4}, \"preemptions\": {}, \"resizes\": {}, \"classes\": [{classes}]}}{}\n",
+                "      {{\"multiplier\": {}, \"jobs\": {}, \"unschedulable\": {}, \"p50_s\": {:.3}, \"p95_s\": {:.3}, \"p99_s\": {:.3}, \"violations\": {}, \"violation_fraction\": {:.4}, \"utilization\": {:.4}, \"preemptions\": {}, \"resizes\": {}, \"events\": {}, \"events_per_sec\": {:.0}, \"classes\": [{classes}]}}{}\n",
                 p.multiplier,
                 p.jobs,
                 p.unschedulable,
@@ -1312,6 +1347,8 @@ pub fn serve_json(
                 p.utilization,
                 p.preemptions,
                 p.resizes,
+                p.events,
+                p.events_per_sec,
                 if i + 1 < of_scenario.len() { "," } else { "" },
             ));
         }
@@ -1714,6 +1751,8 @@ mod tests {
             utilization: 0.5,
             preemptions: 0,
             resizes: 0,
+            events: 0,
+            events_per_sec: 0.0,
         }
     }
 
@@ -1759,6 +1798,7 @@ mod tests {
             assert!(p.utilization > 0.0 && p.utilization <= 1.0);
             assert_eq!(p.slo.per_class.len(), 3, "all three serve classes reported");
             assert!(p.slo.per_class.iter().any(|c| c.jobs > 0));
+            assert!(p.events > 0, "simulator-core event counter wired through");
         }
         assert!(points[1].jobs > points[0].jobs, "multiplier raises volume");
         let table = serve_table(&points);

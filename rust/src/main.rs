@@ -106,8 +106,8 @@ COMMANDS:
   exp3 [--seed N]       Table III + Figs. 8-9: framework comparison
   run --scenario NAME [--jobs N] [--interval S] [--seed N] [--queue POLICY]
       [--preempt] [--two-tenant] [--engine linear|indexed]
-      [--legacy-scheduler] [--digest] [--workers N] [--mix NAME]
-      [--shards N] [--threads N]
+      [--legacy-scheduler] [--stepped-clock] [--digest] [--workers N]
+      [--mix NAME] [--shards N] [--threads N]
                         one scenario on a uniform random trace; POLICY is
                         fifo | fifo_strict | sjf | easy_backfill |
                         cons_backfill | fair_share and overrides the
@@ -118,6 +118,9 @@ COMMANDS:
                         indexed — bit-identical to linear, just faster);
                         --legacy-scheduler pins the pre-pipeline scheduler
                         cycle (the differential harness's reference path);
+                        --stepped-clock pins the retired per-event stepped
+                        simulator clock (the epoch ledger's reference path;
+                        event times agree to < 1e-6 s);
                         --digest prints the run's FNV-1a trace digest
                         (per-shard + combined on sharded runs);
                         --workers/--mix size and shape the cluster
@@ -388,6 +391,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         .preemption(preempt)
         .engine(engine)
         .legacy_scheduler(args.has("legacy-scheduler"))
+        .stepped_clock(args.has("stepped-clock"))
         .shards(args.get_usize("shards", 1));
     if let Some(cluster) = cluster {
         spec = spec.cluster(cluster);
@@ -410,6 +414,14 @@ fn cmd_run(args: &Args) -> Result<()> {
             run.shards.len(),
             stats.sessions,
             stats.decisions
+        );
+        let cs = run.core_stats();
+        println!(
+            "sim core: {} events ({} arrivals, {} completions), {:.0} ns/event",
+            cs.events,
+            cs.arrivals,
+            cs.completions,
+            cs.nanos_per_event()
         );
         if args.has("digest") {
             for (i, d) in run.digests().iter().enumerate() {
@@ -436,6 +448,14 @@ fn cmd_run(args: &Args) -> Result<()> {
     if preemptions > 0 {
         println!("preemptions: {preemptions}");
     }
+    let cs = out.core_stats;
+    println!(
+        "sim core: {} events ({} arrivals, {} completions), {:.0} ns/event",
+        cs.events,
+        cs.arrivals,
+        cs.completions,
+        cs.nanos_per_event()
+    );
     println!("\nScheduling process:");
     print!("{}", report::gantt(&out, 100));
     println!("\nPod placements:");
@@ -674,6 +694,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         elastic,
     );
     print!("{}", experiments::serve_table(&points));
+    let total_events: u64 = points.iter().map(|p| p.events).sum();
+    let peak_rate = points.iter().map(|p| p.events_per_sec).fold(0.0, f64::max);
+    println!(
+        "\nsim core: {total_events} events total, peak {peak_rate:.0} events/sec"
+    );
     println!("\nSaturation knees (violation fraction crosses {}):", experiments::SERVE_KNEE_THRESHOLD);
     for (scenario, knee) in experiments::serve_knees(&points) {
         match knee {

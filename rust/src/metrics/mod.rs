@@ -253,6 +253,7 @@ mod tests {
             unschedulable: vec![],
             api: ApiServer::new(ClusterSpec::paper(), KubeletConfig::default_policy()),
             sched_stats: Default::default(),
+            core_stats: Default::default(),
         }
     }
 

@@ -199,6 +199,7 @@ mod tests {
             unschedulable: vec![],
             api: ApiServer::new(ClusterSpec::paper(), KubeletConfig::default_policy()),
             sched_stats: Default::default(),
+            core_stats: Default::default(),
         };
         let g = gantt(&out, 40);
         assert!(g.contains('.'), "wait span rendered: {g}");

@@ -7,8 +7,22 @@
 //! workloads interfere.
 //!
 //! Event loop: the next event is either the next job arrival or the
-//! earliest projected completion; between events every running job's
-//! remaining work decreases linearly at its current rate.
+//! earliest predicted completion. Job progress is kept on an
+//! *epoch-based lazy clock*: each running job stores its remaining work
+//! anchored at the last instant its rate changed (`remaining` at
+//! `sync_time`, plus `rate`), so advancing simulated time is O(1) — it
+//! only moves `now` — and a job's anchor is touched exactly when a
+//! placement delta changes its rate. Predicted absolute finish times are
+//! indexed in a completion ledger (`BTreeSet` ordered by IEEE-754 bits),
+//! so the next-completion query is O(log R) instead of a full
+//! running-set scan, and the same index doubles as the projection map
+//! the scheduler's backfill policies read. The pre-epoch stepped clock —
+//! every event walks all running jobs and decrements
+//! `remaining -= dt * rate` — is retained verbatim behind
+//! [`Simulation::set_force_stepped_clock`] as the pinned reference; the
+//! two clocks agree to < 1e-6 s per event time (not bit-identical:
+//! summing per-event decrements rounds differently than the closed
+//! form), which `tests/properties.rs` asserts.
 //!
 //! In the paper's multi-layer design this module is the experiment
 //! driver: it couples the planner (granularity selection) to a controller
@@ -36,15 +50,35 @@ use crate::scheduler::{PlacementEngineKind, Scheduler, SchedulerConfig};
 use crate::util::Rng;
 use crate::workload::{JobSpec, TenantId};
 
-/// Per-running-job progress state.
+/// Per-running-job progress state — an epoch anchor: `remaining` is the
+/// work left *at* `sync_time`, and between anchors the job progresses
+/// linearly at `rate`. The epoch clock re-anchors only when the rate
+/// changes; the stepped reference clock re-anchors at every event.
 #[derive(Debug, Clone)]
 struct JobProgress {
-    /// Remaining work, in ideal (slowdown-1) seconds.
+    /// Remaining work at `sync_time`, in ideal (slowdown-1) seconds.
     remaining: f64,
+    /// Simulated time this anchor was last (re)synced.
+    sync_time: f64,
     /// Current progress rate (1 / slowdown).
     rate: f64,
     /// Shared-pool variance factor, drawn once per job.
     noise: f64,
+}
+
+impl JobProgress {
+    /// Remaining work at time `t >= sync_time`, closed form.
+    fn remaining_at(&self, t: f64) -> f64 {
+        self.remaining - (t - self.sync_time) * self.rate
+    }
+
+    /// Predicted absolute completion time from this anchor. Non-negative
+    /// for the non-negative anchors the simulator produces, so its
+    /// IEEE-754 bit pattern orders like the value (the completion-ledger
+    /// key invariant).
+    fn finish_time(&self) -> f64 {
+        self.sync_time + (self.remaining / self.rate).max(0.0)
+    }
 }
 
 /// Completed-run record for one job.
@@ -82,6 +116,52 @@ impl JobRecord {
     }
 }
 
+/// Simulator-core throughput counters for one run — the event-loop side
+/// of the perf trajectory (the scheduler side is
+/// [`crate::scheduler::SchedulerStats`]). `core_nanos` sums wall time
+/// spent in the clock's own sections — the next-completion query, the
+/// clock advance, the completion harvest, and (stepped mode only) the
+/// per-session projection rebuild — so ns/event isolates the simulator
+/// core from scheduler and perf-model work. Wall-clock derived, so never
+/// part of any digest and excluded from every equality pin.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SimCoreStats {
+    /// Events processed by the event loop (arrivals + completion batches).
+    pub events: u64,
+    /// Arrival events (each may batch several same-instant submits).
+    pub arrivals: u64,
+    /// Completion events (each may batch several simultaneous finishes).
+    pub completions: u64,
+    /// Epoch-clock re-anchors: how often a running job's lazy
+    /// `(remaining, sync_time)` pair was actually touched because its
+    /// rate or remaining work changed. Always 0 under the stepped clock
+    /// (which re-anchors everything at every event instead).
+    pub resyncs: u64,
+    /// Nanoseconds of wall time in the clock sections listed above.
+    pub core_nanos: u64,
+}
+
+impl SimCoreStats {
+    /// Mean simulator-core nanoseconds per event (0 for an empty run).
+    pub fn nanos_per_event(&self) -> f64 {
+        if self.events == 0 {
+            0.0
+        } else {
+            self.core_nanos as f64 / self.events as f64
+        }
+    }
+
+    /// Sum counters across shards/runs (whole-run merges in
+    /// `experiments::RunOutput::core_stats`).
+    pub fn merge(&mut self, other: &SimCoreStats) {
+        self.events += other.events;
+        self.arrivals += other.arrivals;
+        self.completions += other.completions;
+        self.resyncs += other.resyncs;
+        self.core_nanos += other.core_nanos;
+    }
+}
+
 /// Simulation output: per-job records + the final API server (event log,
 /// placements) for reporting.
 pub struct SimOutput {
@@ -94,6 +174,10 @@ pub struct SimOutput {
     /// placement decisions committed) — benches divide by wall time for
     /// sessions/sec and decisions/sec; never part of any digest.
     pub sched_stats: crate::scheduler::SchedulerStats,
+    /// Simulator-core throughput counters (events processed, core
+    /// nanoseconds) — benches divide by wall time for events/sec; never
+    /// part of any digest.
+    pub core_stats: SimCoreStats,
 }
 
 impl SimOutput {
@@ -338,11 +422,34 @@ pub struct Simulation {
     /// contention index: a placement change on a node only dirties the
     /// rates of the jobs listed there).
     jobs_on_node: BTreeMap<NodeId, BTreeSet<JobId>>,
+    /// Completion ledger (epoch clock): every running job's predicted
+    /// absolute finish time, keyed by IEEE-754 bits so the `BTreeSet`
+    /// orders numerically (finish times are non-negative finite), with
+    /// the job id as tie-break — the same ordering the stepped
+    /// reference's `min_by` scan used. Maintained exactly (entries are
+    /// removed on every re-anchor, no lazy deletion), so `first()` *is*
+    /// the next completion. Empty under the stepped clock.
+    completions: BTreeSet<(u64, JobId)>,
+    /// The per-job predicted finish times backing `completions`, shared
+    /// with the scheduler as its projection map (§Perf: the stepped
+    /// clock rebuilt this O(R) map from scratch every session). Empty
+    /// under the stepped clock.
+    projected: BTreeMap<JobId, f64>,
     /// Run every rate update as a full running-set rescan (the
     /// pre-incremental behaviour). Benches compare the two modes; must be
     /// set before `run` and left alone (the incremental caches go stale
     /// in full mode).
     pub force_full_recompute: bool,
+    /// Run the retired stepped clock — every event decrements every
+    /// running job's `remaining` by `dt * rate` and rescans the running
+    /// set for the next completion — instead of the epoch ledger. The
+    /// pinned reference path benches and the bounded-divergence property
+    /// compare against; must be set before `run` and left alone (the
+    /// completion ledger stays empty in stepped mode).
+    pub force_stepped_clock: bool,
+    /// Simulator-core throughput counters for this run (events, core
+    /// nanoseconds); drained into [`SimOutput::core_stats`].
+    core_stats: SimCoreStats,
     /// Per-benchmark ideal work override (seconds); defaults to
     /// `Benchmark::base_running_secs`. The e2e driver feeds PJRT-measured
     /// kernel times through this.
@@ -377,7 +484,11 @@ impl Simulation {
             },
             contrib: BTreeMap::new(),
             jobs_on_node: BTreeMap::new(),
+            completions: BTreeSet::new(),
+            projected: BTreeMap::new(),
             force_full_recompute: false,
+            force_stepped_clock: false,
+            core_stats: SimCoreStats::default(),
             base_work: BTreeMap::new(),
         }
     }
@@ -410,20 +521,36 @@ impl Simulation {
         self.scheduler.force_linear_earliest_fit = force;
     }
 
+    /// Run the simulation on the retired stepped clock (per-event
+    /// `remaining -= dt * rate` over the whole running set) instead of
+    /// the epoch-based lazy ledger — the pinned reference path the
+    /// `sim_core` bench and the bounded-divergence property compare
+    /// against. Set before `run` and leave alone.
+    pub fn set_force_stepped_clock(&mut self, force: bool) {
+        self.force_stepped_clock = force;
+    }
+
     fn base_work_of(&self, bench: crate::workload::Benchmark) -> f64 {
         self.base_work.get(&bench).copied().unwrap_or_else(|| bench.base_running_secs())
     }
 
-    /// Advance every running job's remaining work to time `t`.
+    /// Advance simulated time to `t`. Epoch clock: O(1) — progress is
+    /// lazy, anchored at each job's last rate change. Stepped reference:
+    /// decrement every running job's remaining work (the retired O(R)
+    /// per-event walk), re-anchoring `sync_time` so the closed-form
+    /// accessors stay exact.
     fn advance_to(&mut self, t: f64) {
+        let tick = std::time::Instant::now();
         let dt = t - self.now;
         debug_assert!(dt >= -1e-9, "time went backwards: {} -> {}", self.now, t);
-        if dt > 0.0 {
+        if self.force_stepped_clock && dt > 0.0 {
             for p in self.progress.values_mut() {
                 p.remaining -= dt * p.rate;
+                p.sync_time = t;
             }
         }
         self.now = t;
+        self.core_stats.core_nanos += tick.elapsed().as_nanos() as u64;
     }
 
     /// One job's current progress rate against the given load snapshot.
@@ -457,7 +584,7 @@ impl Simulation {
         for id in ids {
             let noise = self.progress[&id].noise;
             let rate = self.rate_of(id, noise, &loads);
-            self.progress.get_mut(&id).unwrap().rate = rate;
+            self.set_rate(id, rate);
         }
         self.loads = loads;
     }
@@ -578,7 +705,7 @@ impl Simulation {
         for id in affected {
             if let Some(noise) = self.progress.get(&id).map(|p| p.noise) {
                 let rate = self.rate_of(id, noise, &self.loads);
-                self.progress.get_mut(&id).unwrap().rate = rate;
+                self.set_rate(id, rate);
             }
         }
         #[cfg(debug_assertions)]
@@ -603,12 +730,125 @@ impl Simulation {
         }
     }
 
-    /// Earliest projected completion among running jobs.
+    /// Earliest predicted completion among running jobs. Epoch clock:
+    /// the completion ledger's first entry, O(log R). Stepped reference:
+    /// the retired full scan over the running set (`total_cmp` replaces
+    /// the old NaN-panicking `partial_cmp().unwrap()`; identical order
+    /// on the finite times the simulator produces).
     fn next_completion(&self) -> Option<(f64, JobId)> {
+        if !self.force_stepped_clock {
+            return self.completions.first().map(|&(bits, id)| (f64::from_bits(bits), id));
+        }
         self.progress
             .iter()
-            .map(|(&id, p)| (self.now + (p.remaining / p.rate).max(0.0), id))
-            .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)))
+            .map(|(&id, p)| (p.finish_time(), id))
+            .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)))
+    }
+
+    /// Register a (re)started job's progress anchor and, on the epoch
+    /// clock, index its predicted finish in the completion ledger and
+    /// the shared projection map.
+    fn progress_insert(&mut self, id: JobId, p: JobProgress) {
+        if !self.force_stepped_clock {
+            let finish = p.finish_time();
+            self.completions.insert((finish.to_bits(), id));
+            self.projected.insert(id, finish);
+        }
+        self.progress.insert(id, p);
+    }
+
+    /// Remove a job's progress (completion or preemption checkpoint),
+    /// de-indexing it from the ledger and re-anchoring the returned
+    /// checkpoint at `now` — so a preempted job's preserved remaining
+    /// work is the same value the stepped clock would have accumulated
+    /// (up to the clocks' documented float divergence).
+    fn progress_remove(&mut self, id: JobId) -> Option<JobProgress> {
+        let mut p = self.progress.remove(&id)?;
+        if !self.force_stepped_clock {
+            let finish = self.projected.remove(&id).expect("job missing from projection map");
+            self.completions.remove(&(finish.to_bits(), id));
+            p.remaining = p.remaining_at(self.now);
+            p.sync_time = self.now;
+        }
+        Some(p)
+    }
+
+    /// Update one running job's rate. Epoch clock: a genuinely changed
+    /// rate re-anchors `(remaining, sync_time)` at `now` and re-indexes
+    /// the predicted finish; a *bit-identical* rate is a strict no-op.
+    /// The no-op rule is what keeps `force_full_recompute` (which feeds
+    /// every running job through here) bitwise-equal to the incremental
+    /// delta path (which feeds only the dirty set): rates agree bit for
+    /// bit between the two paths, so both re-anchor exactly the
+    /// numerically-changed jobs at exactly the same times.
+    fn set_rate(&mut self, id: JobId, rate: f64) {
+        if self.force_stepped_clock {
+            self.progress.get_mut(&id).unwrap().rate = rate;
+            return;
+        }
+        if self.progress[&id].rate.to_bits() == rate.to_bits() {
+            return;
+        }
+        let old = self.projected[&id];
+        self.completions.remove(&(old.to_bits(), id));
+        let now = self.now;
+        let p = self.progress.get_mut(&id).unwrap();
+        p.remaining = p.remaining_at(now);
+        p.sync_time = now;
+        p.rate = rate;
+        let finish = p.finish_time();
+        self.completions.insert((finish.to_bits(), id));
+        self.projected.insert(id, finish);
+        self.core_stats.resyncs += 1;
+    }
+
+    /// Charge extra remaining work to a running job (the
+    /// checkpoint-restart cost of a runtime resize), re-anchoring and
+    /// re-indexing under the epoch clock. No-op for jobs not running.
+    fn add_remaining(&mut self, id: JobId, extra: f64) {
+        if !self.progress.contains_key(&id) {
+            return;
+        }
+        if self.force_stepped_clock {
+            self.progress.get_mut(&id).unwrap().remaining += extra;
+            return;
+        }
+        let old = self.projected[&id];
+        self.completions.remove(&(old.to_bits(), id));
+        let now = self.now;
+        let p = self.progress.get_mut(&id).unwrap();
+        p.remaining = p.remaining_at(now) + extra;
+        p.sync_time = now;
+        let finish = p.finish_time();
+        self.completions.insert((finish.to_bits(), id));
+        self.projected.insert(id, finish);
+        self.core_stats.resyncs += 1;
+    }
+
+    /// Debug-build pin for the epoch clock: the completion ledger and
+    /// the shared projection map must index exactly the running set, and
+    /// every indexed finish time must equal the closed-form prediction
+    /// from the job's live `(remaining, sync_time, rate)` anchor, bit
+    /// for bit. Runs after every scheduling session of every debug-mode
+    /// simulation, so the whole test suite exercises the invariant.
+    #[cfg(debug_assertions)]
+    fn assert_completion_ledger_consistent(&self) {
+        if self.force_stepped_clock {
+            return;
+        }
+        assert_eq!(self.completions.len(), self.progress.len(), "completion ledger size drifted");
+        assert_eq!(self.projected.len(), self.progress.len(), "projection map size drifted");
+        for (&id, p) in &self.progress {
+            let finish = p.finish_time();
+            assert!(
+                self.completions.contains(&(finish.to_bits(), id)),
+                "completion ledger missing {id:?} at {finish}"
+            );
+            assert!(
+                self.projected.get(&id).is_some_and(|f| f.to_bits() == finish.to_bits()),
+                "projection map drifted for {id:?}"
+            );
+        }
     }
 
     /// Submit one job *now*: plan granularity (Algorithm 1), build pods
@@ -650,17 +890,24 @@ impl Simulation {
     /// resume with the calibrated checkpoint-restart cost added to their
     /// remaining work.
     fn schedule(&mut self) {
-        let projected: BTreeMap<JobId, f64> = self
-            .progress
-            .iter()
-            .map(|(&id, p)| (id, self.now + (p.remaining / p.rate).max(0.0)))
-            .collect();
-        let started = self.scheduler.cycle_with_projections(&mut self.api, self.now, &projected);
+        // Epoch clock: the maintained projection map is handed to the
+        // scheduler as-is — the same index `next_completion` and the
+        // completion harvest read (§Perf: the stepped reference rebuilds
+        // this O(R) map from scratch every session).
+        let tick = std::time::Instant::now();
+        let rebuilt: Option<BTreeMap<JobId, f64>> = if self.force_stepped_clock {
+            Some(self.progress.iter().map(|(&id, p)| (id, p.finish_time())).collect())
+        } else {
+            None
+        };
+        self.core_stats.core_nanos += tick.elapsed().as_nanos() as u64;
+        let projected = rebuilt.as_ref().unwrap_or(&self.projected);
+        let started = self.scheduler.cycle_with_projections(&mut self.api, self.now, projected);
         let preempted = self.scheduler.take_preempted();
         let resized = self.scheduler.take_resized();
         for &id in &preempted {
             let checkpoint =
-                self.progress.remove(&id).expect("preempted job without progress");
+                self.progress_remove(id).expect("preempted job without progress");
             self.api.requeue_job(id, self.now);
             self.suspended.insert(id, checkpoint);
         }
@@ -675,9 +922,7 @@ impl Simulation {
         // jobs never appear here — they start through `started` and cost
         // nothing.
         for &(id, moved_bytes) in &resized {
-            if let Some(p) = self.progress.get_mut(&id) {
-                p.remaining += self.calib.restart_cost_secs(moved_bytes);
-            }
+            self.add_remaining(id, self.calib.restart_cost_secs(moved_bytes));
         }
         for &job_id in &started {
             let bench = self.api.jobs[&job_id].planned.spec.benchmark;
@@ -688,16 +933,22 @@ impl Simulation {
                     let mem = self.api.jobs[&job_id].planned.spec.resources.mem_bytes;
                     p.remaining += self.calib.restart_cost_secs(mem);
                     p.rate = 1.0;
-                    self.progress.insert(job_id, p);
+                    p.sync_time = self.now;
+                    self.progress_insert(job_id, p);
                 }
                 None => {
                     let noise = self
                         .rng
                         .derive(job_id.0)
                         .lognormal_noise(self.calib.none_variance_sigma);
-                    self.progress.insert(
+                    self.progress_insert(
                         job_id,
-                        JobProgress { remaining: self.base_work_of(bench), rate: 1.0, noise },
+                        JobProgress {
+                            remaining: self.base_work_of(bench),
+                            sync_time: self.now,
+                            rate: 1.0,
+                            noise,
+                        },
                     );
                 }
             }
@@ -713,19 +964,34 @@ impl Simulation {
             }
             self.apply_placement_delta(&added, &removed);
         }
+        #[cfg(debug_assertions)]
+        self.assert_completion_ledger_consistent();
     }
 
     /// Run a trace to completion; returns per-job records + final state.
-    pub fn run(mut self, trace: &[JobSpec]) -> SimOutput {
-        let mut arrivals: Vec<JobSpec> = trace.to_vec();
-        arrivals.sort_by(|a, b| a.submit_time.partial_cmp(&b.submit_time).unwrap());
-        let mut next_arrival = 0usize;
+    /// Borrowing convenience over [`Simulation::run_owned`] for callers
+    /// that keep their trace (sweeps replay one trace across policies).
+    pub fn run(self, trace: &[JobSpec]) -> SimOutput {
+        self.run_owned(trace.to_vec())
+    }
+
+    /// Run an owned trace to completion, draining arrivals by value (no
+    /// per-submit clone). Arrivals sort by `total_cmp` — a NaN submit
+    /// time sorts last and is submitted immediately when reached instead
+    /// of panicking the sort (the same bug class PR 2 fixed in the
+    /// pending queue).
+    pub fn run_owned(mut self, mut arrivals: Vec<JobSpec>) -> SimOutput {
+        use std::time::Instant;
+        arrivals.sort_by(|a, b| a.submit_time.total_cmp(&b.submit_time));
         let total = arrivals.len();
+        let mut arrivals = arrivals.into_iter().peekable();
         let mut finished = 0usize;
 
         while finished + self.unschedulable.len() < total {
-            let arrival_t = arrivals.get(next_arrival).map(|j| j.submit_time);
+            let arrival_t = arrivals.peek().map(|j| j.submit_time);
+            let tick = Instant::now();
             let completion = self.next_completion();
+            self.core_stats.core_nanos += tick.elapsed().as_nanos() as u64;
 
             let (t, is_arrival) = match (arrival_t, completion) {
                 (Some(a), Some((c, _))) if a <= c => (a, true),
@@ -757,27 +1023,49 @@ impl Simulation {
             };
 
             self.advance_to(t.max(self.now));
+            self.core_stats.events += 1;
 
             if is_arrival {
-                // Batch all arrivals at this instant.
-                while next_arrival < total
-                    && arrivals[next_arrival].submit_time <= self.now + 1e-12
-                {
-                    let spec = arrivals[next_arrival].clone();
+                self.core_stats.arrivals += 1;
+                // The chosen arrival unconditionally (a NaN submit time
+                // fails every `<=` comparison but must still make
+                // progress), then batch all further arrivals at this
+                // instant.
+                let spec = arrivals.next().expect("arrival event without arrival");
+                self.submit(&spec);
+                while arrivals.peek().is_some_and(|j| j.submit_time <= self.now + 1e-12) {
+                    let spec = arrivals.next().expect("peeked arrival vanished");
                     self.submit(&spec);
-                    next_arrival += 1;
                 }
             } else {
+                self.core_stats.completions += 1;
                 // Complete every job whose remaining work reached zero.
-                let done: Vec<JobId> = self
-                    .progress
-                    .iter()
-                    .filter(|(_, p)| p.remaining <= 1e-6)
-                    .map(|(&id, _)| id)
-                    .collect();
+                let tick = Instant::now();
+                let done: Vec<JobId> = if self.force_stepped_clock {
+                    self.progress
+                        .iter()
+                        .filter(|(_, p)| p.remaining <= 1e-6)
+                        .map(|(&id, _)| id)
+                        .collect()
+                } else {
+                    // Harvest the ledger prefix whose remaining work at
+                    // `now` is within the completion tolerance — the
+                    // epoch-clock form of the stepped filter, stopping at
+                    // the first entry still out of reach.
+                    let mut done = Vec::new();
+                    for &(_, id) in &self.completions {
+                        if self.progress[&id].remaining_at(self.now) <= 1e-6 {
+                            done.push(id);
+                        } else {
+                            break;
+                        }
+                    }
+                    done
+                };
+                self.core_stats.core_nanos += tick.elapsed().as_nanos() as u64;
                 debug_assert!(!done.is_empty(), "completion event with no finished job");
                 for &id in &done {
-                    self.progress.remove(&id);
+                    self.progress_remove(id);
                     self.api.finish_job(id, self.now);
                     finished += 1;
                 }
@@ -810,6 +1098,7 @@ impl Simulation {
             unschedulable: self.unschedulable,
             api: self.api,
             sched_stats: self.scheduler.stats,
+            core_stats: self.core_stats,
         }
     }
 }
@@ -1139,6 +1428,82 @@ mod tests {
             assert_eq!(key(&incremental), key(&full), "case {case}");
             assert_eq!(incremental.unschedulable, full.unschedulable, "case {case}");
         }
+    }
+
+    /// The epoch ledger and the retired stepped clock schedule the same
+    /// jobs and agree on every timestamp to well under the 1e-6 s
+    /// completion tolerance (they cannot be bit-identical: per-event
+    /// `remaining -= dt * rate` decrements round differently than the
+    /// closed form). The full cross-scenario sweep lives in
+    /// `tests/properties.rs`; this is the in-module smoke.
+    #[test]
+    fn stepped_clock_reference_matches_epoch_within_tolerance() {
+        let mk = |stepped: bool| {
+            let mut s = sim(
+                KubeletConfig::cpu_mem_affinity(),
+                GranularityPolicy::Scale,
+                SchedulerConfig::fine_grained(2),
+            );
+            s.set_force_stepped_clock(stepped);
+            s.run(&exp1_trace())
+        };
+        let epoch = mk(false);
+        let stepped = mk(true);
+        assert_eq!(epoch.records.len(), stepped.records.len());
+        for (e, s) in epoch.records.iter().zip(&stepped.records) {
+            assert_eq!(e.id, s.id);
+            assert!(
+                (e.start_time - s.start_time).abs() < 1e-6,
+                "start drift for {:?}: {} vs {}",
+                e.id,
+                e.start_time,
+                s.start_time
+            );
+            assert!(
+                (e.finish_time - s.finish_time).abs() < 1e-6,
+                "finish drift for {:?}: {} vs {}",
+                e.id,
+                e.finish_time,
+                s.finish_time
+            );
+        }
+        // The epoch clock re-anchors lazily; the stepped clock never
+        // reports a resync (it re-anchors everything every event).
+        assert!(epoch.core_stats.resyncs > 0);
+        assert_eq!(stepped.core_stats.resyncs, 0);
+    }
+
+    #[test]
+    fn core_stats_count_arrivals_and_completions() {
+        let s = sim(
+            KubeletConfig::cpu_mem_affinity(),
+            GranularityPolicy::Scale,
+            SchedulerConfig::fine_grained(2),
+        );
+        let out = s.run(&exp1_trace());
+        let cs = out.core_stats;
+        assert_eq!(cs.events, cs.arrivals + cs.completions);
+        assert!(cs.arrivals >= 1, "at least one arrival batch");
+        assert!(cs.completions >= 1, "at least one completion batch");
+        assert!(cs.nanos_per_event() >= 0.0);
+    }
+
+    #[test]
+    fn nan_submit_time_neither_panics_nor_hangs() {
+        // The seed's sort used partial_cmp().unwrap(), which panics on a
+        // NaN submit time. NaN now sorts last (total_cmp) and the
+        // arrival is force-submitted when reached, so the run terminates
+        // with every job recorded.
+        let s = sim(
+            KubeletConfig::cpu_mem_affinity(),
+            GranularityPolicy::Granularity,
+            SchedulerConfig::fine_grained(1),
+        );
+        let mut weird = JobSpec::paper_job(2, Benchmark::EpStream, 0.0);
+        weird.submit_time = f64::NAN;
+        let trace = vec![JobSpec::paper_job(1, Benchmark::EpDgemm, 0.0), weird];
+        let out = s.run(&trace);
+        assert_eq!(out.records.len(), 2);
     }
 
     #[test]

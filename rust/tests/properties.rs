@@ -892,3 +892,151 @@ fn prop_sharded_run_is_deterministic_and_merges_completely() {
         }
     }
 }
+
+/// Property: the epoch-based progress ledger is a faithful replacement
+/// for the retired per-event stepped clock. Across scenarios, cluster
+/// mixes, traces, and seeds, both clocks complete the same job set,
+/// mark the same jobs unschedulable, and agree on every start/finish
+/// time to within 1e-6 s (the clocks round differently — the stepped
+/// path decrements remaining work per event while the epoch ledger
+/// evaluates the closed form — so bit-identity is not the contract;
+/// bounded divergence is).
+#[test]
+fn prop_epoch_clock_matches_stepped_reference_within_tolerance() {
+    use kube_fgs::cluster::HeterogeneityMix;
+    use kube_fgs::scenario::ALL_SCENARIOS;
+    use kube_fgs::workload::two_tenant_trace;
+
+    let mut rng = Rng::seed_from_u64(1818);
+    for case in 0..60 {
+        let scenario = ALL_SCENARIOS[rng.range_usize(0, ALL_SCENARIOS.len())];
+        let workers = rng.range_usize(2, 9);
+        let mix = rng.range_usize(0, 3);
+        let cluster = || match mix {
+            0 => ClusterSpec::with_workers(workers),
+            1 => ClusterSpec::mixed(workers, HeterogeneityMix::FatThin),
+            _ => ClusterSpec::mixed(workers, HeterogeneityMix::Tiered),
+        };
+        let n_jobs = rng.range_usize(3, 12);
+        let interval = rng.range_f64(15.0, 90.0);
+        let seed = rng.next_u64();
+        let trace = if rng.f64() < 0.5 {
+            uniform_trace(n_jobs, interval, seed)
+        } else {
+            two_tenant_trace(n_jobs, interval, seed)
+        };
+        let mk = |stepped: bool| {
+            let mut sim = scenario.simulation_on(cluster(), seed);
+            sim.set_force_stepped_clock(stepped);
+            sim.run(&trace)
+        };
+        let epoch = mk(false);
+        let stepped = mk(true);
+        assert_eq!(
+            epoch.unschedulable, stepped.unschedulable,
+            "case {case}: {scenario} mix {mix} x{workers} seed {seed}: unschedulable sets differ"
+        );
+        assert_eq!(
+            epoch.records.len(),
+            stepped.records.len(),
+            "case {case}: {scenario} mix {mix} x{workers} seed {seed}: record counts differ"
+        );
+        let by_id: std::collections::BTreeMap<_, _> = stepped
+            .records
+            .iter()
+            .map(|r| (r.id, (r.start_time, r.finish_time)))
+            .collect();
+        for r in &epoch.records {
+            let (s, f) = by_id[&r.id];
+            assert!(
+                (r.start_time - s).abs() < 1e-6 && (r.finish_time - f).abs() < 1e-6,
+                "case {case}: {scenario} mix {mix} x{workers} seed {seed}: job {:?} \
+                 diverged beyond tolerance (start {} vs {}, finish {} vs {})",
+                r.id,
+                r.start_time,
+                s,
+                r.finish_time,
+                f
+            );
+        }
+        assert!(
+            epoch.core_stats.events > 0,
+            "case {case}: epoch clock counted no events"
+        );
+        assert_eq!(
+            stepped.core_stats.resyncs, 0,
+            "case {case}: stepped clock must never resync the ledger"
+        );
+    }
+}
+
+/// Property: the pipeline-vs-legacy bit-identity guarantee survives on
+/// the pinned stepped clock — forcing `force_stepped_clock` on both
+/// sides of the differential reproduces the exact digests the retired
+/// clock produced, so the reference path stays verifiable verbatim.
+#[test]
+fn prop_stepped_clock_pipeline_matches_legacy_bitwise() {
+    use kube_fgs::scenario::ALL_SCENARIOS;
+    use kube_fgs::simulator::SimDigest;
+    use kube_fgs::workload::two_tenant_trace;
+
+    let mut rng = Rng::seed_from_u64(1919);
+    for case in 0..40 {
+        let scenario = ALL_SCENARIOS[rng.range_usize(0, ALL_SCENARIOS.len())];
+        let workers = rng.range_usize(2, 9);
+        let n_jobs = rng.range_usize(3, 10);
+        let interval = rng.range_f64(15.0, 90.0);
+        let seed = rng.next_u64();
+        let trace = if rng.f64() < 0.5 {
+            uniform_trace(n_jobs, interval, seed)
+        } else {
+            two_tenant_trace(n_jobs, interval, seed)
+        };
+        let mk = |force_legacy: bool| {
+            let mut sim = scenario.simulation_on(ClusterSpec::with_workers(workers), seed);
+            sim.set_force_stepped_clock(true);
+            sim.set_force_legacy_scheduler(force_legacy);
+            sim.run(&trace)
+        };
+        let pipeline = mk(false);
+        let legacy = mk(true);
+        assert_eq!(
+            SimDigest::of(&pipeline),
+            SimDigest::of(&legacy),
+            "case {case}: {scenario} x{workers} seed {seed}: stepped-clock differential diverged"
+        );
+    }
+}
+
+/// Property: the serve-trace shard invariance holds on the pinned
+/// stepped clock too — the clock swap is orthogonal to the scale-out
+/// axis, so `shards = 4` stays bit-identical to `shards = 1` whichever
+/// clock drives the run.
+#[test]
+fn prop_serve_trace_shard_invariant_on_stepped_clock() {
+    use kube_fgs::experiments::RunSpec;
+    use kube_fgs::workload::serve_trace;
+
+    let trace = serve_trace(2.0 * 3600.0, 1.0, 2024);
+    assert!(!trace.is_empty(), "a 2 h serve horizon produces jobs");
+    let mk = |shards: usize| {
+        RunSpec::new(Scenario::CmGTg)
+            .seed(2024)
+            .cluster(ClusterSpec::paper())
+            .shards(shards)
+            .stepped_clock(true)
+            .run(&trace)
+    };
+    let one = mk(1);
+    let four = mk(4);
+    assert_eq!(
+        one.digests(),
+        four.digests(),
+        "stepped-clock serve trace diverged across shard counts"
+    );
+    assert_eq!(
+        one.combined_digest(),
+        four.combined_digest(),
+        "stepped-clock combined digest drifted for the serve trace"
+    );
+}
